@@ -1,0 +1,61 @@
+"""Benchmark harness: one function per paper table/figure + roofline table.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Usage:
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig6,fig15] [--roofline]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks.paper_figs import ALL_BENCHES  # noqa: E402
+
+
+def roofline_rows() -> list[tuple]:
+    """Summarize the dry-run roofline JSONs (if the sweep has been run)."""
+    rows = []
+    pat = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "dryrun", "*.json")
+    for f in sorted(glob.glob(pat)):
+        d = json.load(open(f))
+        if "roofline" not in d:
+            continue
+        r = d["roofline"]
+        name = f"roofline/{d['arch']}/{d['shape']}/{d['mesh']}"
+        step_ms = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"]) * 1e3
+        rows.append(
+            (name, round(step_ms * 1e3, 1),
+             f"{r['bottleneck']}:{round(100 * r['roofline_fraction'], 2)}%")
+        )
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma-separated substring filters on bench names")
+    ap.add_argument("--roofline", action="store_true",
+                    help="also print the dry-run roofline table")
+    args = ap.parse_args()
+    filters = [f for f in args.only.split(",") if f]
+
+    print("name,us_per_call,derived")
+    for bench in ALL_BENCHES:
+        if filters and not any(f in bench.__name__ for f in filters):
+            continue
+        for name, us, derived in bench():
+            print(f"{name},{us},{derived}")
+    if args.roofline or not filters:
+        for name, us, derived in roofline_rows():
+            print(f"{name},{us},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""Quickstart: the whole system in one minute on CPU.
+
+Builds a tiny dense LM, runs a few train steps, saves an erasure-coded
+checkpoint to the policy-enforcing storage cluster, kills two storage
+nodes, restores, and decodes a few tokens.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager, CheckpointPolicy
+from repro.checkpoint.storage import StorageCluster
+from repro.data.pipeline import DataPipeline, PipelineConfig, SyntheticSource
+from repro.models import (
+    ModelConfig, decode_step, init_cache, init_params, loss_fn,
+)
+from repro.optim.adamw import AdamWConfig, adamw_update, init_opt_state
+
+CFG = ModelConfig("quickstart", "dense", n_layers=2, d_model=64, n_heads=4,
+                  n_kv_heads=2, d_ff=128, vocab=512, loss_chunk=16,
+                  attn_block=16)
+
+
+def main() -> None:
+    params = init_params(CFG, jax.random.PRNGKey(0))
+    opt = init_opt_state(params)
+    adam = AdamWConfig(lr=3e-3)
+
+    @jax.jit
+    def step(p, o, batch):
+        loss, grads = jax.value_and_grad(lambda q: loss_fn(q, CFG, batch))(p)
+        p2, o2, m = adamw_update(p, grads, o, adam)
+        return p2, o2, loss
+
+    pipe = DataPipeline(SyntheticSource(CFG.vocab, seed=0),
+                        PipelineConfig(batch=4, seq=32))
+    data = iter(pipe)
+    for i in range(20):
+        params, opt, loss = step(params, opt, next(data))
+        if i % 5 == 0:
+            print(f"step {i:3d} loss {float(loss):.4f}")
+    pipe.close()
+
+    # --- policy-protected checkpoint: RS(4,2) across 8 storage nodes -------
+    cluster = StorageCluster(num_nodes=8, node_capacity=1 << 24)
+    mgr = CheckpointManager(cluster, CheckpointPolicy(k=4, m=2))
+    state = {"params": params, "opt": opt}
+    mgr.save(20, state, blocking=True)
+    print("checkpoint saved:", cluster.stats())
+
+    cluster.fail_node(1)
+    cluster.fail_node(5)
+    print("killed storage nodes 1 and 5; restoring from survivors...")
+    restored = mgr.restore(20, treedef=state)
+    w0 = np.asarray(jax.tree.leaves(state["params"])[0])
+    assert np.array_equal(np.asarray(jax.tree.leaves(restored["params"])[0]), w0)
+    print("degraded-mode restore: exact")
+
+    # --- decode a few tokens ------------------------------------------------
+    cache = init_cache(CFG, 1, 16)
+    tok = jnp.array([[1]], jnp.int32)
+    out = []
+    for t in range(8):
+        logits, cache = jax.jit(
+            lambda p, c, b: decode_step(p, CFG, c, b)
+        )(params, cache, {"tokens": tok, "cur_len": jnp.asarray(t, jnp.int32)})
+        tok = jnp.argmax(logits[:, :, :], axis=-1).astype(jnp.int32)
+        out.append(int(tok[0, 0]))
+    print("greedy decode:", out)
+    print("QUICKSTART OK")
+
+
+if __name__ == "__main__":
+    main()

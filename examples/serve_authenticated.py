@@ -1,0 +1,65 @@
+"""Batched serving with capability-authenticated requests.
+
+The inference tier enforces the paper's protocol policy: every request
+carries a ticket signed by the serving authority; forged/expired/
+insufficient-rights tickets are rejected before touching the model.
+
+  PYTHONPATH=src python examples/serve_authenticated.py
+"""
+
+import dataclasses
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+from repro.core.auth import CapabilityAuthority, Rights
+from repro.models import ModelConfig, decode_step, init_cache, init_params
+from repro.runtime.serve_loop import Request, ServeLoop
+
+CFG = ModelConfig("serve-demo", "dense", n_layers=2, d_model=128, n_heads=4,
+                  n_kv_heads=2, d_ff=256, vocab=1024, loss_chunk=16,
+                  attn_block=32)
+
+
+def main() -> None:
+    params = init_params(CFG, jax.random.PRNGKey(0))
+    authority = CapabilityAuthority(b"serving-key-0123")
+    step = jax.jit(lambda p, c, b: decode_step(p, CFG, c, b))
+    loop = ServeLoop(step, params, lambda: init_cache(CFG, 8, 128),
+                     batch_slots=8, authority=authority, eos_id=-1)
+
+    now = int(time.time())
+    ticket = lambda rights, ttl: authority.issue(  # noqa: E731
+        client_id=1, object_id=0, offset=0, length=1 << 20,
+        rights=rights, expiry=now + ttl,
+    )
+    good = ticket(Rights.READ, 3600)
+    expired = ticket(Rights.READ, -10)
+    wrong_rights = ticket(Rights.WRITE, 3600)
+    forged = dataclasses.replace(good, nonce=999)   # invalidates the MAC
+
+    reqs = [
+        Request(0, [1, 2, 3, 4], 8, good),
+        Request(1, [9, 8], 6, good),
+        Request(2, [5], 4, expired),
+        Request(3, [6, 7], 4, wrong_rights),
+        Request(4, [10, 11, 12], 4, forged),
+        Request(5, [20, 21], 5, good),
+    ]
+    done = loop.run(reqs)
+    for r in sorted(done, key=lambda r: r.rid):
+        status = "REJECTED" if r.rejected else f"out={r.out}"
+        print(f"req {r.rid}: {status}")
+    ok = {r.rid: r for r in done}
+    assert ok[2].rejected and ok[3].rejected and ok[4].rejected
+    assert len(ok[0].out) == 8 and len(ok[5].out) == 5
+    print(f"decode steps: {loop.steps} (continuous batching over 8 slots)")
+    print("SERVE-AUTH OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""Generate EXPERIMENTS.md tables from the dry-run sweep JSONs.
+
+Reads experiments/dryrun_baseline_v2 (paper-faithful substrate, perf
+optimizations disabled) and experiments/dryrun_opt (optimized), and the
+benchmark CSV, and prints the §Dry-run/§Roofline/§Perf markdown tables.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+
+
+def load(dirname: str) -> dict:
+    out = {}
+    for f in glob.glob(os.path.join(HERE, dirname, "*.json")):
+        d = json.load(open(f))
+        if "roofline" in d:
+            out[(d["arch"], d["shape"], d["mesh"])] = d
+    return out
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    return f"{x * 1e3:.1f}ms"
+
+
+def gib(x) -> str:
+    return f"{(x or 0) / 2**30:.1f}"
+
+
+def roofline_table(cells: dict, mesh: str) -> str:
+    rows = [
+        "| arch | shape | temp GiB/chip | t_comp | t_mem | t_coll | "
+        "bottleneck | useful | roofline% |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for (a, s, m), d in sorted(cells.items()):
+        if m != mesh:
+            continue
+        r = d["roofline"]
+        rows.append(
+            f"| {a} | {s} | {gib(d['memory_analysis']['bytes_per_device'])} | "
+            f"{fmt_s(r['t_compute_s'])} | {fmt_s(r['t_memory_s'])} | "
+            f"{fmt_s(r['t_collective_s'])} | {r['bottleneck']} | "
+            f"{r['useful_flop_ratio']:.2f} | "
+            f"{100 * r['roofline_fraction']:.2f} |"
+        )
+    return "\n".join(rows)
+
+
+def before_after(base: dict, opt: dict, mesh: str = "pod16x16") -> str:
+    rows = [
+        "| arch | shape | t_mem before→after | t_coll before→after | "
+        "roofline% before→after |",
+        "|---|---|---|---|---|",
+    ]
+    for key in sorted(opt):
+        a, s, m = key
+        if m != mesh or (a, s, m) not in base:
+            continue
+        rb, ro = base[key]["roofline"], opt[key]["roofline"]
+        rows.append(
+            f"| {a} | {s} | {fmt_s(rb['t_memory_s'])} → "
+            f"{fmt_s(ro['t_memory_s'])} | {fmt_s(rb['t_collective_s'])} → "
+            f"{fmt_s(ro['t_collective_s'])} | "
+            f"{100 * rb['roofline_fraction']:.2f} → "
+            f"{100 * ro['roofline_fraction']:.2f} |"
+        )
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    base = load("dryrun_baseline_v2")
+    opt = load("dryrun_opt")
+    print("## Optimized roofline (single pod, 16x16)\n")
+    print(roofline_table(opt, "pod16x16"))
+    print("\n## Optimized roofline (multi-pod, 2x16x16)\n")
+    print(roofline_table(opt, "pod2x16x16"))
+    print("\n## Before/after (baseline vs optimized, single pod)\n")
+    print(before_after(base, opt))

@@ -1,0 +1,9 @@
+"""repro: network-accelerated storage policies for JAX training clusters.
+
+Reproduction + TPU-native extension of "Building Blocks for Network-
+Accelerated Distributed File Systems" (Di Girolamo et al., 2022) inside a
+production-grade multi-pod training/inference framework.  See README.md,
+DESIGN.md and EXPERIMENTS.md at the repository root.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,297 @@
+"""Checkpoint storage cluster: DFS storage nodes + metadata service.
+
+This instantiates the paper's architecture for the training framework:
+a set of storage nodes whose "NICs" run the policy engine
+(``repro.core.handlers``), a metadata service that owns the object
+namespace and issues capabilities, and a client used by the checkpoint
+manager.  Storage is byte-addressable memory per node (optionally spilled
+to disk files), the paper's NVMM assumption.
+
+The metadata service implements the control plane the paper leaves
+abstract: object -> (layout, policy) mapping, extent allocation, and
+capability issuance (section II: clients query metadata, then talk to
+storage nodes directly).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import secrets
+import time
+from typing import Any
+
+import numpy as np
+
+from repro.core.auth import CapabilityAuthority, Rights
+from repro.core.handlers import DFSClient, DFSNode, Router
+from repro.core.packets import ReplicaCoord, ReplStrategy, Resiliency
+
+
+@dataclasses.dataclass
+class ObjectLayout:
+    """Where one object lives: data/parity extents on storage nodes."""
+
+    object_id: int
+    size: int
+    resiliency: Resiliency
+    strategy: ReplStrategy
+    data_coords: list[ReplicaCoord]
+    parity_coords: list[ReplicaCoord]
+    ec_k: int = 0
+    ec_m: int = 0
+    chunk_len: int = 0  # per-node chunk length (EC) or full size (repl)
+
+
+class MetadataService:
+    """Control plane: namespace, extent allocation, capabilities."""
+
+    def __init__(self, num_nodes: int, node_capacity: int, key: bytes | None = None):
+        self.authority = CapabilityAuthority(key or secrets.token_bytes(16))
+        self.num_nodes = num_nodes
+        self.node_capacity = node_capacity
+        self._alloc = [0] * num_nodes  # bump allocator per node
+        self._objects: dict[int, ObjectLayout] = {}
+        self._next_oid = 1
+        self._rr = 0  # round-robin placement cursor
+
+    def _place(self, n: int) -> list[int]:
+        nodes = [(self._rr + i) % self.num_nodes for i in range(n)]
+        self._rr = (self._rr + n) % self.num_nodes
+        return nodes
+
+    def _extent(self, node: int, size: int) -> int:
+        addr = self._alloc[node]
+        if addr + size > self.node_capacity:
+            raise RuntimeError(f"storage node {node} full")
+        self._alloc[node] = addr + size
+        return addr
+
+    def create_object(
+        self,
+        size: int,
+        resiliency: Resiliency,
+        k: int,
+        m: int = 0,
+        strategy: ReplStrategy = ReplStrategy.RING,
+    ) -> ObjectLayout:
+        oid = self._next_oid
+        self._next_oid += 1
+        if resiliency == Resiliency.ERASURE_CODING:
+            chunk = -(-size // k)
+            chunk = -(-chunk // 32) * 32  # stripe alignment
+            nodes = self._place(k + m)
+            data = [ReplicaCoord(n, self._extent(n, chunk)) for n in nodes[:k]]
+            par = [ReplicaCoord(n, self._extent(n, chunk)) for n in nodes[k:]]
+            layout = ObjectLayout(oid, size, resiliency, strategy, data, par,
+                                  ec_k=k, ec_m=m, chunk_len=chunk)
+        elif resiliency == Resiliency.REPLICATION:
+            nodes = self._place(k)
+            data = [ReplicaCoord(n, self._extent(n, size)) for n in nodes]
+            layout = ObjectLayout(oid, size, resiliency, strategy, data, [],
+                                  chunk_len=size)
+        else:
+            node = self._place(1)
+            data = [ReplicaCoord(node[0], self._extent(node[0], size))]
+            layout = ObjectLayout(oid, size, resiliency, strategy, data, [],
+                                  chunk_len=size)
+        self._objects[oid] = layout
+        return layout
+
+    def lookup(self, oid: int) -> ObjectLayout:
+        return self._objects[oid]
+
+    def issue_capability(
+        self, client_id: int, rights: int = Rights.WRITE | Rights.READ,
+        ttl_s: int = 3600,
+    ):
+        # Extent-wide capability: per-object capabilities are issued by
+        # narrowing offset/length (see CheckpointManager).
+        return self.authority.issue(
+            client_id=client_id,
+            object_id=0,
+            offset=0,
+            length=self.node_capacity,
+            rights=rights,
+            expiry=int(time.time()) + ttl_s,
+        )
+
+
+class StorageCluster:
+    """N policy-enforcing storage nodes + a metadata service + a client."""
+
+    def __init__(
+        self,
+        num_nodes: int,
+        node_capacity: int = 1 << 26,
+        client_id: int = 1,
+        spill_dir: str | None = None,
+    ):
+        self.router = Router()
+        self.meta = MetadataService(num_nodes, node_capacity)
+        self.nodes = [
+            DFSNode(i, self.router, self.meta.authority,
+                    storage_size=node_capacity)
+            for i in range(num_nodes)
+        ]
+        self.client = DFSClient(client_id, self.router)
+        self.client_id = client_id
+        self.capability = self.meta.issue_capability(client_id)
+        self.spill_dir = spill_dir
+        self.num_nodes = num_nodes
+        self.node_capacity = node_capacity
+        self.failed: set[int] = set()
+
+    # -- data plane -----------------------------------------------------------
+
+    def write_object(
+        self,
+        data: bytes | np.ndarray,
+        resiliency: Resiliency = Resiliency.ERASURE_CODING,
+        k: int = 4,
+        m: int = 2,
+        strategy: ReplStrategy = ReplStrategy.RING,
+    ) -> ObjectLayout:
+        blob = np.frombuffer(bytes(data), np.uint8) if isinstance(
+            data, (bytes, bytearray)) else np.asarray(data, np.uint8).ravel()
+        layout = self.meta.create_object(
+            int(blob.size), resiliency, k, m, strategy
+        )
+        before = len(self.client.acks())
+        if resiliency == Resiliency.ERASURE_CODING:
+            self.client.write(
+                self.capability, blob, list(layout.data_coords),
+                resiliency=resiliency, ec_m=m,
+                parity_targets=list(layout.parity_coords),
+            )
+            expect = layout.ec_k + layout.ec_m
+        else:
+            self.client.write(
+                self.capability, blob, list(layout.data_coords),
+                resiliency=resiliency, strategy=strategy,
+            )
+            expect = 1
+        acks = self.client.acks()[before:]
+        from repro.core.packets import OpType
+
+        good = [a for a in acks if a.ctrl == OpType.WRITE_ACK]
+        if len(good) < expect:
+            raise IOError(
+                f"object {layout.object_id}: {len(good)}/{expect} acks "
+                f"(NACK or loss)"
+            )
+        return layout
+
+    def read_object(self, layout: ObjectLayout) -> bytes:
+        """Read with degraded-mode EC reconstruction / replica failover."""
+        from repro.core.erasure import RSCode
+
+        if layout.resiliency == Resiliency.ERASURE_CODING:
+            k, m, chunk = layout.ec_k, layout.ec_m, layout.chunk_len
+            shards: list[np.ndarray | None] = []
+            for coord in list(layout.data_coords) + list(layout.parity_coords):
+                if coord.node in self.failed:
+                    shards.append(None)
+                else:
+                    shards.append(self.nodes[coord.node].read(coord.addr, chunk))
+            code = RSCode(k, m)
+            datam = code.decode(shards, backend="numpy")
+            return datam.reshape(-1)[: layout.size].tobytes()
+        # replication: first live replica
+        for coord in layout.data_coords:
+            if coord.node not in self.failed:
+                return self.nodes[coord.node].read(
+                    coord.addr, layout.size
+                ).tobytes()
+        raise IOError(f"object {layout.object_id}: all replicas failed")
+
+    # -- failure injection / recovery ------------------------------------------
+
+    def fail_node(self, node_id: int) -> None:
+        self.failed.add(node_id)
+
+    def heal_node(self, node_id: int) -> None:
+        """Re-provision a node and rebuild every shard it held."""
+        from repro.core.erasure import RSCode
+
+        self.nodes[node_id].storage.mem[:] = 0
+        self.failed.discard(node_id)
+        for layout in self.meta._objects.values():
+            coords = list(layout.data_coords) + list(layout.parity_coords)
+            for idx, coord in enumerate(coords):
+                if coord.node != node_id:
+                    continue
+                if layout.resiliency == Resiliency.ERASURE_CODING:
+                    chunk = layout.chunk_len
+                    shards = [
+                        None
+                        if c.node in self.failed or c.node == node_id
+                        else self.nodes[c.node].read(c.addr, chunk)
+                        for c in coords
+                    ]
+                    code = RSCode(layout.ec_k, layout.ec_m)
+                    rebuilt = code.reconstruct_shard(shards, idx)
+                    self.nodes[node_id].storage.write(coord.addr, rebuilt)
+                elif layout.resiliency == Resiliency.REPLICATION:
+                    src = next(
+                        c for c in coords
+                        if c.node != node_id and c.node not in self.failed
+                    )
+                    data = self.nodes[src.node].read(src.addr, layout.size)
+                    self.nodes[node_id].storage.write(coord.addr, data)
+
+    def stats(self) -> dict:
+        return {
+            "nodes": self.num_nodes,
+            "failed": sorted(self.failed),
+            "bytes_stored": sum(n.storage.bytes_written for n in self.nodes),
+            "packets": self.router.packets_delivered,
+            "objects": len(self.meta._objects),
+        }
+
+    # -- durability: spill node contents + metadata to disk --------------------
+
+    def spill(self, dirname: str | None = None) -> str:
+        """Persist every node's storage and the object namespace to disk
+        (one file per node + a metadata pickle); survives process restart."""
+        import pickle
+
+        d = dirname or self.spill_dir
+        if d is None:
+            raise ValueError("no spill directory configured")
+        os.makedirs(d, exist_ok=True)
+        for node in self.nodes:
+            node.storage.mem.tofile(os.path.join(d, f"node{node.node_id}.bin"))
+        with open(os.path.join(d, "meta.pkl"), "wb") as f:
+            pickle.dump(
+                {
+                    "objects": self.meta._objects,
+                    "alloc": self.meta._alloc,
+                    "next_oid": self.meta._next_oid,
+                    "key": bytes(self.meta.authority.key.tobytes()),
+                    "num_nodes": self.num_nodes,
+                    "capacity": self.node_capacity,
+                },
+                f,
+            )
+        return d
+
+    @classmethod
+    def from_spill(cls, dirname: str, client_id: int = 1) -> "StorageCluster":
+        """Reconstruct a cluster (nodes + namespace + auth key) from disk."""
+        import pickle
+
+        with open(os.path.join(dirname, "meta.pkl"), "rb") as f:
+            meta = pickle.load(f)
+        cluster = cls(meta["num_nodes"], meta["capacity"], client_id=client_id,
+                      spill_dir=dirname)
+        cluster.meta.authority = CapabilityAuthority(meta["key"])
+        for node in cluster.nodes:
+            node.authority = cluster.meta.authority
+            path = os.path.join(dirname, f"node{node.node_id}.bin")
+            node.storage.mem[:] = np.fromfile(path, dtype=np.uint8)
+        cluster.meta._objects = meta["objects"]
+        cluster.meta._alloc = meta["alloc"]
+        cluster.meta._next_oid = meta["next_oid"]
+        cluster.capability = cluster.meta.issue_capability(client_id)
+        return cluster

@@ -1,0 +1,4 @@
+"""Assigned architecture registry: ``get_arch(name)`` / ``cells()``."""
+
+from repro.configs.base import ArchConfig, ShapeConfig, SHAPES
+from repro.configs.registry import ARCHS, arch_names, cells, get_arch

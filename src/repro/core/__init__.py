@@ -1,0 +1,72 @@
+"""The paper's primary contribution: NIC-offloadable DFS policies.
+
+Three policy classes (paper section II-A), each with a streaming, per-chunk
+realization adapted to TPU idioms:
+
+  * protocol        -> :mod:`repro.core.auth`        (capability validation)
+  * data movement   -> :mod:`repro.core.replication` (ring/PBT pipelined bcast)
+  * data processing -> :mod:`repro.core.erasure`     (streaming RS(k, m))
+
+:mod:`repro.core.handlers` composes them into the sPIN HH/PH/CH execution
+model (Listing 1); :mod:`repro.core.packets` defines the wire format;
+:mod:`repro.core.state` the bounded on-NIC state.  Timing/evaluation lives
+in :mod:`repro.sim`; the production consumer is :mod:`repro.checkpoint`.
+"""
+
+from repro.core.auth import Capability, CapabilityAuthority, Rights, sponge_mac
+from repro.core.erasure import RSCode, split_stripe, join_stripe, stream_encode
+from repro.core.handlers import DFSClient, DFSNode, Router, StorageTarget
+from repro.core.packets import (
+    DEFAULT_MTU,
+    DFSHeader,
+    OpType,
+    Packet,
+    ReadRequestHeader,
+    ReplicaCoord,
+    ReplStrategy,
+    Resiliency,
+    WriteRequestHeader,
+    packetize_write,
+)
+from repro.core.replication import (
+    BroadcastPlan,
+    children_of,
+    optimal_chunk_count,
+    pbt_broadcast,
+    replicate,
+    ring_broadcast,
+)
+from repro.core.state import RequestTable, littles_law_concurrent_writes
+
+__all__ = [
+    "Capability",
+    "CapabilityAuthority",
+    "Rights",
+    "sponge_mac",
+    "RSCode",
+    "split_stripe",
+    "join_stripe",
+    "stream_encode",
+    "DFSClient",
+    "DFSNode",
+    "Router",
+    "StorageTarget",
+    "DEFAULT_MTU",
+    "DFSHeader",
+    "OpType",
+    "Packet",
+    "ReadRequestHeader",
+    "ReplicaCoord",
+    "ReplStrategy",
+    "Resiliency",
+    "WriteRequestHeader",
+    "packetize_write",
+    "BroadcastPlan",
+    "children_of",
+    "optimal_chunk_count",
+    "pbt_broadcast",
+    "replicate",
+    "ring_broadcast",
+    "RequestTable",
+    "littles_law_concurrent_writes",
+]

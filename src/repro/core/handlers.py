@@ -1,0 +1,496 @@
+"""Functional sPIN handler layer: Listing 1 of the paper, executable.
+
+This module is the *functional* (untimed) realization of the NIC-offloaded
+DFS: an in-process cluster of :class:`DFSNode` objects connected by a
+:class:`Router`, each running the header/payload/completion handler pipeline
+of Listing 1 on incoming packets:
+
+  * HH  -> ``DFS_request_init``: capability validation (section IV), request
+    table allocation (deny-on-full), recording of WRH info needed by PHs;
+  * PH  -> ``DFS_request_process_pkt``: store payload to the storage target,
+    forward to broadcast children (section V), or produce/aggregate
+    intermediate erasure-coding parities (section VI);
+  * CH  -> ``DFS_request_fini``: request finalization and acknowledgement.
+
+sPIN's ordering guarantees are preserved structurally: the router delivers
+the header packet first and the completion packet last; PHs of a message run
+only after its HH completed (enforced by the per-request ``accept`` flag).
+
+Write acknowledgements implement *durable replication*: a node acks its
+parent only after its local write and all children acks arrived, so the
+client's WRITE_ACK means the data reached every replica — the semantics a
+checkpoint manager needs.  The timed model of the same dataflow lives in
+``repro.sim``; this layer backs integration tests and the checkpoint plane.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from typing import Callable
+
+import numpy as np
+
+from repro.core import erasure
+from repro.core.auth import CapabilityAuthority, Rights
+from repro.core.packets import (
+    DEFAULT_MTU,
+    RDMA_HEADER_SIZE,
+    DFSHeader,
+    OpType,
+    Packet,
+    ReplicaCoord,
+    ReplStrategy,
+    Resiliency,
+    WriteRequestHeader,
+    packetize_write,
+)
+from repro.core.replication import children_of
+from repro.core.state import RequestEntry, RequestTable
+
+
+class StorageTarget:
+    """Byte-addressable storage medium (the paper assumes it ingests at
+    line rate; we model it as host memory, as NVMM-backed DFSs do)."""
+
+    def __init__(self, size: int = 1 << 24):
+        self.mem = np.zeros(size, dtype=np.uint8)
+        self.bytes_written = 0
+
+    def write(self, addr: int, data: np.ndarray) -> None:
+        data = np.asarray(data, dtype=np.uint8)
+        if addr < 0 or addr + data.size > self.mem.size:
+            raise ValueError(f"write [{addr}, {addr + data.size}) out of bounds")
+        self.mem[addr : addr + data.size] = data
+        self.bytes_written += int(data.size)
+
+    def read(self, addr: int, size: int) -> np.ndarray:
+        return self.mem[addr : addr + size].copy()
+
+
+@dataclasses.dataclass
+class Event:
+    """Handler -> host-software event queue entry (section III-C)."""
+
+    kind: str
+    greq_id: int
+    detail: str = ""
+
+
+class Router:
+    """Synchronous in-process packet delivery between nodes.
+
+    Uses a FIFO work queue (not recursion) so deep replica chains and
+    interleaved EC streams process in arrival order, mirroring a network
+    that delivers header-first / completion-last per message.
+    """
+
+    def __init__(self):
+        self.nodes: dict[int, "DFSNode"] = {}
+        self.client_acks: dict[int, list[Packet]] = defaultdict(list)
+        self._queue: list[tuple[int, Packet]] = []
+        self._draining = False
+        self.packets_delivered = 0
+
+    def register(self, node: "DFSNode") -> None:
+        self.nodes[node.node_id] = node
+
+    def send(self, dest: int, pkt: Packet) -> None:
+        self._queue.append((dest, pkt))
+        if not self._draining:
+            self._drain()
+
+    def send_to_client(self, client_id: int, pkt: Packet) -> None:
+        self.client_acks[client_id].append(pkt)
+
+    def _drain(self) -> None:
+        self._draining = True
+        try:
+            while self._queue:
+                dest, pkt = self._queue.pop(0)
+                self.packets_delivered += 1
+                self.nodes[dest].handle_packet(pkt)
+        finally:
+            self._draining = False
+
+
+@dataclasses.dataclass
+class _ReqState:
+    accept: bool
+    wrh: WriteRequestHeader | None
+    client_id: int
+    children: list[int]
+    local_done: bool = False
+    child_acks: int = 0
+    parent: int | None = None  # node id to ack (None => ack the client)
+    acked: bool = False
+
+
+class DFSNode:
+    """One storage node: NIC-offloaded policy engine + storage target."""
+
+    def __init__(
+        self,
+        node_id: int,
+        router: Router,
+        authority: CapabilityAuthority,
+        storage_size: int = 1 << 24,
+        req_table_capacity: int | None = None,
+        accumulator_pool: int = 256,
+        mtu: int = DEFAULT_MTU,
+        now_fn: Callable[[], int] = lambda: 0,
+    ):
+        self.node_id = node_id
+        self.router = router
+        self.authority = authority
+        self.storage = StorageTarget(storage_size)
+        self.req_table = RequestTable(req_table_capacity)
+        self.mtu = mtu
+        self.now_fn = now_fn
+        self.events: list[Event] = []
+        self._reqs: dict[int, _ReqState] = {}
+        self._parents: dict[int, int | None] = {}
+        # EC aggregation state: greq -> (pool, seq->done-count bookkeeping)
+        self._acc_pool = erasure.AccumulatorPool(accumulator_pool, mtu)
+        self._ec_agg: dict[int, dict] = {}
+        router.register(self)
+
+    # -- Listing 1: header handler ------------------------------------------
+
+    def _header_handler(self, pkt: Packet) -> None:
+        dfs, wrh = pkt.dfs, pkt.wrh
+        assert dfs is not None and wrh is not None
+        accept = self._request_init(dfs, wrh)
+        children: list[int] = []
+        parent: int | None = None
+        if accept and wrh.resiliency == Resiliency.REPLICATION and wrh.replicas:
+            k = len(wrh.replicas)
+            children = children_of(wrh.virtual_rank, k, wrh.strategy)
+            if wrh.virtual_rank > 0:
+                parent = self._parent_node(wrh)
+        entry_ok = accept and self.req_table.insert(
+            RequestEntry(dfs.greq_id, accept)
+        )
+        if accept and not entry_ok:
+            accept = False  # table full: deny, client retries (section III-B2)
+            self.events.append(Event("deny_full", dfs.greq_id))
+        self._reqs[dfs.greq_id] = _ReqState(
+            accept=accept,
+            wrh=wrh,
+            client_id=dfs.client_id,
+            children=children,
+            parent=parent,
+        )
+        if not accept:
+            self._nack(dfs.greq_id, dfs.client_id)
+
+    def _parent_node(self, wrh: WriteRequestHeader) -> int | None:
+        k = len(wrh.replicas)
+        r = wrh.virtual_rank
+        if r == 0:
+            return None
+        pr = r - 1 if wrh.strategy == ReplStrategy.RING else (r - 1) // 2
+        return wrh.replicas[pr].node
+
+    def _request_init(self, dfs: DFSHeader, wrh: WriteRequestHeader) -> bool:
+        """Capability check: signature, expiry, rights, extent (section IV)."""
+        return self.authority.verify(
+            dfs.capability,
+            now=self.now_fn(),
+            op_rights=Rights.WRITE,
+            offset=wrh.addr,
+            length=wrh.size,
+            client_id=dfs.client_id,
+        )
+
+    # -- Listing 1: payload handler -----------------------------------------
+
+    def _payload_handler(self, pkt: Packet) -> None:
+        st = self._reqs.get(pkt.greq_id)
+        if st is None or not st.accept:
+            return  # packet dropped (Listing 1 else-branch)
+        wrh = st.wrh
+        assert wrh is not None
+        if wrh.resiliency == Resiliency.ERASURE_CODING and wrh.ec_index >= wrh.ec_k:
+            self._aggregate_parity(pkt, st)
+            return
+        # Store to the local target.
+        self.storage.write(wrh.addr + pkt.payload_offset, pkt.payload)
+        # Replication: forward to children (per-packet, before host memory).
+        for child_rank in st.children:
+            self._forward_to_child(pkt, st, child_rank)
+        # EC data node: emit intermediate parities for each parity target.
+        if wrh.resiliency == Resiliency.ERASURE_CODING and wrh.ec_index < wrh.ec_k:
+            self._emit_intermediate_parities(pkt, st)
+
+    def _forward_to_child(self, pkt: Packet, st: _ReqState, child_rank: int) -> None:
+        wrh = st.wrh
+        assert wrh is not None
+        coord = wrh.replicas[child_rank]
+        if pkt.is_header:
+            child_wrh = dataclasses.replace(
+                wrh, virtual_rank=child_rank, addr=coord.addr
+            )
+            fwd = dataclasses.replace(pkt, wrh=child_wrh)
+        else:
+            fwd = pkt
+        self.router.send(coord.node, fwd)
+
+    def _emit_intermediate_parities(self, pkt: Packet, st: _ReqState) -> None:
+        wrh = st.wrh
+        assert wrh is not None
+        code = erasure.RSCode(wrh.ec_k, wrh.ec_m)
+        coeffs = code.parity_matrix[:, wrh.ec_index]
+        seq = pkt.pkt_index
+        for i in range(wrh.ec_m):
+            coord = wrh.replicas[i]  # parity coordinates (section VI)
+            from repro.core import gf256
+
+            enc = gf256.gf_mul_vec(pkt.payload, coeffs[i])
+            # NB: wrh.seq (the stripe id) is preserved — the parity node
+            # aggregates across the k streams of the stripe by this id;
+            # the aggregation sequence index travels in pkt_index.
+            ip_wrh = dataclasses.replace(
+                wrh,
+                addr=coord.addr,
+                ec_index=wrh.ec_k + i,
+                replicas=(),
+            )
+            ip = Packet(
+                greq_id=pkt.greq_id,
+                pkt_index=seq,
+                is_header=pkt.is_header,
+                is_completion=pkt.is_completion,
+                dfs=pkt.dfs if pkt.is_header else None,
+                wrh=ip_wrh,
+                rrh=None,
+                payload=enc,
+                payload_offset=pkt.payload_offset,
+                wire_size=pkt.wire_size,
+            )
+            self.router.send(coord.node, ip)
+
+    def _aggregate_parity(self, pkt: Packet, st: _ReqState) -> None:
+        """Parity-node PH: XOR k intermediate parities per aggregation
+        sequence (accumulator pool + on-NIC hash table, section VI-B3).
+
+        The k data-node streams of one stripe share ``wrh.seq`` (stripe id);
+        aggregation sequence i completes when all k intermediate parities of
+        packet i have been XORed.  The stripe acks the client once every
+        sequence is done and all k streams completed.
+        """
+        wrh = st.wrh
+        assert wrh is not None
+        stripe = wrh.seq
+        agg = self._ec_agg.setdefault(
+            stripe,
+            {
+                "table": {},
+                "done": 0,
+                "expected": None,
+                "streams_done": 0,
+                "client_id": st.client_id,
+                "stream_greqs": [],
+            },
+        )
+        key = pkt.pkt_index  # aggregation sequence id i (paper Fig. 14)
+        idx = agg["table"].get(key)
+        if idx is None:
+            idx = self._acc_pool.allocate()
+            if idx is None:
+                self.events.append(Event("ec_cpu_fallback", pkt.greq_id))
+                return
+            agg["table"][key] = idx
+        count = self._acc_pool.xor_into(idx, pkt.payload)
+        if count == wrh.ec_k:
+            final = self._acc_pool.release(idx)[: pkt.payload_size]
+            del agg["table"][key]
+            self.storage.write(wrh.addr + pkt.payload_offset, final)
+            agg["done"] += 1
+        if pkt.is_completion:
+            agg["streams_done"] += 1
+            agg["expected"] = pkt.pkt_index + 1
+            agg["stream_greqs"].append(pkt.greq_id)
+        if (
+            agg["streams_done"] == wrh.ec_k
+            and agg["expected"] is not None
+            and agg["done"] == agg["expected"]
+            and not agg["table"]
+        ):
+            for g in agg["stream_greqs"]:
+                self.req_table.remove(g)
+                self._reqs.pop(g, None)
+            del self._ec_agg[stripe]
+            self.router.send_to_client(
+                agg["client_id"], _control_packet(stripe, OpType.WRITE_ACK)
+            )
+            self.events.append(Event("parity_done", stripe))
+
+    # -- Listing 1: completion handler ----------------------------------------
+
+    def _completion_handler(self, pkt: Packet) -> None:
+        st = self._reqs.get(pkt.greq_id)
+        if st is None or not st.accept:
+            return
+        wrh = st.wrh
+        if (
+            wrh is not None
+            and wrh.resiliency == Resiliency.ERASURE_CODING
+            and wrh.ec_index >= wrh.ec_k
+        ):
+            return  # parity streams ack at stripe granularity (_aggregate_parity)
+        st.local_done = True
+        self._maybe_ack(pkt.greq_id)
+
+    def _maybe_ack(self, greq_id: int) -> None:
+        st = self._reqs[greq_id]
+        if st.acked or not st.local_done or st.child_acks < len(st.children):
+            return
+        st.acked = True
+        self.req_table.remove(greq_id)
+        ack = _control_packet(greq_id, OpType.WRITE_ACK)
+        if st.parent is None:
+            self.router.send_to_client(st.client_id, ack)
+        else:
+            self.router.send(st.parent, ack)
+        self.events.append(Event("write_done", greq_id))
+
+    def _on_child_ack(self, greq_id: int) -> None:
+        st = self._reqs.get(greq_id)
+        if st is None:
+            return
+        st.child_acks += 1
+        self._maybe_ack(greq_id)
+
+    def _nack(self, greq_id: int, client_id: int) -> None:
+        self.router.send_to_client(client_id, _control_packet(greq_id, OpType.NACK))
+        self.events.append(Event("nack", greq_id))
+
+    # -- dispatch -------------------------------------------------------------
+
+    def handle_packet(self, pkt: Packet) -> None:
+        if pkt.ctrl is not None:
+            if pkt.ctrl == OpType.WRITE_ACK:
+                self._on_child_ack(pkt.greq_id)
+            return
+        if pkt.is_header:
+            self._header_handler(pkt)
+        self._payload_handler(pkt)
+        if pkt.is_completion:
+            self._completion_handler(pkt)
+
+    # -- host-side API ---------------------------------------------------------
+
+    def read(self, addr: int, size: int) -> np.ndarray:
+        return self.storage.read(addr, size)
+
+    def cleanup_stale(self, alive: set[int]) -> list[int]:
+        """Cleanup-handler semantics for client failures (section VII)."""
+        for g in list(self._reqs):
+            if g not in alive and not self._reqs[g].acked:
+                agg = self._ec_agg.pop(g, None)
+                if agg:
+                    for idx in agg["table"].values():
+                        self._acc_pool.release(idx)
+                del self._reqs[g]
+                self.events.append(Event("cleanup", g))
+        return self.req_table.cleanup_stale(alive)
+
+
+def _control_packet(greq_id: int, op: OpType) -> Packet:
+    return Packet(
+        greq_id=greq_id,
+        pkt_index=0,
+        is_header=False,
+        is_completion=False,
+        dfs=None,
+        wrh=None,
+        rrh=None,
+        payload=np.zeros(0, dtype=np.uint8),
+        payload_offset=0,
+        wire_size=RDMA_HEADER_SIZE,
+        ctrl=op,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Client
+# ---------------------------------------------------------------------------
+
+
+class DFSClient:
+    """Issues authenticated writes with replication / EC policies."""
+
+    def __init__(self, client_id: int, router: Router, mtu: int = DEFAULT_MTU):
+        self.client_id = client_id
+        self.router = router
+        self.mtu = mtu
+        self._next_greq = client_id << 32
+
+    def _greq(self) -> int:
+        self._next_greq += 1
+        return self._next_greq
+
+    def write(
+        self,
+        capability,
+        data: np.ndarray,
+        targets: list[ReplicaCoord],
+        resiliency: Resiliency = Resiliency.NONE,
+        strategy: ReplStrategy = ReplStrategy.RING,
+        ec_m: int = 0,
+        parity_targets: list[ReplicaCoord] | None = None,
+    ) -> list[int]:
+        """Issue a write; returns the greq ids used (1 for raw/replicated,
+        k for erasure-coded stripes).  Acks land in router.client_acks."""
+        data = np.asarray(data, dtype=np.uint8).ravel()
+        if resiliency in (Resiliency.NONE, Resiliency.REPLICATION):
+            greq = self._greq()
+            dfs = DFSHeader(OpType.WRITE, greq, self.client_id, capability)
+            wrh = WriteRequestHeader(
+                addr=targets[0].addr,
+                size=int(data.size),
+                resiliency=resiliency,
+                strategy=strategy,
+                virtual_rank=0,
+                replicas=tuple(targets) if resiliency == Resiliency.REPLICATION else (),
+            )
+            for pkt in packetize_write(dfs, wrh, data, self.mtu):
+                self.router.send(targets[0].node, pkt)
+            return [greq]
+        # Erasure coding: split into k chunks, one write per data node,
+        # packets interleaved across chunks (section VI-B1).
+        assert resiliency == Resiliency.ERASURE_CODING
+        k = len(targets)
+        assert parity_targets is not None and len(parity_targets) == ec_m
+        chunks = erasure.split_stripe(data, k)
+        stripe_id = self._greq() & 0xFFFFFFFF  # shared 32-bit stripe id
+        greqs = [stripe_id]  # parity acks carry the stripe id
+        pkt_streams = []
+        for j in range(k):
+            greq = self._greq()
+            greqs.append(greq)
+            dfs = DFSHeader(OpType.WRITE, greq, self.client_id, capability)
+            wrh = WriteRequestHeader(
+                addr=targets[j].addr,
+                size=int(chunks.shape[1]),
+                resiliency=Resiliency.ERASURE_CODING,
+                ec_k=k,
+                ec_m=ec_m,
+                ec_index=j,
+                replicas=tuple(parity_targets),
+                seq=stripe_id,
+            )
+            pkt_streams.append(
+                packetize_write(dfs, wrh, chunks[j], self.mtu)
+            )
+        # Interleave: seq 0 of every chunk, then seq 1, ... (Fig. 14).
+        max_len = max(len(s) for s in pkt_streams)
+        for i in range(max_len):
+            for j in range(k):
+                if i < len(pkt_streams[j]):
+                    self.router.send(targets[j].node, pkt_streams[j][i])
+        return greqs
+
+    def acks(self) -> list[Packet]:
+        return self.router.client_acks[self.client_id]

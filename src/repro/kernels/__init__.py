@@ -1,0 +1,7 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU).
+
+gf256_encode.py     bit-sliced GF(2^8) RS-encode (+ MXU GF(2) matmul variant)
+flash_attention.py  flash-attention forward (VMEM online softmax)
+xor_reduce.py       parity-accumulator XOR fold
+ops.py              jit'd dispatch wrappers; ref.py: pure-jnp oracles
+"""

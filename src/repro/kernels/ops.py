@@ -1,0 +1,183 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+These own padding, bit-plane packing, and backend dispatch: on TPU the
+kernels compile natively; everywhere else they run in interpret mode
+(exact same kernel body, Python-executed), so the whole framework is
+testable on CPU.  ``backend="ref"`` routes to the pure-jnp oracles.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gf256
+from repro.kernels import ref
+from repro.kernels.gf256_encode import gf_matmul_bitsliced, gf_matmul_mxu
+from repro.kernels.xor_reduce import xor_reduce as _xor_reduce_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _interpret() -> bool:
+    return not _on_tpu()
+
+
+# ---------------------------------------------------------------------------
+# RS encode / GF matmul on byte streams.
+# ---------------------------------------------------------------------------
+
+
+def _pad_to(x: jax.Array, mult: int, axis: int) -> tuple[jax.Array, int]:
+    size = x.shape[axis]
+    target = -(-size // mult) * mult
+    if target == size:
+        return x, size
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, target - size)
+    return jnp.pad(x, pad), size
+
+
+@functools.partial(jax.jit, static_argnames=("block_w",))
+def _encode_planes(bitmat, data_bytes, block_w):
+    planes = ref.pack_bitplanes(data_bytes)          # (k, 8, w)
+    m, k = bitmat.shape[0], bitmat.shape[1]
+    out_planes = gf_matmul_bitsliced(
+        bitmat, planes, m=m, k=k, block_w=block_w, interpret=_interpret()
+    )
+    return ref.unpack_bitplanes(out_planes)          # (m, L)
+
+
+def gf_matmul_bytes(
+    coeffs: np.ndarray | jax.Array,
+    data: jax.Array,
+    backend: str = "pallas",
+    block_w: int = 1024,
+) -> jax.Array:
+    """(n, k) GF coefficient bytes x (k, L) byte rows -> (n, L).
+
+    The workhorse for both encode (coeffs = parity matrix) and decode
+    (coeffs = inverted generator submatrix).
+    """
+    data = jnp.asarray(data, dtype=jnp.uint8)
+    coeffs_np = np.asarray(coeffs, dtype=np.uint8)
+    n, k = coeffs_np.shape
+    assert data.shape[0] == k, (coeffs_np.shape, data.shape)
+    if backend == "ref":
+        return ref.gf_matmul_ref(jnp.asarray(coeffs_np), data)
+    # Pad L so the packed word count divides the kernel block.
+    data_p, orig = _pad_to(data, 32 * block_w, axis=1)
+    bitmat = jnp.asarray(gf256.parity_bitmatrix(coeffs_np), dtype=jnp.uint32)
+    out = _encode_planes(bitmat, data_p, block_w)
+    return out[:, :orig]
+
+
+def rs_encode(
+    data: jax.Array,
+    k: int,
+    m: int,
+    kind: str = "cauchy",
+    backend: str = "pallas",
+    block_w: int = 1024,
+) -> jax.Array:
+    """Systematic RS(k, m) parity: (k, L) uint8 -> (m, L) uint8."""
+    parity = gf256.generator_matrix(k, m, kind)[k:]
+    return gf_matmul_bytes(parity, data, backend=backend, block_w=block_w)
+
+
+def rs_encode_mxu(
+    data: jax.Array,
+    k: int,
+    m: int,
+    kind: str = "cauchy",
+    block_n: int = 512,
+) -> jax.Array:
+    """MXU-path RS encode (beyond-paper variant; see gf256_encode.py).
+
+    Unpacks bytes to one-bit int8 columns, multiplies by the (8m, 8k) block
+    bit-matrix on the MXU, packs back.  Bit layout: column t holds byte t of
+    the stripe; rows j*8+b = bit b of chunk j.
+    """
+    data = jnp.asarray(data, dtype=jnp.uint8)
+    kk, L = data.shape
+    assert kk == k
+    parity = gf256.generator_matrix(k, m, kind)[k:]
+    bm = gf256.parity_bitmatrix(parity)              # (m, k, 8, 8)
+    # Block matrix: out-row (i*8+ob), in-col (j*8+ib).
+    big = np.transpose(bm, (0, 2, 1, 3)).reshape(8 * m, 8 * k).astype(np.int8)
+    data_p, orig = _pad_to(data, block_n, axis=1)
+    shifts = jnp.arange(8, dtype=jnp.uint8)
+    bits = ((data_p[:, None, :] >> shifts[None, :, None]) & 1).astype(jnp.int8)
+    bits = bits.reshape(8 * k, data_p.shape[1])      # (8k, Lp)
+    out_bits = gf_matmul_mxu(
+        jnp.asarray(big), bits, block_n=block_n, interpret=_interpret()
+    )
+    out_bits = out_bits.reshape(m, 8, data_p.shape[1]).astype(jnp.uint8)
+    out = (out_bits << shifts[None, :, None]).sum(axis=1).astype(jnp.uint8)
+    return out[:, :orig]
+
+
+# ---------------------------------------------------------------------------
+# XOR aggregation.
+# ---------------------------------------------------------------------------
+
+
+def xor_reduce_bytes(x: jax.Array, backend: str = "pallas") -> jax.Array:
+    """XOR-fold (n, L) uint8 over axis 0 -> (L,) uint8."""
+    x = jnp.asarray(x, dtype=jnp.uint8)
+    if backend == "ref" or x.shape[1] % 4 != 0:
+        return ref.xor_reduce_ref(x)
+    n, L = x.shape
+    words = jax.lax.bitcast_convert_type(
+        x.reshape(n, L // 4, 4), jnp.uint32
+    ).reshape(n, L // 4)
+    words_p, orig = _pad_to(words, 2048, axis=1)
+    out = _xor_reduce_kernel(words_p, interpret=_interpret())[:orig]
+    out_bytes = jax.lax.bitcast_convert_type(out[:, None], jnp.uint8)
+    return out_bytes.reshape(L)
+
+
+# ---------------------------------------------------------------------------
+# Bulk capability verification (jitted batch header-handler check).
+# ---------------------------------------------------------------------------
+
+
+@jax.jit
+def bulk_verify_tags(caps_words: jax.Array, key: jax.Array) -> jax.Array:
+    """(N, CAP_WORDS) uint32 + (4,) key -> (N, 2) uint32 tags."""
+    from repro.core.auth import sponge_mac
+
+    return sponge_mac(caps_words, key, xp=jnp)
+
+
+@jax.jit
+def bulk_verify(
+    caps_words: jax.Array, tags: jax.Array, key: jax.Array
+) -> jax.Array:
+    """Vector verdict for a batch of capabilities: (N,) bool MAC-match."""
+    want = bulk_verify_tags(caps_words, key)
+    return jnp.all(want == tags, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention (TPU forward kernel; jnp path on CPU / for backward).
+# ---------------------------------------------------------------------------
+
+
+def flash_attention(q, k, v, causal: bool = True, backend: str | None = None):
+    """Dispatch: Pallas kernel on TPU (or backend="pallas"), jnp blockwise
+    custom-VJP path elsewhere (differentiable)."""
+    use_pallas = backend == "pallas" or (backend is None and _on_tpu())
+    if use_pallas:
+        from repro.kernels.flash_attention import flash_attention_fwd
+
+        return flash_attention_fwd(q, k, v, causal=causal,
+                                   interpret=_interpret())
+    from repro.models.attention import blockwise_attention
+
+    return blockwise_attention(q, k, v, causal, 512, 0)

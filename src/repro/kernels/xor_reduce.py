@@ -1,0 +1,46 @@
+"""XOR-fold Pallas kernel: the parity-node accumulator aggregation.
+
+Paper section VI-B3: parity nodes XOR k intermediate parity streams into
+pool accumulators (p_i^0 ^ p_i^1 ^ ... ^ p_i^{k-1}).  On TPU the fold over
+the stream axis is a single VMEM-tiled pass: each grid step loads a
+(n, block_w) tile and folds the n rows with a log-depth XOR tree, keeping
+the lane dimension fully vectorized.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _xor_reduce_kernel(x_ref, out_ref, *, n: int):
+    x = x_ref[...]  # (n, block_w) uint32
+    # Log-depth XOR tree (better ILP than a serial fold).
+    vals = [x[i] for i in range(n)]
+    while len(vals) > 1:
+        nxt = [vals[i] ^ vals[i + 1] for i in range(0, len(vals) - 1, 2)]
+        if len(vals) % 2:
+            nxt.append(vals[-1])
+        vals = nxt
+    out_ref[...] = vals[0]
+
+
+@functools.partial(jax.jit, static_argnames=("block_w", "interpret"))
+def xor_reduce(
+    x: jax.Array, *, block_w: int = 2048, interpret: bool = True
+) -> jax.Array:
+    """XOR-fold (n, w) uint32 over axis 0 -> (w,) uint32. w % block_w == 0."""
+    n, w = x.shape
+    assert w % block_w == 0, (w, block_w)
+    grid = (w // block_w,)
+    return pl.pallas_call(
+        functools.partial(_xor_reduce_kernel, n=n),
+        grid=grid,
+        in_specs=[pl.BlockSpec((n, block_w), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((block_w,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((w,), jnp.uint32),
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,158 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production mesh and record memory/cost/roofline artifacts.
+
+The two lines above MUST stay first: jax locks the device count at first
+initialization, and the production meshes need 512 host devices.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-9b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+  PYTHONPATH=src python -m repro.launch.dryrun --all --both-meshes
+
+Outputs one JSON per cell under experiments/dryrun/.
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import SHAPES, cells, get_arch
+from repro.launch import roofline as rl
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import input_specs, make_step, step_shardings
+
+OUT_DIR = os.environ.get(
+    "REPRO_DRYRUN_DIR",
+    os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                 "experiments", "dryrun"),
+)
+
+
+def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
+             save: bool = True, verbose: bool = True) -> dict:
+    arch = get_arch(arch_name)
+    if not arch.supports(shape_name):
+        note = dict(arch.skip_notes).get(shape_name, "unsupported shape")
+        return {"arch": arch_name, "shape": shape_name, "skipped": note}
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    t0 = time.time()
+    with mesh:
+        step = make_step(arch, shape_name, mesh)
+        in_sh, out_sh = step_shardings(arch, shape_name, mesh)
+        specs = input_specs(arch, shape_name)
+        if shape.kind == "train":
+            args = (specs["params"], specs["opt_state"], specs["batch"])
+        elif shape.kind == "prefill":
+            args = (specs["params"], specs["batch"])
+        else:
+            args = (specs["params"], specs["cache"], specs["batch"])
+        jitted = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    ana = rl.analyze_hlo(hlo)
+    chips = mesh.devices.size
+
+    flops_raw = float(cost.get("flops", 0.0)) if cost else 0.0
+    bytes_raw = float(cost.get("bytes accessed", 0.0)) if cost else 0.0
+    model_flops = rl.model_flops_for_cell(arch, shape)
+
+    roof = rl.Roofline(
+        flops_per_chip=ana.flops_per_chip,
+        hbm_bytes=ana.hbm_bytes_per_chip,
+        collective_bytes=ana.collective_bytes_per_chip,
+        chips=chips,
+        model_flops=model_flops,
+        collectives=ana.collectives,
+    )
+    out = {
+        "arch": arch_name,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "chips": chips,
+        "kind": shape.kind,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory_analysis": {
+            "bytes_per_device": getattr(mem, "temp_size_in_bytes", None),
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        },
+        "cost_analysis_raw": {
+            "flops_raw_body_once": flops_raw,
+            "bytes_accessed_raw_body_once": bytes_raw,
+            "max_loop_mult": ana.max_loop_mult,
+        },
+        "collective_counts": ana.collective_counts,
+        "roofline": roof.summary(),
+    }
+    if verbose:
+        ma = out["memory_analysis"]
+        arg_gb = (ma["argument_bytes"] or 0) / 2**30
+        tmp_gb = (ma["bytes_per_device"] or 0) / 2**30
+        print(
+            f"[{mesh_name}] {arch_name} x {shape_name}: "
+            f"lower {t_lower:.0f}s compile {t_compile:.0f}s | "
+            f"args {arg_gb:.2f} GiB temp {tmp_gb:.2f} GiB /dev | "
+            f"flops/chip {ana.flops_per_chip:.3e} useful {roof.useful_flop_ratio:.2f} | "
+            f"coll {ana.collective_bytes_per_chip/2**30:.3f} GiB/dev | "
+            f"t(c/m/n) {roof.t_compute*1e3:.1f}/{roof.t_memory*1e3:.1f}/"
+            f"{roof.t_collective*1e3:.1f} ms | "
+            f"bottleneck {roof.bottleneck} "
+            f"roofline {roof.roofline_fraction*100:.1f}%"
+        )
+    if save:
+        os.makedirs(OUT_DIR, exist_ok=True)
+        path = os.path.join(OUT_DIR, f"{arch_name}__{shape_name}__{mesh_name}.json")
+        with open(path, "w") as f:
+            json.dump(out, f, indent=2)
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    args = ap.parse_args()
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    todo = cells() if args.all else [(args.arch, args.shape)]
+    failures = []
+    for multi_pod in meshes:
+        for arch_name, shape_name in todo:
+            try:
+                run_cell(arch_name, shape_name, multi_pod)
+            except Exception as e:  # noqa: BLE001 - report and continue
+                failures.append((arch_name, shape_name, multi_pod, repr(e)))
+                print(f"FAIL {arch_name} x {shape_name} multi_pod={multi_pod}: {e}")
+                traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print(" ", f)
+        raise SystemExit(1)
+    print("\nALL DRY-RUN CELLS PASSED")
+
+
+if __name__ == "__main__":
+    main()

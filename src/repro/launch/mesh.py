@@ -1,0 +1,26 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this
+module does not touch jax device state — smoke tests see 1 CPU device,
+only dryrun.py forces 512 host devices via XLA_FLAGS before any import.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """16x16 = 256 chips/pod single-pod, or (2, 16, 16) = 512 chips 2-pod.
+
+    Axes: ``data`` = DP/FSDP, ``model`` = TP/SP/EP; ``pod`` composes with
+    ``data`` (gradient all-reduce crosses pods, FSDP gathers stay inside).
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(data: int = 2, model: int = 2) -> jax.sharding.Mesh:
+    """Small mesh for multi-device tests (requires >= data*model devices)."""
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,344 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds (per chip; SPMD modules
+carry per-device shapes):
+
+  compute    = dot-FLOPs per chip / 197e12             [bf16 MXU peak]
+  memory     = ~HBM bytes per chip / 819e9             [HBM bandwidth]
+  collective = collective bytes per chip / 50e9        [ICI link bandwidth]
+
+``compiled.cost_analysis()`` visits while bodies ONCE (verified), so all
+terms are computed by walking the optimized HLO ourselves:
+
+  * while trip counts come from the ``known_trip_count`` backend config
+    XLA attaches to every scan-derived loop (fallback: the largest constant
+    in the loop condition);
+  * FLOPs: 2 * prod(result dims) * prod(contracting dims) per ``dot``,
+    multiplied along the enclosing-loop chain;
+  * HBM bytes: 2x the result bytes of non-fusion-internal instructions
+    (once written + once read; fusion bodies stay in registers/VMEM);
+  * collective bytes: result bytes of all-gather / all-to-all /
+    collective-permute / reduce-scatter, 2x for all-reduce (RS+AG phases).
+
+The analytic MODEL_FLOPS = 6*N*D cross-check is recorded alongside.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+HW = {
+    "peak_flops": 197e12,      # bf16 per chip (TPU v5e class)
+    "hbm_Bps": 819e9,
+    "ici_link_Bps": 50e9,
+}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_KINDS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_TRIP_RE = re.compile(r'known_trip_count\\?":\s*\{\\?"n\\?":\\?"(\d+)\\?"')
+_WHILE_RE = re.compile(r"=.*?while\(.*?condition=%?([\w\.\-]+), body=%?([\w\.\-]+)")
+_CALL_RE = re.compile(r"(?:to_apply|calls)=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_DOT_RE = re.compile(
+    r"dot\(([^)]*)\).*?lhs_contracting_dims=\{([0-9,]*)\}"
+)
+_NAME_RE = re.compile(r"^(?:ROOT\s+)?%?([\w\.\-]+)\s*=")
+# opcode = word after the result shape (token or (tuple...)) and before "("
+_OPCODE_RE = re.compile(r"=\s*(?:\([^)]*\)|[^\s(]+)\s+([\w\-]+)\(")
+
+
+def _first_shape(text: str) -> tuple[str, list[int]] | None:
+    m = _SHAPE_RE.search(text)
+    if not m or m.group(1) not in _DTYPE_BYTES:
+        return None
+    dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+    return m.group(1), dims
+
+
+def _all_shape_bytes(text: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class _Instr:
+    name: str
+    lhs_text: str            # text up to the opcode (result shapes live here)
+    line: str
+
+
+def _split_computations(hlo: str) -> tuple[dict[str, list[_Instr]], str | None]:
+    comps: dict[str, list[_Instr]] = {}
+    entry = None
+    cur: str | None = None
+    for raw in hlo.splitlines():
+        line = raw.strip()
+        if line.endswith("{") and ("->" in line or line.startswith("ENTRY")):
+            name_part = line.split("(", 1)[0].strip()
+            is_entry = name_part.startswith("ENTRY")
+            name_part = name_part.removeprefix("ENTRY").strip()
+            cur = name_part.lstrip("%").strip()
+            comps[cur] = []
+            if is_entry:
+                entry = cur
+            continue
+        if line == "}":
+            cur = None
+            continue
+        if cur is not None and "=" in line:
+            nm = _NAME_RE.match(line)
+            om = _OPCODE_RE.search(line)
+            if not nm or not om:
+                continue
+            # result shapes are everything between "=" and the opcode
+            comps[cur].append(_Instr(nm.group(1), line[: om.start(1)], line))
+    return comps, entry
+
+
+def _trip_count(line: str, comps, cond: str) -> int:
+    m = _TRIP_RE.search(line)
+    if m:
+        return int(m.group(1))
+    consts = []
+    for ins in comps.get(cond, []):
+        consts += [int(c) for c in _CONST_RE.findall(ins.line)]
+    consts = [c for c in consts if 0 < c < 1_000_000]
+    return max(consts) if consts else 1
+
+
+@dataclasses.dataclass
+class HloAnalysis:
+    flops_per_chip: float
+    hbm_bytes_per_chip: float
+    collective_bytes_per_chip: float
+    collectives: dict[str, float]
+    collective_counts: dict[str, int]
+    max_loop_mult: int
+    top_hbm: list[tuple[str, float]] = dataclasses.field(default_factory=list)
+    top_coll: list[tuple[str, float]] = dataclasses.field(default_factory=list)
+
+
+def analyze_hlo(hlo: str) -> HloAnalysis:
+    comps, entry = _split_computations(hlo)
+    if entry is None:
+        for name in comps:
+            if "main" in name:
+                entry = name
+    # map instruction name -> result shape text (for dot operand lookup)
+    shape_of: dict[str, str] = {}
+    for ins_list in comps.values():
+        for ins in ins_list:
+            shape_of[ins.name] = ins.lhs_text
+
+    flops = 0.0
+    hbm = 0.0
+    coll_bytes: dict[str, float] = defaultdict(float)
+    coll_counts: dict[str, int] = defaultdict(int)
+    max_mult = 1
+    hbm_by_op: dict[str, float] = defaultdict(float)
+    coll_by_op: dict[str, float] = defaultdict(float)
+
+    def _op_label(line: str, opcode: str) -> str:
+        m = re.search(r'op_name="([^"]+)"', line)
+        label = m.group(1) if m else opcode
+        return f"{opcode}:{label[-80:]}"
+
+    visited: set[tuple[str, int, bool]] = set()
+
+    def walk(comp: str, mult: int, in_fusion: bool) -> None:
+        nonlocal flops, hbm, max_mult
+        key = (comp, mult, in_fusion)
+        if key in visited or comp not in comps:
+            return
+        visited.add(key)
+        max_mult = max(max_mult, mult)
+        for ins in comps[comp]:
+            line = ins.line
+            om = _OPCODE_RE.search(line)
+            if om is None:
+                continue
+            opcode = om.group(1)
+            # -- flops: dot instructions anywhere
+            if opcode.startswith("dot"):
+                dm = _DOT_RE.search(line)
+                res = _first_shape(ins.lhs_text)
+                if dm and res:
+                    operands = [
+                        o.strip().lstrip("%") for o in dm.group(1).split(",")
+                    ]
+                    lhs_shape = None
+                    if operands and operands[0] in shape_of:
+                        lhs_shape = _first_shape(shape_of[operands[0]])
+                    cdims = [
+                        int(c) for c in dm.group(2).split(",") if c != ""
+                    ]
+                    k = 1
+                    if lhs_shape:
+                        for c in cdims:
+                            if c < len(lhs_shape[1]):
+                                k *= lhs_shape[1][c]
+                    n_out = 1
+                    for d in res[1]:
+                        n_out *= d
+                    flops += 2.0 * n_out * k * mult
+            # -- memory: result bytes of top-level (non-fusion) instrs.
+            # dynamic-update-slice is aliased in place by XLA buffer
+            # assignment: its true HBM traffic is the *update* operand, not
+            # the whole buffer (otherwise scan-carried buffers look O(n^2)).
+            if not in_fusion and opcode not in ("parameter", "constant", "tuple",
+                                                "get-tuple-element", "bitcast"):
+                b = None
+                if opcode == "dynamic-update-slice":
+                    dm = re.search(r"dynamic-update-slice\(([^)]*)\)", line)
+                    if dm:
+                        ops_ = [o.strip().lstrip("%") for o in dm.group(1).split(",")]
+                        if len(ops_) >= 2 and ops_[1] in shape_of:
+                            b = 2.0 * _all_shape_bytes(shape_of[ops_[1]]) * mult
+                elif opcode == "fusion" and "dynamic_update_slice" in line:
+                    # fused in-place update: traffic = the update operand of
+                    # the DUS at the fusion root, found in the called comp
+                    cm = _CALL_RE.search(line)
+                    if cm and cm.group(1) in comps:
+                        for fins in comps[cm.group(1)]:
+                            dm = re.search(
+                                r"dynamic-update-slice\(([^)]*)\)", fins.line
+                            )
+                            if dm:
+                                ops_ = [o.strip().lstrip("%")
+                                        for o in dm.group(1).split(",")]
+                                if len(ops_) >= 2 and ops_[1] in shape_of:
+                                    b = 2.0 * _all_shape_bytes(
+                                        shape_of[ops_[1]]) * mult
+                                break
+                if b is None:
+                    b = 2.0 * _all_shape_bytes(ins.lhs_text) * mult
+                hbm += b
+                if b > 0:
+                    hbm_by_op[_op_label(line, opcode)] += b
+            # -- collectives
+            for k_ in COLLECTIVE_KINDS:
+                if re.match(rf"{k_}(-start)?$", opcode):
+                    nbytes = _all_shape_bytes(ins.lhs_text)
+                    factor = 2.0 if k_ == "all-reduce" else 1.0
+                    coll_bytes[k_] += nbytes * factor * mult
+                    coll_counts[k_] += mult
+                    coll_by_op[_op_label(line, opcode)] += nbytes * factor * mult
+                    break
+            # -- recursion
+            wm = _WHILE_RE.search(line)
+            if wm:
+                cond, body = wm.group(1), wm.group(2)
+                tc = _trip_count(line, comps, cond)
+                walk(body, mult * tc, in_fusion)
+                continue
+            is_fusion = opcode == "fusion"
+            for cm in _CALL_RE.finditer(line):
+                walk(cm.group(1), mult, in_fusion or is_fusion)
+
+    if entry:
+        walk(entry, 1, False)
+    top = lambda d: sorted(d.items(), key=lambda kv: -kv[1])[:15]  # noqa: E731
+    return HloAnalysis(
+        flops_per_chip=flops,
+        hbm_bytes_per_chip=hbm,
+        collective_bytes_per_chip=sum(coll_bytes.values()),
+        collectives=dict(coll_bytes),
+        collective_counts=dict(coll_counts),
+        max_loop_mult=max_mult,
+        top_hbm=top(hbm_by_op),
+        top_coll=top(coll_by_op),
+    )
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_chip: float
+    hbm_bytes: float              # per chip
+    collective_bytes: float       # per chip
+    chips: int
+    model_flops: float            # analytic, whole job per step
+    collectives: dict[str, float]
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_chip / HW["peak_flops"]
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HW["hbm_Bps"]
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / HW["ici_link_Bps"]
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flop_ratio(self) -> float:
+        total = self.flops_per_chip * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """MODEL_FLOPS at peak vs. the achievable step time (max term)."""
+        t_ideal = self.model_flops / (self.chips * HW["peak_flops"])
+        t_bound = max(self.t_compute, self.t_memory, self.t_collective)
+        return t_ideal / t_bound if t_bound else 0.0
+
+    def summary(self) -> dict:
+        return {
+            "flops_per_chip": self.flops_per_chip,
+            "hbm_bytes_per_chip": self.hbm_bytes,
+            "collective_bytes_per_chip": self.collective_bytes,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops,
+            "useful_flop_ratio": self.useful_flop_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "collectives": self.collectives,
+        }
+
+
+def model_flops_for_cell(arch, shape) -> float:
+    """Analytic MODEL_FLOPS per step: 6*N*D train (N=active for MoE),
+    2*N*D prefill, 2*N per token decode (x batch)."""
+    n_active = arch.model.active_param_count()
+    tokens = shape.global_batch * shape.seq_len
+    if shape.kind == "train":
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch

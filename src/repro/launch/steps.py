@@ -1,0 +1,262 @@
+"""Jittable train / prefill / serve steps + ShapeDtypeStruct input specs.
+
+These are the functions the dry-run lowers and the runtime executes:
+
+  train_step(params, opt_state, batch)  -> (params', opt_state', metrics)
+  prefill_step(params, batch)           -> last-position logits
+  serve_step(params, cache, batch)      -> (next-token logits, cache')
+
+``input_specs(arch, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input of an (arch x shape) cell — weak-type-correct, shardable, no
+device allocation.  Notes: prefill lowers the full forward + last-token
+logits; the KV-cache *write* is exercised by the decode cells (its bytes
+are reported analytically in the dry-run output).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import SHAPES, ArchConfig, ShapeConfig
+from repro.models import model as M
+from repro.optim.adamw import AdamWConfig, adamw_update, init_opt_state
+from repro.optim.schedule import warmup_cosine
+from repro.parallel import sharding as sh
+
+
+# ---------------------------------------------------------------------------
+# input specs
+# ---------------------------------------------------------------------------
+
+
+def batch_struct(arch: ArchConfig, shape: ShapeConfig) -> dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStructs for the input batch of one cell."""
+    cfg = arch.model
+    gb, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    bf16 = jnp.bfloat16
+    if shape.kind in ("train", "prefill"):
+        out: dict[str, jax.ShapeDtypeStruct] = {}
+        if cfg.family == "encdec":
+            out["frames"] = jax.ShapeDtypeStruct((gb, s, cfg.d_model), bf16)
+            out["tokens"] = jax.ShapeDtypeStruct((gb, s), i32)
+            if shape.kind == "train":
+                out["labels"] = jax.ShapeDtypeStruct((gb, s), i32)
+        elif cfg.frontend == "vision_stub":
+            p = cfg.frontend_tokens
+            out["patch_embeds"] = jax.ShapeDtypeStruct((gb, p, cfg.d_model), bf16)
+            out["tokens"] = jax.ShapeDtypeStruct((gb, s - p), i32)
+            if shape.kind == "train":
+                out["labels"] = jax.ShapeDtypeStruct((gb, s - p), i32)
+        else:
+            out["tokens"] = jax.ShapeDtypeStruct((gb, s), i32)
+            if shape.kind == "train":
+                out["labels"] = jax.ShapeDtypeStruct((gb, s), i32)
+        return out
+    # decode: one new token against a seq_len cache
+    return {
+        "tokens": jax.ShapeDtypeStruct((gb, 1), i32),
+        "cur_len": jax.ShapeDtypeStruct((), i32),
+    }
+
+
+def params_struct(arch: ArchConfig) -> Any:
+    cfg = arch.model
+    return jax.eval_shape(lambda: M.init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def opt_state_struct(params_s: Any) -> Any:
+    return jax.eval_shape(init_opt_state, params_s)
+
+
+def cache_struct(arch: ArchConfig, shape: ShapeConfig) -> Any:
+    cfg = arch.model
+    return jax.eval_shape(
+        lambda: M.init_cache(cfg, shape.global_batch, shape.seq_len)
+    )
+
+
+def input_specs(arch: ArchConfig, shape_name: str) -> dict[str, Any]:
+    """All lowering inputs of a cell: params (+opt/cache) and batch."""
+    shape = SHAPES[shape_name]
+    ps = params_struct(arch)
+    out = {"params": ps, "batch": batch_struct(arch, shape)}
+    if shape.kind == "train":
+        out["opt_state"] = opt_state_struct(ps)
+    if shape.kind == "decode":
+        out["cache"] = cache_struct(arch, shape)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# sharding plumbing
+# ---------------------------------------------------------------------------
+
+
+def _ns(mesh: Mesh, spec: P | None):
+    return NamedSharding(mesh, spec if spec is not None else P())
+
+
+def batch_shardings(arch: ArchConfig, shape: ShapeConfig, mesh: Mesh) -> dict:
+    structs = batch_struct(arch, shape)
+    shapes = {k: v.shape for k, v in structs.items()}
+    specs = sh.data_batch_specs(shapes, mesh)
+    return {k: _ns(mesh, specs[k]) for k in structs}
+
+
+def model_constraints(arch: ArchConfig, shape: ShapeConfig, mesh: Mesh):
+    """(resid, ep_spec, attn_specs) NamedSharding forward-pass constraints."""
+    cfg = arch.model
+    resid = _ns(mesh, sh.residual_spec(shape.global_batch, shape.seq_len, mesh))
+    ep = None
+    if cfg.moe_experts:
+        spec = sh.moe_buffer_spec(cfg.moe_experts, mesh, shape.global_batch)
+        ep = _ns(mesh, spec) if spec is not None else None
+    # Context-parallel attention: q stays *sequence*-sharded (attention math
+    # is row-local in q, so fwd and flash-bwd shard perfectly; dk/dv pick up
+    # one small all-reduce per block) and the un-repeated KV heads are
+    # replicated (cheap: n_kv_heads is small).  Works for every head count —
+    # no divisibility constraint — and avoids GSPMD splitting the contracting
+    # head_dim (score-tensor all-reduces).
+    attn = None
+    ax = sh.MeshAxes.for_mesh(mesh)
+    tp = mesh.shape[ax.model]
+    bspec = sh.batch_dim_spec(shape.global_batch, mesh, ax)
+    import os
+
+    if os.environ.get("REPRO_NO_ATTN_SPECS") == "1":
+        return resid, ep, None
+    if shape.seq_len % tp == 0:
+        attn = {
+            "q": _ns(mesh, P(bspec, ax.model, None, None)),
+            "kv": _ns(mesh, P(bspec, None, None, None)),
+        }
+    if cfg.family == "hybrid" and cfg.n_ssm_heads % tp == 0:
+        attn = attn or {}
+        # mamba2: shard the SSM head axis over model so the chunk scan is
+        # fully local (no per-iteration gathers of seq-sharded xs)
+        attn["ssm_h"] = _ns(mesh, P(bspec, None, ax.model, None))
+    if (
+        cfg.moe_experts
+        and shape.kind in ("train", "prefill")
+        and os.environ.get("REPRO_NO_MOE_EP") != "1"
+        and cfg.moe_experts % tp == 0
+        and shape.seq_len % tp == 0
+        and bspec is not None
+        and cfg.d_model % _axsize(mesh, ax.data) == 0
+    ):
+        attn = attn or {}
+        # explicit expert-parallel dataflow (shard_map all-to-all dispatch)
+        attn["moe_ep"] = (mesh, ax.data, ax.model)
+    return resid, ep, attn
+
+
+def _axsize(mesh, axes):
+    import numpy as np
+
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+# ---------------------------------------------------------------------------
+# steps
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(
+    arch: ArchConfig,
+    shape: ShapeConfig,
+    mesh: Mesh,
+    adam: AdamWConfig | None = None,
+):
+    cfg = arch.model
+    adam = adam or AdamWConfig()
+    resid, ep, attn = model_constraints(arch, shape, mesh)
+
+    def train_step(params, opt_state, batch):
+        def loss_of(p):
+            return M.loss_fn(p, cfg, batch, ep_spec=ep, resid=resid,
+                             attn_specs=attn)
+
+        loss, grads = jax.value_and_grad(loss_of)(params)
+        lr_scale = warmup_cosine(opt_state["step"])
+        new_params, new_opt, metrics = adamw_update(
+            params, grads, opt_state, adam, lr_scale
+        )
+        metrics["loss"] = loss
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(arch: ArchConfig, shape: ShapeConfig, mesh: Mesh):
+    cfg = arch.model
+    resid, ep, attn = model_constraints(arch, shape, mesh)
+
+    def prefill_step(params, batch):
+        hidden = M.forward(params, cfg, batch, ep_spec=ep, resid=resid,
+                           attn_specs=attn)
+        last = hidden[:, -1:, :]
+        logits = (
+            last.astype(jnp.bfloat16) @ params["unembed"]["w"].astype(jnp.bfloat16)
+        )
+        return logits.astype(jnp.float32)
+
+    return prefill_step
+
+
+def make_serve_step(arch: ArchConfig, shape: ShapeConfig, mesh: Mesh):
+    cfg = arch.model
+
+    def serve_step(params, cache, batch):
+        logits, new_cache = M.decode_step(params, cfg, cache, batch)
+        return logits, new_cache
+
+    return serve_step
+
+
+def step_shardings(arch: ArchConfig, shape_name: str, mesh: Mesh):
+    """(in_shardings, out_shardings) pytrees for the cell's step function."""
+    shape = SHAPES[shape_name]
+    ps = params_struct(arch)
+    p_shard = sh.param_shardings(ps, mesh)
+    b_shard = batch_shardings(arch, shape, mesh)
+    repl = NamedSharding(mesh, P())
+    if shape.kind == "train":
+        opt_shard = {
+            "m": p_shard,
+            "v": p_shard,
+            "step": repl,
+        }
+        metrics_shard = {"loss": repl, "grad_norm": repl, "lr": repl}
+        return (p_shard, opt_shard, b_shard), (p_shard, opt_shard, metrics_shard)
+    if shape.kind == "prefill":
+        return (p_shard, b_shard), repl
+    # decode
+    c_struct = cache_struct(arch, shape)
+    c_specs = sh.cache_specs(c_struct, mesh, shape.seq_len, shape.global_batch)
+    c_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), c_specs)
+    logits_shard = NamedSharding(
+        mesh,
+        P(sh.batch_dim_spec(shape.global_batch, mesh, sh.MeshAxes.for_mesh(mesh)),
+          None, None),
+    )
+    return (p_shard, c_shard, b_shard), (logits_shard, c_shard)
+
+
+def make_step(arch: ArchConfig, shape_name: str, mesh: Mesh):
+    """The cell's step function (unjitted) by shape kind."""
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        return make_train_step(arch, shape, mesh)
+    if shape.kind == "prefill":
+        return make_prefill_step(arch, shape, mesh)
+    return make_serve_step(arch, shape, mesh)

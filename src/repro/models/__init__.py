@@ -1,0 +1,10 @@
+"""Model zoo for the assigned architectures (pure functional JAX)."""
+
+from repro.models.model import (
+    ModelConfig,
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    loss_fn,
+)

@@ -1,0 +1,426 @@
+"""Attention: GQA/MHA (+QKV bias), MLA, blockwise (flash-style) training
+attention, and KV-cache decode.
+
+Training attention is *blockwise*: an online-softmax scan over KV blocks so
+the compiled HLO never materializes the (S, S) score matrix — required for
+the 32 K prefill cells to pass the dry-run memory analysis, and the faithful
+TPU expression of flash attention in pure jnp (a Pallas flash kernel is a
+possible further step; the blockwise scan already bounds VMEM-era memory).
+
+Decode attention computes scores against the full cache with a length mask
+(cost honestly proportional to the cache length).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Params, apply_rope, dense_apply, dense_init
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+
+def gqa_init(
+    key,
+    d_model: int,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    qkv_bias: bool = False,
+) -> Params:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(kq, d_model, n_heads * head_dim, bias=qkv_bias),
+        "wk": dense_init(kk, d_model, n_kv_heads * head_dim, bias=qkv_bias),
+        "wv": dense_init(kv, d_model, n_kv_heads * head_dim, bias=qkv_bias),
+        "wo": dense_init(
+            ko, n_heads * head_dim, d_model, scale=1.0 / math.sqrt(n_heads * head_dim)
+        ),
+    }
+
+
+def _group_q(q: jax.Array, hkv: int) -> jax.Array:
+    """(B, S, H, D) -> (B, S, Hkv, rep, D): grouped heads, no KV repeat."""
+    b, s, h, d = q.shape
+    return q.reshape(b, s, hkv, h // hkv, d)
+
+
+def _flash_fwd_scan(q32, kb, vb, causal, skv, block, q_offset, sq):
+    """Online-softmax forward over KV blocks with grouped GQA heads.
+
+    q32: (B, Sq, Hkv, R, D) pre-scaled; kb/vb: (nkv, B, block, Hkv, D[v]).
+    Returns (out f32 (B,Sq,Hkv,R,Dv), lse (B,Sq,Hkv,R)).
+    """
+    b, sq_, hkv, rep, d = q32.shape
+    dv = vb.shape[-1]
+    nkv = kb.shape[0]
+    q_pos = q_offset + jnp.arange(sq)
+
+    def body(carry, xs):
+        acc, m, l = carry
+        kc, vc, blk_idx = xs                 # (B,block,Hkv,D)
+        scores = jnp.einsum(
+            "bqgrd,bkgd->bqgrk", q32, kc, preferred_element_type=jnp.float32
+        )
+        kv_pos = blk_idx * block + jnp.arange(block)
+        mask = kv_pos[None, None, None, None, :] < skv
+        if causal:
+            mask = mask & (
+                kv_pos[None, None, None, None, :]
+                <= q_pos[None, :, None, None, None]
+            )
+        scores = jnp.where(mask, scores, NEG_INF)
+        m_new = jnp.maximum(m, scores.max(axis=-1))
+        p = jnp.exp(scores - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bqgrk,bkgd->bqgrd", p.astype(vc.dtype), vc,
+            preferred_element_type=jnp.float32,
+        )
+        return (acc_new, m_new, l_new), None
+
+    init = (
+        jnp.zeros((b, sq, hkv, rep, dv), jnp.float32),
+        jnp.full((b, sq, hkv, rep), NEG_INF, jnp.float32),
+        jnp.zeros((b, sq, hkv, rep), jnp.float32),
+    )
+    (acc, m, l), _ = jax.lax.scan(body, init, (kb, vb, jnp.arange(nkv)))
+    l = jnp.maximum(l, 1e-30)
+    out = acc / l[..., None]
+    lse = m + jnp.log(l)
+    return out, lse
+
+
+def _prep_blocks(k, v, block):
+    skv = k.shape[1]
+    nkv = -(-skv // block)
+    pad = nkv * block - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k.reshape(k.shape[0], nkv, block, k.shape[2], k.shape[3])
+    vb = v.reshape(v.shape[0], nkv, block, v.shape[2], v.shape[3])
+    return kb.transpose(1, 0, 2, 3, 4), vb.transpose(1, 0, 2, 3, 4)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def blockwise_attention(
+    q: jax.Array,  # (B, S, H, D)
+    k: jax.Array,  # (B, Skv, Hkv, D)
+    v: jax.Array,  # (B, Skv, Hkv, Dv)
+    causal: bool = True,
+    block: int = 512,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Flash attention in pure jnp: online-softmax over KV blocks, grouped
+    GQA heads (no KV head repeat), and a custom VJP that *recomputes* block
+    scores in the backward pass instead of storing per-block residuals —
+    the streaming-handler principle applied to attention (O(S) memory).
+    """
+    out, _ = _bw_attention_fwd_impl(q, k, v, causal, block, q_offset)
+    return out
+
+
+def _bw_attention_fwd_impl(q, k, v, causal, block, q_offset):
+    b, sq, h, d = q.shape
+    hkv = k.shape[2]
+    skv = k.shape[1]
+    block = min(block, skv)
+    scale = 1.0 / math.sqrt(d)
+    qg = _group_q((q * scale).astype(q.dtype), hkv)
+    kb, vb = _prep_blocks(k, v, block)
+    out, lse = _flash_fwd_scan(qg, kb, vb, causal, skv, block, q_offset, sq)
+    return out.reshape(b, sq, h, v.shape[-1]).astype(q.dtype), lse
+
+
+def _bw_attention_fwd(q, k, v, causal, block, q_offset):
+    out, lse = _bw_attention_fwd_impl(q, k, v, causal, block, q_offset)
+    return out, (q, k, v, out, lse)
+
+
+def _bw_attention_bwd(causal, block, q_offset, res, dout):
+    q, k, v, out, lse = res
+    b, sq, h, d = q.shape
+    hkv = k.shape[2]
+    dv = v.shape[-1]
+    rep = h // hkv
+    skv = k.shape[1]
+    block = min(block, skv)
+    scale = 1.0 / math.sqrt(d)
+    qg = _group_q(q, hkv).astype(jnp.float32) * scale
+    og = _group_q(out, hkv).astype(jnp.float32)
+    dog = _group_q(dout, hkv).astype(jnp.float32)
+    kb, vb = _prep_blocks(k, v, block)
+    q_pos = q_offset + jnp.arange(sq)
+    # D_i = rowsum(dout * out)
+    delta = (og * dog).sum(-1)                      # (B,Sq,Hkv,R)
+
+    def body(dq_acc, xs):
+        kc, vc, blk_idx = xs                        # (B,block,Hkv,D[v])
+        kc32 = kc.astype(jnp.float32)
+        vc32 = vc.astype(jnp.float32)
+        scores = jnp.einsum("bqgrd,bkgd->bqgrk", qg, kc32)
+        kv_pos = blk_idx * block + jnp.arange(block)
+        mask = kv_pos[None, None, None, None, :] < skv
+        if causal:
+            mask = mask & (
+                kv_pos[None, None, None, None, :]
+                <= q_pos[None, :, None, None, None]
+            )
+        p = jnp.where(mask, jnp.exp(scores - lse[..., None]), 0.0)
+        dvc = jnp.einsum("bqgrk,bqgrd->bkgd", p, dog)
+        dp = jnp.einsum("bqgrd,bkgd->bqgrk", dog, vc32)
+        ds = p * (dp - delta[..., None])            # (B,Sq,Hkv,R,block)
+        # scores = (q*scale)@k  =>  dq = scale * ds@k;  dk = ds^T @ (q*scale)
+        dqc = jnp.einsum("bqgrk,bkgd->bqgrd", ds, kc32) * scale
+        dkc = jnp.einsum("bqgrk,bqgrd->bkgd", ds, qg)
+        return dq_acc + dqc, (dkc, dvc)
+
+    dq0 = jnp.zeros(qg.shape, jnp.float32)
+    dq, (dks, dvs) = jax.lax.scan(
+        body, dq0, (kb, vb, jnp.arange(kb.shape[0]))
+    )
+    nkv = kb.shape[0]
+    dk = dks.transpose(1, 0, 2, 3, 4).reshape(b, nkv * block, hkv, d)[:, :skv]
+    dvv = dvs.transpose(1, 0, 2, 3, 4).reshape(b, nkv * block, hkv, dv)[:, :skv]
+    return (
+        dq.reshape(b, sq, h, d).astype(q.dtype),
+        dk.astype(k.dtype),
+        dvv.astype(v.dtype),
+    )
+
+
+blockwise_attention.defvjp(_bw_attention_fwd, _bw_attention_bwd)
+
+
+def _blockwise_attention_autodiff(q, k, v, causal=True, block=512, q_offset=0):
+    """Baseline variant: same forward, gradients via plain autodiff through
+    the scan (stores per-block residuals).  Selected with
+    REPRO_NO_FLASH_VJP=1 for before/after perf comparisons."""
+    out, _ = _bw_attention_fwd_impl(q, k, v, causal, block, q_offset)
+    return out
+
+
+import os as _os
+
+if _os.environ.get("REPRO_NO_FLASH_VJP") == "1":  # pragma: no cover
+    blockwise_attention = _blockwise_attention_autodiff
+
+
+def gqa_apply(
+    p: Params,
+    x: jax.Array,                    # (B, S, d)
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    positions: jax.Array | None = None,
+    rope_theta: float = 1e4,
+    causal: bool = True,
+    block: int = 512,
+    kv_in: jax.Array | None = None,  # cross-attention source (B, Skv, d)
+    q_spec=None,                     # NamedSharding: q heads over model
+    kv_spec=None,                    # NamedSharding: kv replicated over model
+) -> jax.Array:
+    b, s, _ = x.shape
+    src = x if kv_in is None else kv_in
+    q = dense_apply(p["wq"], x).reshape(b, s, n_heads, head_dim)
+    k = dense_apply(p["wk"], src).reshape(b, src.shape[1], n_kv_heads, head_dim)
+    v = dense_apply(p["wv"], src).reshape(b, src.shape[1], n_kv_heads, head_dim)
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    if kv_in is None and rope_theta > 0:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+    if q_spec is not None:
+        # head-parallel attention: q heads sharded over the model axis, the
+        # (small, un-repeated) kv heads replicated — avoids GSPMD splitting
+        # the contracting head_dim (which all-reduces full score tensors).
+        q = jax.lax.with_sharding_constraint(q, q_spec)
+    if kv_spec is not None:
+        k = jax.lax.with_sharding_constraint(k, kv_spec)
+        v = jax.lax.with_sharding_constraint(v, kv_spec)
+    out = blockwise_attention(q, k, v, causal and kv_in is None, block, 0)
+    return dense_apply(p["wo"], out.reshape(b, s, n_heads * head_dim))
+
+
+def gqa_decode(
+    p: Params,
+    x: jax.Array,                    # (B, 1, d)
+    cache_k: jax.Array,              # (B, Smax, Hkv, D)
+    cache_v: jax.Array,
+    cur_len: jax.Array,              # () int32: tokens already in cache
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    rope_theta: float = 1e4,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token decode; returns (out, new_cache_k, new_cache_v)."""
+    b, _, _ = x.shape
+    smax = cache_k.shape[1]
+    q = dense_apply(p["wq"], x).reshape(b, 1, n_heads, head_dim)
+    k = dense_apply(p["wk"], x).reshape(b, 1, n_kv_heads, head_dim)
+    v = dense_apply(p["wv"], x).reshape(b, 1, n_kv_heads, head_dim)
+    pos = cur_len[None, None]
+    if rope_theta > 0:
+        q = apply_rope(q, pos, rope_theta)
+        k = apply_rope(k, pos, rope_theta)
+    cache_k = jax.lax.dynamic_update_slice(
+        cache_k, k.astype(cache_k.dtype), (0, cur_len, 0, 0)
+    )
+    cache_v = jax.lax.dynamic_update_slice(
+        cache_v, v.astype(cache_v.dtype), (0, cur_len, 0, 0)
+    )
+    # grouped GQA: never materialize the head-repeated cache (at 32 K
+    # context the repeat dominated decode HBM/collective volume)
+    rep = n_heads // n_kv_heads
+    scale = 1.0 / math.sqrt(head_dim)
+    qg = (q * scale).reshape(b, 1, n_kv_heads, rep, head_dim)
+    scores = jnp.einsum(
+        "bqgrd,bkgd->bgrqk", qg, cache_k, preferred_element_type=jnp.float32
+    )
+    valid = jnp.arange(smax)[None, None, None, None, :] <= cur_len
+    scores = jnp.where(valid, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(cache_v.dtype)
+    out = jnp.einsum("bgrqk,bkgd->bqgrd", w, cache_v)
+    out = dense_apply(p["wo"], out.reshape(b, 1, n_heads * head_dim))
+    return out, cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2 multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+
+def mla_init(
+    key,
+    d_model: int,
+    n_heads: int,
+    kv_lora: int,
+    qk_nope: int,
+    qk_rope: int,
+    v_head: int,
+) -> Params:
+    keys = jax.random.split(key, 6)
+    return {
+        "wq": dense_init(keys[0], d_model, n_heads * (qk_nope + qk_rope)),
+        "w_dkv": dense_init(keys[1], d_model, kv_lora + qk_rope),
+        "w_uk": dense_init(keys[2], kv_lora, n_heads * qk_nope),
+        "w_uv": dense_init(keys[3], kv_lora, n_heads * v_head),
+        "wo": dense_init(
+            keys[4], n_heads * v_head, d_model, scale=1.0 / math.sqrt(n_heads * v_head)
+        ),
+    }
+
+
+def mla_apply(
+    p: Params,
+    x: jax.Array,
+    n_heads: int,
+    kv_lora: int,
+    qk_nope: int,
+    qk_rope: int,
+    v_head: int,
+    rope_theta: float = 1e4,
+    block: int = 512,
+    q_spec=None,
+    kv_spec=None,
+) -> jax.Array:
+    """Training-time MLA: expand the latent per block (memory-bounded)."""
+    b, s, _ = x.shape
+    q = dense_apply(p["wq"], x).reshape(b, s, n_heads, qk_nope + qk_rope)
+    q_nope, q_rope = q[..., :qk_nope], q[..., qk_nope:]
+    dkv = dense_apply(p["w_dkv"], x)                 # (B, S, kv_lora + qk_rope)
+    c_kv, k_rope = dkv[..., :kv_lora], dkv[..., kv_lora:]
+    pos = jnp.arange(s)[None, :]
+    q_rope = apply_rope(q_rope, pos, rope_theta)
+    k_rope = apply_rope(k_rope[..., None, :], pos, rope_theta)[..., 0, :]
+    k_nope = dense_apply(p["w_uk"], c_kv).reshape(b, s, n_heads, qk_nope)
+    v = dense_apply(p["w_uv"], c_kv).reshape(b, s, n_heads, v_head)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (b, s, n_heads, qk_rope))],
+        axis=-1,
+    )
+    qq = jnp.concatenate([q_nope, q_rope], axis=-1)
+    if q_spec is not None:
+        qq = jax.lax.with_sharding_constraint(qq, q_spec)
+    if kv_spec is not None:
+        # expanded K/V gathered once per layer (full heads: MLA has rep=1)
+        k = jax.lax.with_sharding_constraint(k, kv_spec)
+        v = jax.lax.with_sharding_constraint(v, kv_spec)
+    out = blockwise_attention(qq, k, v, True, block, 0)
+    return dense_apply(p["wo"], out.reshape(b, s, n_heads * v_head))
+
+
+def mla_decode(
+    p: Params,
+    x: jax.Array,                   # (B, 1, d)
+    cache_c: jax.Array,             # (B, Smax, kv_lora) compressed latents
+    cache_kr: jax.Array,            # (B, Smax, qk_rope)
+    cur_len: jax.Array,
+    n_heads: int,
+    kv_lora: int,
+    qk_nope: int,
+    qk_rope: int,
+    v_head: int,
+    rope_theta: float = 1e4,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Matrix-absorbed MLA decode: attention in the compressed space.
+
+    The cache stores only (kv_lora + qk_rope) per token — the paper-exact
+    MLA memory saving; per-step up-projections are absorbed into q/out.
+    """
+    b = x.shape[0]
+    smax = cache_c.shape[1]
+    q = dense_apply(p["wq"], x).reshape(b, 1, n_heads, qk_nope + qk_rope)
+    q_nope, q_rope = q[..., :qk_nope], q[..., qk_nope:]
+    pos = cur_len[None, None]
+    q_rope = apply_rope(q_rope, pos, rope_theta)
+    dkv = dense_apply(p["w_dkv"], x)
+    c_new, kr_new = dkv[..., :kv_lora], dkv[..., kv_lora:]
+    kr_new = apply_rope(kr_new[..., None, :], pos, rope_theta)[..., 0, :]
+    cache_c = jax.lax.dynamic_update_slice(
+        cache_c, c_new.astype(cache_c.dtype), (0, cur_len, 0)
+    )
+    cache_kr = jax.lax.dynamic_update_slice(
+        cache_kr, kr_new.astype(cache_kr.dtype), (0, cur_len, 0)
+    )
+    # Absorb W_uk into the query: q_c[h] = q_nope[h] @ W_uk[h]^T  (B,1,H,kv_lora)
+    w_uk = p["w_uk"]["w"].reshape(kv_lora, n_heads, qk_nope)
+    q_c = jnp.einsum(
+        "bqhn,lhn->bqhl", q_nope.astype(jnp.bfloat16), w_uk.astype(jnp.bfloat16)
+    )
+    scale = 1.0 / math.sqrt(qk_nope + qk_rope)
+    scores = (
+        jnp.einsum(
+            "bqhl,bkl->bhqk", q_c, cache_c.astype(jnp.bfloat16),
+            preferred_element_type=jnp.float32,
+        )
+        + jnp.einsum(
+            "bqhr,bkr->bhqk", q_rope.astype(jnp.bfloat16),
+            cache_kr.astype(jnp.bfloat16), preferred_element_type=jnp.float32,
+        )
+    ) * scale
+    valid = jnp.arange(smax)[None, None, None, :] <= cur_len
+    scores = jnp.where(valid, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out_c = jnp.einsum(
+        "bhqk,bkl->bqhl", w.astype(jnp.bfloat16), cache_c.astype(jnp.bfloat16)
+    )  # (B,1,H,kv_lora)
+    w_uv = p["w_uv"]["w"].reshape(kv_lora, n_heads, v_head)
+    out = jnp.einsum("bqhl,lhv->bqhv", out_c, w_uv.astype(jnp.bfloat16))
+    return (
+        dense_apply(p["wo"], out.reshape(b, 1, n_heads * v_head)),
+        cache_c,
+        cache_kr,
+    )

@@ -1,0 +1,151 @@
+"""Shared model building blocks (pure JAX, functional params-as-pytrees).
+
+Conventions:
+  * every layer is (init(key, cfg) -> params, apply(params, x, ...) -> y);
+  * params are nested dicts of jnp arrays; stacked-layer params carry a
+    leading layer axis and are consumed by lax.scan;
+  * compute dtype is bf16 by default with fp32 accumulation for norms,
+    softmax and the loss; master weights are fp32 (cast at use).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = dict[str, Any]
+
+
+def _init_dense(key, d_in: int, d_out: int, scale: float | None = None) -> jax.Array:
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), dtype=jnp.float32) * scale)
+
+
+def dense_init(key, d_in: int, d_out: int, bias: bool = False, scale=None) -> Params:
+    p = {"w": _init_dense(key, d_in, d_out, scale)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype=jnp.float32)
+    return p
+
+
+def dense_apply(p: Params, x: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
+    y = x.astype(dtype) @ p["w"].astype(dtype)
+    if "b" in p:
+        y = y + p["b"].astype(dtype)
+    return y
+
+
+def rmsnorm_init(d: int) -> Params:
+    return {"scale": jnp.ones((d,), dtype=jnp.float32)}
+
+
+def rmsnorm_apply(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    return y.astype(x.dtype)
+
+
+def layernorm_init(d: int) -> Params:
+    return {"scale": jnp.ones((d,), dtype=jnp.float32),
+            "bias": jnp.zeros((d,), dtype=jnp.float32)}
+
+
+def layernorm_apply(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    return y.astype(x.dtype)
+
+
+def swiglu_init(key, d: int, d_ff: int) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": dense_init(k1, d, d_ff),
+        "up": dense_init(k2, d, d_ff),
+        "down": dense_init(k3, d_ff, d, scale=1.0 / math.sqrt(d_ff)),
+    }
+
+
+def swiglu_apply(p: Params, x: jax.Array) -> jax.Array:
+    g = dense_apply(p["gate"], x)
+    u = dense_apply(p["up"], x)
+    return dense_apply(p["down"], jax.nn.silu(g) * u)
+
+
+def gelu_mlp_init(key, d: int, d_ff: int) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "up": dense_init(k1, d, d_ff, bias=True),
+        "down": dense_init(k2, d_ff, d, bias=True, scale=1.0 / math.sqrt(d_ff)),
+    }
+
+
+def gelu_mlp_apply(p: Params, x: jax.Array) -> jax.Array:
+    return dense_apply(p["down"], jax.nn.gelu(dense_apply(p["up"], x)))
+
+
+def embed_init(key, vocab: int, d: int) -> Params:
+    return {"table": jax.random.normal(key, (vocab, d), dtype=jnp.float32) * 0.02}
+
+
+def embed_apply(p: Params, tokens: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
+    return p["table"].astype(dtype)[tokens]
+
+
+# -- rotary position embeddings ---------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float = 1e4) -> jax.Array:
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 1e4) -> jax.Array:
+    """x: (..., S, H, D) with D even; positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                         # (D/2,)
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # (..,S,1,D/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    xr1 = x1 * cos - x2 * sin
+    xr2 = x2 * cos + x1 * sin
+    out = jnp.stack([xr1, xr2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+def chunked_cross_entropy(
+    hidden: jax.Array,          # (B, S, d) final hidden states
+    unembed: jax.Array,         # (d, V) projection (fp32 master)
+    labels: jax.Array,          # (B, S) int32
+    chunk: int = 128,
+) -> jax.Array:
+    """Mean next-token CE without materializing (B, S, V) logits.
+
+    Scans over sequence chunks; each chunk computes (B, chunk, V) logits in
+    bf16 with an fp32 log-sum-exp.  V can be sharded over the model axis —
+    the per-chunk peak is (B * chunk * V / tp) elements.
+    """
+    b, s, d = hidden.shape
+    assert s % chunk == 0, (s, chunk)
+    nchunks = s // chunk
+    h = hidden.reshape(b, nchunks, chunk, d).transpose(1, 0, 2, 3)
+    y = labels.reshape(b, nchunks, chunk).transpose(1, 0, 2)
+
+    def body(carry, xs):
+        hc, yc = xs
+        logits = (hc.astype(jnp.bfloat16) @ unembed.astype(jnp.bfloat16)).astype(
+            jnp.float32
+        )
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, yc[..., None], axis=-1)[..., 0]
+        return carry + jnp.sum(lse - gold), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (h, y))
+    return total / (b * s)

@@ -1,0 +1,187 @@
+"""Mamba2 (SSD) block: chunked state-space duality scan + one-step decode.
+
+Training uses the SSD chunked algorithm: within a chunk of length Q the
+output is a masked quadratic form (attention-like, O(Q^2)); across chunks a
+(B, H, P, N) state is carried by an exponential-decay recurrence.  The HLO
+therefore materializes only (B, H, Q, Q) blocks — sequence-length-linear
+memory, which is what lets the hybrid/SSM architectures run the 512 K-token
+``long_500k`` cell.
+
+Decode is the O(1) recurrence: h' = da * h + dt * (B x); y = C h + D x.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Params, dense_apply, dense_init, rmsnorm_apply, rmsnorm_init
+
+
+def mamba2_init(
+    key,
+    d_model: int,
+    d_inner: int,
+    n_heads: int,
+    d_state: int,
+    n_groups: int = 1,
+) -> Params:
+    head_dim = d_inner // n_heads
+    keys = jax.random.split(key, 5)
+    d_in_proj = 2 * d_inner + 2 * n_groups * d_state + n_heads
+    return {
+        "in_proj": dense_init(keys[0], d_model, d_in_proj),
+        "out_proj": dense_init(keys[1], d_inner, d_model,
+                               scale=1.0 / math.sqrt(d_inner)),
+        "A_log": jnp.zeros((n_heads,), jnp.float32),      # A = -exp(A_log)
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "norm": rmsnorm_init(d_inner),
+    }
+
+
+def _split_proj(z, d_inner, n_groups, d_state, n_heads):
+    ofs = 0
+    gate = z[..., ofs : ofs + d_inner]; ofs += d_inner
+    x = z[..., ofs : ofs + d_inner]; ofs += d_inner
+    b = z[..., ofs : ofs + n_groups * d_state]; ofs += n_groups * d_state
+    c = z[..., ofs : ofs + n_groups * d_state]; ofs += n_groups * d_state
+    dt = z[..., ofs : ofs + n_heads]
+    return gate, x, b, c, dt
+
+
+def mamba2_apply(
+    p: Params,
+    u: jax.Array,                 # (B, S, d_model)
+    d_inner: int,
+    n_heads: int,
+    d_state: int,
+    n_groups: int = 1,
+    chunk: int = 128,
+    h_spec=None,                  # NamedSharding: SSM heads over model
+) -> jax.Array:
+    bsz, s, _ = u.shape
+    hd = d_inner // n_heads
+    z = dense_apply(p["in_proj"], u)
+    if h_spec is not None:
+        # keep the in_proj output sequence-sharded (u already is): GSPMD
+        # otherwise partial-sums the FSDP-sharded contraction and
+        # all-reduces the full (B,S,d_in_proj) activation
+        from jax.sharding import NamedSharding, PartitionSpec as _P
+
+        zspec = NamedSharding(
+            h_spec.mesh, _P(h_spec.spec[0], h_spec.spec[2], None)
+        )
+        z = jax.lax.with_sharding_constraint(z, zspec)
+    gate, x, bmat, cmat, dt = _split_proj(z, d_inner, n_groups, d_state, n_heads)
+    x = x.reshape(bsz, s, n_heads, hd)
+    bmat = bmat.reshape(bsz, s, n_groups, d_state)
+    cmat = cmat.reshape(bsz, s, n_groups, d_state)
+    # broadcast groups to heads
+    rep = n_heads // n_groups
+    bmat = jnp.repeat(bmat, rep, axis=2)              # (B,S,H,N)
+    cmat = jnp.repeat(cmat, rep, axis=2)
+    if h_spec is not None:
+        # head-parallel SSD: every chunk-scan operand sharded on the head
+        # axis => the intra-chunk quadratic and the state recurrence are
+        # local; seq stays unsharded inside the scan (no per-iter gathers)
+        x = jax.lax.with_sharding_constraint(x, h_spec)
+        bmat = jax.lax.with_sharding_constraint(bmat, h_spec)
+        cmat = jax.lax.with_sharding_constraint(cmat, h_spec)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,S,H)
+    a = -jnp.exp(p["A_log"])                                       # (H,)
+    da = dt * a                                                    # (B,S,H) <= 0
+
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    xq = x.reshape(bsz, nc, chunk, n_heads, hd)
+    bq = bmat.reshape(bsz, nc, chunk, n_heads, d_state)
+    cq = cmat.reshape(bsz, nc, chunk, n_heads, d_state)
+    dtq = dt.reshape(bsz, nc, chunk, n_heads)
+    daq = da.reshape(bsz, nc, chunk, n_heads)
+
+    def body(h, xs):
+        xc, bc, cc, dtc, dac = xs       # (B,Q,H,*) for one chunk
+        # cumulative decay within the chunk: seg[i] = sum_{j<=i} da[j]
+        seg = jnp.cumsum(dac, axis=1)                       # (B,Q,H)
+        # intra-chunk quadratic term:
+        #   y_intra[i] = sum_{j<=i} exp(seg[i]-seg[j]) * (C_i . B_j) dt_j x_j
+        scores = jnp.einsum(
+            "bqhn,bkhn->bhqk", cc.astype(jnp.float32), bc.astype(jnp.float32)
+        )
+        decay = seg[:, :, None, :].transpose(0, 3, 1, 2) - seg[:, None, :, :].transpose(0, 3, 1, 2)
+        causal = jnp.tril(jnp.ones((xc.shape[1], xc.shape[1]), bool))
+        gmat = jnp.where(causal[None, None], jnp.exp(decay), 0.0)
+        w = scores * gmat                                    # (B,H,Q,Q)
+        xdt = xc.astype(jnp.float32) * dtc[..., None]        # (B,Q,H,P)
+        y_intra = jnp.einsum("bhqk,bkhp->bqhp", w, xdt)
+        # contribution of the carried state: y_state[i] = exp(seg[i]) C_i . h
+        y_state = jnp.einsum(
+            "bqhn,bhpn->bqhp", cc.astype(jnp.float32) * jnp.exp(seg)[..., None], h
+        )
+        # state update: h' = exp(seg[Q-1]) h + sum_j exp(seg[Q-1]-seg[j]) B_j dt_j x_j
+        tail = jnp.exp(seg[:, -1][:, :, None] - seg.transpose(0, 2, 1))   # (B,H,Q)
+        hb = jnp.einsum(
+            "bhq,bqhn,bqhp->bhpn", tail, bc.astype(jnp.float32), xdt
+        )
+        h_new = jnp.exp(seg[:, -1])[..., None, None] * h + hb
+        return h_new, (y_intra + y_state)
+
+    h0 = jnp.zeros((bsz, n_heads, hd, d_state), jnp.float32)
+    _, yq = jax.lax.scan(
+        body,
+        h0,
+        (
+            xq.transpose(1, 0, 2, 3, 4),
+            bq.transpose(1, 0, 2, 3, 4),
+            cq.transpose(1, 0, 2, 3, 4),
+            dtq.transpose(1, 0, 2, 3),
+            daq.transpose(1, 0, 2, 3),
+        ),
+    )
+    y = yq.transpose(1, 0, 2, 3, 4).reshape(bsz, s, n_heads, hd)
+    y = y + x.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(bsz, s, d_inner).astype(u.dtype)
+    y = rmsnorm_apply(p["norm"], y) * jax.nn.silu(gate)
+    out = dense_apply(p["out_proj"], y)
+    if h_spec is not None:
+        # row-parallel out_proj: pin the output sequence-sharded so the
+        # partial-sum combines as a reduce-scatter, not all-reduce+slice
+        from jax.sharding import NamedSharding, PartitionSpec as _P
+
+        out = jax.lax.with_sharding_constraint(
+            out, NamedSharding(h_spec.mesh, _P(h_spec.spec[0], h_spec.spec[2], None))
+        )
+    return out
+
+
+def mamba2_decode(
+    p: Params,
+    u: jax.Array,                  # (B, 1, d_model)
+    h: jax.Array,                  # (B, H, P, N) carried SSM state
+    d_inner: int,
+    n_heads: int,
+    d_state: int,
+    n_groups: int = 1,
+) -> tuple[jax.Array, jax.Array]:
+    bsz = u.shape[0]
+    hd = d_inner // n_heads
+    z = dense_apply(p["in_proj"], u)
+    gate, x, bmat, cmat, dt = _split_proj(z, d_inner, n_groups, d_state, n_heads)
+    x = x.reshape(bsz, n_heads, hd)
+    rep = n_heads // n_groups
+    bmat = jnp.repeat(bmat.reshape(bsz, n_groups, d_state), rep, axis=1)
+    cmat = jnp.repeat(cmat.reshape(bsz, n_groups, d_state), rep, axis=1)
+    dt = jax.nn.softplus(dt.reshape(bsz, n_heads).astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["A_log"])
+    da = jnp.exp(dt * a)                                     # (B,H)
+    xdt = x.astype(jnp.float32) * dt[..., None]              # (B,H,P)
+    h_new = da[..., None, None] * h + jnp.einsum("bhn,bhp->bhpn", bmat.astype(jnp.float32), xdt)
+    y = jnp.einsum("bhn,bhpn->bhp", cmat.astype(jnp.float32), h_new)
+    y = y + x.astype(jnp.float32) * p["D"][None, :, None]
+    y = y.reshape(bsz, 1, d_inner).astype(u.dtype)
+    y = rmsnorm_apply(p["norm"], y) * jax.nn.silu(gate.reshape(bsz, 1, d_inner))
+    return dense_apply(p["out_proj"], y), h_new

@@ -1,0 +1,637 @@
+"""Unified LM: one config dataclass + family-dispatched build/forward/decode.
+
+Families:
+  dense   llama-style GQA decoder (yi, minitron, qwen1.5, starcoder2;
+          llava = dense + vision_stub frontend)
+  moe     dense skeleton with MoE FFN (dbrx; deepseek = moe + MLA)
+  hybrid  zamba2: mamba2 backbone + one *shared* attention block applied
+          every ``shared_attn_every`` layers on concat(h, embeddings)
+  xlstm   alternating mLSTM / sLSTM blocks (1 sLSTM per ``slstm_every``)
+  encdec  whisper: bidirectional encoder over stub frame embeddings +
+          causal decoder with cross attention
+
+Entry points used by the launcher:
+  init_params(cfg, key)                      -> params
+  loss_fn(params, cfg, batch)                -> scalar CE
+  init_cache(cfg, batch, max_len)            -> decode cache
+  decode_step(params, cfg, cache, batch)     -> (logits, cache)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models import mamba2 as m2
+from repro.models import transformer as tf
+from repro.models import xlstm as xl
+from repro.models.layers import (
+    Params,
+    chunked_cross_entropy,
+    dense_apply,
+    dense_init,
+    embed_apply,
+    embed_init,
+    rmsnorm_apply,
+    rmsnorm_init,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                    # dense | moe | hybrid | xlstm | encdec
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0              # 0 => d_model // n_heads
+    qkv_bias: bool = False
+    rope_theta: float = 1e4
+    norm_eps: float = 1e-5
+    mlp_kind: str = "swiglu"       # swiglu | gelu
+    attn_block: int = 512          # blockwise-attention KV tile
+    loss_chunk: int = 128          # chunked-CE sequence tile
+    remat: bool = True
+    # MoE
+    moe_experts: int = 0
+    moe_top_k: int = 0
+    moe_shared: int = 0
+    moe_d_ff: int = 0
+    moe_dense_first_n: int = 0     # leading layers with a dense FFN (deepseek)
+    capacity_factor: float = 1.25
+    moe_dense_fallback: bool = False
+    # MLA
+    mla_kv_lora: int = 0
+    mla_qk_nope: int = 128
+    mla_qk_rope: int = 64
+    mla_v_head: int = 128
+    # SSM / hybrid
+    ssm_state: int = 0
+    ssm_expansion: int = 2
+    ssm_heads: int = 0             # 0 => d_inner // 64
+    ssm_groups: int = 1
+    ssm_chunk: int = 128
+    shared_attn_every: int = 0     # zamba2: shared block cadence
+    # xLSTM
+    slstm_every: int = 0           # 1 sLSTM per this many blocks (0 = none)
+    xlstm_pf: float = 2.0
+    # enc-dec
+    enc_layers: int = 0
+    # frontend stubs
+    frontend: str | None = None    # audio_stub | vision_stub
+    frontend_tokens: int = 0       # vision: patch tokens prepended
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+
+    @property
+    def d_inner(self) -> int:
+        return self.d_model * self.ssm_expansion
+
+    @property
+    def n_ssm_heads(self) -> int:
+        return self.ssm_heads or self.d_inner // 64
+
+    def param_count(self) -> int:
+        """Approximate parameter count N (embeddings included)."""
+        d, v = self.d_model, self.vocab
+        total = 2 * v * d  # embed + unembed
+        if self.family in ("dense", "moe"):
+            per = self._attn_params() + self._ffn_params()
+            total += self.n_layers * per
+            if self.moe_dense_first_n:
+                total += self.moe_dense_first_n * (
+                    3 * d * self.d_ff - self._ffn_params_moe()
+                )
+        elif self.family == "hybrid":
+            total += self.n_layers * self._mamba_params()
+            total += self._shared_block_params()
+        elif self.family == "xlstm":
+            di = int(d * self.xlstm_pf)
+            n_s = self.n_layers // self.slstm_every if self.slstm_every else 0
+            n_m = self.n_layers - n_s
+            total += n_m * (2 * d * di + 3 * di * di + di * d)
+            total += n_s * (4 * d * d + 4 * d * (d // max(self.n_heads, 1)) + 2 * d * int(d * 4 / 3) + int(d * 4 / 3) * d)
+        elif self.family == "encdec":
+            enc = self.enc_layers * (self._attn_params() + 2 * d * self.d_ff)
+            dec = self.n_layers * (2 * self._attn_params() + 2 * d * self.d_ff)
+            total += enc + dec
+        return total
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: top-k + shared experts only)."""
+        if not self.moe_experts:
+            return self.param_count()
+        d, v = self.d_model, self.vocab
+        total = 2 * v * d
+        per = self._attn_params() + (
+            (self.moe_top_k + self.moe_shared) * 3 * d * self.moe_d_ff
+            + d * self.moe_experts
+        )
+        total += self.n_layers * per
+        return total
+
+    def _attn_params(self) -> int:
+        d = self.d_model
+        if self.mla_kv_lora:
+            return (
+                d * self.n_heads * (self.mla_qk_nope + self.mla_qk_rope)
+                + d * (self.mla_kv_lora + self.mla_qk_rope)
+                + self.mla_kv_lora * self.n_heads * (self.mla_qk_nope + self.mla_v_head)
+                + self.n_heads * self.mla_v_head * d
+            )
+        return d * self.head_dim * (2 * self.n_heads + 2 * self.n_kv_heads)
+
+    def _ffn_params(self) -> int:
+        if self.moe_experts:
+            return self._ffn_params_moe()
+        mult = 3 if self.mlp_kind == "swiglu" else 2
+        return mult * self.d_model * self.d_ff
+
+    def _ffn_params_moe(self) -> int:
+        d = self.d_model
+        return (
+            self.moe_experts * 3 * d * self.moe_d_ff
+            + self.moe_shared * 3 * d * self.moe_d_ff
+            + d * self.moe_experts
+        )
+
+    def _mamba_params(self) -> int:
+        d, di = self.d_model, self.d_inner
+        return d * (2 * di + 2 * self.ssm_groups * self.ssm_state + self.n_ssm_heads) + di * d
+
+    def _shared_block_params(self) -> int:
+        d2 = 2 * self.d_model
+        return d2 * d2 * 4 + 2 * d2 * self.d_ff + self.d_ff * d2
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    keys = jax.random.split(key, 8)
+    p: Params = {
+        "embed": embed_init(keys[0], cfg.vocab, cfg.d_model),
+        "ln_f": rmsnorm_init(cfg.d_model),
+        "unembed": dense_init(keys[1], cfg.d_model, cfg.vocab,
+                              scale=1.0 / math.sqrt(cfg.d_model)),
+    }
+    if cfg.family in ("dense", "moe"):
+        n_scan = cfg.n_layers - cfg.moe_dense_first_n
+        p["layers"] = tf.stacked_init(
+            keys[2], n_scan, lambda k: tf.decoder_layer_init(k, cfg)
+        )
+        if cfg.moe_dense_first_n:
+            dense_cfg = dataclasses.replace(cfg, moe_experts=0)
+            p["first_layers"] = [
+                tf.decoder_layer_init(k, dense_cfg)
+                for k in jax.random.split(keys[3], cfg.moe_dense_first_n)
+            ]
+    elif cfg.family == "hybrid":
+        groups = cfg.n_layers // cfg.shared_attn_every
+        per_group = cfg.shared_attn_every
+
+        def init_group(k):
+            return tf.stacked_init(
+                k,
+                per_group,
+                lambda kk: m2.mamba2_init(
+                    kk, cfg.d_model, cfg.d_inner, cfg.n_ssm_heads,
+                    cfg.ssm_state, cfg.ssm_groups,
+                ),
+            )
+
+        p["groups"] = jax.vmap(init_group)(jax.random.split(keys[2], groups))
+        p["group_norms"] = jax.vmap(
+            jax.vmap(lambda _: rmsnorm_init(cfg.d_model))
+        )(jnp.zeros((groups, per_group)))
+        p["shared"] = _shared_block_init(keys[3], cfg)
+    elif cfg.family == "xlstm":
+        # block kinds are derived from cfg (_xlstm_kinds), not stored in the
+        # pytree, so params stay jit-compatible
+        p["blocks"] = []
+        for kind, k in zip(
+            _xlstm_kinds(cfg), jax.random.split(keys[2], cfg.n_layers)
+        ):
+            if kind == "m":
+                p["blocks"].append(
+                    {"ln": rmsnorm_init(cfg.d_model),
+                     "p": xl.mlstm_init(k, cfg.d_model, cfg.n_heads, cfg.xlstm_pf)}
+                )
+            else:
+                p["blocks"].append(
+                    {"ln": rmsnorm_init(cfg.d_model),
+                     "p": xl.slstm_init(k, cfg.d_model, cfg.n_heads)}
+                )
+    elif cfg.family == "encdec":
+        p["enc_layers"] = tf.stacked_init(
+            keys[2], cfg.enc_layers, lambda k: tf.encoder_layer_init(k, cfg)
+        )
+        p["dec_layers"] = tf.stacked_init(
+            keys[3], cfg.n_layers, lambda k: tf.cross_decoder_layer_init(k, cfg)
+        )
+        p["ln_enc"] = rmsnorm_init(cfg.d_model)
+    else:
+        raise ValueError(cfg.family)
+    if cfg.frontend == "vision_stub":
+        p["patch_proj"] = dense_init(keys[4], cfg.d_model, cfg.d_model)
+    return p
+
+
+def _xlstm_kinds(cfg: ModelConfig) -> list[str]:
+    if not cfg.slstm_every:
+        return ["m"] * cfg.n_layers
+    return [
+        "s" if (i + 1) % cfg.slstm_every == 0 else "m" for i in range(cfg.n_layers)
+    ]
+
+
+def _shared_block_init(key, cfg: ModelConfig) -> Params:
+    """Zamba2 shared transformer block over concat(h, embed) (2*d_model)."""
+    d2 = 2 * cfg.d_model
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": rmsnorm_init(d2),
+        "attn": attn_mod.gqa_init(
+            k1, d2, cfg.n_heads, cfg.n_kv_heads, d2 // cfg.n_heads
+        ),
+        "down": dense_init(k2, d2, cfg.d_model, scale=1.0 / math.sqrt(d2)),
+        "ln2": rmsnorm_init(cfg.d_model),
+        "mlp": {
+            "gate": dense_init(jax.random.split(k3)[0], cfg.d_model, cfg.d_ff),
+            "up": dense_init(jax.random.split(k3)[1], cfg.d_model, cfg.d_ff),
+            "down": dense_init(k3, cfg.d_ff, cfg.d_model,
+                               scale=1.0 / math.sqrt(cfg.d_ff)),
+        },
+    }
+
+
+# ---------------------------------------------------------------------------
+# forward (training)
+# ---------------------------------------------------------------------------
+
+
+def _embed_inputs(params, cfg: ModelConfig, batch) -> jax.Array:
+    x = embed_apply(params["embed"], batch["tokens"])
+    if cfg.frontend == "vision_stub":
+        patches = dense_apply(params["patch_proj"], batch["patch_embeds"])
+        x = jnp.concatenate([patches.astype(x.dtype), x], axis=1)
+    return x
+
+
+def forward(
+    params: Params, cfg: ModelConfig, batch: dict, ep_spec=None, resid=None,
+    attn_specs=None,
+) -> jax.Array:
+    """Token/frontend inputs -> final hidden states (B, S, d).
+
+    ``ep_spec``/``resid`` are NamedShardings used as GSPMD constraints for
+    the MoE dispatch buffer and the residual stream (sequence parallelism).
+    """
+    if cfg.family == "encdec":
+        return _forward_encdec(params, cfg, batch, resid=resid,
+                               attn_specs=attn_specs)
+    x = _embed_inputs(params, cfg, batch)
+    if cfg.family in ("dense", "moe"):
+        for lp in params.get("first_layers", []):
+            dense_cfg = dataclasses.replace(cfg, moe_experts=0)
+            x = tf.decoder_layer_apply(lp, x, dense_cfg)
+        x = tf.scan_stack(
+            params["layers"],
+            x,
+            lambda lp, h: tf.decoder_layer_apply(
+                lp, h, cfg, ep_spec=ep_spec, attn_specs=attn_specs),
+            remat=cfg.remat,
+            constraint=resid,
+        )
+    elif cfg.family == "hybrid":
+        x = _forward_hybrid(params, cfg, x, resid=resid, attn_specs=attn_specs)
+    elif cfg.family == "xlstm":
+        for kind, blk in zip(_xlstm_kinds(cfg), params["blocks"]):
+            h = rmsnorm_apply(blk["ln"], x, cfg.norm_eps)
+            if kind == "m":
+                f = functools.partial(
+                    xl.mlstm_apply, n_heads=cfg.n_heads, pf=cfg.xlstm_pf,
+                    chunk=cfg.ssm_chunk,
+                )
+            else:
+                f = functools.partial(xl.slstm_apply, n_heads=cfg.n_heads)
+            if cfg.remat:
+                f = jax.checkpoint(f)
+            x = x + f(blk["p"], h)
+    else:
+        raise ValueError(cfg.family)
+    return rmsnorm_apply(params["ln_f"], x, cfg.norm_eps)
+
+
+def _forward_hybrid(
+    params, cfg: ModelConfig, x: jax.Array, resid=None, attn_specs=None
+) -> jax.Array:
+    attn_specs = attn_specs or {}
+    emb = x  # original embeddings feed every shared-block invocation
+    shared = params["shared"]
+    d2 = 2 * cfg.d_model
+
+    def shared_block(h):
+        cb = jnp.concatenate([h, emb], axis=-1)
+        a = attn_mod.gqa_apply(
+            shared["attn"],
+            rmsnorm_apply(shared["ln1"], cb, cfg.norm_eps),
+            cfg.n_heads,
+            cfg.n_kv_heads,
+            d2 // cfg.n_heads,
+            rope_theta=cfg.rope_theta,
+            block=cfg.attn_block,
+            q_spec=attn_specs.get("q"),
+            kv_spec=attn_specs.get("kv"),
+        )
+        h = h + dense_apply(shared["down"], a)
+        hn = rmsnorm_apply(shared["ln2"], h, cfg.norm_eps)
+        g = dense_apply(shared["mlp"]["gate"], hn)
+        u = dense_apply(shared["mlp"]["up"], hn)
+        return h + dense_apply(shared["mlp"]["down"], jax.nn.silu(g) * u)
+
+    def mamba_layer(lp, h):
+        norm_p, m_p = lp
+        hn = rmsnorm_apply(norm_p, h, cfg.norm_eps)
+        return h + m2.mamba2_apply(
+            m_p, hn, cfg.d_inner, cfg.n_ssm_heads, cfg.ssm_state,
+            cfg.ssm_groups, chunk=cfg.ssm_chunk,
+            h_spec=attn_specs.get("ssm_h"),
+        )
+
+    def group_body(h, gp):
+        norms, mparams = gp
+        h = tf.scan_stack(
+            (norms, mparams), h, lambda lp, hh: mamba_layer(lp, hh),
+            remat=cfg.remat, constraint=resid,
+        )
+        h = jax.checkpoint(shared_block)(h) if cfg.remat else shared_block(h)
+        return h, None
+
+    h, _ = jax.lax.scan(group_body, x, (params["group_norms"], params["groups"]))
+    return h
+
+
+def _sinusoid(s: int, d: int) -> jax.Array:
+    pos = jnp.arange(s)[:, None].astype(jnp.float32)
+    i = jnp.arange(d // 2)[None, :].astype(jnp.float32)
+    ang = pos / jnp.power(10000.0, 2 * i / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _forward_encdec(
+    params, cfg: ModelConfig, batch, resid=None, attn_specs=None
+) -> jax.Array:
+    frames = batch["frames"].astype(jnp.bfloat16)       # (B, S_enc, d) stub
+    enc = frames + _sinusoid(frames.shape[1], cfg.d_model).astype(jnp.bfloat16)
+    enc = tf.scan_stack(
+        params["enc_layers"], enc,
+        lambda lp, h: tf.encoder_layer_apply(lp, h, cfg, attn_specs=attn_specs),
+        remat=cfg.remat,
+        constraint=resid,
+    )
+    enc = rmsnorm_apply(params["ln_enc"], enc, cfg.norm_eps)
+    x = embed_apply(params["embed"], batch["tokens"])
+    x = tf.scan_stack(
+        params["dec_layers"], x,
+        lambda lp, h: tf.cross_decoder_layer_apply(
+            lp, h, enc, cfg, attn_specs=attn_specs),
+        remat=cfg.remat, constraint=resid,
+    )
+    return rmsnorm_apply(params["ln_f"], x, cfg.norm_eps)
+
+
+def loss_fn(
+    params: Params, cfg: ModelConfig, batch: dict, ep_spec=None, resid=None,
+    attn_specs=None,
+) -> jax.Array:
+    hidden = forward(params, cfg, batch, ep_spec=ep_spec, resid=resid,
+                     attn_specs=attn_specs)
+    labels = batch["labels"]
+    if cfg.frontend == "vision_stub":
+        # loss over text positions only (patch prefix is unsupervised)
+        hidden = hidden[:, cfg.frontend_tokens :, :]
+    return chunked_cross_entropy(
+        hidden, params["unembed"]["w"], labels, chunk=cfg.loss_chunk
+    )
+
+
+# ---------------------------------------------------------------------------
+# decode (serving)
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    if cfg.family in ("dense", "moe"):
+        n_scan = cfg.n_layers - cfg.moe_dense_first_n
+
+        def one():
+            if cfg.mla_kv_lora:
+                return {
+                    "c": jnp.zeros((batch, max_len, cfg.mla_kv_lora), dtype),
+                    "kr": jnp.zeros((batch, max_len, cfg.mla_qk_rope), dtype),
+                }
+            return {
+                "k": jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+                "v": jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+            }
+
+        cache = {"scan": jax.tree.map(lambda x: jnp.stack([x] * n_scan), one())}
+        if cfg.moe_dense_first_n:
+            cache["first"] = [one() for _ in range(cfg.moe_dense_first_n)]
+        return cache
+    if cfg.family == "hybrid":
+        groups = cfg.n_layers // cfg.shared_attn_every
+        hd = cfg.d_inner // cfg.n_ssm_heads
+        d2 = 2 * cfg.d_model
+        return {
+            "ssm": jnp.zeros(
+                (groups, cfg.shared_attn_every, batch, cfg.n_ssm_heads, hd,
+                 cfg.ssm_state), jnp.float32,
+            ),
+            "shared_k": jnp.zeros(
+                (groups, batch, max_len, cfg.n_kv_heads, d2 // cfg.n_heads), dtype
+            ),
+            "shared_v": jnp.zeros(
+                (groups, batch, max_len, cfg.n_kv_heads, d2 // cfg.n_heads), dtype
+            ),
+        }
+    if cfg.family == "xlstm":
+        kinds = _xlstm_kinds(cfg)
+        di = int(cfg.d_model * cfg.xlstm_pf)
+        hd = di // cfg.n_heads
+        cache = []
+        for kind in kinds:
+            if kind == "m":
+                cache.append(
+                    (
+                        jnp.zeros((batch, cfg.n_heads, hd, hd), jnp.float32),
+                        jnp.zeros((batch, cfg.n_heads, hd), jnp.float32),
+                        jnp.full((batch, cfg.n_heads), -1e30, jnp.float32),
+                    )
+                )
+            else:
+                cache.append(
+                    tuple(jnp.zeros((batch, cfg.d_model), jnp.float32) for _ in range(3))
+                    + (jnp.full((batch, cfg.d_model), -1e30, jnp.float32),)
+                )
+        return cache
+    if cfg.family == "encdec":
+        def one():
+            return {
+                "k": jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+                "v": jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+            }
+
+        return {
+            "self": jax.tree.map(lambda x: jnp.stack([x] * cfg.n_layers), one()),
+            # cross K/V over the encoder output, filled at prefill:
+            "cross": jax.tree.map(lambda x: jnp.stack([x] * cfg.n_layers), one()),
+            "enc_len": jnp.zeros((), jnp.int32),
+        }
+    raise ValueError(cfg.family)
+
+
+def decode_step(
+    params: Params, cfg: ModelConfig, cache, batch: dict
+) -> tuple[jax.Array, Any]:
+    """One-token decode: batch = {"tokens": (B, 1), "cur_len": ()}."""
+    tokens, cur_len = batch["tokens"], batch["cur_len"]
+    x = embed_apply(params["embed"], tokens)
+    if cfg.family in ("dense", "moe"):
+        new_first = []
+        for lp, cl in zip(params.get("first_layers", []), cache.get("first", [])):
+            dense_cfg = dataclasses.replace(cfg, moe_experts=0)
+            x, cl2 = tf.decoder_layer_decode(lp, x, cl, cur_len, dense_cfg)
+            new_first.append(cl2)
+        x, new_scan = tf.scan_stack_decode(
+            params["layers"], x, cache["scan"], cur_len,
+            lambda lp, h, cl, t: tf.decoder_layer_decode(lp, h, cl, t, cfg),
+        )
+        new_cache = {"scan": new_scan}
+        if new_first:
+            new_cache["first"] = new_first
+    elif cfg.family == "hybrid":
+        x, new_cache = _decode_hybrid(params, cfg, cache, x, cur_len)
+    elif cfg.family == "xlstm":
+        new_cache = []
+        for kind, blk, st in zip(_xlstm_kinds(cfg), params["blocks"], cache):
+            h = rmsnorm_apply(blk["ln"], x, cfg.norm_eps)
+            if kind == "m":
+                y, st2 = xl.mlstm_decode(blk["p"], h, st, cfg.n_heads, cfg.xlstm_pf)
+            else:
+                y, st2 = xl.slstm_decode(blk["p"], h, st, cfg.n_heads)
+            x = x + y
+            new_cache.append(st2)
+    elif cfg.family == "encdec":
+        x, new_cache = _decode_encdec(params, cfg, cache, x, cur_len)
+    else:
+        raise ValueError(cfg.family)
+    x = rmsnorm_apply(params["ln_f"], x, cfg.norm_eps)
+    logits = dense_apply(params["unembed"], x).astype(jnp.float32)
+    return logits, new_cache
+
+
+def _decode_hybrid(params, cfg: ModelConfig, cache, x, cur_len):
+    emb = x
+    shared = params["shared"]
+    d2 = 2 * cfg.d_model
+    groups = cfg.n_layers // cfg.shared_attn_every
+    new_ssm = []
+    new_k, new_v = [], []
+    for g in range(groups):
+        states_g = []
+        for l in range(cfg.shared_attn_every):
+            lp = jax.tree.map(lambda a: a[g, l], params["groups"])
+            norm_p = jax.tree.map(lambda a: a[g, l], params["group_norms"])
+            hn = rmsnorm_apply(norm_p, x, cfg.norm_eps)
+            y, st = m2.mamba2_decode(
+                lp, hn, cache["ssm"][g, l], cfg.d_inner, cfg.n_ssm_heads,
+                cfg.ssm_state, cfg.ssm_groups,
+            )
+            x = x + y
+            states_g.append(st)
+        cb = jnp.concatenate([x, emb], axis=-1)
+        hn = rmsnorm_apply(shared["ln1"], cb, cfg.norm_eps)
+        a, ck, cv = attn_mod.gqa_decode(
+            shared["attn"], hn, cache["shared_k"][g], cache["shared_v"][g],
+            cur_len, cfg.n_heads, cfg.n_kv_heads, d2 // cfg.n_heads,
+            rope_theta=cfg.rope_theta,
+        )
+        x = x + dense_apply(shared["down"], a)
+        hn = rmsnorm_apply(shared["ln2"], x, cfg.norm_eps)
+        gte = dense_apply(shared["mlp"]["gate"], hn)
+        u = dense_apply(shared["mlp"]["up"], hn)
+        x = x + dense_apply(shared["mlp"]["down"], jax.nn.silu(gte) * u)
+        new_ssm.append(jnp.stack(states_g))
+        new_k.append(ck)
+        new_v.append(cv)
+    new_cache = {
+        "ssm": jnp.stack(new_ssm),
+        "shared_k": jnp.stack(new_k),
+        "shared_v": jnp.stack(new_v),
+    }
+    return x, new_cache
+
+
+def _decode_encdec(params, cfg: ModelConfig, cache, x, cur_len):
+    def one_layer(lp, h, cl, t):
+        hn = rmsnorm_apply(lp["ln1"], h, cfg.norm_eps)
+        a, ck, cv = attn_mod.gqa_decode(
+            lp["self"], hn, cl["self"]["k"], cl["self"]["v"], t,
+            cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, rope_theta=cfg.rope_theta,
+        )
+        h = h + a
+        hn = rmsnorm_apply(lp["ln2"], h, cfg.norm_eps)
+        # cross attention against the (static) encoder K/V cache
+        b = h.shape[0]
+        q = dense_apply(lp["cross"]["wq"], hn).reshape(
+            b, 1, cfg.n_heads, cfg.head_dim
+        )
+        rep = cfg.n_heads // cfg.n_kv_heads
+        kk, vv = cl["cross"]["k"], cl["cross"]["v"]      # grouped, no repeat
+        scale = 1.0 / math.sqrt(cfg.head_dim)
+        qg = (q * scale).reshape(b, 1, cfg.n_kv_heads, rep, cfg.head_dim)
+        scores = jnp.einsum("bqgrd,bkgd->bgrqk", qg, kk,
+                            preferred_element_type=jnp.float32)
+        valid = (
+            jnp.arange(kk.shape[1])[None, None, None, None, :]
+            < cache["enc_len"]
+        )
+        scores = jnp.where(valid, scores, -1e30)
+        w = jax.nn.softmax(scores, axis=-1).astype(vv.dtype)
+        c = jnp.einsum("bgrqk,bkgd->bqgrd", w, vv).reshape(b, 1, -1)
+        h = h + dense_apply(lp["cross"]["wo"], c)
+        hn = rmsnorm_apply(lp["ln3"], h, cfg.norm_eps)
+        from repro.models.layers import gelu_mlp_apply
+
+        h = h + gelu_mlp_apply(lp["mlp"], hn)
+        return h, {"self": {"k": ck, "v": cv}, "cross": cl["cross"]}
+
+    def body(h, xs):
+        lp, cl = xs
+        h2, cl2 = one_layer(lp, h, cl, cur_len)
+        return h2, cl2
+
+    x, new_layers = jax.lax.scan(
+        body, x, (params["dec_layers"],
+                  {"self": cache["self"], "cross": cache["cross"]})
+    )
+    return x, {
+        "self": new_layers["self"],
+        "cross": new_layers["cross"],
+        "enc_len": cache["enc_len"],
+    }

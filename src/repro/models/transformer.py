@@ -1,0 +1,290 @@
+"""Decoder layers and scan-based stacks for the dense / MoE / MLA families.
+
+Layer params are built per-layer then stacked with a leading layer axis;
+the stack applies them with ``lax.scan`` (+ remat) so the compiled HLO has
+one layer body regardless of depth — essential for 40-50-layer configs to
+compile quickly in the 512-device dry-run.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models.layers import (
+    Params,
+    dense_init,
+    gelu_mlp_apply,
+    gelu_mlp_init,
+    rmsnorm_apply,
+    rmsnorm_init,
+    swiglu_apply,
+    swiglu_init,
+)
+
+
+# -- single decoder layer -----------------------------------------------------
+
+
+def decoder_layer_init(key, cfg) -> Params:
+    """One pre-norm decoder layer for dense / moe / mla configs."""
+    k_attn, k_mlp = jax.random.split(key)
+    p: Params = {"ln1": rmsnorm_init(cfg.d_model), "ln2": rmsnorm_init(cfg.d_model)}
+    if cfg.mla_kv_lora:
+        p["attn"] = attn.mla_init(
+            k_attn,
+            cfg.d_model,
+            cfg.n_heads,
+            cfg.mla_kv_lora,
+            cfg.mla_qk_nope,
+            cfg.mla_qk_rope,
+            cfg.mla_v_head,
+        )
+    else:
+        p["attn"] = attn.gqa_init(
+            k_attn,
+            cfg.d_model,
+            cfg.n_heads,
+            cfg.n_kv_heads,
+            cfg.head_dim,
+            qkv_bias=cfg.qkv_bias,
+        )
+    if cfg.moe_experts:
+        p["mlp"] = moe_mod.moe_init(
+            k_mlp,
+            cfg.d_model,
+            cfg.moe_d_ff,
+            cfg.moe_experts,
+            n_shared=cfg.moe_shared,
+            d_ff_shared=cfg.moe_d_ff,
+        )
+    elif cfg.mlp_kind == "gelu":
+        p["mlp"] = gelu_mlp_init(k_mlp, cfg.d_model, cfg.d_ff)
+    else:
+        p["mlp"] = swiglu_init(k_mlp, cfg.d_model, cfg.d_ff)
+    return p
+
+
+def decoder_layer_apply(
+    p: Params, x: jax.Array, cfg, ep_spec=None, attn_specs=None
+) -> jax.Array:
+    attn_specs = attn_specs or {}
+    h = rmsnorm_apply(p["ln1"], x, cfg.norm_eps)
+    if cfg.mla_kv_lora:
+        a = attn.mla_apply(
+            p["attn"],
+            h,
+            cfg.n_heads,
+            cfg.mla_kv_lora,
+            cfg.mla_qk_nope,
+            cfg.mla_qk_rope,
+            cfg.mla_v_head,
+            rope_theta=cfg.rope_theta,
+            block=cfg.attn_block,
+            q_spec=attn_specs.get("q"),
+            kv_spec=attn_specs.get("kv"),
+        )
+    else:
+        a = attn.gqa_apply(
+            p["attn"],
+            h,
+            cfg.n_heads,
+            cfg.n_kv_heads,
+            cfg.head_dim,
+            rope_theta=cfg.rope_theta,
+            block=cfg.attn_block,
+            q_spec=attn_specs.get("q"),
+            kv_spec=attn_specs.get("kv"),
+        )
+    x = x + a
+    h = rmsnorm_apply(p["ln2"], x, cfg.norm_eps)
+    if cfg.moe_experts:
+        ep_ctx = attn_specs.get("moe_ep")
+        if ep_ctx is not None:
+            mesh, data_axes, model_axis = ep_ctx
+            m = moe_mod.moe_ep_apply(
+                p["mlp"], h, cfg.moe_experts, cfg.moe_top_k,
+                cfg.capacity_factor, mesh, data_axes, model_axis,
+            )
+        else:
+            m = moe_mod.moe_apply(
+                p["mlp"],
+                h,
+                cfg.moe_experts,
+                cfg.moe_top_k,
+                capacity_factor=cfg.capacity_factor,
+                ep_spec=ep_spec,
+                dense_fallback=cfg.moe_dense_fallback,
+            )
+    elif cfg.mlp_kind == "gelu":
+        m = gelu_mlp_apply(p["mlp"], h)
+    else:
+        m = swiglu_apply(p["mlp"], h)
+    return x + m
+
+
+def decoder_layer_decode(
+    p: Params, x: jax.Array, cache_layer, cur_len, cfg
+) -> tuple[jax.Array, Any]:
+    h = rmsnorm_apply(p["ln1"], x, cfg.norm_eps)
+    if cfg.mla_kv_lora:
+        a, c_c, c_kr = attn.mla_decode(
+            p["attn"],
+            h,
+            cache_layer["c"],
+            cache_layer["kr"],
+            cur_len,
+            cfg.n_heads,
+            cfg.mla_kv_lora,
+            cfg.mla_qk_nope,
+            cfg.mla_qk_rope,
+            cfg.mla_v_head,
+            rope_theta=cfg.rope_theta,
+        )
+        new_cache = {"c": c_c, "kr": c_kr}
+    else:
+        a, ck, cv = attn.gqa_decode(
+            p["attn"],
+            h,
+            cache_layer["k"],
+            cache_layer["v"],
+            cur_len,
+            cfg.n_heads,
+            cfg.n_kv_heads,
+            cfg.head_dim,
+            rope_theta=cfg.rope_theta,
+        )
+        new_cache = {"k": ck, "v": cv}
+    x = x + a
+    h = rmsnorm_apply(p["ln2"], x, cfg.norm_eps)
+    if cfg.moe_experts:
+        m = moe_mod.moe_apply(
+            p["mlp"],
+            h,
+            cfg.moe_experts,
+            cfg.moe_top_k,
+            capacity_factor=cfg.capacity_factor,
+            dense_fallback=True,  # decode: 1 token/row — dense combine is exact+cheap
+        )
+    elif cfg.mlp_kind == "gelu":
+        m = gelu_mlp_apply(p["mlp"], h)
+    else:
+        m = swiglu_apply(p["mlp"], h)
+    return x + m, new_cache
+
+
+# -- stacks -------------------------------------------------------------------
+
+
+def stacked_init(key, n_layers: int, init_one: Callable[[Any], Params]) -> Params:
+    keys = jax.random.split(key, n_layers)
+    return jax.vmap(init_one)(keys)
+
+
+def scan_stack(
+    layer_params: Params,
+    x: jax.Array,
+    apply_one: Callable[[Params, jax.Array], jax.Array],
+    remat: bool = True,
+    constraint=None,
+) -> jax.Array:
+    """``constraint`` (a NamedSharding) pins the residual stream's layout at
+    every layer boundary — the sequence-parallel resharding point."""
+
+    def inner(lp, h):
+        if constraint is not None:
+            h = jax.lax.with_sharding_constraint(h, constraint)
+        return apply_one(lp, h)
+
+    f = jax.checkpoint(inner) if remat else inner
+
+    def body(h, lp):
+        return f(lp, h), None
+
+    out, _ = jax.lax.scan(body, x, layer_params)
+    return out
+
+
+def scan_stack_decode(
+    layer_params: Params,
+    x: jax.Array,
+    cache: Any,                    # pytree with leading layer axis
+    cur_len: jax.Array,
+    apply_one: Callable,           # (lp, x, cache_layer, cur_len) -> (x, cache')
+) -> tuple[jax.Array, Any]:
+    def body(h, xs):
+        lp, cl = xs
+        h2, cl2 = apply_one(lp, h, cl, cur_len)
+        return h2, cl2
+
+    out, new_cache = jax.lax.scan(body, x, (layer_params, cache))
+    return out, new_cache
+
+
+# -- encoder layer (whisper) --------------------------------------------------
+
+
+def encoder_layer_init(key, cfg) -> Params:
+    k_attn, k_mlp = jax.random.split(key)
+    return {
+        "ln1": rmsnorm_init(cfg.d_model),
+        "ln2": rmsnorm_init(cfg.d_model),
+        "attn": attn.gqa_init(
+            k_attn, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+        ),
+        "mlp": gelu_mlp_init(k_mlp, cfg.d_model, cfg.d_ff),
+    }
+
+
+def encoder_layer_apply(p: Params, x: jax.Array, cfg, attn_specs=None) -> jax.Array:
+    attn_specs = attn_specs or {}
+    h = rmsnorm_apply(p["ln1"], x, cfg.norm_eps)
+    a = attn.gqa_apply(
+        p["attn"], h, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+        rope_theta=0.0, causal=False, block=cfg.attn_block,
+        q_spec=attn_specs.get("q"), kv_spec=attn_specs.get("kv"),
+    )
+    x = x + a
+    h = rmsnorm_apply(p["ln2"], x, cfg.norm_eps)
+    return x + gelu_mlp_apply(p["mlp"], h)
+
+
+def cross_decoder_layer_init(key, cfg) -> Params:
+    k_self, k_cross, k_mlp = jax.random.split(key, 3)
+    return {
+        "ln1": rmsnorm_init(cfg.d_model),
+        "ln2": rmsnorm_init(cfg.d_model),
+        "ln3": rmsnorm_init(cfg.d_model),
+        "self": attn.gqa_init(
+            k_self, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+        ),
+        "cross": attn.gqa_init(
+            k_cross, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+        ),
+        "mlp": gelu_mlp_init(k_mlp, cfg.d_model, cfg.d_ff),
+    }
+
+
+def cross_decoder_layer_apply(
+    p: Params, x: jax.Array, enc_out: jax.Array, cfg, attn_specs=None
+) -> jax.Array:
+    attn_specs = attn_specs or {}
+    h = rmsnorm_apply(p["ln1"], x, cfg.norm_eps)
+    x = x + attn.gqa_apply(
+        p["self"], h, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+        rope_theta=cfg.rope_theta, block=cfg.attn_block,
+        q_spec=attn_specs.get("q"), kv_spec=attn_specs.get("kv"),
+    )
+    h = rmsnorm_apply(p["ln2"], x, cfg.norm_eps)
+    x = x + attn.gqa_apply(
+        p["cross"], h, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+        rope_theta=0.0, causal=False, block=cfg.attn_block, kv_in=enc_out,
+        q_spec=attn_specs.get("q"), kv_spec=attn_specs.get("kv"),
+    )
+    h = rmsnorm_apply(p["ln3"], x, cfg.norm_eps)
+    return x + gelu_mlp_apply(p["mlp"], h)

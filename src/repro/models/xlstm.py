@@ -1,0 +1,251 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallel-in-chunks) and sLSTM
+(scalar memory, strictly sequential) — arXiv:2405.04517.
+
+mLSTM is a linear-attention-class cell: per head a (P, P') matrix memory C
+and normalizer n are updated with exponential input gates and scalar forget
+gates; training uses a chunked parallel form (like mamba2.py / flash-linear
+-attention), decode is the O(1) recurrence.  Stabilization follows the
+paper: a running max-log-gate m keeps exp() bounded.
+
+sLSTM keeps per-head scalar state (c, n, h, m) with recurrent mixing
+(block-diagonal R per head) and must scan over time; xLSTM[a:b] stacks mix
+mLSTM and sLSTM blocks at the given ratio.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (
+    Params,
+    dense_apply,
+    dense_init,
+    layernorm_apply,
+    layernorm_init,
+    rmsnorm_apply,
+    rmsnorm_init,
+)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_init(key, d_model: int, n_heads: int, pf: float = 2.0) -> Params:
+    d_inner = int(d_model * pf)
+    keys = jax.random.split(key, 8)
+    return {
+        "up": dense_init(keys[0], d_model, 2 * d_inner),   # x and gate paths
+        "wq": dense_init(keys[1], d_inner, d_inner),
+        "wk": dense_init(keys[2], d_inner, d_inner),
+        "wv": dense_init(keys[3], d_inner, d_inner),
+        "wi": dense_init(keys[4], d_inner, n_heads, scale=0.02),
+        "wf": dense_init(keys[5], d_inner, n_heads, scale=0.02),
+        "fb": jnp.full((n_heads,), 3.0, jnp.float32),      # forget bias > 0
+        "norm": rmsnorm_init(d_inner),
+        "down": dense_init(keys[6], d_inner, d_model, scale=1.0 / math.sqrt(d_inner)),
+    }
+
+
+def mlstm_apply(
+    p: Params, x: jax.Array, n_heads: int, pf: float = 2.0, chunk: int = 128
+) -> jax.Array:
+    b, s, d_model = x.shape
+    d_inner = int(d_model * pf)
+    hd = d_inner // n_heads
+    up = dense_apply(p["up"], x)
+    xi, gate = up[..., :d_inner], up[..., d_inner:]
+    q = dense_apply(p["wq"], xi).reshape(b, s, n_heads, hd)
+    k = dense_apply(p["wk"], xi).reshape(b, s, n_heads, hd) / math.sqrt(hd)
+    v = dense_apply(p["wv"], xi).reshape(b, s, n_heads, hd)
+    ig = dense_apply(p["wi"], xi).astype(jnp.float32)                  # (B,S,H) log-space
+    fg = jax.nn.log_sigmoid(
+        dense_apply(p["wf"], xi).astype(jnp.float32) + p["fb"]
+    )                                                                   # (B,S,H) <= 0
+
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    qq = q.reshape(b, nc, chunk, n_heads, hd)
+    kk = k.reshape(b, nc, chunk, n_heads, hd)
+    vv = v.reshape(b, nc, chunk, n_heads, hd)
+    ii = ig.reshape(b, nc, chunk, n_heads)
+    ff = fg.reshape(b, nc, chunk, n_heads)
+
+    def body(carry, xs):
+        C, n, m = carry              # (B,H,P,P), (B,H,P), (B,H)
+        qc, kc, vc, ic, fc = xs
+        fcum = jnp.cumsum(fc, axis=1)                            # (B,Q,H)
+        # log gate weight of key j for query i (i >= j):
+        #   log w_ij = fcum[i] - fcum[j] + i[j]
+        lw = (
+            fcum[:, :, None, :] - fcum[:, None, :, :] + ic[:, None, :, :]
+        )                                                        # (B,Qi,Qj,H)
+        causal = jnp.tril(jnp.ones((qc.shape[1], qc.shape[1]), bool))
+        lw = jnp.where(causal[None, :, :, None], lw, -jnp.inf)
+        # state contribution enters with log weight fcum[i] + m (carried max)
+        lstate = fcum + m[:, None, :]                            # (B,Qi,H)
+        m_new = jnp.maximum(lw.max(axis=2), lstate)              # (B,Qi,H)
+        w = jnp.exp(lw - m_new[:, :, None, :])                   # (B,Qi,Qj,H)
+        sw = jnp.exp(lstate - m_new)                             # (B,Qi,H)
+        scores = jnp.einsum("bqhp,bkhp->bqkh", qc.astype(jnp.float32),
+                            kc.astype(jnp.float32)) * w
+        num_intra = jnp.einsum("bqkh,bkhp->bqhp", scores, vc.astype(jnp.float32))
+        num_state = jnp.einsum(
+            "bqhp,bhpo->bqho", qc.astype(jnp.float32), C
+        ) * sw[..., None]
+        den_intra = scores.sum(axis=2)                           # (B,Q,H)
+        den_state = jnp.einsum("bqhp,bhp->bqh", qc.astype(jnp.float32), n) * sw
+        den = jnp.maximum(
+            jnp.abs(den_intra + den_state), jnp.exp(-m_new)
+        )                                                        # stabilizer
+        h = (num_intra + num_state) / den[..., None]
+        # chunk-final state update:
+        ftot = fcum[:, -1]                                       # (B,H)
+        m_run = jnp.maximum(ftot + m, (ftot[:, None, :] - fcum + ic).max(axis=1))
+        wk = jnp.exp(ftot[:, None, :] - fcum + ic - m_run[:, None, :])  # (B,Q,H)
+        C_new = jnp.exp(ftot + m - m_run)[..., None, None] * C + jnp.einsum(
+            "bqh,bqhp,bqho->bhpo", wk, kc.astype(jnp.float32), vc.astype(jnp.float32)
+        )
+        n_new = jnp.exp(ftot + m - m_run)[..., None] * n + jnp.einsum(
+            "bqh,bqhp->bhp", wk, kc.astype(jnp.float32)
+        )
+        return (C_new, n_new, m_run), h
+
+    C0 = jnp.zeros((b, n_heads, hd, hd), jnp.float32)
+    n0 = jnp.zeros((b, n_heads, hd), jnp.float32)
+    m0 = jnp.full((b, n_heads), -1e30, jnp.float32)
+    (_, _, _), hs = jax.lax.scan(
+        body,
+        (C0, n0, m0),
+        (
+            qq.transpose(1, 0, 2, 3, 4),
+            kk.transpose(1, 0, 2, 3, 4),
+            vv.transpose(1, 0, 2, 3, 4),
+            ii.transpose(1, 0, 2, 3),
+            ff.transpose(1, 0, 2, 3),
+        ),
+    )
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(b, s, d_inner).astype(x.dtype)
+    h = rmsnorm_apply(p["norm"], h) * jax.nn.silu(gate)
+    return dense_apply(p["down"], h)
+
+
+def mlstm_decode(
+    p: Params,
+    x: jax.Array,                  # (B, 1, d_model)
+    state: tuple[jax.Array, jax.Array, jax.Array],  # (C, n, m)
+    n_heads: int,
+    pf: float = 2.0,
+) -> tuple[jax.Array, tuple[jax.Array, jax.Array, jax.Array]]:
+    b, _, d_model = x.shape
+    d_inner = int(d_model * pf)
+    hd = d_inner // n_heads
+    C, n, m = state
+    up = dense_apply(p["up"], x)
+    xi, gate = up[..., :d_inner], up[..., d_inner:]
+    q = dense_apply(p["wq"], xi).reshape(b, n_heads, hd).astype(jnp.float32)
+    k = (dense_apply(p["wk"], xi).reshape(b, n_heads, hd) / math.sqrt(hd)).astype(jnp.float32)
+    v = dense_apply(p["wv"], xi).reshape(b, n_heads, hd).astype(jnp.float32)
+    ig = dense_apply(p["wi"], xi).reshape(b, n_heads).astype(jnp.float32)
+    fg = jax.nn.log_sigmoid(
+        dense_apply(p["wf"], xi).reshape(b, n_heads).astype(jnp.float32) + p["fb"]
+    )
+    m_new = jnp.maximum(fg + m, ig)
+    fw = jnp.exp(fg + m - m_new)
+    iw = jnp.exp(ig - m_new)
+    C_new = fw[..., None, None] * C + iw[..., None, None] * jnp.einsum(
+        "bhp,bho->bhpo", k, v
+    )
+    n_new = fw[..., None] * n + iw[..., None] * k
+    num = jnp.einsum("bhp,bhpo->bho", q, C_new)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhp,bhp->bh", q, n_new)), jnp.exp(-m_new))
+    h = (num / den[..., None]).reshape(b, 1, d_inner).astype(x.dtype)
+    h = rmsnorm_apply(p["norm"], h) * jax.nn.silu(gate)
+    return dense_apply(p["down"], h), (C_new, n_new, m_new)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_init(key, d_model: int, n_heads: int) -> Params:
+    hd = d_model // n_heads
+    keys = jax.random.split(key, 6)
+    scale = 1.0 / math.sqrt(d_model)
+    return {
+        # input projections for z, i, f, o gates
+        "wx": dense_init(keys[0], d_model, 4 * d_model),
+        # per-head recurrent mixing (H, P, 4P)
+        "r": jax.random.normal(keys[1], (n_heads, hd, 4 * hd)) * (1.0 / math.sqrt(hd)),
+        "fb": jnp.full((d_model,), 3.0, jnp.float32),
+        "norm": layernorm_init(d_model),
+        "ffn": {
+            "up": dense_init(keys[2], d_model, int(d_model * 4 / 3) * 2),
+            "down": dense_init(keys[3], int(d_model * 4 / 3), d_model,
+                               scale=1.0 / math.sqrt(d_model)),
+        },
+    }
+
+
+def _slstm_cell(p, n_heads, hd, xt, state):
+    """One sLSTM time step. xt: (B, 4*d). state: (c, n, h, m) each (B, d)."""
+    c, n, h, m = state
+    b = h.shape[0]
+    d = n_heads * hd
+    rh = jnp.einsum(
+        "bhp,hpq->bhq", h.reshape(b, n_heads, hd).astype(jnp.float32), p["r"]
+    ).reshape(b, 4 * d)
+    zi = (xt.astype(jnp.float32) + rh).reshape(b, 4, d)
+    zt = jnp.tanh(zi[:, 0])
+    it = zi[:, 1]                                        # log-space input gate
+    ft = jax.nn.log_sigmoid(zi[:, 2] + p["fb"])          # log-space forget
+    ot = jax.nn.sigmoid(zi[:, 3])
+    m_new = jnp.maximum(ft + m, it)
+    fw = jnp.exp(ft + m - m_new)
+    iw = jnp.exp(it - m_new)
+    c_new = fw * c + iw * zt
+    n_new = fw * n + iw
+    h_new = ot * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, h_new, m_new)
+
+
+def slstm_apply(p: Params, x: jax.Array, n_heads: int) -> jax.Array:
+    b, s, d = x.shape
+    hd = d // n_heads
+    xs = dense_apply(p["wx"], x)                         # (B, S, 4d)
+    state0 = tuple(jnp.zeros((b, d), jnp.float32) for _ in range(3)) + (
+        jnp.full((b, d), -1e30, jnp.float32),
+    )
+
+    def step(state, xt):
+        new = _slstm_cell(p, n_heads, hd, xt, state)
+        return new, new[2]
+
+    _, hs = jax.lax.scan(step, state0, xs.transpose(1, 0, 2))
+    h = hs.transpose(1, 0, 2).astype(x.dtype)            # (B, S, d)
+    h = layernorm_apply(p["norm"], h)
+    u = dense_apply(p["ffn"]["up"], h)
+    half = u.shape[-1] // 2
+    h = dense_apply(p["ffn"]["down"], jax.nn.gelu(u[..., :half]) * u[..., half:])
+    return h
+
+
+def slstm_decode(
+    p: Params, x: jax.Array, state, n_heads: int
+) -> tuple[jax.Array, tuple]:
+    b, _, d = x.shape
+    hd = d // n_heads
+    xt = dense_apply(p["wx"], x)[:, 0]
+    new = _slstm_cell(p, n_heads, hd, xt, state)
+    h = new[2][:, None, :].astype(x.dtype)
+    h = layernorm_apply(p["norm"], h)
+    u = dense_apply(p["ffn"]["up"], h)
+    half = u.shape[-1] // 2
+    h = dense_apply(p["ffn"]["down"], jax.nn.gelu(u[..., :half]) * u[..., half:])
+    return h, new

@@ -1,0 +1,75 @@
+"""Gradient compression with error feedback for cross-pod reduction.
+
+At multi-pod scale the gradient all-reduce crosses the (slow) inter-pod
+links; int8 quantization with per-tensor scales cuts that traffic 4x
+(fp32) / 2x (bf16).  Error feedback (Seide et al.; EF-SGD) accumulates the
+quantization residual locally and re-injects it next step, preserving
+convergence to first order.
+
+Usage in a train step::
+
+    comp_grads, new_err = compress_with_feedback(grads, err_state)
+    # ... all-reduce comp_grads.q (int8) + use decompress(...) ...
+
+The compressed pytree is what the runtime would hand to the pod-crossing
+all-reduce; intra-pod reduction stays full precision (hierarchical
+reduction — the same principle as the paper's two-level NIC/host split:
+cheap local aggregation, compressed long-haul).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class Compressed:
+    q: Any          # int8 pytree
+    scale: Any      # fp32 per-tensor scales
+
+
+def init_error_state(params: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+
+
+def _quantize(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compress_with_feedback(
+    grads: Any, err: Any
+) -> tuple[Compressed, Any]:
+    """Returns (compressed grads, new error state)."""
+    corrected = jax.tree.map(
+        lambda g, e: g.astype(jnp.float32) + e, grads, err
+    )
+    qs = jax.tree.map(_quantize, corrected)
+    q = jax.tree.map(lambda t: t[0], qs,
+                     is_leaf=lambda t: isinstance(t, tuple))
+    scale = jax.tree.map(lambda t: t[1], qs,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_err = jax.tree.map(
+        lambda c, qq, sc: c - qq.astype(jnp.float32) * sc,
+        corrected, q, scale,
+    )
+    return Compressed(q, scale), new_err
+
+
+def decompress(comp: Compressed) -> Any:
+    return jax.tree.map(
+        lambda q, s: q.astype(jnp.float32) * s, comp.q, comp.scale
+    )
+
+
+def compression_ratio(grads: Any) -> float:
+    """Bytes saved on the wire: fp32 -> int8 + one fp32 scalar/tensor."""
+    orig = sum(x.size * 4 for x in jax.tree.leaves(grads))
+    comp = sum(x.size + 4 for x in jax.tree.leaves(grads))
+    return orig / comp

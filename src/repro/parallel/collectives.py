@@ -1,0 +1,118 @@
+"""Chunk-pipelined collectives: the paper's per-packet ring, as training
+-plane primitives.
+
+The paper's central mechanism — forward each *packet* along a ring/tree
+instead of store-and-forwarding whole messages — is exactly the bandwidth-
+optimal formulation of the classic collectives.  This module provides
+shard_map-ready ring implementations with an explicit chunk knob:
+
+  * ring_all_gather      (k-1 rounds of one shard-chunk each)
+  * ring_reduce_scatter  (k-1 rounds, add-as-you-forward)
+  * ring_all_reduce      (reduce-scatter + all-gather, 2(k-1) rounds)
+
+These are drop-in replacements for the XLA-emitted collectives when a
+schedule must be controlled explicitly (e.g. to overlap per-chunk compute
+with transfers, or to micro-pipeline FSDP weight gathers against the
+matmuls that consume them).  Used by the checkpoint data plane and the
+perf experiments; correctness is property-tested on an 8-device host mesh.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def _ring_perm(n: int) -> list[tuple[int, int]]:
+    return [(i, (i + 1) % n) for i in range(n)]
+
+
+def ring_all_gather(x: jax.Array, axis_name: str, axis_size: int) -> jax.Array:
+    """All-gather via k-1 pipelined ring hops (bandwidth-optimal: each
+    device sends each of its bytes exactly k-1 times over one link).
+
+    x: local shard (s0, ...) -> (axis_size * s0, ...) identical everywhere,
+    ordered by source rank.
+    """
+    n = axis_size
+    idx = lax.axis_index(axis_name)
+    perm = _ring_perm(n)
+    out = jnp.zeros((n,) + x.shape, x.dtype)
+    out = lax.dynamic_update_index_in_dim(out, x, idx, axis=0)
+    cur = x
+
+    def body(r, carry):
+        out, cur = carry
+        recv = lax.ppermute(cur, axis_name, perm)
+        # after r+1 hops we hold the shard of rank (idx - r - 1) mod n
+        src = (idx - r - 1) % n
+        out = lax.dynamic_update_index_in_dim(out, recv, src, axis=0)
+        return out, recv
+
+    out, _ = lax.fori_loop(0, n - 1, body, (out, cur))
+    return out.reshape((n * x.shape[0],) + x.shape[1:])
+
+
+def ring_reduce_scatter(
+    x: jax.Array, axis_name: str, axis_size: int
+) -> jax.Array:
+    """Reduce-scatter (sum) via the add-as-you-forward ring.
+
+    x: full local array (n*s0, ...) -> this rank's reduced shard (s0, ...).
+    Round r: every rank sends the partial for shard (idx + n - r) and adds
+    its own contribution; after k-1 rounds rank i holds sum of shard i.
+    """
+    n = axis_size
+    idx = lax.axis_index(axis_name)
+    s0 = x.shape[0] // n
+    shards = x.reshape((n, s0) + x.shape[1:])
+    perm = _ring_perm(n)
+
+    # The partial for shard s starts at rank s+1 (its local contribution)
+    # and travels the ring adding each rank's contribution; after n-1 hops
+    # it lands, complete, on rank s.
+    first = lax.dynamic_index_in_dim(shards, (idx + n - 1) % n, axis=0,
+                                     keepdims=False)
+
+    def body2(r, acc):
+        recv = lax.ppermute(acc, axis_name, perm)
+        # after hop r+1, we hold the partial of shard (idx + n - 2 - r);
+        # add our local contribution and keep forwarding.
+        shard_id = (idx + n - 2 - r) % n
+        mine = lax.dynamic_index_in_dim(shards, shard_id, axis=0,
+                                        keepdims=False)
+        return recv + mine
+
+    acc = lax.fori_loop(0, n - 1, body2, first)
+    return acc
+
+
+def ring_all_reduce(x: jax.Array, axis_name: str, axis_size: int) -> jax.Array:
+    """Sum all-reduce = reduce-scatter + all-gather (2(k-1) chunk rounds).
+
+    Requires x.shape[0] % axis_size == 0.
+    """
+    shard = ring_reduce_scatter(x, axis_name, axis_size)
+    return ring_all_gather(shard, axis_name, axis_size)
+
+
+def make_ring_collective(fn, mesh, axis_name: str):
+    """Wrap one of the ring collectives as a jitted global-array op."""
+    from jax.sharding import PartitionSpec as P
+
+    size = mesh.shape[axis_name]
+    body = partial(fn, axis_name=axis_name, axis_size=size)
+    if fn is ring_all_gather:
+        in_spec, out_spec = P(axis_name), P()
+    elif fn is ring_reduce_scatter:
+        in_spec, out_spec = P(), P(axis_name)
+    else:
+        in_spec, out_spec = P(), P()
+
+    return jax.jit(
+        jax.shard_map(body, mesh=mesh, in_specs=in_spec, out_specs=out_spec,
+                      check_vma=False)
+    )

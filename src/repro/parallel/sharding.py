@@ -1,0 +1,223 @@
+"""Sharding rules: param/activation/cache PartitionSpecs for the 2D/3D mesh.
+
+Scheme (GSPMD; manual shard_map is used only by the policy collectives):
+  * data axes  ("data", or ("pod","data") multi-pod): batch dimension of
+    activations, FSDP dimension of parameters (ZeRO-3-style — XLA inserts
+    per-layer all-gathers inside the scan);
+  * model axis ("model"): tensor parallelism (attention heads / FFN hidden /
+    expert axis / vocab) and sequence parallelism for the residual stream
+    between blocks.
+
+Every rule degrades gracefully: if a dimension is not divisible by the
+mesh-axis size the rule falls back to an alternative dimension or to
+replication, so small archs (whisper-base, xlstm-125m) shard on a 16-wide
+model axis without special cases.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshAxes:
+    """Logical roles of the physical mesh axes."""
+
+    data: tuple[str, ...] = ("data",)      # FSDP/DP (may include "pod")
+    model: str = "model"
+
+    @staticmethod
+    def for_mesh(mesh: Mesh) -> "MeshAxes":
+        if "pod" in mesh.axis_names:
+            return MeshAxes(data=("pod", "data"))
+        return MeshAxes()
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _fits(dim: int, mesh: Mesh, axes) -> bool:
+    return dim % _axis_size(mesh, axes) == 0
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+# Rules: (substring, rank-agnostic spec builder).  ``d`` below is the spec
+# for the *trailing* dims; leading stacked-layer axes are padded with None.
+def _param_rule(path: str, shape: tuple[int, ...], mesh: Mesh, ax: MeshAxes):
+    data, model = ax.data, ax.model
+    nd = len(shape)
+
+    def pad(spec_tail: list) -> P:
+        return P(*([None] * (nd - len(spec_tail)) + spec_tail))
+
+    def try_spec(tail: list) -> P | None:
+        """tail entries: (axis_or_None); validate divisibility."""
+        for dim, a in zip(shape[nd - len(tail):], tail):
+            if a is None:
+                continue
+            if not _fits(dim, mesh, a):
+                return None
+        return pad(tail)
+
+    last2 = shape[-2:] if nd >= 2 else shape
+
+    # 1D params (norms, biases, A_log, ...): replicate.
+    if nd == 1:
+        return P(None)
+    if path.endswith("embed/table"):
+        return try_spec([model, data]) or try_spec([model, None]) or P(None)
+    if "unembed" in path:
+        return try_spec([data, model]) or try_spec([None, model]) or P(None)
+    if any(s in path for s in ("w_gate", "w_up", "w_down")) and nd >= 3:
+        # stacked experts (..., E, d, ff): EP over model, FSDP over d/ff
+        if "w_down" in path:
+            return (
+                try_spec([model, None, data])
+                or try_spec([model, None, None])
+                or P(None)
+            )
+        return (
+            try_spec([model, data, None])
+            or try_spec([model, None, None])
+            or P(None)
+        )
+    if "router" in path:
+        return try_spec([data, None]) or P(None)
+    # generic 2D matmul weights: prefer (in=FSDP, out=TP) for up-projections
+    # and (in=TP, out=FSDP) for down/output projections.
+    down_proj = any(
+        s in path for s in ("wo", "down", "out_proj", "w_uv/w", "w_uk/w")
+    )
+    if nd >= 2:
+        if down_proj:
+            return (
+                try_spec([model, data])
+                or try_spec([model, None])
+                or try_spec([None, data])
+                or try_spec([data, None])
+                or P(None)
+            )
+        return (
+            try_spec([data, model])
+            or try_spec([None, model])
+            or try_spec([data, None])
+            or try_spec([None, data])
+            or P(None)
+        )
+    return P(None)
+
+
+def param_specs(params: Any, mesh: Mesh) -> Any:
+    """PartitionSpec pytree matching ``params``."""
+    ax = MeshAxes.for_mesh(mesh)
+
+    def one(path, leaf):
+        return _param_rule(_path_str(path), leaf.shape, mesh, ax)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def param_shardings(params: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), param_specs(params, mesh)
+    )
+
+
+# -- activations / batches ----------------------------------------------------
+
+
+def batch_dim_spec(dim: int, mesh: Mesh, ax: MeshAxes):
+    """Spec entry for a batch dimension (None when not divisible)."""
+    return ax.data if _fits(dim, mesh, ax.data) else None
+
+
+def data_batch_specs(shapes: dict[str, tuple], mesh: Mesh) -> dict[str, P]:
+    """Specs for a train/serve input batch dict: batch over data, sequence
+    over model where divisible (inputs are token ids / embeddings)."""
+    ax = MeshAxes.for_mesh(mesh)
+    out = {}
+    for name, shp in shapes.items():
+        if len(shp) == 0:
+            out[name] = P()
+            continue
+        spec = [batch_dim_spec(shp[0], mesh, ax)]
+        for d in shp[1:]:
+            spec.append(None)
+        out[name] = P(*spec)
+    return out
+
+
+def residual_spec(batch: int, seq: int, mesh: Mesh) -> P:
+    """Residual-stream constraint: batch over data + sequence over model
+    (Megatron-style sequence parallelism between blocks)."""
+    ax = MeshAxes.for_mesh(mesh)
+    b = batch_dim_spec(batch, mesh, ax)
+    s = ax.model if seq % mesh.shape[ax.model] == 0 else None
+    return P(b, s, None)
+
+
+def moe_buffer_spec(n_experts: int, mesh: Mesh, batch: int = 0) -> P | None:
+    """(B, E, C, d) dispatch-buffer constraint: batch over data (per-row
+    dispatch), experts over model."""
+    ax = MeshAxes.for_mesh(mesh)
+    if n_experts % mesh.shape[ax.model] != 0:
+        return None
+    b = batch_dim_spec(batch, mesh, ax) if batch else None
+    return P(b, ax.model, None, None)
+
+
+def cache_specs(cache: Any, mesh: Mesh, max_len: int, batch: int) -> Any:
+    """KV/SSM cache specs: batch over data; heads (or head_dim) over model.
+
+    The batch dim is identified by value (first dim == ``batch``, searched
+    left-to-right so stacked-layer leading axes are never mistaken for it);
+    dims equal to ``max_len`` are never sharded (decode dynamic-update-
+    slices into them at ``cur_len``); the model axis takes the last
+    divisible remaining dim (kv-heads or head_dim).
+    """
+    ax = MeshAxes.for_mesh(mesh)
+    tp = mesh.shape[ax.model]
+
+    def one(leaf):
+        shp = leaf.shape
+        spec: list = [None] * len(shp)
+        bdim = None
+        for i, d in enumerate(shp):
+            if d == batch and d != max_len:
+                bdim = i
+                break
+        if bdim is not None and shp[bdim] % _axis_size(mesh, ax.data) == 0:
+            spec[bdim] = ax.data
+        # model dim: last divisible dim that is neither batch nor sequence
+        # (kv heads when they divide, else head_dim; measured better than
+        # replicating the cache, which re-gathers at every scan slice)
+        for i in range(len(shp) - 1, -1, -1):
+            if shp[i] == max_len or i == bdim:
+                continue
+            if spec[i] is None and shp[i] % tp == 0 and shp[i] > 1:
+                spec[i] = ax.model
+                break
+        return P(*spec)
+
+    return jax.tree.map(one, cache)

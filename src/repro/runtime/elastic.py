@@ -1,0 +1,52 @@
+"""Elastic scaling: re-mesh and re-shard live training state.
+
+On membership change (host loss or grow), the runtime builds a new mesh
+from the surviving devices and moves every state array onto it.  Because
+sharding rules are pure functions of (pytree path, shape, mesh), the new
+placement is recomputed — not stored — and ``jax.device_put`` performs the
+all-to-all reshard.  If devices died *with* data (no graceful drain), the
+state is first restored from the last policy-protected checkpoint
+(manager.py) — that is the paper's resiliency machinery closing the loop.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.parallel import sharding as sh
+
+
+def build_mesh(devices: list, model_parallel: int) -> Mesh:
+    """Largest (data, model) mesh from the device list (drops remainder)."""
+    n = len(devices)
+    model = model_parallel
+    while model > 1 and (n < model or n % model):
+        model //= 2
+    data = n // model
+    dev = np.asarray(devices[: data * model]).reshape(data, model)
+    return Mesh(dev, ("data", "model"))
+
+
+def reshard_state(state: Any, new_mesh: Mesh) -> Any:
+    """Move params/opt-state onto a new mesh under the standard rules."""
+    shardings = sh.param_shardings(state, new_mesh)
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, s), state, shardings
+    )
+
+
+def shrink(state: Any, mesh: Mesh, lost_devices: set) -> tuple[Any, Mesh]:
+    """Evict ``lost_devices`` and reshard the state onto the survivors."""
+    survivors = [d for d in mesh.devices.flat if d not in lost_devices]
+    model_par = mesh.shape.get("model", 1)
+    new_mesh = build_mesh(survivors, model_par)
+    return reshard_state(state, new_mesh), new_mesh
+
+
+def grow(state: Any, devices: list, model_parallel: int) -> tuple[Any, Mesh]:
+    new_mesh = build_mesh(devices, model_parallel)
+    return reshard_state(state, new_mesh), new_mesh

@@ -1,0 +1,17 @@
+"""SST-analog discrete-event simulation of the paper's evaluation.
+
+engine.py    event queue + resource primitives
+network.py   400 Gbit/s / MTU 2048 / 20 ns links, host-path constants
+pspin.py     PsPIN timing model (Fig. 7, Tables I/II)
+protocols.py one runner per protocol in Figs. 6/9/10/15
+"""
+
+from repro.sim.engine import Pool, SerialResource, Simulator
+from repro.sim.network import NetConfig, Network
+from repro.sim.pspin import (
+    HANDLER_NS,
+    PsPINConfig,
+    PsPINUnit,
+    handler_budget_ns,
+    hpus_for_line_rate,
+)

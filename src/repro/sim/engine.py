@@ -1,0 +1,92 @@
+"""Minimal discrete-event engine (the SST stand-in).
+
+The paper evaluates with cycle-accurate PsPIN simulation + SST for
+multi-node scenarios (section III-D).  We reproduce the multi-node layer as
+a classic event-driven simulator: a time-ordered heap of callbacks plus
+resource primitives (FIFO serial resources and pools) that the network and
+PsPIN models are built from.  All times are in nanoseconds (float).
+"""
+
+from __future__ import annotations
+
+import heapq
+import itertools
+from typing import Callable
+
+
+class Simulator:
+    def __init__(self):
+        self.now: float = 0.0
+        self._heap: list[tuple[float, int, Callable[[], None]]] = []
+        self._seq = itertools.count()
+        self.events_processed = 0
+
+    def at(self, time: float, fn: Callable[[], None]) -> None:
+        if time < self.now - 1e-9:
+            raise ValueError(f"scheduling into the past: {time} < {self.now}")
+        heapq.heappush(self._heap, (time, next(self._seq), fn))
+
+    def after(self, delay: float, fn: Callable[[], None]) -> None:
+        self.at(self.now + delay, fn)
+
+    def run(self, until: float | None = None, max_events: int = 50_000_000) -> None:
+        while self._heap:
+            t, _, fn = self._heap[0]
+            if until is not None and t > until:
+                break
+            heapq.heappop(self._heap)
+            self.now = t
+            fn()
+            self.events_processed += 1
+            if self.events_processed > max_events:
+                raise RuntimeError("event budget exceeded (livelock?)")
+
+
+class SerialResource:
+    """A resource that serves one request at a time, FIFO (a link port,
+    a DMA engine, a memcpy engine).  ``acquire`` returns the service
+    interval [start, end) and schedules ``on_done`` at its end."""
+
+    def __init__(self, sim: Simulator):
+        self.sim = sim
+        self.free_at: float = 0.0
+        self.busy_ns: float = 0.0
+
+    def acquire(
+        self, duration: float, on_done: Callable[[float, float], None] | None = None
+    ) -> tuple[float, float]:
+        start = max(self.sim.now, self.free_at)
+        end = start + duration
+        self.free_at = end
+        self.busy_ns += duration
+        if on_done is not None:
+            self.sim.at(end, lambda: on_done(start, end))
+        return start, end
+
+
+class Pool:
+    """A counted resource pool with FIFO waiting (the HPU pool)."""
+
+    def __init__(self, sim: Simulator, capacity: int):
+        self.sim = sim
+        self.capacity = capacity
+        self.in_use = 0
+        self._waiters: list[Callable[[], None]] = []
+        self.peak = 0
+
+    def acquire(self, fn: Callable[[], None]) -> None:
+        """Invoke ``fn`` as soon as a unit is available (caller must
+        eventually call :meth:`release`)."""
+        if self.in_use < self.capacity:
+            self.in_use += 1
+            self.peak = max(self.peak, self.in_use)
+            fn()
+        else:
+            self._waiters.append(fn)
+
+    def release(self) -> None:
+        if self._waiters:
+            fn = self._waiters.pop(0)
+            self.sim.after(0.0, fn)  # hand over without changing count
+        else:
+            self.in_use -= 1

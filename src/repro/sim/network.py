@@ -1,0 +1,140 @@
+"""Network + host model for the multi-node simulation.
+
+Matches the paper's SST configuration (section III-D): 400 Gbit/s links,
+MTU 2048 B, 20 ns link latency.  Store-and-forward at both endpoints: a
+packet occupies the sender's egress port for its serialization time,
+propagates, then occupies the receiver's ingress port — so endpoint
+contention (k replication streams converging on a parity node, a client
+injecting k RDMA-Flat copies) emerges mechanistically.
+
+Host-side constants model the CPU data path the paper compares against:
+PCIe round-trip latency (up to 400 ns, [25]), an RPC delivery overhead
+(NIC->host doorbell + cache miss + dispatch), a single-core memcpy
+bandwidth for RPC buffering, and a fixed CPU request-validation cost
+mirroring the 200-cycle NIC handler check.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+from repro.sim.engine import SerialResource, Simulator
+
+
+@dataclasses.dataclass
+class NetConfig:
+    bandwidth_gbps: float = 400.0
+    mtu: int = 2048
+    link_latency_ns: float = 20.0
+    rdma_header: int = 28
+    # Host-side (CPU data path) parameters:
+    pcie_latency_ns: float = 400.0       # round-trip, [25]
+    host_notify_ns: float = 250.0        # doorbell/poll + dispatch to handler
+    host_memcpy_GBps: float = 25.0       # single-stream buffering copy
+    cpu_validate_ns: float = 200.0       # request validation on CPU
+    nic_fixed_ns: float = 100.0          # plain-RDMA NIC processing / message
+    # Client-side costs (symmetric across all protocols): software post +
+    # doorbell + WQE/SGE fetch; CQE DMA + completion poll.  Anchors the raw
+    # write at ~1.8 us for 1 KiB (typical measured RDMA write latency,
+    # Kalia et al. [25]), which makes the paper's "sPIN <= 27% over raw for
+    # small writes" ratio meaningful.
+    client_post_ns: float = 1100.0
+    client_post_extra_ns: float = 150.0  # per additional batched WQE
+    client_complete_ns: float = 600.0    # CQE landing + poll at the client
+
+    @property
+    def bytes_per_ns(self) -> float:
+        return self.bandwidth_gbps / 8.0  # GB/s == bytes/ns
+
+    def ser_ns(self, nbytes: float) -> float:
+        return nbytes / self.bytes_per_ns
+
+    def memcpy_ns(self, nbytes: float) -> float:
+        return nbytes / self.host_memcpy_GBps
+
+    def packets_of(self, payload: int, header_extra: int = 0) -> list[int]:
+        """Wire sizes of the packets of a message with ``payload`` bytes.
+
+        ``header_extra``: DFS+WRH bytes on the first packet.
+        """
+        sizes = []
+        first_cap = self.mtu - self.rdma_header - header_extra
+        rest_cap = self.mtu - self.rdma_header
+        remaining = payload
+        take = min(remaining, first_cap)
+        sizes.append(self.rdma_header + header_extra + take)
+        remaining -= take
+        while remaining > 0:
+            take = min(remaining, rest_cap)
+            sizes.append(self.rdma_header + take)
+            remaining -= take
+        return sizes
+
+
+@dataclasses.dataclass
+class SimPacket:
+    src: int
+    dst: int
+    wire_size: int
+    meta: dict
+
+
+class SimNode:
+    """A network endpoint: egress/ingress ports + receive dispatch."""
+
+    def __init__(self, sim: Simulator, cfg: NetConfig, node_id: int):
+        self.sim = sim
+        self.cfg = cfg
+        self.node_id = node_id
+        self.egress = SerialResource(sim)
+        self.ingress = SerialResource(sim)
+        self.on_receive: Callable[[SimPacket], None] = lambda pkt: None
+        self.bytes_in = 0
+        self.bytes_out = 0
+
+
+class Network:
+    def __init__(self, sim: Simulator, cfg: NetConfig):
+        self.sim = sim
+        self.cfg = cfg
+        self.nodes: dict[int, SimNode] = {}
+
+    def node(self, node_id: int) -> SimNode:
+        if node_id not in self.nodes:
+            self.nodes[node_id] = SimNode(self.sim, self.cfg, node_id)
+        return self.nodes[node_id]
+
+    def send(
+        self,
+        src: int,
+        dst: int,
+        wire_size: int,
+        meta: dict | None = None,
+        on_sent: Callable[[], None] | None = None,
+    ) -> None:
+        """Transmit one packet src -> dst.
+
+        ``on_sent`` fires when the sender's egress finishes serializing
+        (the moment a NIC handler that blocks on egress can retire).
+        """
+        meta = meta or {}
+        s, d = self.node(src), self.node(dst)
+        ser = self.cfg.ser_ns(wire_size)
+        s.bytes_out += wire_size
+
+        def after_egress(start: float, end: float) -> None:
+            if on_sent is not None:
+                on_sent()
+            arrive = end + self.cfg.link_latency_ns
+
+            def at_ingress() -> None:
+                def delivered(_s: float, _e: float) -> None:
+                    d.bytes_in += wire_size
+                    d.on_receive(SimPacket(src, dst, wire_size, meta))
+
+                d.ingress.acquire(ser, delivered)
+
+            self.sim.at(arrive, at_ingress)
+
+        s.egress.acquire(ser, after_egress)

@@ -1,0 +1,881 @@
+"""Write / replication / erasure-coding protocol simulations.
+
+One runner per protocol the paper compares (sections IV-VI):
+
+  writes:      raw RDMA, RPC, RPC+RDMA, sPIN          (Fig. 6)
+  replication: RDMA-Flat, RDMA-HyperLoop, CPU-Ring,
+               CPU-PBT, sPIN-Ring, sPIN-PBT           (Fig. 9, 10)
+  erasure:     INEC-TriEC, sPIN-TriEC                 (Fig. 15)
+
+Node ids: 0 = client, 1..k = storage (data) nodes, k+1..k+m = parity nodes.
+All runners return latency in ns (client request -> client ack(s)) or a
+sustained rate in GB/s for the goodput/bandwidth scenarios.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.core.packets import ReplStrategy
+from repro.core.replication import children_of, optimal_chunk_count, tree_depth
+from repro.sim.engine import SerialResource, Simulator
+from repro.sim.network import NetConfig, Network
+from repro.sim.pspin import (
+    Emit,
+    HANDLER_NS,
+    HandlerSpec,
+    PsPINConfig,
+    PsPINUnit,
+    RequestGate,
+)
+
+CLIENT = 0
+ACK_WIRE = 28
+DFS_HEADER_BYTES = 64          # DFSHeader.packed_size()
+WRH_BASE_BYTES = 30
+REPLICA_COORD_BYTES = 12
+HYPERLOOP_CONFIG_WIRE = 156    # WQE descriptor write (HyperLoop [35])
+HYPERLOOP_TRIGGER_NS = 300.0   # pre-posted WQE trigger on CQ event
+INEC_PCIE_BW_GBPS = 12.0       # NIC <-> host staging bw (PCIe3 x16 practical)
+INEC_EC_ENGINE_GBPS = 50.0     # on-NIC EC engine throughput
+INEC_TRIGGER_NS = 2500.0       # per-stage triggered-op chain overhead
+                               # (WAIT WQE + doorbell + engine dispatch)
+INEC_WINDOW = 1                # outstanding blocks: triggered chains are
+                               # consumed per block and re-armed by the host
+EC_IPC = 0.62                  # calibrated so RS(3,2)/RS(6,3) PH times
+                               # match Table II (16.7 us / 23.0 us @ 2 KiB)
+
+
+def ec_data_ph_ns(payload: int, m: int) -> float:
+    """Data-node encode PH duration: (2m+1) instr/byte at IPC 0.62.
+
+    Anchored to Table II: RS(3,2) -> 16.5 us, RS(6,3) -> 23.1 us per 2 KiB
+    packet (measured: 16.681 / 23.018 us).
+    """
+    return payload * (2 * m + 1) / EC_IPC
+
+
+def ec_parity_ph_ns(payload: int) -> float:
+    """Parity-node XOR PH: ~1 instr/byte at the same IPC (assumption)."""
+    return payload / EC_IPC
+
+
+def write_header_extra(num_replicas: int = 0) -> int:
+    return DFS_HEADER_BYTES + WRH_BASE_BYTES + REPLICA_COORD_BYTES * num_replicas
+
+
+@dataclasses.dataclass
+class Result:
+    latency_ns: float
+    extra: dict = dataclasses.field(default_factory=dict)
+
+
+class _Completion:
+    """Counts acks at the client; records the completion time."""
+
+    def __init__(self, sim: Simulator, expected: int):
+        self.sim = sim
+        self.expected = expected
+        self.count = 0
+        self.done_at: float | None = None
+
+    def ack(self) -> None:
+        self.count += 1
+        if self.count == self.expected:
+            self.done_at = self.sim.now
+
+
+def _mk(cfg: NetConfig) -> tuple[Simulator, Network]:
+    sim = Simulator()
+    return sim, Network(sim, cfg)
+
+
+def _send_message(
+    net: Network,
+    src: int,
+    dst: int,
+    payload: int,
+    header_extra: int,
+    meta_fn,
+) -> int:
+    """Inject all packets of one message; returns packet count."""
+    sizes = net.cfg.packets_of(payload, header_extra)
+    n = len(sizes)
+    for i, w in enumerate(sizes):
+        net.send(src, dst, w, meta_fn(i, n, w))
+    return n
+
+
+# ---------------------------------------------------------------------------
+# Fig. 6 — single-write protocols.
+# ---------------------------------------------------------------------------
+
+
+def run_raw_write(size: int, cfg: NetConfig | None = None) -> Result:
+    """Speed-of-light: plain RDMA write, NIC acks after the last packet."""
+    cfg = cfg or NetConfig()
+    sim, net = _mk(cfg)
+    done = _Completion(sim, 1)
+    state = {"got": 0, "n": None}
+
+    def on_storage(pkt):
+        state["got"] += 1
+        if state["got"] == pkt.meta["n"]:
+            sim.after(cfg.nic_fixed_ns, lambda: net.send(1, CLIENT, ACK_WIRE, {"ack": 1}))
+
+    net.node(1).on_receive = on_storage
+    net.node(CLIENT).on_receive = lambda pkt: done.ack()
+    sim.at(
+        cfg.client_post_ns,
+        lambda: _send_message(net, CLIENT, 1, size, 0, lambda i, n, w: {"i": i, "n": n}),
+    )
+    sim.run()
+    assert done.done_at is not None
+    return Result(done.done_at + cfg.client_complete_ns)
+
+
+def run_spin_auth_write(
+    size: int,
+    cfg: NetConfig | None = None,
+    pcfg: PsPINConfig | None = None,
+) -> Result:
+    """sPIN write: per-packet handlers validate the request on the NIC."""
+    cfg = cfg or NetConfig()
+    sim, net = _mk(cfg)
+    pspin = PsPINUnit(sim, net, 1, pcfg)
+    done = _Completion(sim, 1)
+    hh, ph, ch = HANDLER_NS["auth"]
+    gate = RequestGate()
+    state = {"processed": 0, "n": None}
+
+    def packet_done():
+        state["processed"] += 1
+        if state["processed"] == state["n"]:
+            # CH: runs once all packets were processed; sends the response.
+            pspin.process(
+                ACK_WIRE,
+                HandlerSpec(ch, [Emit(CLIENT, ACK_WIRE, {"ack": 1})]),
+            )
+
+    def on_storage(pkt):
+        i, n = pkt.meta["i"], pkt.meta["n"]
+        state["n"] = n
+        if i == 0:
+            # HH is its own (short) handler invocation; it opens the gate so
+            # payload handlers — including the header packet's own PH — can
+            # proceed on other HPUs.
+            pspin.process(pkt.wire_size, HandlerSpec(hh, gate=gate))
+        spec = HandlerSpec(ph, on_complete=packet_done, gate=gate)
+        pspin.process_gated(pkt.wire_size, spec)
+
+    net.node(1).on_receive = on_storage
+    net.node(CLIENT).on_receive = lambda pkt: done.ack()
+    sim.at(
+        cfg.client_post_ns,
+        lambda: _send_message(
+            net, CLIENT, 1, size, write_header_extra(), lambda i, n, w: {"i": i, "n": n}
+        ),
+    )
+    sim.run()
+    assert done.done_at is not None
+    return Result(
+        done.done_at + cfg.client_complete_ns,
+        {"handler_ns": pspin.handler_time_ns, "handlers": pspin.handler_count},
+    )
+
+
+def run_rpc_write(size: int, cfg: NetConfig | None = None) -> Result:
+    """RPC: message lands in a host buffer; CPU validates, copies, acks."""
+    cfg = cfg or NetConfig()
+    sim, net = _mk(cfg)
+    done = _Completion(sim, 1)
+    state = {"got": 0}
+
+    def on_storage(pkt):
+        state["got"] += 1
+        if state["got"] == pkt.meta["n"]:
+            # last packet DMA'd to the host ring: notify, validate, copy, ack
+            delay = (
+                cfg.pcie_latency_ns / 2
+                + cfg.host_notify_ns
+                + cfg.cpu_validate_ns
+                + cfg.memcpy_ns(size)
+            )
+            sim.after(delay, lambda: net.send(1, CLIENT, ACK_WIRE, {"ack": 1}))
+
+    net.node(1).on_receive = on_storage
+    net.node(CLIENT).on_receive = lambda pkt: done.ack()
+    sim.at(
+        cfg.client_post_ns,
+        lambda: _send_message(
+            net, CLIENT, 1, size, write_header_extra(), lambda i, n, w: {"i": i, "n": n}
+        ),
+    )
+    sim.run()
+    return Result(done.done_at + cfg.client_complete_ns)
+
+
+def run_rpc_rdma_write(size: int, cfg: NetConfig | None = None) -> Result:
+    """RPC+RDMA: validate via RPC, then RDMA-read the payload (Fig. 5)."""
+    cfg = cfg or NetConfig()
+    sim, net = _mk(cfg)
+    done = _Completion(sim, 1)
+    state = {"got": 0, "phase": "req"}
+
+    def on_storage(pkt):
+        if pkt.meta.get("kind") == "req":
+            delay = cfg.pcie_latency_ns / 2 + cfg.host_notify_ns + cfg.cpu_validate_ns
+            # CPU posts an RDMA read towards the client.
+            sim.after(
+                delay, lambda: net.send(1, CLIENT, ACK_WIRE, {"kind": "read_req"})
+            )
+        else:
+            state["got"] += 1
+            if state["got"] == pkt.meta["n"]:
+                # completion event -> CPU -> ack (data already at target).
+                delay = cfg.pcie_latency_ns / 2 + cfg.host_notify_ns
+                sim.after(delay, lambda: net.send(1, CLIENT, ACK_WIRE, {"ack": 1}))
+
+    def on_client(pkt):
+        if pkt.meta.get("kind") == "read_req":
+            # client NIC serves the RDMA read: stream the data.
+            _send_message(
+                net, CLIENT, 1, size, 0, lambda i, n, w: {"kind": "data", "i": i, "n": n}
+            )
+        else:
+            done.ack()
+
+    net.node(1).on_receive = on_storage
+    net.node(CLIENT).on_receive = on_client
+    sim.at(
+        cfg.client_post_ns,
+        lambda: net.send(
+            CLIENT, 1, cfg.rdma_header + write_header_extra(), {"kind": "req"}
+        ),
+    )
+    sim.run()
+    return Result(done.done_at + cfg.client_complete_ns)
+
+
+# ---------------------------------------------------------------------------
+# Fig. 9 / 10 — replication strategies.
+# ---------------------------------------------------------------------------
+
+
+def run_rdma_flat(size: int, k: int, cfg: NetConfig | None = None) -> Result:
+    """Client issues k writes, one per replica (no validation)."""
+    cfg = cfg or NetConfig()
+    sim, net = _mk(cfg)
+    done = _Completion(sim, k)
+    got = [0] * (k + 1)
+
+    def mk_handler(node):
+        def on_storage(pkt):
+            got[node] += 1
+            if got[node] == pkt.meta["n"]:
+                sim.after(
+                    cfg.nic_fixed_ns,
+                    lambda: net.send(node, CLIENT, ACK_WIRE, {"ack": node}),
+                )
+
+        return on_storage
+
+    for node in range(1, k + 1):
+        net.node(node).on_receive = mk_handler(node)
+    net.node(CLIENT).on_receive = lambda pkt: done.ack()
+    for idx, node in enumerate(range(1, k + 1)):
+        t = cfg.client_post_ns + idx * cfg.client_post_extra_ns
+        sim.at(
+            t,
+            lambda node=node: _send_message(
+                net, CLIENT, node, size, 0, lambda i, n, w: {"i": i, "n": n}
+            ),
+        )
+    sim.run()
+    return Result(done.done_at + cfg.client_complete_ns)
+
+
+def _chunk_counts(size: int, chunk: int) -> list[int]:
+    n = -(-size // chunk)
+    sizes = [chunk] * n
+    sizes[-1] = size - chunk * (n - 1)
+    return sizes
+
+
+def run_chunked_tree(
+    size: int,
+    k: int,
+    strategy: ReplStrategy,
+    per_chunk_overhead_ns: float,
+    copy_GBps: float | None,
+    chunk: int | None = None,
+    cfg: NetConfig | None = None,
+    config_phase_writes: int = 0,
+) -> Result:
+    """Chunked store-and-forward broadcast over a ring/tree.
+
+    Models both CPU-based replication (per-chunk host notify + buffer copy)
+    and RDMA-HyperLoop (per-chunk WQE trigger, optional config phase).
+    Every node acks the client when it holds the full message.
+    """
+    cfg = cfg or NetConfig()
+    sim, net = _mk(cfg)
+    done = _Completion(sim, k)
+    if chunk is None:
+        nchunks = optimal_chunk_count(
+            size, k, strategy, cfg.bytes_per_ns * 1e9, per_chunk_overhead_ns * 1e-9
+        )
+        chunk = -(-size // nchunks)
+    chunks = _chunk_counts(size, chunk)
+    expected_bytes = size
+
+    class NodeState:
+        def __init__(self, rank):
+            self.rank = rank
+            self.received = 0
+            self.chunk_acc = 0
+            self.next_chunk = 0
+            self.acked = False
+
+    states = {r: NodeState(r) for r in range(k)}
+
+    def forward_chunk(rank: int, chunk_idx: int) -> None:
+        st = states[rank]
+        kids = children_of(rank, k, strategy)
+        for c in kids:
+            _send_message(
+                net,
+                rank + 1,
+                c + 1,
+                chunks[chunk_idx],
+                0,
+                lambda i, n, w: {"i": i, "n": n, "chunk": chunk_idx},
+            )
+
+    def mk_handler(rank):
+        st = states[rank]
+
+        def on_node(pkt):
+            payload = pkt.wire_size - cfg.rdma_header
+            if pkt.meta.get("hdr"):
+                payload -= pkt.meta["hdr"]
+            st.received += payload
+            st.chunk_acc += payload
+            while st.next_chunk < len(chunks) and st.chunk_acc >= chunks[st.next_chunk]:
+                st.chunk_acc -= chunks[st.next_chunk]
+                ci = st.next_chunk
+                st.next_chunk += 1
+                delay = per_chunk_overhead_ns
+                if copy_GBps is not None:
+                    delay += chunks[ci] / copy_GBps
+                sim.after(delay, lambda ci=ci: forward_chunk(rank, ci))
+            if st.received >= expected_bytes and not st.acked:
+                st.acked = True
+                sim.after(
+                    cfg.nic_fixed_ns,
+                    lambda: net.send(rank + 1, CLIENT, ACK_WIRE, {"ack": rank}),
+                )
+
+        return on_node
+
+    for r in range(k):
+        net.node(r + 1).on_receive = mk_handler(r)
+    net.node(CLIENT).on_receive = lambda pkt: done.ack()
+
+    def start_broadcast():
+        _send_message(net, CLIENT, 1, size, 0, lambda i, n, w: {"i": i, "n": n})
+
+    if config_phase_writes:
+        # HyperLoop: write WQE descriptors to each node, wait for acks,
+        # then post the actual data write.
+        acked = {"n": 0}
+        orig = net.node(CLIENT).on_receive
+
+        def on_client_cfg(pkt):
+            if pkt.meta.get("cfg_ack"):
+                acked["n"] += 1
+                if acked["n"] == config_phase_writes:
+                    net.node(CLIENT).on_receive = orig
+                    sim.after(
+                        cfg.client_complete_ns + cfg.client_post_ns, start_broadcast
+                    )
+            else:
+                orig(pkt)
+
+        net.node(CLIENT).on_receive = on_client_cfg
+        for r in range(config_phase_writes):
+            node = r + 1
+
+            def mk_cfg(node):
+                inner = net.node(node).on_receive
+
+                def h(pkt):
+                    if pkt.meta.get("cfg"):
+                        sim.after(
+                            cfg.nic_fixed_ns,
+                            lambda: net.send(node, CLIENT, ACK_WIRE, {"cfg_ack": 1}),
+                        )
+                    else:
+                        inner(pkt)
+
+                return h
+
+            net.node(node).on_receive = mk_cfg(node)
+            t = cfg.client_post_ns + r * cfg.client_post_extra_ns
+            sim.at(t, lambda node=node: net.send(CLIENT, node, HYPERLOOP_CONFIG_WIRE, {"cfg": 1}))
+    else:
+        sim.at(cfg.client_post_ns, start_broadcast)
+    sim.run()
+    return Result(done.done_at + cfg.client_complete_ns, {"chunk": chunk})
+
+
+def run_cpu_ring(size: int, k: int, cfg: NetConfig | None = None) -> Result:
+    # Per-chunk host notify + PCIe; data moves *to and from* host memory
+    # (two traversals => half the effective single-copy bandwidth) — the
+    # paper's stated penalty for CPU-based strategies.
+    cfg = cfg or NetConfig()
+    overhead = cfg.pcie_latency_ns / 2 + cfg.host_notify_ns
+    return run_chunked_tree(
+        size, k, ReplStrategy.RING, overhead, cfg.host_memcpy_GBps / 2, cfg=cfg
+    )
+
+
+def run_cpu_pbt(size: int, k: int, cfg: NetConfig | None = None) -> Result:
+    cfg = cfg or NetConfig()
+    overhead = cfg.pcie_latency_ns / 2 + cfg.host_notify_ns
+    return run_chunked_tree(
+        size, k, ReplStrategy.PBT, overhead, cfg.host_memcpy_GBps / 2, cfg=cfg
+    )
+
+
+def run_hyperloop(size: int, k: int, cfg: NetConfig | None = None) -> Result:
+    # HyperLoop's pre-posted WQE chains trigger on *message* completion
+    # (WAIT on CQE -> RDMA WRITE of the full received buffer), so the ring
+    # is store-and-forward at message granularity; the client pays an
+    # explicit configuration phase first (Fig. 8).
+    return run_chunked_tree(
+        size,
+        k,
+        ReplStrategy.RING,
+        HYPERLOOP_TRIGGER_NS,
+        None,
+        chunk=size,
+        cfg=cfg,
+        config_phase_writes=k,
+    )
+
+
+def run_spin_replication(
+    size: int,
+    k: int,
+    strategy: ReplStrategy,
+    cfg: NetConfig | None = None,
+    pcfg: PsPINConfig | None = None,
+    num_writes: int = 1,
+    measure: str = "latency",
+) -> Result:
+    """sPIN-Ring / sPIN-PBT: per-packet forwarding by NIC handlers.
+
+    ``num_writes > 1`` streams back-to-back writes for the goodput plot
+    (Fig. 9 right): returns ingested GB/s at the primary in ``extra``.
+    """
+    cfg = cfg or NetConfig()
+    sim, net = _mk(cfg)
+    key = "repl_ring" if strategy == ReplStrategy.RING else "repl_pbt"
+    hh, ph, ch = HANDLER_NS[key]
+    pspins = {r: PsPINUnit(sim, net, r + 1, pcfg) for r in range(k)}
+    total_acks = k * num_writes
+    done = _Completion(sim, total_acks)
+    header_extra = write_header_extra(k)
+
+    class Req:
+        def __init__(self, wid, rank):
+            self.gate = RequestGate()
+            self.processed = 0
+            self.n = None
+            self.ch_fired = False
+
+    reqs: dict[tuple[int, int], Req] = {}
+
+    def mk_handler(rank):
+        unit = pspins[rank]
+        kids = children_of(rank, k, strategy)
+
+        def on_node(pkt):
+            meta = pkt.meta
+            wid, i, n = meta["wid"], meta["i"], meta["n"]
+            req = reqs.setdefault((wid, rank), Req(wid, rank))
+            req.n = n
+            emits = [
+                Emit(c + 1, pkt.wire_size, dict(meta)) for c in kids
+            ]
+
+            def packet_done():
+                req.processed += 1
+                if req.processed == req.n and not req.ch_fired:
+                    req.ch_fired = True
+                    unit.process(
+                        ACK_WIRE,
+                        HandlerSpec(
+                            ch, [Emit(CLIENT, ACK_WIRE, {"ack": rank, "wid": wid})]
+                        ),
+                    )
+
+            if i == 0:
+                unit.process(pkt.wire_size, HandlerSpec(hh, gate=req.gate))
+            spec = HandlerSpec(ph, emits, on_complete=packet_done, gate=req.gate)
+            unit.process_gated(pkt.wire_size, spec)
+
+        return on_node
+
+    for r in range(k):
+        net.node(r + 1).on_receive = mk_handler(r)
+    net.node(CLIENT).on_receive = lambda pkt: done.ack()
+    for w in range(num_writes):
+        t = cfg.client_post_ns + w * cfg.client_post_extra_ns
+        sim.at(
+            t,
+            lambda w=w: _send_message(
+                net,
+                CLIENT,
+                1,
+                size,
+                header_extra,
+                lambda i, n, wsz, w=w: {"wid": w, "i": i, "n": n},
+            ),
+        )
+    sim.run()
+    assert done.done_at is not None
+    res = Result(done.done_at + cfg.client_complete_ns)
+    if num_writes > 1:
+        ingested = size * num_writes
+        res.extra["goodput_GBps"] = ingested / done.done_at
+        res.extra["hpu_peak"] = pspins[0].hpus.peak
+        res.extra["stall_ns"] = pspins[0].stall_time_ns
+        res.extra["mean_handler_ns"] = (
+            pspins[0].handler_time_ns / max(1, pspins[0].handler_count)
+        )
+    return res
+
+
+# ---------------------------------------------------------------------------
+# Fig. 15 — erasure coding: sPIN-TriEC vs INEC-TriEC.
+# ---------------------------------------------------------------------------
+
+
+def run_spin_triec(
+    block: int,
+    k: int,
+    m: int,
+    cfg: NetConfig | None = None,
+    pcfg: PsPINConfig | None = None,
+    num_blocks: int = 1,
+) -> Result:
+    """Streaming per-packet TriEC encode on the NIC (section VI-B)."""
+    cfg = cfg or NetConfig()
+    sim, net = _mk(cfg)
+    chunk = -(-block // k)
+    data_units = {j: PsPINUnit(sim, net, j + 1, pcfg) for j in range(k)}
+    par_units = {i: PsPINUnit(sim, net, k + 1 + i, pcfg) for i in range(m)}
+    done = _Completion(sim, (k + m) * num_blocks)
+    hh, _, ch = HANDLER_NS["ec_data_rs32"]
+    phh, _, pch = HANDLER_NS["ec_parity"]
+    header_extra = write_header_extra(m)
+
+    class DataReq:
+        def __init__(self):
+            self.gate = RequestGate()
+            self.processed = 0
+            self.n = None
+            self.done = False
+
+    class ParReq:
+        def __init__(self):
+            self.seq_counts: dict[int, int] = {}
+            self.seqs_done = 0
+            self.streams_done = 0
+            self.expected_seqs = None
+            self.acked = False
+
+    dreqs: dict[tuple[int, int], DataReq] = {}
+    preqs: dict[tuple[int, int], ParReq] = {}
+
+    def mk_data(j):
+        unit = data_units[j]
+
+        def on_node(pkt):
+            meta = pkt.meta
+            bid, i, n = meta["bid"], meta["i"], meta["n"]
+            req = dreqs.setdefault((bid, j), DataReq())
+            req.n = n
+            payload = pkt.wire_size - cfg.rdma_header - (header_extra if i == 0 else 0)
+            emits = [
+                Emit(
+                    k + 1 + pi,
+                    cfg.rdma_header + payload,
+                    {"bid": bid, "seq": i, "src": j, "n": n, "last": i == n - 1},
+                )
+                for pi in range(m)
+            ]
+            compute = ec_data_ph_ns(payload, m)
+
+            def packet_done():
+                req.processed += 1
+                if req.processed == req.n and not req.done:
+                    req.done = True
+                    unit.process(
+                        ACK_WIRE,
+                        HandlerSpec(
+                            ch, [Emit(CLIENT, ACK_WIRE, {"ack": ("d", j), "bid": bid})]
+                        ),
+                    )
+
+            if i == 0:
+                unit.process(pkt.wire_size, HandlerSpec(hh, gate=req.gate))
+            spec = HandlerSpec(compute, emits, on_complete=packet_done, gate=req.gate)
+            unit.process_gated(pkt.wire_size, spec)
+
+        return on_node
+
+    def mk_parity(pi):
+        unit = par_units[pi]
+
+        def on_node(pkt):
+            meta = pkt.meta
+            bid, seq = meta["bid"], meta["seq"]
+            req = preqs.setdefault((bid, pi), ParReq())
+            payload = pkt.wire_size - cfg.rdma_header
+
+            def packet_done():
+                c = req.seq_counts.get(seq, 0) + 1
+                req.seq_counts[seq] = c
+                if c == k:
+                    req.seqs_done += 1
+                if meta["last"]:
+                    req.streams_done += 1
+                    req.expected_seqs = meta["n"]
+                if (
+                    not req.acked
+                    and req.streams_done == k
+                    and req.expected_seqs is not None
+                    and req.seqs_done == req.expected_seqs
+                ):
+                    req.acked = True
+                    unit.process(
+                        ACK_WIRE,
+                        HandlerSpec(
+                            pch,
+                            [Emit(CLIENT, ACK_WIRE, {"ack": ("p", pi), "bid": bid})],
+                        ),
+                    )
+
+            compute = ec_parity_ph_ns(payload)
+            unit.process(pkt.wire_size, HandlerSpec(compute, on_complete=packet_done))
+
+        return on_node
+
+    for j in range(k):
+        net.node(j + 1).on_receive = mk_data(j)
+    for pi in range(m):
+        net.node(k + 1 + pi).on_receive = mk_parity(pi)
+    net.node(CLIENT).on_receive = lambda pkt: done.ack()
+
+    # Interleaved transmission (section VI-B1): packet i of every chunk
+    # before packet i+1 of any.
+    def inject():
+        for b in range(num_blocks):
+            streams = [
+                net.cfg.packets_of(chunk, header_extra) for _ in range(k)
+            ]
+            nmax = max(len(s) for s in streams)
+            for i in range(nmax):
+                for j in range(k):
+                    if i < len(streams[j]):
+                        net.send(
+                            CLIENT,
+                            j + 1,
+                            streams[j][i],
+                            {"bid": b, "i": i, "n": len(streams[j])},
+                        )
+
+    post = cfg.client_post_ns + (k - 1) * cfg.client_post_extra_ns
+    sim.at(post, inject)
+    sim.run()
+    assert done.done_at is not None
+    res = Result(done.done_at + cfg.client_complete_ns)
+    if num_blocks > 1:
+        res.extra["bandwidth_GBps"] = block * num_blocks / (done.done_at - post)
+    return res
+
+
+def run_inec_triec(
+    block: int,
+    k: int,
+    m: int,
+    cfg: NetConfig | None = None,
+    num_blocks: int = 1,
+) -> Result:
+    """INEC-TriEC: chunk-granularity NIC-offloaded EC with host staging.
+
+    Data path per chunk (Fig. 13 left): chunk lands in host memory (PCIe
+    flush), the on-NIC EC engine reads it back over PCIe, encodes, sends m
+    intermediate chunks; parity nodes stage k chunks in host memory, the
+    NIC XOR engine reads them back, writes the final parity.  No packet-
+    level overlap — per-chunk pipelining only (INEC's triggered ops).
+    """
+    cfg = cfg or NetConfig()
+    sim, net = _mk(cfg)
+    chunk = -(-block // k)
+    done = _Completion(sim, (k + m) * num_blocks)
+    # Per-node serial engines: PCIe staging + EC/XOR engine.  Each engine
+    # dispatch pays the triggered-op chain overhead (WAIT WQE + doorbell).
+    pcie = {n: SerialResource(sim) for n in range(1, k + m + 1)}
+    engine = {n: SerialResource(sim) for n in range(1, k + m + 1)}
+
+    got: dict[tuple[int, int], int] = {}
+    par_got: dict[tuple[int, int], int] = {}
+
+    def mk_data(j):
+        node = j + 1
+
+        def on_node(pkt):
+            meta = pkt.meta
+            bid = meta["bid"]
+            key = (bid, j)
+            got[key] = got.get(key, 0) + 1
+            if got[key] != meta["n"]:
+                return
+
+            # full chunk in NIC; flush to host memory:
+            def staged(_s, _e):
+                def read_back(_s2, _e2):
+                    def encoded(_s3, _e3):
+                        for pi in range(m):
+                            _send_message(
+                                net,
+                                node,
+                                k + 1 + pi,
+                                chunk,
+                                0,
+                                lambda i, n, w: {
+                                    "bid": bid,
+                                    "src": j,
+                                    "i": i,
+                                    "n": n,
+                                },
+                            )
+                        net.send(node, CLIENT, ACK_WIRE, {"ack": ("d", j), "bid": bid})
+
+                    engine[node].acquire(
+                        INEC_TRIGGER_NS + chunk / INEC_EC_ENGINE_GBPS, encoded
+                    )
+
+                pcie[node].acquire(
+                    cfg.pcie_latency_ns + chunk / INEC_PCIE_BW_GBPS, read_back
+                )
+
+            pcie[node].acquire(
+                cfg.pcie_latency_ns / 2 + chunk / INEC_PCIE_BW_GBPS, staged
+            )
+
+        return on_node
+
+    def mk_parity(pi):
+        node = k + 1 + pi
+
+        def on_node(pkt):
+            meta = pkt.meta
+            bid = meta["bid"]
+            key = (bid, pi)
+            par_got[key] = par_got.get(key, 0) + 1
+            # every intermediate chunk stages through host memory:
+            if par_got[key] != k * meta["n"]:
+                return
+
+            def staged(_s, _e):
+                def xored(_s2, _e2):
+                    def written(_s3, _e3):
+                        net.send(
+                            node, CLIENT, ACK_WIRE, {"ack": ("p", pi), "bid": bid}
+                        )
+
+                    pcie[node].acquire(
+                        cfg.pcie_latency_ns / 2 + chunk / INEC_PCIE_BW_GBPS, written
+                    )
+
+                engine[node].acquire(
+                    INEC_TRIGGER_NS + k * chunk / INEC_EC_ENGINE_GBPS, xored
+                )
+
+            # NIC XOR engine reads the k staged chunks back over PCIe.
+            pcie[node].acquire(
+                cfg.pcie_latency_ns + k * chunk / INEC_PCIE_BW_GBPS, staged
+            )
+
+        return on_node
+
+    for j in range(k):
+        net.node(j + 1).on_receive = mk_data(j)
+    for pi in range(m):
+        net.node(k + 1 + pi).on_receive = mk_parity(pi)
+
+    # Host-paced posting: at most INEC_WINDOW blocks outstanding (the INEC
+    # benchmark chains are posted per block by host software).
+    state = {"next": 0, "completed": {}}
+
+    def inject_block(b: int) -> None:
+        for j in range(k):
+            _send_message(
+                net,
+                CLIENT,
+                j + 1,
+                chunk,
+                0,
+                lambda i, n, w, b=b: {"bid": b, "i": i, "n": n},
+            )
+
+    def on_client(pkt):
+        done.ack()
+        bid = pkt.meta["bid"]
+        state["completed"][bid] = state["completed"].get(bid, 0) + 1
+        if state["completed"][bid] == k + m and state["next"] < num_blocks:
+            b = state["next"]
+            state["next"] += 1
+            sim.after(cfg.client_post_ns, lambda: inject_block(b))
+
+    net.node(CLIENT).on_receive = on_client
+    post = cfg.client_post_ns + (k - 1) * cfg.client_post_extra_ns
+
+    def start():
+        first = min(INEC_WINDOW, num_blocks)
+        state["next"] = first
+        for b in range(first):
+            inject_block(b)
+
+    sim.at(post, start)
+    sim.run()
+    assert done.done_at is not None
+    res = Result(done.done_at + cfg.client_complete_ns)
+    if num_blocks > 1:
+        res.extra["bandwidth_GBps"] = block * num_blocks / (done.done_at - post)
+    return res
+
+
+# ---------------------------------------------------------------------------
+# Goodput of non-replicated sPIN writes (Fig. 9 right baseline).
+# ---------------------------------------------------------------------------
+
+
+def run_spin_goodput(
+    size: int,
+    k: int,
+    strategy: ReplStrategy,
+    num_writes: int = 64,
+    cfg: NetConfig | None = None,
+    pcfg: PsPINConfig | None = None,
+) -> float:
+    res = run_spin_replication(
+        size, k, strategy, cfg=cfg, pcfg=pcfg, num_writes=num_writes
+    )
+    return res.extra["goodput_GBps"]

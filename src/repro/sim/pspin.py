@@ -1,0 +1,189 @@
+"""PsPIN timing model (paper section II-B1, Fig. 7, Tables I/II).
+
+PsPIN: 32 RISC-V HPUs @ 1 GHz in 4 clusters, hardware packet scheduler,
+DMA engines.  Per-packet path for a 2 KiB packet (Fig. 7): 32 cycles packet
+buffer copy, 2 cycles scheduling, 43 cycles L1 copy, 1 ns HPU scheduling —
+then the handler body runs on an HPU.
+
+Handler occupancy model: a handler holds its HPU for its compute time plus
+the time until the NIC egress port accepted all packets it emits.  This
+mechanistically reproduces the paper's Table I: ring PH (1 emit/packet)
+runs unstalled (~193 ns), PBT PH (2 emits/packet => 2x egress demand at
+line rate) stalls to ~2 us with IPC ~0.06, and EC payload handlers are
+compute-dominated (16.7/23 us) with no stall.  Handler *compute* times are
+the paper's measured durations (Tables I/II) — instruction counts over the
+non-contended IPC — so the simulation is anchored to the cycle-accurate
+PsPIN toolchain results.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+from repro.sim.engine import Pool, Simulator
+from repro.sim.network import Network
+
+
+@dataclasses.dataclass
+class PsPINConfig:
+    num_hpus: int = 32
+    ghz: float = 1.0
+    buffer_copy_cycles_2k: int = 32   # Fig. 7, scaled linearly with size
+    sched_cycles: int = 2
+    l1_copy_cycles_2k: int = 43
+    hpu_sched_ns: float = 1.0
+
+    def pipeline_ns(self, wire_size: int) -> float:
+        scale = wire_size / 2048.0
+        cycles = (
+            self.buffer_copy_cycles_2k * scale
+            + self.sched_cycles
+            + self.l1_copy_cycles_2k * scale
+        )
+        return cycles / self.ghz + self.hpu_sched_ns
+
+
+# Measured handler compute times in ns (paper Tables I and II, 1 GHz).
+HANDLER_NS = {
+    # policy                 HH     PH      CH
+    "auth":                 (211.0, 92.0, 107.0),
+    "repl_ring":            (212.0, 193.0, 146.0),
+    # PBT compute from instruction counts at the non-contended IPC (~0.6);
+    # the egress stall that produces the measured 2106/1487 ns is emergent.
+    "repl_pbt":             (214.0, 130.0 / 0.6, 82.0 / 0.6),
+    "ec_data_rs32":         (215.0, 16681.0, 105.0),
+    "ec_data_rs63":         (215.0, 23018.0, 82.0),
+    # Parity-node XOR aggregation: ~1 instr/byte at IPC 0.6 (assumption —
+    # the paper reports data-node handlers only; documented in DESIGN.md).
+    "ec_parity":            (215.0, 2048.0 / 0.6 / 1.0, 105.0),
+}
+
+
+@dataclasses.dataclass
+class Emit:
+    dst: int
+    wire_size: int
+    meta: dict
+
+
+@dataclasses.dataclass
+class HandlerSpec:
+    """What to run for one packet: compute + packets to emit."""
+
+    compute_ns: float
+    emits: list[Emit] = dataclasses.field(default_factory=list)
+    on_complete: Callable[[], None] | None = None
+    gate: "RequestGate | None" = None  # PHs wait for the request's HH
+
+
+class RequestGate:
+    """sPIN ordering: payload handlers run after the header handler
+    completed.  The HH's HandlerSpec opens the gate on completion."""
+
+    def __init__(self):
+        self.open_at: float | None = None
+        self._waiters: list[Callable[[], None]] = []
+
+    def open(self, sim: Simulator) -> None:
+        self.open_at = sim.now
+        for fn in self._waiters:
+            sim.after(0.0, fn)
+        self._waiters.clear()
+
+    def when_open(self, sim: Simulator, fn: Callable[[], None]) -> None:
+        if self.open_at is not None:
+            fn()
+        else:
+            self._waiters.append(fn)
+
+
+class PsPINUnit:
+    """The on-NIC accelerator of one storage node."""
+
+    def __init__(
+        self,
+        sim: Simulator,
+        network: Network,
+        node_id: int,
+        cfg: PsPINConfig | None = None,
+    ):
+        self.sim = sim
+        self.network = network
+        self.node_id = node_id
+        self.cfg = cfg or PsPINConfig()
+        self.hpus = Pool(sim, self.cfg.num_hpus)
+        self.handler_time_ns = 0.0
+        self.handler_count = 0
+        self.stall_time_ns = 0.0
+
+    def process(self, wire_size: int, spec: HandlerSpec) -> None:
+        """Run the packet pipeline + handler for one received packet."""
+        t_ready = self.sim.now + self.cfg.pipeline_ns(wire_size)
+
+        def start() -> None:
+            def acquired() -> None:
+                t0 = self.sim.now
+                t_compute_done = t0 + spec.compute_ns
+
+                def finish() -> None:
+                    self.handler_time_ns += self.sim.now - t0
+                    self.stall_time_ns += self.sim.now - t_compute_done
+                    self.handler_count += 1
+                    self.hpus.release()
+                    if spec.gate is not None and spec.gate.open_at is None:
+                        spec.gate.open(self.sim)
+                    if spec.on_complete is not None:
+                        spec.on_complete()
+
+                def after_compute() -> None:
+                    if not spec.emits:
+                        finish()
+                        return
+                    pending = len(spec.emits)
+
+                    def one_sent() -> None:
+                        nonlocal pending
+                        pending -= 1
+                        if pending == 0:
+                            finish()
+
+                    for e in spec.emits:
+                        self.network.send(
+                            self.node_id, e.dst, e.wire_size, e.meta, on_sent=one_sent
+                        )
+
+                self.sim.at(t_compute_done, after_compute)
+
+            self.hpus.acquire(acquired)
+
+        self.sim.at(t_ready, start)
+
+    def process_gated(
+        self, wire_size: int, spec: HandlerSpec
+    ) -> None:
+        """Like :meth:`process` but waits for the request gate first."""
+        if spec.gate is None:
+            self.process(wire_size, spec)
+            return
+        gate = spec.gate
+
+        def go() -> None:
+            self.process(wire_size, spec)
+
+        gate.when_open(self.sim, go)
+
+
+def hpus_for_line_rate(
+    handler_ns: float, rate_gbps: float, mtu: int = 2048
+) -> int:
+    """Fig. 16 (right): HPUs needed so ``handler_ns`` handlers sustain
+    ``rate_gbps`` with ``mtu``-byte packets."""
+    packet_ns = mtu * 8.0 / rate_gbps
+    return max(1, int(-(-handler_ns // packet_ns)))
+
+
+def handler_budget_ns(rate_gbps: float, num_hpus: int = 32, mtu: int = 2048) -> float:
+    """Fig. 11/16 horizontal lines: per-handler time budget at line rate."""
+    packet_ns = mtu * 8.0 / rate_gbps
+    return packet_ns * num_hpus

@@ -1,0 +1,88 @@
+"""Capability authentication: issue/verify, forgery rejection, np/jnp parity."""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.auth import (
+    CAP_WORDS,
+    Capability,
+    CapabilityAuthority,
+    Rights,
+    sponge_mac,
+)
+
+AUTH = CapabilityAuthority(b"0123456789abcdef")
+
+
+def _cap(**kw):
+    base = dict(client_id=7, object_id=42, offset=0, length=1 << 20,
+                rights=int(Rights.READ | Rights.WRITE), expiry=2_000_000_000)
+    base.update(kw)
+    return AUTH.issue(**base)
+
+
+def test_verify_happy_path():
+    cap = _cap()
+    assert AUTH.verify(cap, now=1_700_000_000, op_rights=Rights.WRITE,
+                       offset=100, length=50, client_id=7)
+
+
+def test_verify_rejects_expiry_rights_extent_identity():
+    cap = _cap()
+    assert not AUTH.verify(cap, now=2_100_000_000, op_rights=Rights.WRITE)
+    assert not AUTH.verify(cap, now=1, op_rights=Rights.DELETE)
+    assert not AUTH.verify(cap, now=1, op_rights=Rights.READ,
+                           offset=1 << 20, length=1)
+    assert not AUTH.verify(cap, now=1, op_rights=Rights.READ, client_id=8)
+
+
+@given(st.integers(min_value=0, max_value=CAP_WORDS - 1),
+       st.integers(min_value=0, max_value=31))
+@settings(max_examples=50, deadline=None)
+def test_any_field_bitflip_is_forgery(word, bit):
+    cap = _cap()
+    words = cap.words().copy()
+    words[word] ^= np.uint32(1 << bit)
+    forged_tag = sponge_mac(words, AUTH.key)
+    assert (int(forged_tag[0]), int(forged_tag[1])) != cap.tag
+
+
+def test_wrong_key_rejected():
+    cap = _cap()
+    other = CapabilityAuthority(b"fedcba9876543210")
+    assert not other.verify(cap, now=1, op_rights=Rights.READ)
+
+
+def test_pack_unpack_roundtrip():
+    cap = _cap(nonce=12345)
+    assert Capability.unpack(cap.pack()) == cap
+    assert len(cap.pack()) == Capability.PACKED_SIZE == 48
+
+
+@given(st.lists(st.integers(min_value=0, max_value=2**32 - 1),
+                min_size=CAP_WORDS, max_size=CAP_WORDS))
+@settings(max_examples=25, deadline=None)
+def test_np_jnp_mac_parity(words):
+    w = np.array(words, dtype=np.uint32)
+    t_np = sponge_mac(w, AUTH.key, xp=np)
+    t_j = np.asarray(sponge_mac(jnp.asarray(w), jnp.asarray(AUTH.key), xp=jnp))
+    assert np.array_equal(t_np, t_j)
+
+
+def test_bulk_verify_kernel():
+    from repro.kernels import ops
+
+    caps = [_cap(client_id=i, nonce=i) for i in range(16)]
+    w = np.stack([c.words() for c in caps])
+    t = np.array([c.tag for c in caps], dtype=np.uint32)
+    ok = np.asarray(ops.bulk_verify(jnp.asarray(w), jnp.asarray(t),
+                                    jnp.asarray(AUTH.key)))
+    assert ok.all()
+    t[3, 1] ^= 1
+    ok2 = np.asarray(ops.bulk_verify(jnp.asarray(w), jnp.asarray(t),
+                                     jnp.asarray(AUTH.key)))
+    assert not ok2[3] and ok2.sum() == 15

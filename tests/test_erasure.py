@@ -1,0 +1,95 @@
+"""RS(k, m) coding invariants: MDS recovery, streaming == whole-stripe."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.erasure import (
+    AccumulatorPool,
+    RSCode,
+    join_stripe,
+    split_stripe,
+    stream_encode,
+)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    st.integers(min_value=1, max_value=8),      # k
+    st.integers(min_value=0, max_value=4),      # m
+    st.integers(min_value=1, max_value=400),    # payload length
+    st.randoms(use_true_random=False),
+)
+def test_any_m_losses_recover(k, m, length, rnd):
+    code = RSCode(k, m)
+    rng = np.random.default_rng(rnd.randint(0, 2**31))
+    data = rng.integers(0, 256, (k, length), dtype=np.uint8)
+    parity = code.encode(data)
+    shards = list(data) + list(parity)
+    lost = rnd.sample(range(k + m), m)
+    degraded = [None if i in lost else shards[i] for i in range(k + m)]
+    assert np.array_equal(code.decode(degraded), data)
+
+
+def test_more_than_m_losses_fail():
+    code = RSCode(4, 2)
+    data = np.arange(4 * 64, dtype=np.uint8).reshape(4, 64)
+    parity = code.encode(data)
+    shards = [None, None, None, data[3], parity[0], parity[1]]
+    with pytest.raises(ValueError, match="unrecoverable"):
+        code.decode(shards)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    st.sampled_from([(2, 1), (3, 2), (6, 3)]),
+    st.integers(min_value=1, max_value=600),
+    st.sampled_from([32, 64, 129]),
+    st.booleans(),
+)
+def test_stream_encode_matches_batch(km, length, packet, interleaved):
+    k, m = km
+    code = RSCode(k, m)
+    rng = np.random.default_rng(length * packet)
+    data = rng.integers(0, 256, (k, length), dtype=np.uint8)
+    got = stream_encode(
+        code, data, packet_payload=packet, interleaved=interleaved,
+        pool_size=512,
+    )
+    assert np.array_equal(got, code.encode(data))
+
+
+def test_reconstruct_single_shard():
+    code = RSCode(5, 3)
+    rng = np.random.default_rng(3)
+    data = rng.integers(0, 256, (5, 96), dtype=np.uint8)
+    parity = code.encode(data)
+    shards = list(data) + list(parity)
+    for idx in range(8):
+        degraded = [s if i != idx else None for i, s in enumerate(shards)]
+        rebuilt = code.reconstruct_shard(degraded, idx)
+        assert np.array_equal(rebuilt, shards[idx]), idx
+
+
+@given(st.binary(min_size=0, max_size=2000), st.integers(min_value=1, max_value=7))
+@settings(max_examples=30, deadline=None)
+def test_split_join_roundtrip(blob, k):
+    chunks = split_stripe(blob, k)
+    assert chunks.shape[0] == k and chunks.shape[1] % 32 == 0
+    assert join_stripe(chunks, len(blob)) == blob
+
+
+def test_accumulator_pool_exhaustion_and_reuse():
+    pool = AccumulatorPool(2, payload_size=16)
+    a = pool.allocate()
+    b = pool.allocate()
+    assert pool.allocate() is None          # exhausted -> CPU fallback path
+    pool.xor_into(a, np.full(16, 0xAA, np.uint8))
+    pool.xor_into(a, np.full(16, 0x0F, np.uint8))
+    out = pool.release(a)
+    assert (out == (0xAA ^ 0x0F)).all()
+    c = pool.allocate()                     # freed slot is reusable and zeroed
+    assert c is not None
+    assert (pool.release(c) == 0).all()
+    assert pool.high_watermark == 2

@@ -1,0 +1,81 @@
+"""GF(2^8) field properties (hypothesis) + bit-matrix/bit-plane identities."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import gf256 as g
+
+bytes_st = st.integers(min_value=0, max_value=255)
+
+
+@given(bytes_st, bytes_st, bytes_st)
+def test_field_axioms(a, b, c):
+    # commutativity, associativity, distributivity over XOR (field addition)
+    assert g.gf_mul(a, b) == g.gf_mul(b, a)
+    assert g.gf_mul(a, g.gf_mul(b, c)) == g.gf_mul(g.gf_mul(a, b), c)
+    assert g.gf_mul(a, b ^ c) == g.gf_mul(a, b) ^ g.gf_mul(a, c)
+    assert g.gf_mul(a, 1) == a
+    assert g.gf_mul(a, 0) == 0
+
+
+@given(st.integers(min_value=1, max_value=255))
+def test_inverse(a):
+    assert g.gf_mul(a, g.gf_inv(a)) == 1
+    assert g.gf_div(a, a) == 1
+
+
+@given(bytes_st, st.integers(min_value=0, max_value=20))
+def test_pow(a, n):
+    acc = 1
+    for _ in range(n):
+        acc = g.gf_mul(acc, a)
+    assert g.gf_pow(a, n) == acc
+
+
+@given(bytes_st, bytes_st)
+def test_bitmatrix_multiply(coef, x):
+    m = g.mul_bitmatrix(coef)
+    bits = np.array([(x >> j) & 1 for j in range(8)], dtype=np.uint8)
+    got = (m @ bits) % 2
+    want = np.array([(g.gf_mul(coef, x) >> j) & 1 for j in range(8)])
+    assert np.array_equal(got, want)
+
+
+@given(st.binary(min_size=32, max_size=512).filter(lambda b: len(b) % 32 == 0))
+def test_bitplane_roundtrip(data):
+    arr = np.frombuffer(data, dtype=np.uint8)
+    assert np.array_equal(g.bitplanes_to_bytes(g.bytes_to_bitplanes(arr)), arr)
+
+
+def test_full_mul_table_matches_scalar():
+    t = g.full_mul_table()
+    rng = np.random.default_rng(0)
+    for a, b in rng.integers(0, 256, (100, 2)):
+        assert t[a, b] == g.gf_mul(int(a), int(b))
+
+
+@pytest.mark.parametrize("kind", ["cauchy", "vandermonde"])
+@pytest.mark.parametrize("k,m", [(2, 1), (3, 2), (4, 3), (6, 3)])
+def test_generator_is_mds(kind, k, m):
+    """Every k x k submatrix of [I; P] invertible => any m losses decode."""
+    import itertools
+
+    gm = g.generator_matrix(k, m, kind)
+    for rows in itertools.combinations(range(k + m), k):
+        g.gf_mat_inv(gm[list(rows)])  # raises LinAlgError if singular
+
+
+def test_matmul_inverse_roundtrip():
+    rng = np.random.default_rng(1)
+    for n in (2, 4, 6):
+        while True:
+            a = rng.integers(0, 256, (n, n), dtype=np.uint8)
+            try:
+                inv = g.gf_mat_inv(a)
+                break
+            except np.linalg.LinAlgError:
+                continue
+        prod = g.gf_matmul(a, inv)
+        assert np.array_equal(prod, np.eye(n, dtype=np.uint8))

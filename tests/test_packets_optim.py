@@ -1,0 +1,104 @@
+"""Wire-format framing + optimizer math."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.auth import CapabilityAuthority, Rights
+from repro.core.packets import (
+    DEFAULT_MTU,
+    DFSHeader,
+    OpType,
+    ReplicaCoord,
+    WriteRequestHeader,
+    num_packets,
+    packetize_write,
+)
+from repro.optim.adamw import AdamWConfig, adamw_update, init_opt_state
+from repro.optim.schedule import warmup_cosine
+
+AUTH = CapabilityAuthority(b"0123456789abcdef")
+CAP = AUTH.issue(1, 1, 0, 1 << 30, Rights.WRITE, 2**31)
+
+
+@given(st.integers(min_value=0, max_value=100_000))
+@settings(max_examples=40, deadline=None)
+def test_packetize_reassembles(size):
+    data = np.arange(size, dtype=np.uint8)
+    dfs = DFSHeader(OpType.WRITE, 9, 1, CAP)
+    wrh = WriteRequestHeader(addr=0, size=size,
+                             replicas=(ReplicaCoord(1, 0), ReplicaCoord(2, 0)))
+    pkts = packetize_write(dfs, wrh, data)
+    assert pkts[0].is_header and pkts[-1].is_completion
+    assert all(p.wire_size <= DEFAULT_MTU for p in pkts)
+    assert len(pkts) == num_packets(size, wrh.packed_size())
+    out = np.zeros(size, np.uint8)
+    for p in pkts:
+        out[p.payload_offset : p.payload_offset + p.payload_size] = p.payload
+    assert np.array_equal(out, data)
+    # only the first packet carries DFS headers
+    assert pkts[0].dfs is not None and all(p.dfs is None for p in pkts[1:])
+
+
+def test_wrh_pack_unpack():
+    wrh = WriteRequestHeader(
+        addr=123, size=456, ec_k=3, ec_m=2, ec_index=1, seq=77,
+        replicas=(ReplicaCoord(5, 1000), ReplicaCoord(6, 2000)),
+    )
+    back = WriteRequestHeader.unpack(wrh.pack())
+    assert back == wrh
+
+
+def test_adamw_reduces_quadratic():
+    params = {"w": jnp.array([3.0, -2.0, 1.0])}
+    opt = init_opt_state(params)
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0)
+    for _ in range(150):
+        grads = {"w": 2 * params["w"]}
+        params, opt, _ = adamw_update(params, grads, opt, cfg)
+    assert float(jnp.abs(params["w"]).max()) < 0.05
+    assert int(opt["step"]) == 150
+
+
+def test_adamw_grad_clip_and_metrics():
+    params = {"w": jnp.ones(4)}
+    opt = init_opt_state(params)
+    cfg = AdamWConfig(lr=0.0, grad_clip=1.0)
+    _, _, m = adamw_update(params, {"w": jnp.full(4, 100.0)}, opt, cfg)
+    assert float(m["grad_norm"]) == 200.0
+
+
+def test_warmup_cosine_shape():
+    assert float(warmup_cosine(0, warmup=10, total=100)) == 0.0
+    assert float(warmup_cosine(10, warmup=10, total=100)) == 1.0
+    assert float(warmup_cosine(100, warmup=10, total=100, floor=0.1)) == \
+        jnp.asarray(0.1)
+    mid = float(warmup_cosine(55, warmup=10, total=100))
+    assert 0.1 < mid < 1.0
+
+
+def test_gradient_compression_error_feedback():
+    """int8+EF: single-step error bounded by quantization step; error
+    feedback drives the *accumulated* applied gradient toward the truth."""
+    from repro.optim.compression import (
+        compress_with_feedback, compression_ratio, decompress,
+        init_error_state,
+    )
+
+    rng = np.random.default_rng(0)
+    g = {"w": jnp.asarray(rng.standard_normal((64, 32)) * 0.01),
+         "b": jnp.asarray(rng.standard_normal(32) * 0.001)}
+    err = init_error_state(g)
+    # constant gradient repeated: applied sum must converge to n*g
+    applied = jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), g)
+    n = 20
+    for _ in range(n):
+        comp, err = compress_with_feedback(g, err)
+        applied = jax.tree.map(lambda a, d: a + d, applied, decompress(comp))
+    for k in g:
+        rel = float(jnp.max(jnp.abs(applied[k] / n - g[k])) /
+                    jnp.max(jnp.abs(g[k])))
+        assert rel < 0.02, (k, rel)
+    assert compression_ratio(g) > 3.9

@@ -1,0 +1,91 @@
+"""Roofline HLO analyzer: trip counts, dot FLOPs, collective accounting."""
+
+import textwrap
+
+from repro.launch.roofline import HW, Roofline, analyze_hlo
+
+HLO = textwrap.dedent(
+    """
+    HloModule test
+
+    %body (p: (s32[], f32[4,32])) -> (s32[], f32[4,32]) {
+      %p = (s32[], f32[4,32]) parameter(0)
+      %i = s32[] get-tuple-element(%p), index=0
+      %x = f32[4,32]{1,0} get-tuple-element(%p), index=1
+      %w = f32[32,32]{1,0} constant({...})
+      %ag = f32[4,64]{1,0} all-gather(%x), channel_id=1, dimensions={1}
+      %dot = f32[4,32]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %one = s32[] constant(1)
+      %i2 = s32[] add(%i, %one)
+      ROOT %t = (s32[], f32[4,32]) tuple(%i2, %dot)
+    }
+
+    %cond (p2: (s32[], f32[4,32])) -> pred[] {
+      %p2 = (s32[], f32[4,32]) parameter(0)
+      %i3 = s32[] get-tuple-element(%p2), index=0
+      %n = s32[] constant(5)
+      ROOT %lt = pred[] compare(%i3, %n), direction=LT
+    }
+
+    ENTRY %main (a: f32[4,32]) -> f32[4,32] {
+      %a = f32[4,32]{1,0} parameter(0)
+      %zero = s32[] constant(0)
+      %init = (s32[], f32[4,32]) tuple(%zero, %a)
+      %w1 = (s32[], f32[4,32]) while(%init), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"5"}}
+      %out = f32[4,32]{1,0} get-tuple-element(%w1), index=1
+      %ar = f32[4,32]{1,0} all-reduce(%out), channel_id=2, to_apply=%cond
+      ROOT %r = f32[4,32]{1,0} copy(%ar)
+    }
+    """
+)
+
+
+def test_while_trip_count_and_dot_flops():
+    ana = analyze_hlo(HLO)
+    # dot: 2 * (4*32 out) * 32 contraction = 8192 flops x 5 iterations
+    assert ana.flops_per_chip == 2 * 4 * 32 * 32 * 5
+    assert ana.max_loop_mult == 5
+
+
+def test_collective_accounting():
+    ana = analyze_hlo(HLO)
+    # all-gather inside the loop: 4*64*4B = 1024 B x 5; all-reduce outside:
+    # 4*32*4 = 512 B x2 (RS+AG phases)
+    assert ana.collectives["all-gather"] == 1024 * 5
+    assert ana.collectives["all-reduce"] == 512 * 2
+    assert ana.collective_counts["all-gather"] == 5
+    assert ana.collective_counts["all-reduce"] == 1
+
+
+def test_roofline_terms_and_bottleneck():
+    r = Roofline(
+        flops_per_chip=HW["peak_flops"],       # 1 s of compute
+        hbm_bytes=HW["hbm_Bps"] / 2,           # 0.5 s of memory
+        collective_bytes=HW["ici_link_Bps"] * 2,  # 2 s of collectives
+        chips=256,
+        model_flops=HW["peak_flops"] * 256 / 2,  # 0.5 s ideal
+        collectives={},
+    )
+    assert r.bottleneck == "collective"
+    assert abs(r.t_compute - 1.0) < 1e-9
+    assert abs(r.t_collective - 2.0) < 1e-9
+    assert abs(r.roofline_fraction - 0.25) < 1e-9
+    assert abs(r.useful_flop_ratio - 0.5) < 1e-9
+
+
+def test_dus_counted_at_update_bytes():
+    hlo = textwrap.dedent(
+        """
+        HloModule dus
+
+        ENTRY %main (a: f32[1024,1024], u: f32[1,1024]) -> f32[1024,1024] {
+          %a = f32[1024,1024]{1,0} parameter(0)
+          %u = f32[1,1024]{1,0} parameter(1)
+          %z = s32[] constant(0)
+          ROOT %d = f32[1024,1024]{1,0} dynamic-update-slice(%a, %u, %z, %z)
+        }
+        """
+    )
+    ana = analyze_hlo(hlo)
+    # 2x the 4 KiB update, NOT 2x the 4 MiB buffer (in-place aliasing)
+    assert ana.hbm_bytes_per_chip == 2 * 1024 * 4

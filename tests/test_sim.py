@@ -1,0 +1,134 @@
+"""Simulator validation against the paper's quantitative claims.
+
+Acceptance bands are deliberate: the simulator is calibrated to the
+paper's measured handler costs (Tables I/II) and link parameters, but CPU/
+RDMA-side constants are modeled — we assert each headline *claim* holds
+with margin rather than exact figures.
+"""
+
+import pytest
+
+from repro.core.packets import ReplStrategy
+from repro.core.state import (
+    WRITE_DESCRIPTOR_BYTES,
+    descriptor_memory_budget,
+    littles_law_concurrent_writes,
+    max_concurrent_writes,
+)
+from repro.sim import protocols as P
+from repro.sim.network import NetConfig
+from repro.sim.pspin import handler_budget_ns, hpus_for_line_rate
+
+KiB = 1024
+
+
+def test_fig6_spin_overhead_small_and_large():
+    """sPIN <= ~30% over raw for small writes; converges for large."""
+    r1 = P.run_raw_write(1 * KiB).latency_ns
+    s1 = P.run_spin_auth_write(1 * KiB).latency_ns
+    assert 1.0 < s1 / r1 < 1.35, s1 / r1              # paper: up to 27%
+    r512 = P.run_raw_write(512 * KiB).latency_ns
+    s512 = P.run_spin_auth_write(512 * KiB).latency_ns
+    assert s512 / r512 < 1.05                          # approaches raw
+
+
+def test_fig6_rpc_penalties():
+    """RPC pays the buffering memcpy at large sizes; RPC+RDMA the extra RTT
+    at small sizes."""
+    size = 512 * KiB
+    rpc = P.run_rpc_write(size).latency_ns
+    spin = P.run_spin_auth_write(size).latency_ns
+    assert rpc / spin > 1.8
+    small_rr = P.run_rpc_rdma_write(1 * KiB).latency_ns
+    small_spin = P.run_spin_auth_write(1 * KiB).latency_ns
+    assert small_rr > small_spin
+
+
+def test_fig9_flat_fast_small_spin_fast_large():
+    """RDMA-Flat best <=16 KiB; sPIN wins past the crossover (paper: 16 KiB),
+    approaching ~2x at 512 KiB for k=2."""
+    k = 2
+    flat_small = P.run_rdma_flat(4 * KiB, k).latency_ns
+    spin_small = P.run_spin_replication(4 * KiB, k, ReplStrategy.RING).latency_ns
+    assert flat_small < spin_small
+    flat_big = P.run_rdma_flat(512 * KiB, k).latency_ns
+    spin_big = P.run_spin_replication(512 * KiB, k, ReplStrategy.RING).latency_ns
+    assert flat_big / spin_big > 1.4                   # paper: up to 2x
+
+
+def test_fig9_k4_speedup_vs_best_alternative():
+    k, size = 4, 512 * KiB
+    alts = [
+        P.run_rdma_flat(size, k).latency_ns,
+        P.run_hyperloop(size, k).latency_ns,
+        P.run_cpu_ring(size, k).latency_ns,
+        P.run_cpu_pbt(size, k).latency_ns,
+    ]
+    spin = P.run_spin_replication(size, k, ReplStrategy.RING).latency_ns
+    assert min(alts) / spin > 1.7                      # paper: up to 2.16x
+
+
+def test_fig10_pbt_beats_ring_for_small_writes_large_k():
+    small = 4 * KiB
+    ring = P.run_spin_replication(small, 8, ReplStrategy.RING).latency_ns
+    pbt = P.run_spin_replication(small, 8, ReplStrategy.PBT).latency_ns
+    assert pbt < ring
+    big = 512 * KiB
+    ring_b = P.run_spin_replication(big, 8, ReplStrategy.RING).latency_ns
+    pbt_b = P.run_spin_replication(big, 8, ReplStrategy.PBT).latency_ns
+    assert ring_b < pbt_b                              # bandwidth-bound: ring wins
+
+
+def test_fig9_goodput_line_rate_from_8k_and_pbt_half():
+    """Ring replication ingests at ~line rate from 8 KiB writes; PBT at
+    about half (2 egress copies per packet)."""
+    ring8 = P.run_spin_goodput(8 * KiB, 4, ReplStrategy.RING, num_writes=96)
+    assert ring8 > 0.75 * 50.0                 # near line rate from 8 KiB
+    ring64 = P.run_spin_goodput(64 * KiB, 4, ReplStrategy.RING, num_writes=96)
+    assert ring64 > 0.9 * 50.0                 # at line rate by 64 KiB
+    pbt = P.run_spin_goodput(64 * KiB, 4, ReplStrategy.PBT, num_writes=96)
+    ring = P.run_spin_goodput(64 * KiB, 4, ReplStrategy.RING, num_writes=96)
+    assert 0.35 < pbt / ring < 0.65
+
+
+def test_fig15_ec_latency_and_bandwidth():
+    cfg = NetConfig(bandwidth_gbps=100.0)
+    spin = P.run_spin_triec(512 * KiB, 3, 2, cfg=cfg).latency_ns
+    inec = P.run_inec_triec(512 * KiB, 3, 2, cfg=cfg).latency_ns
+    assert inec / spin > 1.8                           # paper: up to 2x
+    bw_s = P.run_spin_triec(512 * KiB, 6, 3, cfg=cfg, num_blocks=12).extra[
+        "bandwidth_GBps"]
+    bw_i = P.run_inec_triec(512 * KiB, 6, 3, cfg=cfg, num_blocks=12).extra[
+        "bandwidth_GBps"]
+    assert 2.0 < bw_s / bw_i < 5.5                     # paper: 3.3x @512 KiB
+    bw_s1 = P.run_spin_triec(1 * KiB, 6, 3, cfg=cfg, num_blocks=96).extra[
+        "bandwidth_GBps"]
+    bw_i1 = P.run_inec_triec(1 * KiB, 6, 3, cfg=cfg, num_blocks=24).extra[
+        "bandwidth_GBps"]
+    assert bw_s1 / bw_i1 > 15                          # paper: 29x @1 KiB
+
+
+def test_handler_stats_under_load():
+    """PBT handlers stall toward ~2 us under egress backpressure (Table I);
+    ring handlers stay near their measured compute time."""
+    pbt = P.run_spin_replication(8 * KiB, 4, ReplStrategy.PBT, num_writes=96)
+    assert pbt.extra["mean_handler_ns"] > 900
+    ring = P.run_spin_replication(8 * KiB, 4, ReplStrategy.RING, num_writes=96)
+    assert ring.extra["mean_handler_ns"] < 450
+
+
+def test_fig16_hpus_for_line_rate():
+    """RS(6,3) @400 Gbit/s needs ~512 HPUs (paper section VI-C)."""
+    n = hpus_for_line_rate(23018.0, 400.0)
+    assert 450 <= n <= 640
+    assert hpus_for_line_rate(23018.0, 200.0) <= n // 2 + 32
+    assert handler_budget_ns(400.0) == pytest.approx(32 * 2048 * 8 / 400.0)
+
+
+def test_fig4_littles_law_and_memory_budget():
+    assert descriptor_memory_budget() == 6 * 2**20
+    assert max_concurrent_writes() == (6 * 2**20) // WRITE_DESCRIPTOR_BYTES
+    assert max_concurrent_writes() > 80_000            # paper: ~82 K writes
+    # worst case: 1 KiB writes at 400 Gbit/s with 2 us service time
+    n = littles_law_concurrent_writes(1024, 2e-6)
+    assert 90 < n < 110                                # 48.8 Mpps * 2 us
