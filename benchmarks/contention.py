@@ -1,0 +1,177 @@
+"""Multi-client contention sweep over the protocol simulators.
+
+Emits, per protocol and client count, a latency-percentile + goodput table
+(closed-loop by default), then a latency-vs-offered-load curve (open-loop
+Poisson arrivals).  The N=1 closed-loop row is cross-checked against the
+single-shot ``run_*`` API (must agree within 1%) — that validates the
+workload engine's issue/completion plumbing adds no overhead; fidelity of
+the runners themselves to the paper's model is pinned separately by the
+absolute acceptance bands in tests/test_sim.py.
+
+Usage:
+
+  PYTHONPATH=src python benchmarks/contention.py \
+      --clients 1 2 4 8 16 --protocol spin-write
+
+The core trio from the paper's figures (sPIN writes / Fig. 6, sPIN-Ring
+replication / Fig. 9, sPIN-TriEC erasure / Fig. 15) is always swept;
+``--protocol`` adds further protocols (see --list).  ``--only`` restricts
+the sweep to exactly the protocols named.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.sim.protocols import PROTOCOL_NAMES, run_single_shot  # noqa: E402
+from repro.sim.workload import KiB, Scenario, run_scenario  # noqa: E402
+
+CORE_PROTOCOLS = ("spin-write", "spin-ring", "spin-triec")
+
+HDR = ("protocol,clients,arrival,issued,completed,dropped,p50_us,p95_us,"
+       "p99_us,goodput_GBps,hpu_qpeak,ingress_qpeak,single_shot_us,delta_pct")
+
+
+def scenario_for(protocol: str, args, num_clients: int, **over) -> Scenario:
+    k, m = args.k, 2
+    if protocol in ("spin-triec", "inec-triec"):
+        k, m = args.ec_k, args.ec_m
+    base = dict(
+        protocol=protocol,
+        size=args.size,
+        num_clients=num_clients,
+        requests_per_client=args.requests,
+        seed=args.seed,
+        k=k,
+        m=m,
+    )
+    base.update(over)
+    return Scenario(**base)
+
+
+def sweep_clients(protocol: str, args) -> list[str]:
+    rows = []
+    for n in args.clients:
+        sc = scenario_for(protocol, args, n)
+        rep = run_scenario(sc)
+        single = parity = ""
+        if n == 1 and protocol in PROTOCOL_NAMES:
+            ss_us = run_single_shot(
+                protocol, sc.size, k=sc.k, m=sc.m).latency_ns / 1e3
+            delta = (rep["p50_us"] - ss_us) / ss_us * 100.0
+            single = f"{ss_us:.2f}"
+            parity = f"{delta:+.3f}"
+            if abs(delta) > 1.0:
+                raise AssertionError(
+                    f"{protocol} N=1 parity broken: workload p50 "
+                    f"{rep['p50_us']:.2f} us vs single-shot {ss_us:.2f} us"
+                )
+        rows.append(
+            f"{protocol},{n},{sc.arrival},{rep['issued']},{rep['completed']},"
+            f"{rep['dropped']},{rep['p50_us']:.2f},{rep['p95_us']:.2f},"
+            f"{rep['p99_us']:.2f},{rep['goodput_GBps']:.2f},"
+            f"{rep['hpu_queue_peak']},{rep['ingress_queue_peak']},"
+            f"{single},{parity}"
+        )
+    return rows
+
+
+def sweep_offered_load(protocol: str, args) -> list[str]:
+    rows = []
+    n = max(args.clients)
+    for load in args.loads:
+        sc = scenario_for(
+            protocol, args, n, arrival="poisson", offered_load_GBps=load,
+            requests_per_client=args.requests * 2,
+        )
+        rep = run_scenario(sc)
+        rows.append(
+            f"{protocol}@{load:g}GBps,{n},poisson,{rep['issued']},"
+            f"{rep['completed']},{rep['dropped']},{rep['p50_us']:.2f},"
+            f"{rep['p95_us']:.2f},{rep['p99_us']:.2f},"
+            f"{rep['goodput_GBps']:.2f},{rep['hpu_queue_peak']},"
+            f"{rep['ingress_queue_peak']},,"
+        )
+    return rows
+
+
+def contention_rows(args) -> list[str]:
+    if args.only:
+        protocols = tuple(args.only)
+    else:
+        extra = tuple(p for p in (args.protocol or []) if p not in CORE_PROTOCOLS)
+        protocols = tuple(args.protocol or []) + tuple(
+            p for p in CORE_PROTOCOLS if p not in (args.protocol or [])
+        )
+        protocols = tuple(dict.fromkeys(extra + protocols))
+    rows = []
+    for proto in protocols:
+        if proto not in PROTOCOL_NAMES:
+            raise SystemExit(
+                f"unknown protocol {proto!r}; known: {sorted(PROTOCOL_NAMES)}"
+            )
+        rows += sweep_clients(proto, args)
+    for proto in protocols:
+        rows += sweep_offered_load(proto, args)
+    return rows
+
+
+def bench_rows(clients=(1, 4, 16)) -> list[tuple]:
+    """(name, us_per_call, derived) rows for benchmarks/run.py: p99 latency
+    with goodput as the derived column, core trio only."""
+    ap = build_parser()
+    args = ap.parse_args(["--clients"] + [str(c) for c in clients])
+    rows = []
+    for proto in CORE_PROTOCOLS:
+        for n in clients:
+            rep = run_scenario(scenario_for(proto, args, n))
+            rows.append(
+                (f"contention/{proto}/c{n}", round(rep["p99_us"], 2),
+                 round(rep["goodput_GBps"], 2))
+            )
+    return rows
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--clients", type=int, nargs="+",
+                    default=[1, 2, 4, 8, 16])
+    ap.add_argument("--protocol", nargs="+", default=[],
+                    help="protocols to sweep in addition to the core trio")
+    ap.add_argument("--only", nargs="+", default=[],
+                    help="sweep exactly these protocols (skip the trio)")
+    ap.add_argument("--size", type=int, default=64 * KiB)
+    ap.add_argument("--requests", type=int, default=8,
+                    help="closed-loop requests per client")
+    ap.add_argument("--k", type=int, default=4, help="replication factor")
+    ap.add_argument("--ec-k", type=int, default=3, help="EC data shards")
+    ap.add_argument("--ec-m", type=int, default=2, help="EC parity shards")
+    ap.add_argument("--loads", type=float, nargs="+",
+                    default=[5.0, 15.0, 30.0, 45.0],
+                    help="offered loads (GB/s) for the open-loop curve")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--list", action="store_true",
+                    help="list known protocols and exit")
+    return ap
+
+
+def main() -> None:
+    args = build_parser().parse_args()
+    if args.list:
+        print("\n".join(sorted(PROTOCOL_NAMES)))
+        return
+
+    t0 = time.perf_counter()
+    print(HDR)
+    for row in contention_rows(args):
+        print(row)
+    print(f"# elapsed {time.perf_counter() - t0:.1f} s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

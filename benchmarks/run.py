@@ -3,6 +3,10 @@
 Prints ``name,us_per_call,derived`` CSV rows.  Usage:
 
   PYTHONPATH=src python -m benchmarks.run [--only fig6,fig15] [--roofline]
+                                          [--contention]
+
+``--contention`` appends the multi-client sweep (p99 latency / goodput per
+client count; see benchmarks/contention.py for the full CLI).
 """
 
 from __future__ import annotations
@@ -43,6 +47,8 @@ def main() -> None:
                     help="comma-separated substring filters on bench names")
     ap.add_argument("--roofline", action="store_true",
                     help="also print the dry-run roofline table")
+    ap.add_argument("--contention", action="store_true",
+                    help="also print the multi-client contention sweep")
     args = ap.parse_args()
     filters = [f for f in args.only.split(",") if f]
 
@@ -54,6 +60,11 @@ def main() -> None:
             print(f"{name},{us},{derived}")
     if args.roofline or not filters:
         for name, us, derived in roofline_rows():
+            print(f"{name},{us},{derived}")
+    if args.contention:
+        from benchmarks.contention import bench_rows
+
+        for name, us, derived in bench_rows():
             print(f"{name},{us},{derived}")
 
 

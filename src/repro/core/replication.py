@@ -233,5 +233,7 @@ def replicate(
         strategy=strategy,
         axis_size=axis_size,
     )
+    from repro.parallel.compat import shard_map
+
     spec = P(axis_name)
-    return jax.shard_map(fn, mesh=mesh, in_specs=spec, out_specs=spec)(x)
+    return shard_map(fn, mesh=mesh, in_specs=spec, out_specs=spec)(x)

@@ -1,0 +1,40 @@
+"""JAX version compatibility shims.
+
+The repo targets the modern JAX surface (``jax.shard_map``,
+``AbstractMesh(axis_sizes, axis_names)``) but must also run on 0.4.x where
+``shard_map`` still lives in ``jax.experimental`` (with ``check_rep``
+instead of ``check_vma``) and ``AbstractMesh`` takes a single
+``((name, size), ...)`` shape tuple.  Everything that touches these APIs
+goes through this module.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool | None = None):
+    """``jax.shard_map`` across JAX versions.
+
+    ``check_vma`` maps onto the old ``check_rep`` flag; ``None`` keeps the
+    library default on either version.
+    """
+    if hasattr(jax, "shard_map"):
+        kw = {} if check_vma is None else {"check_vma": check_vma}
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    kw = {} if check_vma is None else {"check_rep": check_vma}
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+
+
+def abstract_mesh(axis_sizes: tuple[int, ...], axis_names: tuple[str, ...]):
+    """``jax.sharding.AbstractMesh`` across JAX versions."""
+    from jax.sharding import AbstractMesh
+
+    try:
+        return AbstractMesh(axis_sizes, axis_names)
+    except TypeError:
+        return AbstractMesh(tuple(zip(axis_names, axis_sizes)))

@@ -69,7 +69,13 @@ def _param_rule(path: str, shape: tuple[int, ...], mesh: Mesh, ax: MeshAxes):
     nd = len(shape)
 
     def pad(spec_tail: list) -> P:
-        return P(*([None] * (nd - len(spec_tail)) + spec_tail))
+        # canonicalize 1-tuples to the bare axis name (older JAX does not
+        # treat P(("data",)) and P("data") as equal)
+        tail = [
+            a[0] if isinstance(a, tuple) and len(a) == 1 else a
+            for a in spec_tail
+        ]
+        return P(*([None] * (nd - len(tail)) + tail))
 
     def try_spec(tail: list) -> P | None:
         """tail entries: (axis_or_None); validate divisibility."""

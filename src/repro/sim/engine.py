@@ -9,6 +9,7 @@ PsPIN models are built from.  All times are in nanoseconds (float).
 
 from __future__ import annotations
 
+import collections
 import heapq
 import itertools
 from typing import Callable
@@ -45,12 +46,20 @@ class Simulator:
 class SerialResource:
     """A resource that serves one request at a time, FIFO (a link port,
     a DMA engine, a memcpy engine).  ``acquire`` returns the service
-    interval [start, end) and schedules ``on_done`` at its end."""
+    interval [start, end) and schedules ``on_done`` at its end.
+
+    Contention accounting (for the multi-client workload engine): total
+    time acquirers spent queued behind earlier work, and the queue depth —
+    number of accepted-but-not-yet-started services at ``sim.now``."""
 
     def __init__(self, sim: Simulator):
         self.sim = sim
         self.free_at: float = 0.0
         self.busy_ns: float = 0.0
+        self.acquires = 0
+        self.total_wait_ns: float = 0.0
+        self.peak_queued = 0
+        self._pending_starts: collections.deque[float] = collections.deque()
 
     def acquire(
         self, duration: float, on_done: Callable[[float, float], None] | None = None
@@ -59,9 +68,26 @@ class SerialResource:
         end = start + duration
         self.free_at = end
         self.busy_ns += duration
+        self.acquires += 1
+        wait = start - self.sim.now
+        if wait > 0:
+            self.total_wait_ns += wait
+            self._pending_starts.append(start)
+            self.peak_queued = max(self.peak_queued, self.queued())
         if on_done is not None:
             self.sim.at(end, lambda: on_done(start, end))
         return start, end
+
+    def queued(self) -> int:
+        """Services accepted but not yet started at the current time."""
+        now = self.sim.now
+        pend = self._pending_starts
+        while pend and pend[0] <= now + 1e-12:
+            pend.popleft()
+        return len(pend)
+
+    def utilization(self) -> float:
+        return self.busy_ns / self.sim.now if self.sim.now > 0 else 0.0
 
 
 class Pool:
@@ -71,8 +97,10 @@ class Pool:
         self.sim = sim
         self.capacity = capacity
         self.in_use = 0
-        self._waiters: list[Callable[[], None]] = []
+        self._waiters: list[tuple[Callable[[], None], float]] = []
         self.peak = 0
+        self.peak_queued = 0
+        self.total_wait_ns: float = 0.0
 
     def acquire(self, fn: Callable[[], None]) -> None:
         """Invoke ``fn`` as soon as a unit is available (caller must
@@ -82,11 +110,13 @@ class Pool:
             self.peak = max(self.peak, self.in_use)
             fn()
         else:
-            self._waiters.append(fn)
+            self._waiters.append((fn, self.sim.now))
+            self.peak_queued = max(self.peak_queued, len(self._waiters))
 
     def release(self) -> None:
         if self._waiters:
-            fn = self._waiters.pop(0)
+            fn, t_enq = self._waiters.pop(0)
+            self.total_wait_ns += self.sim.now - t_enq
             self.sim.after(0.0, fn)  # hand over without changing count
         else:
             self.in_use -= 1

@@ -99,6 +99,7 @@ class Network:
         self.sim = sim
         self.cfg = cfg
         self.nodes: dict[int, SimNode] = {}
+        self.packets_sent = 0
 
     def node(self, node_id: int) -> SimNode:
         if node_id not in self.nodes:
@@ -122,6 +123,7 @@ class Network:
         s, d = self.node(src), self.node(dst)
         ser = self.cfg.ser_ns(wire_size)
         s.bytes_out += wire_size
+        self.packets_sent += 1
 
         def after_egress(start: float, end: float) -> None:
             if on_sent is not None:

@@ -1,24 +1,34 @@
 """Write / replication / erasure-coding protocol simulations.
 
-One runner per protocol the paper compares (sections IV-VI):
+One protocol *factory* per scheme the paper compares (sections IV-VI):
 
   writes:      raw RDMA, RPC, RPC+RDMA, sPIN          (Fig. 6)
   replication: RDMA-Flat, RDMA-HyperLoop, CPU-Ring,
                CPU-PBT, sPIN-Ring, sPIN-PBT           (Fig. 9, 10)
   erasure:     INEC-TriEC, sPIN-TriEC                 (Fig. 15)
 
-Node ids: 0 = client, 1..k = storage (data) nodes, k+1..k+m = parity nodes.
-All runners return latency in ns (client request -> client ack(s)) or a
-sustained rate in GB/s for the goodput/bandwidth scenarios.
+Each protocol is a reusable per-request factory over a shared :class:`Env`
+(one simulator + network + PsPIN units): install the storage-side handlers
+once, then :meth:`Protocol.issue` any number of concurrent requests — from
+any number of client nodes — that contend mechanistically for link ports,
+HPU pools, and host CPUs.  The ``run_*`` functions at the bottom keep the
+original single-shot API (one client, one request) and are thin wrappers
+over the factories; the multi-client workload engine lives in
+:mod:`repro.sim.workload`.
+
+Node ids: 0 = default client (extra clients use negative ids), 1..k =
+storage (data) nodes, k+1..k+m = parity nodes.  All runners return latency
+in ns (client request -> client ack(s)) or a sustained rate in GB/s for
+the goodput/bandwidth scenarios.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import math
+from typing import Callable
 
 from repro.core.packets import ReplStrategy
-from repro.core.replication import children_of, optimal_chunk_count, tree_depth
+from repro.core.replication import children_of, optimal_chunk_count
 from repro.sim.engine import SerialResource, Simulator
 from repro.sim.network import NetConfig, Network
 from repro.sim.pspin import (
@@ -71,24 +81,153 @@ class Result:
     extra: dict = dataclasses.field(default_factory=dict)
 
 
-class _Completion:
-    """Counts acks at the client; records the completion time."""
+class Env:
+    """One shared simulation world that protocol instances contend over.
 
-    def __init__(self, sim: Simulator, expected: int):
-        self.sim = sim
+    Lazily builds PsPIN units (one per storage node) and host CPUs (one
+    serial dispatch+validate engine per storage node), so concurrent
+    requests — from one client or many — queue on the same resources."""
+
+    def __init__(
+        self, cfg: NetConfig | None = None, pcfg: PsPINConfig | None = None
+    ):
+        self.cfg = cfg or NetConfig()
+        self.pcfg = pcfg
+        self.sim = Simulator()
+        self.net = Network(self.sim, self.cfg)
+        self._pspin: dict[int, PsPINUnit] = {}
+        self._cpu: dict[int, SerialResource] = {}
+        self._node_owner: dict[int, "Protocol"] = {}
+
+    def claim_node(self, node: int, proto: "Protocol") -> None:
+        """Register ``proto`` as the receive-handler owner of ``node``.
+
+        One protocol per node per Env: a second protocol installing a
+        handler on the same node would silently steal the first one's
+        packets, so that is an error (mixed-protocol scenarios need
+        disjoint node sets for now — see ROADMAP)."""
+        owner = self._node_owner.get(node)
+        if owner is not None and owner is not proto:
+            raise ValueError(
+                f"node {node} receive handler already owned by "
+                f"{type(owner).__name__}; one protocol per node per Env"
+            )
+        self._node_owner[node] = proto
+
+    def pspin(self, node: int) -> PsPINUnit:
+        if node not in self._pspin:
+            self._pspin[node] = PsPINUnit(self.sim, self.net, node, self.pcfg)
+        return self._pspin[node]
+
+    def host_cpu(self, node: int) -> SerialResource:
+        if node not in self._cpu:
+            self._cpu[node] = SerialResource(self.sim)
+        return self._cpu[node]
+
+    def pspin_units(self) -> list[PsPINUnit]:
+        return list(self._pspin.values())
+
+    def host_cpus(self) -> list[SerialResource]:
+        return list(self._cpu.values())
+
+
+class _Pending:
+    """One in-flight request as seen from its client."""
+
+    __slots__ = ("rid", "client", "expected", "acks", "t_issue", "on_done",
+                 "extra", "cfg_acks")
+
+    def __init__(self, rid: int, client: int, expected: int, t_issue: float,
+                 on_done: Callable[[Result], None] | None):
+        self.rid = rid
+        self.client = client
         self.expected = expected
-        self.count = 0
-        self.done_at: float | None = None
-
-    def ack(self) -> None:
-        self.count += 1
-        if self.count == self.expected:
-            self.done_at = self.sim.now
+        self.acks = 0
+        self.t_issue = t_issue
+        self.on_done = on_done
+        self.extra: dict = {}
+        self.cfg_acks = 0
 
 
-def _mk(cfg: NetConfig) -> tuple[Simulator, Network]:
-    sim = Simulator()
-    return sim, Network(sim, cfg)
+class Protocol:
+    """Base per-request factory.
+
+    Subclasses install storage-node receive handlers in ``__init__`` and
+    implement :meth:`_start` (schedule the client-side posting/injection of
+    one request).  Every packet's ``meta`` carries ``rid`` (globally unique
+    per request) and acks are routed back to the issuing client node."""
+
+    #: storage-side node ids this protocol uses (for queue-depth sampling)
+    storage_nodes: tuple[int, ...] = (1,)
+    #: payload bytes delivered per completed request (goodput accounting)
+    request_bytes: int = 0
+
+    def __init__(self, env: Env):
+        self.env = env
+        self._pending: dict[int, _Pending] = {}
+        self._next_rid = 0
+        self._clients: set[int] = set()
+        self.completed = 0
+        self.last_done_at: float = 0.0
+
+    def _install(self, node: int, handler) -> None:
+        """Install a receive handler, guarding against another protocol on
+        the same Env silently clobbering it (and vice versa)."""
+        self.env.claim_node(node, self)
+        self.env.net.node(node).on_receive = handler
+
+    # -- client side --------------------------------------------------------
+
+    def issue(self, client: int = CLIENT,
+              on_done: Callable[[Result], None] | None = None) -> int:
+        """Post one request from ``client`` at the current sim time."""
+        if client in self.storage_nodes:
+            raise ValueError(f"client id {client} collides with storage node")
+        if client not in self._clients:
+            self._clients.add(client)
+            self._install(client, self._on_client_pkt)
+        rid = self._next_rid
+        self._next_rid += 1
+        pend = _Pending(rid, client, self._expected_acks(), self.env.sim.now,
+                        on_done)
+        self._pending[rid] = pend
+        self._start(pend)
+        return rid
+
+    def in_flight(self) -> int:
+        return len(self._pending)
+
+    def _expected_acks(self) -> int:
+        return 1
+
+    def _on_client_pkt(self, pkt) -> None:
+        pend = self._pending.get(pkt.meta.get("rid"))
+        if pend is None:
+            return
+        if pkt.meta.get("cfg_ack"):
+            self._on_cfg_ack(pend)
+            return
+        pend.acks += 1
+        if pend.acks == pend.expected:
+            del self._pending[pend.rid]
+            self.completed += 1
+            sim = self.env.sim
+            self.last_done_at = sim.now
+            latency = sim.now - pend.t_issue + self.env.cfg.client_complete_ns
+            self._on_request_complete(pend)
+            if pend.on_done is not None:
+                pend.on_done(Result(latency, pend.extra))
+
+    # -- subclass hooks ------------------------------------------------------
+
+    def _start(self, pend: _Pending) -> None:
+        raise NotImplementedError
+
+    def _on_cfg_ack(self, pend: _Pending) -> None:  # HyperLoop config phase
+        pass
+
+    def _on_request_complete(self, pend: _Pending) -> None:  # INEC pacing
+        pass
 
 
 def _send_message(
@@ -112,150 +251,229 @@ def _send_message(
 # ---------------------------------------------------------------------------
 
 
-def run_raw_write(size: int, cfg: NetConfig | None = None) -> Result:
+class RawWriteProtocol(Protocol):
     """Speed-of-light: plain RDMA write, NIC acks after the last packet."""
-    cfg = cfg or NetConfig()
-    sim, net = _mk(cfg)
-    done = _Completion(sim, 1)
-    state = {"got": 0, "n": None}
 
-    def on_storage(pkt):
-        state["got"] += 1
-        if state["got"] == pkt.meta["n"]:
-            sim.after(cfg.nic_fixed_ns, lambda: net.send(1, CLIENT, ACK_WIRE, {"ack": 1}))
+    name = "raw-write"
 
-    net.node(1).on_receive = on_storage
-    net.node(CLIENT).on_receive = lambda pkt: done.ack()
-    sim.at(
-        cfg.client_post_ns,
-        lambda: _send_message(net, CLIENT, 1, size, 0, lambda i, n, w: {"i": i, "n": n}),
-    )
-    sim.run()
-    assert done.done_at is not None
-    return Result(done.done_at + cfg.client_complete_ns)
+    def __init__(self, env: Env, size: int, node: int = 1):
+        super().__init__(env)
+        self.size = size
+        self.request_bytes = size
+        self.node = node
+        self.storage_nodes = (node,)
+        self._got: dict[int, int] = {}
+        self._install(node, self._on_storage)
 
-
-def run_spin_auth_write(
-    size: int,
-    cfg: NetConfig | None = None,
-    pcfg: PsPINConfig | None = None,
-) -> Result:
-    """sPIN write: per-packet handlers validate the request on the NIC."""
-    cfg = cfg or NetConfig()
-    sim, net = _mk(cfg)
-    pspin = PsPINUnit(sim, net, 1, pcfg)
-    done = _Completion(sim, 1)
-    hh, ph, ch = HANDLER_NS["auth"]
-    gate = RequestGate()
-    state = {"processed": 0, "n": None}
-
-    def packet_done():
-        state["processed"] += 1
-        if state["processed"] == state["n"]:
-            # CH: runs once all packets were processed; sends the response.
-            pspin.process(
-                ACK_WIRE,
-                HandlerSpec(ch, [Emit(CLIENT, ACK_WIRE, {"ack": 1})]),
+    def _on_storage(self, pkt) -> None:
+        rid = pkt.meta["rid"]
+        got = self._got.get(rid, 0) + 1
+        self._got[rid] = got
+        if got == pkt.meta["n"]:
+            del self._got[rid]
+            cfg, net = self.env.cfg, self.env.net
+            client = pkt.meta["cl"]
+            self.env.sim.after(
+                cfg.nic_fixed_ns,
+                lambda: net.send(self.node, client, ACK_WIRE,
+                                 {"rid": rid, "ack": 1}),
             )
 
-    def on_storage(pkt):
-        i, n = pkt.meta["i"], pkt.meta["n"]
-        state["n"] = n
+    def _start(self, pend: _Pending) -> None:
+        cfg, net = self.env.cfg, self.env.net
+        meta = {"rid": pend.rid, "cl": pend.client}
+        self.env.sim.after(
+            cfg.client_post_ns,
+            lambda: _send_message(
+                net, pend.client, self.node, self.size, 0,
+                lambda i, n, w: {**meta, "i": i, "n": n},
+            ),
+        )
+
+
+class SpinAuthWriteProtocol(Protocol):
+    """sPIN write: per-packet handlers validate the request on the NIC."""
+
+    name = "spin-write"
+
+    class _Req:
+        __slots__ = ("gate", "processed", "n")
+
+        def __init__(self):
+            self.gate = RequestGate()
+            self.processed = 0
+            self.n: int | None = None
+
+    def __init__(self, env: Env, size: int, node: int = 1):
+        super().__init__(env)
+        self.size = size
+        self.request_bytes = size
+        self.node = node
+        self.storage_nodes = (node,)
+        self.unit = env.pspin(node)
+        self._reqs: dict[int, SpinAuthWriteProtocol._Req] = {}
+        self._install(node, self._on_storage)
+
+    def _on_storage(self, pkt) -> None:
+        hh, ph, ch = HANDLER_NS["auth"]
+        rid, client = pkt.meta["rid"], pkt.meta["cl"]
+        i = pkt.meta["i"]
+        req = self._reqs.setdefault(rid, self._Req())
+        req.n = pkt.meta["n"]
+        unit = self.unit
+
+        def packet_done() -> None:
+            req.processed += 1
+            if req.processed == req.n:
+                # CH: runs once all packets were processed; sends the
+                # response.
+                del self._reqs[rid]
+                unit.process(
+                    ACK_WIRE,
+                    HandlerSpec(ch, [Emit(client, ACK_WIRE,
+                                          {"rid": rid, "ack": 1})]),
+                )
+
         if i == 0:
             # HH is its own (short) handler invocation; it opens the gate so
             # payload handlers — including the header packet's own PH — can
             # proceed on other HPUs.
-            pspin.process(pkt.wire_size, HandlerSpec(hh, gate=gate))
-        spec = HandlerSpec(ph, on_complete=packet_done, gate=gate)
-        pspin.process_gated(pkt.wire_size, spec)
+            unit.process(pkt.wire_size, HandlerSpec(hh, gate=req.gate))
+        spec = HandlerSpec(ph, on_complete=packet_done, gate=req.gate)
+        unit.process_gated(pkt.wire_size, spec)
 
-    net.node(1).on_receive = on_storage
-    net.node(CLIENT).on_receive = lambda pkt: done.ack()
-    sim.at(
-        cfg.client_post_ns,
-        lambda: _send_message(
-            net, CLIENT, 1, size, write_header_extra(), lambda i, n, w: {"i": i, "n": n}
-        ),
-    )
-    sim.run()
-    assert done.done_at is not None
-    return Result(
-        done.done_at + cfg.client_complete_ns,
-        {"handler_ns": pspin.handler_time_ns, "handlers": pspin.handler_count},
-    )
+    def _start(self, pend: _Pending) -> None:
+        cfg, net = self.env.cfg, self.env.net
+        meta = {"rid": pend.rid, "cl": pend.client}
+        self.env.sim.after(
+            cfg.client_post_ns,
+            lambda: _send_message(
+                net, pend.client, self.node, self.size, write_header_extra(),
+                lambda i, n, w: {**meta, "i": i, "n": n},
+            ),
+        )
 
 
-def run_rpc_write(size: int, cfg: NetConfig | None = None) -> Result:
-    """RPC: message lands in a host buffer; CPU validates, copies, acks."""
-    cfg = cfg or NetConfig()
-    sim, net = _mk(cfg)
-    done = _Completion(sim, 1)
-    state = {"got": 0}
+class RpcWriteProtocol(Protocol):
+    """RPC: message lands in a host buffer; CPU validates, copies, acks.
 
-    def on_storage(pkt):
-        state["got"] += 1
-        if state["got"] == pkt.meta["n"]:
+    The notify+validate+buffer-copy runs on the storage node's (serial)
+    host CPU, so concurrent requests queue for it — the contention the
+    paper's CPU data path suffers under load."""
+
+    name = "rpc-write"
+
+    def __init__(self, env: Env, size: int, node: int = 1):
+        super().__init__(env)
+        self.size = size
+        self.request_bytes = size
+        self.node = node
+        self.storage_nodes = (node,)
+        self._got: dict[int, int] = {}
+        self._install(node, self._on_storage)
+
+    def _on_storage(self, pkt) -> None:
+        rid = pkt.meta["rid"]
+        got = self._got.get(rid, 0) + 1
+        self._got[rid] = got
+        if got == pkt.meta["n"]:
+            del self._got[rid]
+            cfg, net = self.env.cfg, self.env.net
+            client = pkt.meta["cl"]
+            cpu = self.env.host_cpu(self.node)
+            work = (cfg.host_notify_ns + cfg.cpu_validate_ns
+                    + cfg.memcpy_ns(self.size))
+
             # last packet DMA'd to the host ring: notify, validate, copy, ack
-            delay = (
-                cfg.pcie_latency_ns / 2
-                + cfg.host_notify_ns
-                + cfg.cpu_validate_ns
-                + cfg.memcpy_ns(size)
-            )
-            sim.after(delay, lambda: net.send(1, CLIENT, ACK_WIRE, {"ack": 1}))
+            def at_host() -> None:
+                cpu.acquire(
+                    work,
+                    lambda _s, _e: net.send(self.node, client, ACK_WIRE,
+                                            {"rid": rid, "ack": 1}),
+                )
 
-    net.node(1).on_receive = on_storage
-    net.node(CLIENT).on_receive = lambda pkt: done.ack()
-    sim.at(
-        cfg.client_post_ns,
-        lambda: _send_message(
-            net, CLIENT, 1, size, write_header_extra(), lambda i, n, w: {"i": i, "n": n}
-        ),
-    )
-    sim.run()
-    return Result(done.done_at + cfg.client_complete_ns)
+            self.env.sim.after(cfg.pcie_latency_ns / 2, at_host)
+
+    def _start(self, pend: _Pending) -> None:
+        cfg, net = self.env.cfg, self.env.net
+        meta = {"rid": pend.rid, "cl": pend.client}
+        self.env.sim.after(
+            cfg.client_post_ns,
+            lambda: _send_message(
+                net, pend.client, self.node, self.size, write_header_extra(),
+                lambda i, n, w: {**meta, "i": i, "n": n},
+            ),
+        )
 
 
-def run_rpc_rdma_write(size: int, cfg: NetConfig | None = None) -> Result:
+class RpcRdmaWriteProtocol(Protocol):
     """RPC+RDMA: validate via RPC, then RDMA-read the payload (Fig. 5)."""
-    cfg = cfg or NetConfig()
-    sim, net = _mk(cfg)
-    done = _Completion(sim, 1)
-    state = {"got": 0, "phase": "req"}
 
-    def on_storage(pkt):
+    name = "rpc-rdma-write"
+
+    def __init__(self, env: Env, size: int, node: int = 1):
+        super().__init__(env)
+        self.size = size
+        self.request_bytes = size
+        self.node = node
+        self.storage_nodes = (node,)
+        self._got: dict[int, int] = {}
+        self._install(node, self._on_storage)
+
+    def _on_storage(self, pkt) -> None:
+        cfg, net, sim = self.env.cfg, self.env.net, self.env.sim
+        rid, client = pkt.meta["rid"], pkt.meta["cl"]
+        cpu = self.env.host_cpu(self.node)
         if pkt.meta.get("kind") == "req":
-            delay = cfg.pcie_latency_ns / 2 + cfg.host_notify_ns + cfg.cpu_validate_ns
             # CPU posts an RDMA read towards the client.
-            sim.after(
-                delay, lambda: net.send(1, CLIENT, ACK_WIRE, {"kind": "read_req"})
-            )
-        else:
-            state["got"] += 1
-            if state["got"] == pkt.meta["n"]:
-                # completion event -> CPU -> ack (data already at target).
-                delay = cfg.pcie_latency_ns / 2 + cfg.host_notify_ns
-                sim.after(delay, lambda: net.send(1, CLIENT, ACK_WIRE, {"ack": 1}))
+            def at_host() -> None:
+                cpu.acquire(
+                    cfg.host_notify_ns + cfg.cpu_validate_ns,
+                    lambda _s, _e: net.send(
+                        self.node, client, ACK_WIRE,
+                        {"rid": rid, "cl": client, "kind": "read_req"},
+                    ),
+                )
 
-    def on_client(pkt):
+            sim.after(cfg.pcie_latency_ns / 2, at_host)
+        else:
+            got = self._got.get(rid, 0) + 1
+            self._got[rid] = got
+            if got == pkt.meta["n"]:
+                del self._got[rid]
+
+                # completion event -> CPU -> ack (data already at target).
+                def at_host() -> None:
+                    cpu.acquire(
+                        cfg.host_notify_ns,
+                        lambda _s, _e: net.send(self.node, client, ACK_WIRE,
+                                                {"rid": rid, "ack": 1}),
+                    )
+
+                sim.after(cfg.pcie_latency_ns / 2, at_host)
+
+    def _on_client_pkt(self, pkt) -> None:
         if pkt.meta.get("kind") == "read_req":
             # client NIC serves the RDMA read: stream the data.
+            rid, client = pkt.meta["rid"], pkt.meta["cl"]
             _send_message(
-                net, CLIENT, 1, size, 0, lambda i, n, w: {"kind": "data", "i": i, "n": n}
+                self.env.net, client, self.node, self.size, 0,
+                lambda i, n, w: {"rid": rid, "cl": client, "kind": "data",
+                                 "i": i, "n": n},
             )
-        else:
-            done.ack()
+            return
+        super()._on_client_pkt(pkt)
 
-    net.node(1).on_receive = on_storage
-    net.node(CLIENT).on_receive = on_client
-    sim.at(
-        cfg.client_post_ns,
-        lambda: net.send(
-            CLIENT, 1, cfg.rdma_header + write_header_extra(), {"kind": "req"}
-        ),
-    )
-    sim.run()
-    return Result(done.done_at + cfg.client_complete_ns)
+    def _start(self, pend: _Pending) -> None:
+        cfg, net = self.env.cfg, self.env.net
+        self.env.sim.after(
+            cfg.client_post_ns,
+            lambda: net.send(
+                pend.client, self.node,
+                cfg.rdma_header + write_header_extra(),
+                {"rid": pend.rid, "cl": pend.client, "kind": "req"},
+            ),
+        )
 
 
 # ---------------------------------------------------------------------------
@@ -263,37 +481,54 @@ def run_rpc_rdma_write(size: int, cfg: NetConfig | None = None) -> Result:
 # ---------------------------------------------------------------------------
 
 
-def run_rdma_flat(size: int, k: int, cfg: NetConfig | None = None) -> Result:
+class RdmaFlatProtocol(Protocol):
     """Client issues k writes, one per replica (no validation)."""
-    cfg = cfg or NetConfig()
-    sim, net = _mk(cfg)
-    done = _Completion(sim, k)
-    got = [0] * (k + 1)
 
-    def mk_handler(node):
-        def on_storage(pkt):
-            got[node] += 1
-            if got[node] == pkt.meta["n"]:
-                sim.after(
+    name = "rdma-flat"
+
+    def __init__(self, env: Env, size: int, k: int):
+        super().__init__(env)
+        self.size = size
+        self.request_bytes = size
+        self.k = k
+        self.storage_nodes = tuple(range(1, k + 1))
+        self._got: dict[tuple[int, int], int] = {}
+        for node in self.storage_nodes:
+            self._install(node, self._mk_storage(node))
+
+    def _expected_acks(self) -> int:
+        return self.k
+
+    def _mk_storage(self, node: int):
+        def on_storage(pkt) -> None:
+            rid = pkt.meta["rid"]
+            key = (rid, node)
+            got = self._got.get(key, 0) + 1
+            self._got[key] = got
+            if got == pkt.meta["n"]:
+                del self._got[key]
+                cfg, net = self.env.cfg, self.env.net
+                client = pkt.meta["cl"]
+                self.env.sim.after(
                     cfg.nic_fixed_ns,
-                    lambda: net.send(node, CLIENT, ACK_WIRE, {"ack": node}),
+                    lambda: net.send(node, client, ACK_WIRE,
+                                     {"rid": rid, "ack": node}),
                 )
 
         return on_storage
 
-    for node in range(1, k + 1):
-        net.node(node).on_receive = mk_handler(node)
-    net.node(CLIENT).on_receive = lambda pkt: done.ack()
-    for idx, node in enumerate(range(1, k + 1)):
-        t = cfg.client_post_ns + idx * cfg.client_post_extra_ns
-        sim.at(
-            t,
-            lambda node=node: _send_message(
-                net, CLIENT, node, size, 0, lambda i, n, w: {"i": i, "n": n}
-            ),
-        )
-    sim.run()
-    return Result(done.done_at + cfg.client_complete_ns)
+    def _start(self, pend: _Pending) -> None:
+        cfg, net = self.env.cfg, self.env.net
+        meta = {"rid": pend.rid, "cl": pend.client}
+        for idx, node in enumerate(self.storage_nodes):
+            delay = cfg.client_post_ns + idx * cfg.client_post_extra_ns
+            self.env.sim.after(
+                delay,
+                lambda node=node: _send_message(
+                    net, pend.client, node, self.size, 0,
+                    lambda i, n, w: {**meta, "i": i, "n": n},
+                ),
+            )
 
 
 def _chunk_counts(size: int, chunk: int) -> list[int]:
@@ -301,6 +536,699 @@ def _chunk_counts(size: int, chunk: int) -> list[int]:
     sizes = [chunk] * n
     sizes[-1] = size - chunk * (n - 1)
     return sizes
+
+
+class ChunkedTreeProtocol(Protocol):
+    """Chunked store-and-forward broadcast over a ring/tree.
+
+    Models both CPU-based replication (per-chunk host notify + buffer copy)
+    and RDMA-HyperLoop (per-chunk WQE trigger, optional config phase).
+    Every node acks the client when it holds the full message.
+
+    The per-chunk copy engine is modeled as parallel (a multi-core host
+    memcpy at half single-copy bandwidth), matching the paper's stated
+    penalty; contention across concurrent requests arises at the network
+    ports."""
+
+    name = "chunked-tree"
+
+    class _NodeState:
+        __slots__ = ("received", "chunk_acc", "next_chunk", "acked")
+
+        def __init__(self):
+            self.received = 0
+            self.chunk_acc = 0
+            self.next_chunk = 0
+            self.acked = False
+
+    def __init__(
+        self,
+        env: Env,
+        size: int,
+        k: int,
+        strategy: ReplStrategy,
+        per_chunk_overhead_ns: float,
+        copy_GBps: float | None,
+        chunk: int | None = None,
+        config_phase_writes: int = 0,
+    ):
+        super().__init__(env)
+        self.size = size
+        self.request_bytes = size
+        self.k = k
+        self.strategy = strategy
+        self.per_chunk_overhead_ns = per_chunk_overhead_ns
+        self.copy_GBps = copy_GBps
+        self.config_phase_writes = config_phase_writes
+        cfg = env.cfg
+        if chunk is None:
+            nchunks = optimal_chunk_count(
+                size, k, strategy, cfg.bytes_per_ns * 1e9,
+                per_chunk_overhead_ns * 1e-9,
+            )
+            chunk = -(-size // nchunks)
+        self.chunk = chunk
+        self.chunks = _chunk_counts(size, chunk)
+        self.storage_nodes = tuple(range(1, k + 1))
+        self._states: dict[tuple[int, int], ChunkedTreeProtocol._NodeState] = {}
+        for r in range(k):
+            self._install(r + 1, self._mk_node(r))
+
+    def _expected_acks(self) -> int:
+        return self.k
+
+    def _forward_chunk(self, rid: int, client: int, rank: int,
+                       chunk_idx: int) -> None:
+        for c in children_of(rank, self.k, self.strategy):
+            _send_message(
+                self.env.net,
+                rank + 1,
+                c + 1,
+                self.chunks[chunk_idx],
+                0,
+                lambda i, n, w: {"rid": rid, "cl": client, "i": i, "n": n,
+                                 "chunk": chunk_idx},
+            )
+
+    def _mk_node(self, rank: int):
+        def on_node(pkt) -> None:
+            cfg, sim = self.env.cfg, self.env.sim
+            meta = pkt.meta
+            if meta.get("cfg"):
+                # HyperLoop configuration write: ack it.
+                node = rank + 1
+                sim.after(
+                    cfg.nic_fixed_ns,
+                    lambda: self.env.net.send(
+                        node, meta["cl"], ACK_WIRE,
+                        {"rid": meta["rid"], "cfg_ack": 1},
+                    ),
+                )
+                return
+            rid, client = meta["rid"], meta["cl"]
+            st = self._states.setdefault((rid, rank), self._NodeState())
+            payload = pkt.wire_size - cfg.rdma_header
+            if meta.get("hdr"):
+                payload -= meta["hdr"]
+            st.received += payload
+            st.chunk_acc += payload
+            chunks = self.chunks
+            while (st.next_chunk < len(chunks)
+                   and st.chunk_acc >= chunks[st.next_chunk]):
+                st.chunk_acc -= chunks[st.next_chunk]
+                ci = st.next_chunk
+                st.next_chunk += 1
+                delay = self.per_chunk_overhead_ns
+                if self.copy_GBps is not None:
+                    delay += chunks[ci] / self.copy_GBps
+                sim.after(
+                    delay,
+                    lambda ci=ci: self._forward_chunk(rid, client, rank, ci),
+                )
+            if st.received >= self.size and not st.acked:
+                st.acked = True
+                node = rank + 1
+                sim.after(
+                    cfg.nic_fixed_ns,
+                    lambda: self.env.net.send(node, client, ACK_WIRE,
+                                              {"rid": rid, "ack": rank}),
+                )
+            if st.acked and st.next_chunk == len(chunks):
+                del self._states[(rid, rank)]
+
+        return on_node
+
+    def _broadcast(self, pend: _Pending) -> None:
+        meta = {"rid": pend.rid, "cl": pend.client}
+        _send_message(
+            self.env.net, pend.client, 1, self.size, 0,
+            lambda i, n, w: {**meta, "i": i, "n": n},
+        )
+
+    def _on_cfg_ack(self, pend: _Pending) -> None:
+        pend.cfg_acks += 1
+        if pend.cfg_acks == self.config_phase_writes:
+            cfg = self.env.cfg
+            self.env.sim.after(
+                cfg.client_complete_ns + cfg.client_post_ns,
+                lambda: self._broadcast(pend),
+            )
+
+    def _start(self, pend: _Pending) -> None:
+        cfg, sim = self.env.cfg, self.env.sim
+        if self.config_phase_writes:
+            # HyperLoop: write WQE descriptors to each node, wait for acks,
+            # then post the actual data write.
+            for r in range(self.config_phase_writes):
+                node = r + 1
+                delay = cfg.client_post_ns + r * cfg.client_post_extra_ns
+                sim.after(
+                    delay,
+                    lambda node=node: self.env.net.send(
+                        pend.client, node, HYPERLOOP_CONFIG_WIRE,
+                        {"rid": pend.rid, "cl": pend.client, "cfg": 1},
+                    ),
+                )
+        else:
+            sim.after(cfg.client_post_ns, lambda: self._broadcast(pend))
+
+
+class SpinReplicationProtocol(Protocol):
+    """sPIN-Ring / sPIN-PBT: per-packet forwarding by NIC handlers."""
+
+    name = "spin-repl"
+
+    class _Req:
+        __slots__ = ("gate", "processed", "n", "ch_fired")
+
+        def __init__(self):
+            self.gate = RequestGate()
+            self.processed = 0
+            self.n: int | None = None
+            self.ch_fired = False
+
+    def __init__(self, env: Env, size: int, k: int, strategy: ReplStrategy):
+        super().__init__(env)
+        self.size = size
+        self.request_bytes = size
+        self.k = k
+        self.strategy = strategy
+        key = "repl_ring" if strategy == ReplStrategy.RING else "repl_pbt"
+        self.handler_ns = HANDLER_NS[key]
+        self.header_extra = write_header_extra(k)
+        self.storage_nodes = tuple(range(1, k + 1))
+        self.units = {r: env.pspin(r + 1) for r in range(k)}
+        self._reqs: dict[tuple[int, int], SpinReplicationProtocol._Req] = {}
+        for r in range(k):
+            self._install(r + 1, self._mk_node(r))
+
+    def _expected_acks(self) -> int:
+        return self.k
+
+    def _mk_node(self, rank: int):
+        unit = self.units[rank]
+        kids = children_of(rank, self.k, self.strategy)
+        hh, ph, ch = self.handler_ns
+
+        def on_node(pkt) -> None:
+            meta = pkt.meta
+            rid, i = meta["rid"], meta["i"]
+            req = self._reqs.setdefault((rid, rank), self._Req())
+            req.n = meta["n"]
+            emits = [Emit(c + 1, pkt.wire_size, dict(meta)) for c in kids]
+
+            def packet_done() -> None:
+                req.processed += 1
+                if req.processed == req.n and not req.ch_fired:
+                    req.ch_fired = True
+                    del self._reqs[(rid, rank)]
+                    unit.process(
+                        ACK_WIRE,
+                        HandlerSpec(
+                            ch,
+                            [Emit(meta["cl"], ACK_WIRE,
+                                  {"rid": rid, "ack": rank})],
+                        ),
+                    )
+
+            if i == 0:
+                unit.process(pkt.wire_size, HandlerSpec(hh, gate=req.gate))
+            spec = HandlerSpec(ph, emits, on_complete=packet_done,
+                               gate=req.gate)
+            unit.process_gated(pkt.wire_size, spec)
+
+        return on_node
+
+    def _start(self, pend: _Pending) -> None:
+        cfg, net = self.env.cfg, self.env.net
+        meta = {"rid": pend.rid, "cl": pend.client}
+        self.env.sim.after(
+            cfg.client_post_ns,
+            lambda: _send_message(
+                net, pend.client, 1, self.size, self.header_extra,
+                lambda i, n, w: {**meta, "i": i, "n": n},
+            ),
+        )
+
+
+# ---------------------------------------------------------------------------
+# Fig. 15 — erasure coding: sPIN-TriEC vs INEC-TriEC.
+# ---------------------------------------------------------------------------
+
+
+class SpinTriecProtocol(Protocol):
+    """Streaming per-packet TriEC encode on the NIC (section VI-B)."""
+
+    name = "spin-triec"
+
+    class _DataReq:
+        __slots__ = ("gate", "processed", "n", "done")
+
+        def __init__(self):
+            self.gate = RequestGate()
+            self.processed = 0
+            self.n: int | None = None
+            self.done = False
+
+    class _ParReq:
+        __slots__ = ("seq_counts", "seqs_done", "streams_done",
+                     "expected_seqs", "acked")
+
+        def __init__(self):
+            self.seq_counts: dict[int, int] = {}
+            self.seqs_done = 0
+            self.streams_done = 0
+            self.expected_seqs: int | None = None
+            self.acked = False
+
+    def __init__(self, env: Env, block: int, k: int, m: int):
+        super().__init__(env)
+        self.block = block
+        self.request_bytes = block
+        self.k = k
+        self.m = m
+        self.chunk = -(-block // k)
+        self.header_extra = write_header_extra(m)
+        self.storage_nodes = tuple(range(1, k + m + 1))
+        self.data_units = {j: env.pspin(j + 1) for j in range(k)}
+        self.par_units = {i: env.pspin(k + 1 + i) for i in range(m)}
+        self._dreqs: dict[tuple[int, int], SpinTriecProtocol._DataReq] = {}
+        self._preqs: dict[tuple[int, int], SpinTriecProtocol._ParReq] = {}
+        self.first_inject_ns: float | None = None
+        for j in range(k):
+            self._install(j + 1, self._mk_data(j))
+        for pi in range(m):
+            self._install(k + 1 + pi, self._mk_parity(pi))
+
+    def _expected_acks(self) -> int:
+        return self.k + self.m
+
+    def _mk_data(self, j: int):
+        unit = self.data_units[j]
+        hh, _, ch = HANDLER_NS["ec_data_rs32"]
+        k, m = self.k, self.m
+
+        def on_node(pkt) -> None:
+            cfg = self.env.cfg
+            meta = pkt.meta
+            rid, i, n = meta["rid"], meta["i"], meta["n"]
+            req = self._dreqs.setdefault((rid, j), self._DataReq())
+            req.n = n
+            payload = (pkt.wire_size - cfg.rdma_header
+                       - (self.header_extra if i == 0 else 0))
+            emits = [
+                Emit(
+                    k + 1 + pi,
+                    cfg.rdma_header + payload,
+                    {"rid": rid, "cl": meta["cl"], "seq": i, "src": j,
+                     "n": n, "last": i == n - 1},
+                )
+                for pi in range(m)
+            ]
+            compute = ec_data_ph_ns(payload, m)
+
+            def packet_done() -> None:
+                req.processed += 1
+                if req.processed == req.n and not req.done:
+                    req.done = True
+                    del self._dreqs[(rid, j)]
+                    unit.process(
+                        ACK_WIRE,
+                        HandlerSpec(
+                            ch,
+                            [Emit(meta["cl"], ACK_WIRE,
+                                  {"rid": rid, "ack": ("d", j)})],
+                        ),
+                    )
+
+            if i == 0:
+                unit.process(pkt.wire_size, HandlerSpec(hh, gate=req.gate))
+            spec = HandlerSpec(compute, emits, on_complete=packet_done,
+                               gate=req.gate)
+            unit.process_gated(pkt.wire_size, spec)
+
+        return on_node
+
+    def _mk_parity(self, pi: int):
+        unit = self.par_units[pi]
+        _, _, pch = HANDLER_NS["ec_parity"]
+        k = self.k
+
+        def on_node(pkt) -> None:
+            cfg = self.env.cfg
+            meta = pkt.meta
+            rid, seq = meta["rid"], meta["seq"]
+            req = self._preqs.setdefault((rid, pi), self._ParReq())
+            payload = pkt.wire_size - cfg.rdma_header
+
+            def packet_done() -> None:
+                c = req.seq_counts.get(seq, 0) + 1
+                req.seq_counts[seq] = c
+                if c == k:
+                    req.seqs_done += 1
+                if meta["last"]:
+                    req.streams_done += 1
+                    req.expected_seqs = meta["n"]
+                if (
+                    not req.acked
+                    and req.streams_done == k
+                    and req.expected_seqs is not None
+                    and req.seqs_done == req.expected_seqs
+                ):
+                    req.acked = True
+                    del self._preqs[(rid, pi)]
+                    unit.process(
+                        ACK_WIRE,
+                        HandlerSpec(
+                            pch,
+                            [Emit(meta["cl"], ACK_WIRE,
+                                  {"rid": rid, "ack": ("p", pi)})],
+                        ),
+                    )
+
+            compute = ec_parity_ph_ns(payload)
+            unit.process(pkt.wire_size,
+                         HandlerSpec(compute, on_complete=packet_done))
+
+        return on_node
+
+    def _start(self, pend: _Pending) -> None:
+        cfg, net, sim = self.env.cfg, self.env.net, self.env.sim
+        k = self.k
+
+        # Interleaved transmission (section VI-B1): packet i of every chunk
+        # before packet i+1 of any.
+        def inject() -> None:
+            if self.first_inject_ns is None:
+                self.first_inject_ns = sim.now
+            streams = [net.cfg.packets_of(self.chunk, self.header_extra)
+                       for _ in range(k)]
+            nmax = max(len(s) for s in streams)
+            for i in range(nmax):
+                for j in range(k):
+                    if i < len(streams[j]):
+                        net.send(
+                            pend.client,
+                            j + 1,
+                            streams[j][i],
+                            {"rid": pend.rid, "cl": pend.client,
+                             "i": i, "n": len(streams[j])},
+                        )
+
+        post = cfg.client_post_ns + (k - 1) * cfg.client_post_extra_ns
+        sim.after(post, inject)
+
+
+class InecTriecProtocol(Protocol):
+    """INEC-TriEC: chunk-granularity NIC-offloaded EC with host staging.
+
+    Data path per chunk (Fig. 13 left): chunk lands in host memory (PCIe
+    flush), the on-NIC EC engine reads it back over PCIe, encodes, sends m
+    intermediate chunks; parity nodes stage k chunks in host memory, the
+    NIC XOR engine reads them back, writes the final parity.  No packet-
+    level overlap — per-chunk pipelining only (INEC's triggered ops).
+
+    Posting is host-paced per client: at most ``window`` blocks
+    outstanding (the INEC benchmark chains are posted per block by host
+    software); excess requests queue at the client."""
+
+    name = "inec-triec"
+
+    def __init__(self, env: Env, block: int, k: int, m: int,
+                 window: int = INEC_WINDOW):
+        super().__init__(env)
+        self.block = block
+        self.request_bytes = block
+        self.k = k
+        self.m = m
+        self.window = window
+        self.chunk = -(-block // k)
+        self.storage_nodes = tuple(range(1, k + m + 1))
+        # Per-node serial engines: PCIe staging + EC/XOR engine.  Each
+        # engine dispatch pays the triggered-op chain overhead (WAIT WQE +
+        # doorbell).
+        self.pcie = {n: SerialResource(env.sim) for n in self.storage_nodes}
+        self.engine = {n: SerialResource(env.sim) for n in self.storage_nodes}
+        self._got: dict[tuple[int, int], int] = {}
+        self._par_got: dict[tuple[int, int], int] = {}
+        self._outstanding: dict[int, int] = {}   # client -> in-flight blocks
+        self._queued: dict[int, list[_Pending]] = {}
+        self.first_inject_ns: float | None = None
+        for j in range(k):
+            self._install(j + 1, self._mk_data(j))
+        for pi in range(m):
+            self._install(k + 1 + pi, self._mk_parity(pi))
+
+    def _expected_acks(self) -> int:
+        return self.k + self.m
+
+    def _mk_data(self, j: int):
+        node = j + 1
+
+        def on_node(pkt) -> None:
+            cfg, net = self.env.cfg, self.env.net
+            meta = pkt.meta
+            rid, client = meta["rid"], meta["cl"]
+            key = (rid, j)
+            self._got[key] = self._got.get(key, 0) + 1
+            if self._got[key] != meta["n"]:
+                return
+            del self._got[key]
+            chunk, m = self.chunk, self.m
+
+            # full chunk in NIC; flush to host memory:
+            def staged(_s, _e) -> None:
+                def read_back(_s2, _e2) -> None:
+                    def encoded(_s3, _e3) -> None:
+                        for pi in range(m):
+                            _send_message(
+                                net, node, self.k + 1 + pi, chunk, 0,
+                                lambda i, n, w: {"rid": rid, "cl": client,
+                                                 "src": j, "i": i, "n": n},
+                            )
+                        net.send(node, client, ACK_WIRE,
+                                 {"rid": rid, "ack": ("d", j)})
+
+                    self.engine[node].acquire(
+                        INEC_TRIGGER_NS + chunk / INEC_EC_ENGINE_GBPS, encoded
+                    )
+
+                self.pcie[node].acquire(
+                    cfg.pcie_latency_ns + chunk / INEC_PCIE_BW_GBPS, read_back
+                )
+
+            self.pcie[node].acquire(
+                cfg.pcie_latency_ns / 2 + chunk / INEC_PCIE_BW_GBPS, staged
+            )
+
+        return on_node
+
+    def _mk_parity(self, pi: int):
+        node = self.k + 1 + pi
+
+        def on_node(pkt) -> None:
+            cfg, net = self.env.cfg, self.env.net
+            meta = pkt.meta
+            rid, client = meta["rid"], meta["cl"]
+            key = (rid, pi)
+            self._par_got[key] = self._par_got.get(key, 0) + 1
+            # every intermediate chunk stages through host memory:
+            if self._par_got[key] != self.k * meta["n"]:
+                return
+            del self._par_got[key]
+            chunk, k = self.chunk, self.k
+
+            def staged(_s, _e) -> None:
+                def xored(_s2, _e2) -> None:
+                    def written(_s3, _e3) -> None:
+                        net.send(node, client, ACK_WIRE,
+                                 {"rid": rid, "ack": ("p", pi)})
+
+                    self.pcie[node].acquire(
+                        cfg.pcie_latency_ns / 2 + chunk / INEC_PCIE_BW_GBPS,
+                        written,
+                    )
+
+                self.engine[node].acquire(
+                    INEC_TRIGGER_NS + k * chunk / INEC_EC_ENGINE_GBPS, xored
+                )
+
+            # NIC XOR engine reads the k staged chunks back over PCIe.
+            self.pcie[node].acquire(
+                cfg.pcie_latency_ns + k * chunk / INEC_PCIE_BW_GBPS, staged
+            )
+
+        return on_node
+
+    def _inject(self, pend: _Pending) -> None:
+        if self.first_inject_ns is None:
+            self.first_inject_ns = self.env.sim.now
+        for j in range(self.k):
+            _send_message(
+                self.env.net, pend.client, j + 1, self.chunk, 0,
+                lambda i, n, w: {"rid": pend.rid, "cl": pend.client,
+                                 "i": i, "n": n},
+            )
+
+    def _start(self, pend: _Pending) -> None:
+        cfg, sim = self.env.cfg, self.env.sim
+        client = pend.client
+        if self._outstanding.get(client, 0) < self.window:
+            self._outstanding[client] = self._outstanding.get(client, 0) + 1
+            post = cfg.client_post_ns + (self.k - 1) * cfg.client_post_extra_ns
+            sim.after(post, lambda: self._inject(pend))
+        else:
+            self._queued.setdefault(client, []).append(pend)
+
+    def _on_request_complete(self, pend: _Pending) -> None:
+        client = pend.client
+        queue = self._queued.get(client)
+        if queue:
+            # Re-armed chains pay only client_post_ns (the k WQEs were
+            # batched when the chain was configured) — matches the
+            # pre-refactor host-pacing model.
+            nxt = queue.pop(0)
+            self.env.sim.after(self.env.cfg.client_post_ns,
+                               lambda: self._inject(nxt))
+        else:
+            self._outstanding[client] -= 1
+
+
+# ---------------------------------------------------------------------------
+# Protocol registry (used by the workload engine and benchmarks).
+# ---------------------------------------------------------------------------
+
+
+def make_protocol(
+    env: Env,
+    name: str,
+    size: int,
+    k: int = 4,
+    m: int = 2,
+    strategy: ReplStrategy = ReplStrategy.RING,
+) -> Protocol:
+    """Build a protocol instance by name on a shared :class:`Env`.
+
+    ``size`` is the write/block payload; ``k``/``m``/``strategy`` apply to
+    the replication and erasure protocols."""
+    cfg = env.cfg
+    host_overhead = cfg.pcie_latency_ns / 2 + cfg.host_notify_ns
+    factories: dict[str, Callable[[], Protocol]] = {
+        "raw-write": lambda: RawWriteProtocol(env, size),
+        "spin-write": lambda: SpinAuthWriteProtocol(env, size),
+        "rpc-write": lambda: RpcWriteProtocol(env, size),
+        "rpc-rdma-write": lambda: RpcRdmaWriteProtocol(env, size),
+        "rdma-flat": lambda: RdmaFlatProtocol(env, size, k),
+        "cpu-ring": lambda: ChunkedTreeProtocol(
+            env, size, k, ReplStrategy.RING, host_overhead,
+            cfg.host_memcpy_GBps / 2),
+        "cpu-pbt": lambda: ChunkedTreeProtocol(
+            env, size, k, ReplStrategy.PBT, host_overhead,
+            cfg.host_memcpy_GBps / 2),
+        "hyperloop": lambda: ChunkedTreeProtocol(
+            env, size, k, ReplStrategy.RING, HYPERLOOP_TRIGGER_NS, None,
+            chunk=size, config_phase_writes=k),
+        "spin-ring": lambda: SpinReplicationProtocol(
+            env, size, k, ReplStrategy.RING),
+        "spin-pbt": lambda: SpinReplicationProtocol(
+            env, size, k, ReplStrategy.PBT),
+        "spin-repl": lambda: SpinReplicationProtocol(env, size, k, strategy),
+        "spin-triec": lambda: SpinTriecProtocol(env, size, k, m),
+        "inec-triec": lambda: InecTriecProtocol(env, size, k, m),
+    }
+    if name not in factories:
+        raise ValueError(
+            f"unknown protocol {name!r}; available: {sorted(factories)}"
+        )
+    return factories[name]()
+
+
+PROTOCOL_NAMES = (
+    "raw-write", "spin-write", "rpc-write", "rpc-rdma-write", "rdma-flat",
+    "cpu-ring", "cpu-pbt", "hyperloop", "spin-ring", "spin-pbt",
+    "spin-triec", "inec-triec",
+)
+
+
+def run_single_shot(
+    name: str,
+    size: int,
+    k: int = 4,
+    m: int = 2,
+    cfg: NetConfig | None = None,
+) -> Result:
+    """One-request reference latency for protocol ``name`` via the
+    original single-shot runners (the N=1 parity baseline used by the
+    contention benchmark and the workload tests)."""
+    runners: dict[str, Callable[[], Result]] = {
+        "raw-write": lambda: run_raw_write(size, cfg=cfg),
+        "spin-write": lambda: run_spin_auth_write(size, cfg=cfg),
+        "rpc-write": lambda: run_rpc_write(size, cfg=cfg),
+        "rpc-rdma-write": lambda: run_rpc_rdma_write(size, cfg=cfg),
+        "rdma-flat": lambda: run_rdma_flat(size, k, cfg=cfg),
+        "cpu-ring": lambda: run_cpu_ring(size, k, cfg=cfg),
+        "cpu-pbt": lambda: run_cpu_pbt(size, k, cfg=cfg),
+        "hyperloop": lambda: run_hyperloop(size, k, cfg=cfg),
+        "spin-ring": lambda: run_spin_replication(
+            size, k, ReplStrategy.RING, cfg=cfg),
+        "spin-pbt": lambda: run_spin_replication(
+            size, k, ReplStrategy.PBT, cfg=cfg),
+        "spin-triec": lambda: run_spin_triec(size, k, m, cfg=cfg),
+        "inec-triec": lambda: run_inec_triec(size, k, m, cfg=cfg),
+    }
+    if name not in runners:
+        raise ValueError(
+            f"unknown protocol {name!r}; available: {sorted(runners)}"
+        )
+    return runners[name]()
+
+
+# ---------------------------------------------------------------------------
+# Single-shot runners (original API): one client, sequential requests.
+# ---------------------------------------------------------------------------
+
+
+def _run_single(proto: Protocol, env: Env) -> Result:
+    out: dict[str, Result] = {}
+    proto.issue(CLIENT, on_done=lambda res: out.setdefault("res", res))
+    env.sim.run()
+    assert "res" in out, "request did not complete"
+    return out["res"]
+
+
+def run_raw_write(size: int, cfg: NetConfig | None = None) -> Result:
+    env = Env(cfg)
+    return _run_single(RawWriteProtocol(env, size), env)
+
+
+def run_spin_auth_write(
+    size: int,
+    cfg: NetConfig | None = None,
+    pcfg: PsPINConfig | None = None,
+) -> Result:
+    env = Env(cfg, pcfg)
+    proto = SpinAuthWriteProtocol(env, size)
+    res = _run_single(proto, env)
+    res.extra.update(
+        {"handler_ns": proto.unit.handler_time_ns,
+         "handlers": proto.unit.handler_count}
+    )
+    return res
+
+
+def run_rpc_write(size: int, cfg: NetConfig | None = None) -> Result:
+    env = Env(cfg)
+    return _run_single(RpcWriteProtocol(env, size), env)
+
+
+def run_rpc_rdma_write(size: int, cfg: NetConfig | None = None) -> Result:
+    env = Env(cfg)
+    return _run_single(RpcRdmaWriteProtocol(env, size), env)
+
+
+def run_rdma_flat(size: int, k: int, cfg: NetConfig | None = None) -> Result:
+    env = Env(cfg)
+    return _run_single(RdmaFlatProtocol(env, size, k), env)
 
 
 def run_chunked_tree(
@@ -313,121 +1241,14 @@ def run_chunked_tree(
     cfg: NetConfig | None = None,
     config_phase_writes: int = 0,
 ) -> Result:
-    """Chunked store-and-forward broadcast over a ring/tree.
-
-    Models both CPU-based replication (per-chunk host notify + buffer copy)
-    and RDMA-HyperLoop (per-chunk WQE trigger, optional config phase).
-    Every node acks the client when it holds the full message.
-    """
-    cfg = cfg or NetConfig()
-    sim, net = _mk(cfg)
-    done = _Completion(sim, k)
-    if chunk is None:
-        nchunks = optimal_chunk_count(
-            size, k, strategy, cfg.bytes_per_ns * 1e9, per_chunk_overhead_ns * 1e-9
-        )
-        chunk = -(-size // nchunks)
-    chunks = _chunk_counts(size, chunk)
-    expected_bytes = size
-
-    class NodeState:
-        def __init__(self, rank):
-            self.rank = rank
-            self.received = 0
-            self.chunk_acc = 0
-            self.next_chunk = 0
-            self.acked = False
-
-    states = {r: NodeState(r) for r in range(k)}
-
-    def forward_chunk(rank: int, chunk_idx: int) -> None:
-        st = states[rank]
-        kids = children_of(rank, k, strategy)
-        for c in kids:
-            _send_message(
-                net,
-                rank + 1,
-                c + 1,
-                chunks[chunk_idx],
-                0,
-                lambda i, n, w: {"i": i, "n": n, "chunk": chunk_idx},
-            )
-
-    def mk_handler(rank):
-        st = states[rank]
-
-        def on_node(pkt):
-            payload = pkt.wire_size - cfg.rdma_header
-            if pkt.meta.get("hdr"):
-                payload -= pkt.meta["hdr"]
-            st.received += payload
-            st.chunk_acc += payload
-            while st.next_chunk < len(chunks) and st.chunk_acc >= chunks[st.next_chunk]:
-                st.chunk_acc -= chunks[st.next_chunk]
-                ci = st.next_chunk
-                st.next_chunk += 1
-                delay = per_chunk_overhead_ns
-                if copy_GBps is not None:
-                    delay += chunks[ci] / copy_GBps
-                sim.after(delay, lambda ci=ci: forward_chunk(rank, ci))
-            if st.received >= expected_bytes and not st.acked:
-                st.acked = True
-                sim.after(
-                    cfg.nic_fixed_ns,
-                    lambda: net.send(rank + 1, CLIENT, ACK_WIRE, {"ack": rank}),
-                )
-
-        return on_node
-
-    for r in range(k):
-        net.node(r + 1).on_receive = mk_handler(r)
-    net.node(CLIENT).on_receive = lambda pkt: done.ack()
-
-    def start_broadcast():
-        _send_message(net, CLIENT, 1, size, 0, lambda i, n, w: {"i": i, "n": n})
-
-    if config_phase_writes:
-        # HyperLoop: write WQE descriptors to each node, wait for acks,
-        # then post the actual data write.
-        acked = {"n": 0}
-        orig = net.node(CLIENT).on_receive
-
-        def on_client_cfg(pkt):
-            if pkt.meta.get("cfg_ack"):
-                acked["n"] += 1
-                if acked["n"] == config_phase_writes:
-                    net.node(CLIENT).on_receive = orig
-                    sim.after(
-                        cfg.client_complete_ns + cfg.client_post_ns, start_broadcast
-                    )
-            else:
-                orig(pkt)
-
-        net.node(CLIENT).on_receive = on_client_cfg
-        for r in range(config_phase_writes):
-            node = r + 1
-
-            def mk_cfg(node):
-                inner = net.node(node).on_receive
-
-                def h(pkt):
-                    if pkt.meta.get("cfg"):
-                        sim.after(
-                            cfg.nic_fixed_ns,
-                            lambda: net.send(node, CLIENT, ACK_WIRE, {"cfg_ack": 1}),
-                        )
-                    else:
-                        inner(pkt)
-
-                return h
-
-            net.node(node).on_receive = mk_cfg(node)
-            t = cfg.client_post_ns + r * cfg.client_post_extra_ns
-            sim.at(t, lambda node=node: net.send(CLIENT, node, HYPERLOOP_CONFIG_WIRE, {"cfg": 1}))
-    else:
-        sim.at(cfg.client_post_ns, start_broadcast)
-    sim.run()
-    return Result(done.done_at + cfg.client_complete_ns, {"chunk": chunk})
+    env = Env(cfg)
+    proto = ChunkedTreeProtocol(
+        env, size, k, strategy, per_chunk_overhead_ns, copy_GBps,
+        chunk=chunk, config_phase_writes=config_phase_writes,
+    )
+    res = _run_single(proto, env)
+    res.extra["chunk"] = proto.chunk
+    return res
 
 
 def run_cpu_ring(size: int, k: int, cfg: NetConfig | None = None) -> Result:
@@ -475,93 +1296,30 @@ def run_spin_replication(
     num_writes: int = 1,
     measure: str = "latency",
 ) -> Result:
-    """sPIN-Ring / sPIN-PBT: per-packet forwarding by NIC handlers.
+    """sPIN-Ring / sPIN-PBT single-shot runner.
 
     ``num_writes > 1`` streams back-to-back writes for the goodput plot
     (Fig. 9 right): returns ingested GB/s at the primary in ``extra``.
     """
-    cfg = cfg or NetConfig()
-    sim, net = _mk(cfg)
-    key = "repl_ring" if strategy == ReplStrategy.RING else "repl_pbt"
-    hh, ph, ch = HANDLER_NS[key]
-    pspins = {r: PsPINUnit(sim, net, r + 1, pcfg) for r in range(k)}
-    total_acks = k * num_writes
-    done = _Completion(sim, total_acks)
-    header_extra = write_header_extra(k)
-
-    class Req:
-        def __init__(self, wid, rank):
-            self.gate = RequestGate()
-            self.processed = 0
-            self.n = None
-            self.ch_fired = False
-
-    reqs: dict[tuple[int, int], Req] = {}
-
-    def mk_handler(rank):
-        unit = pspins[rank]
-        kids = children_of(rank, k, strategy)
-
-        def on_node(pkt):
-            meta = pkt.meta
-            wid, i, n = meta["wid"], meta["i"], meta["n"]
-            req = reqs.setdefault((wid, rank), Req(wid, rank))
-            req.n = n
-            emits = [
-                Emit(c + 1, pkt.wire_size, dict(meta)) for c in kids
-            ]
-
-            def packet_done():
-                req.processed += 1
-                if req.processed == req.n and not req.ch_fired:
-                    req.ch_fired = True
-                    unit.process(
-                        ACK_WIRE,
-                        HandlerSpec(
-                            ch, [Emit(CLIENT, ACK_WIRE, {"ack": rank, "wid": wid})]
-                        ),
-                    )
-
-            if i == 0:
-                unit.process(pkt.wire_size, HandlerSpec(hh, gate=req.gate))
-            spec = HandlerSpec(ph, emits, on_complete=packet_done, gate=req.gate)
-            unit.process_gated(pkt.wire_size, spec)
-
-        return on_node
-
-    for r in range(k):
-        net.node(r + 1).on_receive = mk_handler(r)
-    net.node(CLIENT).on_receive = lambda pkt: done.ack()
+    env = Env(cfg, pcfg)
+    proto = SpinReplicationProtocol(env, size, k, strategy)
+    cfg = env.cfg
     for w in range(num_writes):
-        t = cfg.client_post_ns + w * cfg.client_post_extra_ns
-        sim.at(
-            t,
-            lambda w=w: _send_message(
-                net,
-                CLIENT,
-                1,
-                size,
-                header_extra,
-                lambda i, n, wsz, w=w: {"wid": w, "i": i, "n": n},
-            ),
-        )
-    sim.run()
-    assert done.done_at is not None
-    res = Result(done.done_at + cfg.client_complete_ns)
+        # back-to-back posts: one batched WQE every client_post_extra_ns
+        env.sim.at(w * cfg.client_post_extra_ns, lambda: proto.issue(CLIENT))
+    env.sim.run()
+    assert proto.completed == num_writes
+    res = Result(proto.last_done_at + cfg.client_complete_ns)
     if num_writes > 1:
+        primary = env.pspin(1)
         ingested = size * num_writes
-        res.extra["goodput_GBps"] = ingested / done.done_at
-        res.extra["hpu_peak"] = pspins[0].hpus.peak
-        res.extra["stall_ns"] = pspins[0].stall_time_ns
+        res.extra["goodput_GBps"] = ingested / proto.last_done_at
+        res.extra["hpu_peak"] = primary.hpus.peak
+        res.extra["stall_ns"] = primary.stall_time_ns
         res.extra["mean_handler_ns"] = (
-            pspins[0].handler_time_ns / max(1, pspins[0].handler_count)
+            primary.handler_time_ns / max(1, primary.handler_count)
         )
     return res
-
-
-# ---------------------------------------------------------------------------
-# Fig. 15 — erasure coding: sPIN-TriEC vs INEC-TriEC.
-# ---------------------------------------------------------------------------
 
 
 def run_spin_triec(
@@ -572,140 +1330,16 @@ def run_spin_triec(
     pcfg: PsPINConfig | None = None,
     num_blocks: int = 1,
 ) -> Result:
-    """Streaming per-packet TriEC encode on the NIC (section VI-B)."""
-    cfg = cfg or NetConfig()
-    sim, net = _mk(cfg)
-    chunk = -(-block // k)
-    data_units = {j: PsPINUnit(sim, net, j + 1, pcfg) for j in range(k)}
-    par_units = {i: PsPINUnit(sim, net, k + 1 + i, pcfg) for i in range(m)}
-    done = _Completion(sim, (k + m) * num_blocks)
-    hh, _, ch = HANDLER_NS["ec_data_rs32"]
-    phh, _, pch = HANDLER_NS["ec_parity"]
-    header_extra = write_header_extra(m)
-
-    class DataReq:
-        def __init__(self):
-            self.gate = RequestGate()
-            self.processed = 0
-            self.n = None
-            self.done = False
-
-    class ParReq:
-        def __init__(self):
-            self.seq_counts: dict[int, int] = {}
-            self.seqs_done = 0
-            self.streams_done = 0
-            self.expected_seqs = None
-            self.acked = False
-
-    dreqs: dict[tuple[int, int], DataReq] = {}
-    preqs: dict[tuple[int, int], ParReq] = {}
-
-    def mk_data(j):
-        unit = data_units[j]
-
-        def on_node(pkt):
-            meta = pkt.meta
-            bid, i, n = meta["bid"], meta["i"], meta["n"]
-            req = dreqs.setdefault((bid, j), DataReq())
-            req.n = n
-            payload = pkt.wire_size - cfg.rdma_header - (header_extra if i == 0 else 0)
-            emits = [
-                Emit(
-                    k + 1 + pi,
-                    cfg.rdma_header + payload,
-                    {"bid": bid, "seq": i, "src": j, "n": n, "last": i == n - 1},
-                )
-                for pi in range(m)
-            ]
-            compute = ec_data_ph_ns(payload, m)
-
-            def packet_done():
-                req.processed += 1
-                if req.processed == req.n and not req.done:
-                    req.done = True
-                    unit.process(
-                        ACK_WIRE,
-                        HandlerSpec(
-                            ch, [Emit(CLIENT, ACK_WIRE, {"ack": ("d", j), "bid": bid})]
-                        ),
-                    )
-
-            if i == 0:
-                unit.process(pkt.wire_size, HandlerSpec(hh, gate=req.gate))
-            spec = HandlerSpec(compute, emits, on_complete=packet_done, gate=req.gate)
-            unit.process_gated(pkt.wire_size, spec)
-
-        return on_node
-
-    def mk_parity(pi):
-        unit = par_units[pi]
-
-        def on_node(pkt):
-            meta = pkt.meta
-            bid, seq = meta["bid"], meta["seq"]
-            req = preqs.setdefault((bid, pi), ParReq())
-            payload = pkt.wire_size - cfg.rdma_header
-
-            def packet_done():
-                c = req.seq_counts.get(seq, 0) + 1
-                req.seq_counts[seq] = c
-                if c == k:
-                    req.seqs_done += 1
-                if meta["last"]:
-                    req.streams_done += 1
-                    req.expected_seqs = meta["n"]
-                if (
-                    not req.acked
-                    and req.streams_done == k
-                    and req.expected_seqs is not None
-                    and req.seqs_done == req.expected_seqs
-                ):
-                    req.acked = True
-                    unit.process(
-                        ACK_WIRE,
-                        HandlerSpec(
-                            pch,
-                            [Emit(CLIENT, ACK_WIRE, {"ack": ("p", pi), "bid": bid})],
-                        ),
-                    )
-
-            compute = ec_parity_ph_ns(payload)
-            unit.process(pkt.wire_size, HandlerSpec(compute, on_complete=packet_done))
-
-        return on_node
-
-    for j in range(k):
-        net.node(j + 1).on_receive = mk_data(j)
-    for pi in range(m):
-        net.node(k + 1 + pi).on_receive = mk_parity(pi)
-    net.node(CLIENT).on_receive = lambda pkt: done.ack()
-
-    # Interleaved transmission (section VI-B1): packet i of every chunk
-    # before packet i+1 of any.
-    def inject():
-        for b in range(num_blocks):
-            streams = [
-                net.cfg.packets_of(chunk, header_extra) for _ in range(k)
-            ]
-            nmax = max(len(s) for s in streams)
-            for i in range(nmax):
-                for j in range(k):
-                    if i < len(streams[j]):
-                        net.send(
-                            CLIENT,
-                            j + 1,
-                            streams[j][i],
-                            {"bid": b, "i": i, "n": len(streams[j])},
-                        )
-
-    post = cfg.client_post_ns + (k - 1) * cfg.client_post_extra_ns
-    sim.at(post, inject)
-    sim.run()
-    assert done.done_at is not None
-    res = Result(done.done_at + cfg.client_complete_ns)
+    env = Env(cfg, pcfg)
+    proto = SpinTriecProtocol(env, block, k, m)
+    for _ in range(num_blocks):
+        proto.issue(CLIENT)
+    env.sim.run()
+    assert proto.completed == num_blocks
+    res = Result(proto.last_done_at + env.cfg.client_complete_ns)
     if num_blocks > 1:
-        res.extra["bandwidth_GBps"] = block * num_blocks / (done.done_at - post)
+        elapsed = proto.last_done_at - proto.first_inject_ns
+        res.extra["bandwidth_GBps"] = block * num_blocks / elapsed
     return res
 
 
@@ -716,149 +1350,16 @@ def run_inec_triec(
     cfg: NetConfig | None = None,
     num_blocks: int = 1,
 ) -> Result:
-    """INEC-TriEC: chunk-granularity NIC-offloaded EC with host staging.
-
-    Data path per chunk (Fig. 13 left): chunk lands in host memory (PCIe
-    flush), the on-NIC EC engine reads it back over PCIe, encodes, sends m
-    intermediate chunks; parity nodes stage k chunks in host memory, the
-    NIC XOR engine reads them back, writes the final parity.  No packet-
-    level overlap — per-chunk pipelining only (INEC's triggered ops).
-    """
-    cfg = cfg or NetConfig()
-    sim, net = _mk(cfg)
-    chunk = -(-block // k)
-    done = _Completion(sim, (k + m) * num_blocks)
-    # Per-node serial engines: PCIe staging + EC/XOR engine.  Each engine
-    # dispatch pays the triggered-op chain overhead (WAIT WQE + doorbell).
-    pcie = {n: SerialResource(sim) for n in range(1, k + m + 1)}
-    engine = {n: SerialResource(sim) for n in range(1, k + m + 1)}
-
-    got: dict[tuple[int, int], int] = {}
-    par_got: dict[tuple[int, int], int] = {}
-
-    def mk_data(j):
-        node = j + 1
-
-        def on_node(pkt):
-            meta = pkt.meta
-            bid = meta["bid"]
-            key = (bid, j)
-            got[key] = got.get(key, 0) + 1
-            if got[key] != meta["n"]:
-                return
-
-            # full chunk in NIC; flush to host memory:
-            def staged(_s, _e):
-                def read_back(_s2, _e2):
-                    def encoded(_s3, _e3):
-                        for pi in range(m):
-                            _send_message(
-                                net,
-                                node,
-                                k + 1 + pi,
-                                chunk,
-                                0,
-                                lambda i, n, w: {
-                                    "bid": bid,
-                                    "src": j,
-                                    "i": i,
-                                    "n": n,
-                                },
-                            )
-                        net.send(node, CLIENT, ACK_WIRE, {"ack": ("d", j), "bid": bid})
-
-                    engine[node].acquire(
-                        INEC_TRIGGER_NS + chunk / INEC_EC_ENGINE_GBPS, encoded
-                    )
-
-                pcie[node].acquire(
-                    cfg.pcie_latency_ns + chunk / INEC_PCIE_BW_GBPS, read_back
-                )
-
-            pcie[node].acquire(
-                cfg.pcie_latency_ns / 2 + chunk / INEC_PCIE_BW_GBPS, staged
-            )
-
-        return on_node
-
-    def mk_parity(pi):
-        node = k + 1 + pi
-
-        def on_node(pkt):
-            meta = pkt.meta
-            bid = meta["bid"]
-            key = (bid, pi)
-            par_got[key] = par_got.get(key, 0) + 1
-            # every intermediate chunk stages through host memory:
-            if par_got[key] != k * meta["n"]:
-                return
-
-            def staged(_s, _e):
-                def xored(_s2, _e2):
-                    def written(_s3, _e3):
-                        net.send(
-                            node, CLIENT, ACK_WIRE, {"ack": ("p", pi), "bid": bid}
-                        )
-
-                    pcie[node].acquire(
-                        cfg.pcie_latency_ns / 2 + chunk / INEC_PCIE_BW_GBPS, written
-                    )
-
-                engine[node].acquire(
-                    INEC_TRIGGER_NS + k * chunk / INEC_EC_ENGINE_GBPS, xored
-                )
-
-            # NIC XOR engine reads the k staged chunks back over PCIe.
-            pcie[node].acquire(
-                cfg.pcie_latency_ns + k * chunk / INEC_PCIE_BW_GBPS, staged
-            )
-
-        return on_node
-
-    for j in range(k):
-        net.node(j + 1).on_receive = mk_data(j)
-    for pi in range(m):
-        net.node(k + 1 + pi).on_receive = mk_parity(pi)
-
-    # Host-paced posting: at most INEC_WINDOW blocks outstanding (the INEC
-    # benchmark chains are posted per block by host software).
-    state = {"next": 0, "completed": {}}
-
-    def inject_block(b: int) -> None:
-        for j in range(k):
-            _send_message(
-                net,
-                CLIENT,
-                j + 1,
-                chunk,
-                0,
-                lambda i, n, w, b=b: {"bid": b, "i": i, "n": n},
-            )
-
-    def on_client(pkt):
-        done.ack()
-        bid = pkt.meta["bid"]
-        state["completed"][bid] = state["completed"].get(bid, 0) + 1
-        if state["completed"][bid] == k + m and state["next"] < num_blocks:
-            b = state["next"]
-            state["next"] += 1
-            sim.after(cfg.client_post_ns, lambda: inject_block(b))
-
-    net.node(CLIENT).on_receive = on_client
-    post = cfg.client_post_ns + (k - 1) * cfg.client_post_extra_ns
-
-    def start():
-        first = min(INEC_WINDOW, num_blocks)
-        state["next"] = first
-        for b in range(first):
-            inject_block(b)
-
-    sim.at(post, start)
-    sim.run()
-    assert done.done_at is not None
-    res = Result(done.done_at + cfg.client_complete_ns)
+    env = Env(cfg)
+    proto = InecTriecProtocol(env, block, k, m)
+    for _ in range(num_blocks):
+        proto.issue(CLIENT)
+    env.sim.run()
+    assert proto.completed == num_blocks
+    res = Result(proto.last_done_at + env.cfg.client_complete_ns)
     if num_blocks > 1:
-        res.extra["bandwidth_GBps"] = block * num_blocks / (done.done_at - post)
+        elapsed = proto.last_done_at - proto.first_inject_ns
+        res.extra["bandwidth_GBps"] = block * num_blocks / elapsed
     return res
 
 

@@ -117,6 +117,10 @@ class PsPINUnit:
         self.handler_count = 0
         self.stall_time_ns = 0.0
 
+    def hpu_wait_ns(self) -> float:
+        """Cumulative time packets spent queued for an HPU."""
+        return self.hpus.total_wait_ns
+
     def process(self, wire_size: int, spec: HandlerSpec) -> None:
         """Run the packet pipeline + handler for one received packet."""
         t_ready = self.sim.now + self.cfg.pipeline_ns(wire_size)

@@ -1,0 +1,318 @@
+"""Multi-client workload engine over the protocol simulators.
+
+The paper's headline numbers (Figs. 6/9/15) are single-request latencies
+and streamed single-client goodput; the ROADMAP's north-star scenario is
+*contention* — many clients with many outstanding requests fighting over
+link ports, HPU pools, and host CPUs.  This module drives N concurrent
+clients with configurable arrival processes against any protocol factory
+from :mod:`repro.sim.protocols` and collects per-request latency
+percentiles, sustained goodput, and queue-depth statistics.
+
+Arrival processes (per client):
+
+  closed   closed-loop: next request issues when the previous completes
+           (plus optional think time) — classic benchmark loop.
+  poisson  open-loop: exponential inter-arrival times at a configured
+           offered load, independent of completions (models millions of
+           independent users behind a load balancer).
+  bursty   open-loop: back-to-back bursts of ``burst_size`` requests every
+           ``burst_gap_ns`` — models batched commits / checkpoint flushes.
+
+Open-loop arrivals admit at most ``max_outstanding`` in-flight requests
+per client (admission control); excess arrivals are *dropped* and counted,
+so overload shows up as drops + queueing rather than an unbounded heap.
+
+Everything is deterministic: a seeded ``random.Random`` drives arrivals,
+and the discrete-event core has no other nondeterminism, so the same
+:class:`Scenario` always produces the identical event trace and metrics.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import random
+
+from repro.core.packets import ReplStrategy
+from repro.sim.network import NetConfig
+from repro.sim.protocols import (
+    CLIENT,
+    Env,
+    Protocol,
+    Result,
+    make_protocol,
+)
+from repro.sim.pspin import PsPINConfig
+
+KiB = 1024
+
+
+def client_node_ids(n: int) -> list[int]:
+    """Client ids 0, -1, -2, ... (storage nodes are the positive ids)."""
+    return [CLIENT - i for i in range(n)]
+
+
+@dataclasses.dataclass
+class Scenario:
+    """One contention experiment: who sends what, how fast, to which
+    protocol."""
+
+    protocol: str = "spin-write"
+    size: int = 64 * KiB               # payload per request (EC: block)
+    num_clients: int = 4
+    arrival: str = "closed"            # closed | poisson | bursty
+    requests_per_client: int = 8
+    think_ns: float = 0.0              # closed-loop think time
+    offered_load_GBps: float | None = None  # open-loop aggregate offered load
+    burst_size: int = 4
+    burst_gap_ns: float = 100_000.0
+    max_outstanding: int = 64          # per-client admission cap (open loop)
+    duration_ns: float | None = None   # optional horizon (leaves in-flight)
+    seed: int = 0
+    # protocol parameters:
+    k: int = 4
+    m: int = 2
+    strategy: ReplStrategy = ReplStrategy.RING
+
+    def per_client_gap_ns(self, cfg: NetConfig | None = None) -> float:
+        """Mean open-loop inter-arrival gap per client (``cfg``: the
+        workload's actual network config, for the default load)."""
+        if self.offered_load_GBps is None:
+            # default: a moderate load — each client offers a quarter of
+            # the configured line rate's per-request service time
+            return 4.0 * self.size / (cfg or NetConfig()).bytes_per_ns
+        per_client = self.offered_load_GBps / self.num_clients  # bytes/ns
+        return self.size / per_client
+
+
+class Metrics:
+    """Shared metrics sink: request ledger + queue-depth samples."""
+
+    def __init__(self) -> None:
+        self.latencies_ns: list[float] = []
+        self.issued = 0
+        self.completed = 0
+        self.dropped = 0
+        self.bytes_completed = 0
+        self.first_issue_ns: float | None = None
+        self.last_done_ns = 0.0
+        self.hpu_queue_peak = 0
+        self.ingress_queue_peak = 0
+        self.cpu_queue_peak = 0
+
+    # -- ledger -------------------------------------------------------------
+
+    def on_issue(self, now: float) -> None:
+        self.issued += 1
+        if self.first_issue_ns is None:
+            self.first_issue_ns = now
+
+    def on_drop(self) -> None:
+        self.dropped += 1
+
+    def on_complete(self, now: float, latency_ns: float, nbytes: int) -> None:
+        self.completed += 1
+        self.latencies_ns.append(latency_ns)
+        self.bytes_completed += nbytes
+        self.last_done_ns = now
+
+    @property
+    def in_flight(self) -> int:
+        return self.issued - self.completed - self.dropped
+
+    # -- queue stats (exact peaks from the engine's resource counters) -------
+
+    def finalize_queues(self, env: Env, proto: Protocol) -> None:
+        """Pull the exact peak queue depths tracked by the resources
+        themselves (SerialResource/Pool.peak_queued) — event-time sampling
+        would systematically under-report the maxima."""
+        self.hpu_queue_peak = max(
+            (u.hpus.peak_queued for u in env.pspin_units()), default=0
+        )
+        self.ingress_queue_peak = max(
+            (env.net.node(s).ingress.peak_queued
+             for s in proto.storage_nodes),
+            default=0,
+        )
+        self.cpu_queue_peak = max(
+            (c.peak_queued for c in env.host_cpus()), default=0
+        )
+
+    # -- summary ------------------------------------------------------------
+
+    def percentile_ns(self, p: float) -> float:
+        """Nearest-rank percentile of completed-request latency."""
+        if not self.latencies_ns:
+            return math.nan
+        s = sorted(self.latencies_ns)
+        rank = max(1, math.ceil(p / 100.0 * len(s)))
+        return s[rank - 1]
+
+    def goodput_GBps(self) -> float:
+        if self.first_issue_ns is None or not self.bytes_completed:
+            return 0.0
+        elapsed = self.last_done_ns - self.first_issue_ns
+        return self.bytes_completed / elapsed if elapsed > 0 else 0.0
+
+    def report(self) -> dict:
+        lat = self.latencies_ns
+        return {
+            "issued": self.issued,
+            "completed": self.completed,
+            "dropped": self.dropped,
+            "in_flight": self.in_flight,
+            "p50_us": self.percentile_ns(50) / 1e3,
+            "p95_us": self.percentile_ns(95) / 1e3,
+            "p99_us": self.percentile_ns(99) / 1e3,
+            "mean_us": (sum(lat) / len(lat) / 1e3) if lat else math.nan,
+            "max_us": (max(lat) / 1e3) if lat else math.nan,
+            "goodput_GBps": self.goodput_GBps(),
+            "hpu_queue_peak": self.hpu_queue_peak,
+            "ingress_queue_peak": self.ingress_queue_peak,
+            "cpu_queue_peak": self.cpu_queue_peak,
+        }
+
+
+class Workload:
+    """Drive one :class:`Scenario` to completion on a fresh :class:`Env`."""
+
+    def __init__(
+        self,
+        scenario: Scenario,
+        cfg: NetConfig | None = None,
+        pcfg: PsPINConfig | None = None,
+    ):
+        self.sc = scenario
+        self.env = Env(cfg, pcfg)
+        self.proto = make_protocol(
+            self.env, scenario.protocol, scenario.size,
+            k=scenario.k, m=scenario.m, strategy=scenario.strategy,
+        )
+        self.metrics = Metrics()
+        self._outstanding: dict[int, int] = {}
+
+    # -- request plumbing ----------------------------------------------------
+
+    def _issue(self, client: int, after_done=None) -> None:
+        sim = self.env.sim
+        self.metrics.on_issue(sim.now)
+        self._outstanding[client] = self._outstanding.get(client, 0) + 1
+
+        def done(res: Result) -> None:
+            self._outstanding[client] -= 1
+            self.metrics.on_complete(
+                sim.now, res.latency_ns, self.proto.request_bytes
+            )
+            if after_done is not None:
+                after_done()
+
+        self.proto.issue(client, on_done=done)
+
+    # -- arrival processes ---------------------------------------------------
+
+    def _schedule_closed(self, client: int) -> None:
+        sc, sim = self.sc, self.env.sim
+        remaining = {"n": sc.requests_per_client}
+
+        def next_request() -> None:
+            if remaining["n"] == 0:
+                return
+            remaining["n"] -= 1
+            self._issue(client, after_done=maybe_next)
+
+        def maybe_next() -> None:
+            if remaining["n"] > 0:
+                if sc.think_ns > 0:
+                    sim.after(sc.think_ns, next_request)
+                else:
+                    next_request()
+
+        sim.at(0.0, next_request)
+
+    def _open_loop_arrivals(self, client: int, rnd: random.Random) -> list[float]:
+        sc = self.sc
+        times: list[float] = []
+        if sc.arrival == "poisson":
+            gap = sc.per_client_gap_ns(self.env.cfg)
+            t = 0.0
+            for _ in range(sc.requests_per_client):
+                t += rnd.expovariate(1.0 / gap)
+                times.append(t)
+        elif sc.arrival == "bursty":
+            issued = 0
+            burst = 0
+            while issued < sc.requests_per_client:
+                t = burst * sc.burst_gap_ns
+                for _ in range(min(sc.burst_size,
+                                   sc.requests_per_client - issued)):
+                    times.append(t)
+                    issued += 1
+                burst += 1
+        else:
+            raise ValueError(f"unknown arrival process {sc.arrival!r}")
+        return times
+
+    def _schedule_open(self, client: int, rnd: random.Random) -> None:
+        sc, sim = self.sc, self.env.sim
+        for t in self._open_loop_arrivals(client, rnd):
+            def arrive(client=client) -> None:
+                if self._outstanding.get(client, 0) >= sc.max_outstanding:
+                    # admission control: the arrival happened (issued) but
+                    # is shed before reaching the network
+                    self.metrics.on_issue(self.env.sim.now)
+                    self.metrics.on_drop()
+                    return
+                self._issue(client)
+
+            sim.at(t, arrive)
+
+    # -- run -----------------------------------------------------------------
+
+    def run(self) -> dict:
+        sc = self.sc
+        for idx, client in enumerate(client_node_ids(sc.num_clients)):
+            if sc.arrival == "closed":
+                self._schedule_closed(client)
+            else:
+                rnd = random.Random((sc.seed * 1_000_003) ^ (idx * 7919))
+                self._schedule_open(client, rnd)
+        self.env.sim.run(until=sc.duration_ns)
+        self.metrics.finalize_queues(self.env, self.proto)
+        rep = self.metrics.report()
+        ingress = [
+            self.env.net.node(s).ingress for s in self.proto.storage_nodes
+        ]
+        rep.update(
+            {
+                "protocol": sc.protocol,
+                "clients": sc.num_clients,
+                "arrival": sc.arrival,
+                "size": sc.size,
+                "events": self.env.sim.events_processed,
+                "sim_ns": self.env.sim.now,
+                "packets": self.env.net.packets_sent,
+                "hpu_peak": max(
+                    (u.hpus.peak for u in self.env.pspin_units()), default=0
+                ),
+                "hpu_wait_us": sum(
+                    u.hpu_wait_ns() for u in self.env.pspin_units()
+                ) / 1e3,
+                "ingress_util": max(
+                    (r.utilization() for r in ingress), default=0.0
+                ),
+                "ingress_mean_wait_ns": (
+                    sum(r.total_wait_ns for r in ingress)
+                    / max(1, sum(r.acquires for r in ingress))
+                ),
+            }
+        )
+        return rep
+
+
+def run_scenario(
+    scenario: Scenario,
+    cfg: NetConfig | None = None,
+    pcfg: PsPINConfig | None = None,
+) -> dict:
+    """Convenience one-shot: build the workload, run it, return the report."""
+    return Workload(scenario, cfg, pcfg).run()

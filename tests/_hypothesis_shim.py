@@ -1,0 +1,136 @@
+"""Minimal, dependency-free stand-in for the ``hypothesis`` API surface
+used by this test suite.
+
+When ``hypothesis`` is installed the real library is used (see the
+``try: import hypothesis`` blocks in the test modules); this shim keeps the
+property tests runnable — deterministically — when it is absent.  Each
+strategy knows how to produce deterministic edge cases first (min/max
+bounds) and then seeded pseudo-random samples, so every test still
+exercises boundary values plus a spread of the input space.
+
+Only the strategies this repo uses are implemented: ``integers``,
+``booleans``, ``binary``, ``sampled_from``, ``lists``, ``randoms`` and the
+``.filter`` combinator.
+"""
+
+from __future__ import annotations
+
+import random
+import zlib
+from typing import Any, Callable
+
+DEFAULT_MAX_EXAMPLES = 20
+_FILTER_TRIES = 10_000
+
+
+class _Strategy:
+    def __init__(self, sample: Callable[[random.Random], Any], edges=()):
+        self._sample = sample
+        self.edges = list(edges)
+
+    def sample(self, rnd: random.Random) -> Any:
+        return self._sample(rnd)
+
+    def filter(self, pred: Callable[[Any], bool]) -> "_Strategy":
+        def sample(rnd: random.Random) -> Any:
+            for _ in range(_FILTER_TRIES):
+                v = self._sample(rnd)
+                if pred(v):
+                    return v
+            raise ValueError("filter predicate too restrictive for shim")
+
+        return _Strategy(sample, [e for e in self.edges if pred(e)])
+
+    def map(self, fn: Callable[[Any], Any]) -> "_Strategy":
+        return _Strategy(
+            lambda rnd: fn(self._sample(rnd)), [fn(e) for e in self.edges]
+        )
+
+
+class strategies:
+    """Namespace mirroring ``hypothesis.strategies``."""
+
+    @staticmethod
+    def integers(min_value: int = -(2**63), max_value: int = 2**63) -> _Strategy:
+        return _Strategy(
+            lambda rnd: rnd.randint(min_value, max_value),
+            [min_value, max_value],
+        )
+
+    @staticmethod
+    def booleans() -> _Strategy:
+        return _Strategy(lambda rnd: bool(rnd.getrandbits(1)), [False, True])
+
+    @staticmethod
+    def binary(min_size: int = 0, max_size: int = 100) -> _Strategy:
+        def sample(rnd: random.Random) -> bytes:
+            n = rnd.randint(min_size, max_size)
+            return bytes(rnd.getrandbits(8) for _ in range(n))
+
+        pat_len = min(max_size, max(min_size, 256))
+        pattern = bytes(i % 256 for i in range(pat_len))
+        return _Strategy(sample, [b"\x00" * min_size, pattern])
+
+    @staticmethod
+    def sampled_from(options) -> _Strategy:
+        options = list(options)
+        return _Strategy(lambda rnd: rnd.choice(options), options[:2])
+
+    @staticmethod
+    def lists(elements: _Strategy, min_size: int = 0,
+              max_size: int | None = None) -> _Strategy:
+        def sample(rnd: random.Random) -> list:
+            hi = max_size if max_size is not None else min_size + 10
+            n = rnd.randint(min_size, hi)
+            return [elements.sample(rnd) for _ in range(n)]
+
+        return _Strategy(sample)
+
+    @staticmethod
+    def randoms(use_true_random: bool = False) -> _Strategy:
+        return _Strategy(lambda rnd: random.Random(rnd.getrandbits(64)))
+
+
+st = strategies
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, deadline=None,
+             **_ignored):
+    """Works whether applied above or below ``@given``."""
+
+    def deco(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*strats: _Strategy):
+    def deco(fn):
+        def wrapper():
+            max_examples = getattr(
+                wrapper, "_shim_max_examples",
+                getattr(fn, "_shim_max_examples", DEFAULT_MAX_EXAMPLES),
+            )
+            rnd = random.Random(zlib.crc32(fn.__qualname__.encode()))
+            for i in range(max_examples):
+                args = []
+                for s in strats:
+                    if i < len(s.edges):
+                        args.append(s.edges[i])
+                    else:
+                        args.append(s.sample(rnd))
+                try:
+                    fn(*args)
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example (shim): {fn.__name__}{tuple(args)!r}"
+                    ) from e
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+
+    return deco

@@ -1,4 +1,53 @@
+import functools
 import os
+import subprocess
 import sys
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+import pytest
+
+TESTS_DIR = os.path.dirname(__file__)
+SRC_DIR = os.path.abspath(os.path.join(TESTS_DIR, "..", "src"))
+sys.path.insert(0, SRC_DIR)
+
+# Multi-device tests run in subprocesses with a forced 8-way host platform
+# (the main test process keeps seeing 1 CPU device, per the dry-run
+# isolation rule — see tests/test_multidevice.py).
+MULTIDEVICE_XLA_FLAGS = "--xla_force_host_platform_device_count=8"
+
+
+def multidevice_subprocess_env() -> dict:
+    """Environment for a subprocess that needs 8 host devices + repro."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        env.get("XLA_FLAGS", "") + " " + MULTIDEVICE_XLA_FLAGS
+    ).strip()
+    env["PYTHONPATH"] = SRC_DIR + os.pathsep + env.get("PYTHONPATH", "")
+    return env
+
+
+@functools.lru_cache(maxsize=None)
+def _forced_device_count() -> int:
+    probe = "import jax; print(jax.device_count())"
+    try:
+        proc = subprocess.run(
+            [sys.executable, "-c", probe],
+            env=multidevice_subprocess_env(),
+            capture_output=True,
+            text=True,
+            timeout=300,
+        )
+        return int(proc.stdout.strip().splitlines()[-1])
+    except Exception:
+        return 0
+
+
+@pytest.fixture
+def multidevice_env() -> dict:
+    """Skips cleanly when 8 forced host devices can't be satisfied."""
+    n = _forced_device_count()
+    if n < 8:
+        pytest.skip(
+            f"{MULTIDEVICE_XLA_FLAGS} yields {n} devices (need 8) on this "
+            "platform"
+        )
+    return multidevice_subprocess_env()

@@ -4,8 +4,12 @@ import dataclasses
 
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # fall back to the deterministic local shim
+    from _hypothesis_shim import given, settings
+    from _hypothesis_shim import strategies as st
 
 from repro.core.auth import (
     CAP_WORDS,

@@ -2,8 +2,12 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # fall back to the deterministic local shim
+    from _hypothesis_shim import given, settings
+    from _hypothesis_shim import strategies as st
 
 from repro.core.erasure import (
     AccumulatorPool,

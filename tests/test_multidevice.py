@@ -1,11 +1,12 @@
 """Multi-device collective tests (pipelined ring/PBT broadcast, resharding).
 
 These need >1 device, so they run in a subprocess with
-XLA_FLAGS=--xla_force_host_platform_device_count=8 — the main test process
-keeps seeing 1 CPU device, per the dry-run isolation rule.
+XLA_FLAGS=--xla_force_host_platform_device_count=8 (built by the
+``multidevice_env`` conftest fixture, which skips when the forced device
+count can't be satisfied) — the main test process keeps seeing 1 CPU
+device, per the dry-run isolation rule.
 """
 
-import os
 import subprocess
 import sys
 
@@ -17,6 +18,7 @@ from jax.sharding import PartitionSpec as P, NamedSharding
 from functools import partial
 from repro.core.replication import ring_broadcast, pbt_broadcast, replicate
 from repro.core.packets import ReplStrategy
+from repro.parallel.compat import shard_map
 
 mesh = jax.make_mesh((8,), ("r",))
 rng = np.random.default_rng(0)
@@ -26,7 +28,7 @@ x = jax.device_put(jnp.asarray(data), NamedSharding(mesh, P("r")))
 for fn in (ring_broadcast, pbt_broadcast):
     for nc in (1, 4, 16):
         body = partial(fn, axis_name="r", num_chunks=nc, axis_size=8)
-        out = np.asarray(jax.jit(jax.shard_map(
+        out = np.asarray(jax.jit(shard_map(
             body, mesh=mesh, in_specs=P("r"), out_specs=P("r")))(x))
         for i in range(8):
             assert np.array_equal(out[i], data[0]), (fn.__name__, nc, i)
@@ -57,15 +59,10 @@ print("MULTIDEVICE_OK")
 
 
 @pytest.mark.slow
-def test_multidevice_collectives():
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    env["PYTHONPATH"] = os.path.join(
-        os.path.dirname(__file__), "..", "src"
-    ) + os.pathsep + env.get("PYTHONPATH", "")
+def test_multidevice_collectives(multidevice_env):
     proc = subprocess.run(
-        [sys.executable, "-c", _SCRIPT], env=env, capture_output=True,
-        text=True, timeout=600,
+        [sys.executable, "-c", _SCRIPT], env=multidevice_env,
+        capture_output=True, text=True, timeout=600,
     )
     assert proc.returncode == 0, proc.stderr[-4000:]
     assert "MULTIDEVICE_OK" in proc.stdout
@@ -105,17 +102,12 @@ print("MOE_EP_OK")
 
 
 @pytest.mark.slow
-def test_moe_ep_shardmap():
+def test_moe_ep_shardmap(multidevice_env):
     """Explicit expert-parallel all-to-all dataflow matches the dense
     reference (no-drop capacity) and differentiates, on a 2x4 mesh."""
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    env["PYTHONPATH"] = os.path.join(
-        os.path.dirname(__file__), "..", "src"
-    ) + os.pathsep + env.get("PYTHONPATH", "")
     proc = subprocess.run(
-        [sys.executable, "-c", _MOE_SCRIPT], env=env, capture_output=True,
-        text=True, timeout=600,
+        [sys.executable, "-c", _MOE_SCRIPT], env=multidevice_env,
+        capture_output=True, text=True, timeout=600,
     )
     assert proc.returncode == 0, proc.stderr[-4000:]
     assert "MOE_EP_OK" in proc.stdout
@@ -126,6 +118,7 @@ import numpy as np, jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P, NamedSharding
 from repro.parallel.collectives import (ring_all_gather, ring_reduce_scatter,
                                         ring_all_reduce, make_ring_collective)
+from repro.parallel.compat import shard_map
 mesh = jax.make_mesh((8,), ("r",))
 rng = np.random.default_rng(0)
 x = rng.standard_normal((16, 4)).astype(np.float32)
@@ -139,8 +132,8 @@ ar = make_ring_collective(ring_all_reduce, mesh, "r")(xr)
 assert np.allclose(np.asarray(ar), 8 * x)
 vs = jax.device_put(jnp.asarray(rng.standard_normal((64, 3)).astype(np.float32)),
                     NamedSharding(mesh, P("r")))
-out = jax.jit(jax.shard_map(lambda v: ring_all_reduce(v, "r", 8), mesh=mesh,
-                            in_specs=P("r"), out_specs=P("r"), check_vma=False))(vs)
+out = jax.jit(shard_map(lambda v: ring_all_reduce(v, "r", 8), mesh=mesh,
+                        in_specs=P("r"), out_specs=P("r"), check_vma=False))(vs)
 blocks = np.asarray(vs).reshape(8, 8, 3)
 want = blocks.sum(axis=0)
 got = np.asarray(out).reshape(8, 8, 3)
@@ -150,16 +143,11 @@ print("RING_OK")
 
 
 @pytest.mark.slow
-def test_ring_collectives():
+def test_ring_collectives(multidevice_env):
     """Paper-style pipelined ring all-gather/reduce-scatter/all-reduce."""
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    env["PYTHONPATH"] = os.path.join(
-        os.path.dirname(__file__), "..", "src"
-    ) + os.pathsep + env.get("PYTHONPATH", "")
     proc = subprocess.run(
-        [sys.executable, "-c", _RING_SCRIPT], env=env, capture_output=True,
-        text=True, timeout=600,
+        [sys.executable, "-c", _RING_SCRIPT], env=multidevice_env,
+        capture_output=True, text=True, timeout=600,
     )
     assert proc.returncode == 0, proc.stderr[-4000:]
     assert "RING_OK" in proc.stdout

@@ -1,0 +1,152 @@
+"""Multi-client workload engine invariants.
+
+(a) determinism — same seed => identical metrics/trace
+(b) single-client equivalence — N=1 closed-loop matches the single-shot
+    runners (validates the engine's plumbing adds no overhead; fidelity of
+    the runners to the paper's model is pinned by tests/test_sim.py)
+(c) monotonicity — p99 latency non-decreasing in offered load
+(d) conservation — completed + in-flight + dropped == issued
+"""
+
+import pytest
+
+from repro.sim import protocols as P
+from repro.sim.workload import KiB, Scenario, Workload, run_scenario
+
+TRIO = ["spin-write", "spin-ring", "spin-triec"]
+
+
+def _conserves(rep: dict) -> bool:
+    return rep["issued"] == rep["completed"] + rep["in_flight"] + rep["dropped"]
+
+
+# -- (a) determinism ---------------------------------------------------------
+
+
+@pytest.mark.parametrize("arrival", ["closed", "poisson", "bursty"])
+def test_same_seed_same_trace(arrival):
+    sc = Scenario(protocol="spin-ring", size=16 * KiB, num_clients=4,
+                  arrival=arrival, requests_per_client=12, seed=7,
+                  offered_load_GBps=30.0)
+    a, b = run_scenario(sc), run_scenario(sc)
+    assert a == b                      # full report incl. latency-derived
+    w1, w2 = Workload(sc), Workload(sc)
+    r1, r2 = w1.run(), w2.run()
+    assert w1.metrics.latencies_ns == w2.metrics.latencies_ns
+    assert r1["events"] == r2["events"]
+
+
+def test_different_seed_different_poisson_trace():
+    base = dict(protocol="spin-write", size=16 * KiB, num_clients=4,
+                arrival="poisson", requests_per_client=12,
+                offered_load_GBps=30.0)
+    a = Workload(Scenario(seed=1, **base))
+    b = Workload(Scenario(seed=2, **base))
+    a.run(), b.run()
+    assert a.metrics.latencies_ns != b.metrics.latencies_ns
+
+
+# -- (b) single-client equivalence -------------------------------------------
+
+
+@pytest.mark.parametrize("protocol", sorted(P.PROTOCOL_NAMES))
+@pytest.mark.parametrize("size", [4 * KiB, 128 * KiB])
+def test_single_client_matches_single_shot(protocol, size):
+    k = 3 if protocol in ("spin-triec", "inec-triec") else 4
+    rep = run_scenario(
+        Scenario(protocol=protocol, size=size, num_clients=1,
+                 requests_per_client=1, k=k, m=2)
+    )
+    want_us = P.run_single_shot(protocol, size, k=k, m=2).latency_ns / 1e3
+    assert rep["completed"] == 1 and _conserves(rep)
+    assert rep["p50_us"] == pytest.approx(want_us, rel=0.01)
+
+
+def test_shared_env_second_protocol_rejected():
+    """Two protocols on one Env would silently steal each other's packets
+    — installing over another protocol's nodes must raise."""
+    env = P.Env()
+    P.SpinAuthWriteProtocol(env, 4 * KiB)
+    with pytest.raises(ValueError, match="already owned"):
+        P.RpcWriteProtocol(env, 4 * KiB)
+
+
+def test_closed_loop_request_count():
+    rep = run_scenario(
+        Scenario(protocol="spin-write", num_clients=3, requests_per_client=5)
+    )
+    assert rep["issued"] == rep["completed"] == 15
+    assert _conserves(rep)
+
+
+# -- (c) monotonicity --------------------------------------------------------
+
+
+def test_p99_monotone_in_offered_load():
+    prev = 0.0
+    for load in (5.0, 15.0, 30.0, 45.0):
+        rep = run_scenario(
+            Scenario(protocol="spin-write", size=64 * KiB, num_clients=4,
+                     arrival="poisson", offered_load_GBps=load,
+                     requests_per_client=24, seed=2)
+        )
+        assert rep["p99_us"] >= prev - 1e-9, (load, rep["p99_us"], prev)
+        prev = rep["p99_us"]
+
+
+def test_p99_monotone_in_client_count():
+    prev = 0.0
+    for n in (1, 2, 4, 8):
+        rep = run_scenario(
+            Scenario(protocol="spin-ring", size=64 * KiB, num_clients=n,
+                     requests_per_client=6)
+        )
+        assert rep["p99_us"] >= prev - 1e-9, (n, rep["p99_us"], prev)
+        prev = rep["p99_us"]
+
+
+def test_contention_visible_in_queues_and_goodput():
+    quiet = run_scenario(
+        Scenario(protocol="spin-write", size=64 * KiB, num_clients=1,
+                 requests_per_client=4)
+    )
+    busy = run_scenario(
+        Scenario(protocol="spin-write", size=64 * KiB, num_clients=16,
+                 requests_per_client=4)
+    )
+    assert busy["ingress_queue_peak"] > quiet["ingress_queue_peak"]
+    assert busy["goodput_GBps"] > quiet["goodput_GBps"]   # more offered load
+    assert busy["goodput_GBps"] < 50.0                    # <= line rate
+
+
+# -- (d) conservation --------------------------------------------------------
+
+
+def test_conservation_with_drops():
+    rep = run_scenario(
+        Scenario(protocol="spin-write", size=256 * KiB, arrival="poisson",
+                 offered_load_GBps=200.0, num_clients=8,
+                 requests_per_client=48, max_outstanding=4, seed=1)
+    )
+    assert rep["dropped"] > 0                 # overload sheds load
+    assert rep["in_flight"] == 0              # ran to completion
+    assert _conserves(rep)
+
+
+def test_conservation_with_horizon_cutoff():
+    rep = run_scenario(
+        Scenario(protocol="spin-write", size=256 * KiB, arrival="bursty",
+                 num_clients=4, requests_per_client=32,
+                 duration_ns=50_000.0)
+    )
+    assert rep["in_flight"] > 0               # horizon left requests pending
+    assert _conserves(rep)
+
+
+def test_bursty_arrivals_issue_all():
+    rep = run_scenario(
+        Scenario(protocol="spin-ring", size=16 * KiB, arrival="bursty",
+                 num_clients=2, requests_per_client=9, burst_size=4,
+                 burst_gap_ns=50_000.0)
+    )
+    assert rep["issued"] == 18 and _conserves(rep)
