@@ -190,12 +190,16 @@ def fig4_nic_memory() -> list[tuple]:
 
 
 def bench_kernels_throughput() -> list[tuple]:
-    """GF(2^8) encode throughput: numpy LUT vs bit-sliced host path.
+    """GF(2^8) encode throughput: numpy LUT vs the bit-sliced kernel path,
+    per-stripe loop vs the batched fused pipeline (derived = GB/s).
 
     (CPU numbers are for tracking only; the Pallas kernel targets TPU and
-    is validated in interpret mode by tests/test_kernels.py.)
+    is validated in interpret mode by tests/test_kernels.py.  The full
+    stripe x chunk x scheme sweep with its JSON artifact lives in
+    benchmarks/dataplane.py.)
     """
     from repro.core.erasure import RSCode
+    from repro.kernels import ops
 
     rows = []
     rng = np.random.default_rng(0)
@@ -210,6 +214,26 @@ def bench_kernels_throughput() -> list[tuple]:
             (f"kernel/rs{k}{m}/numpy_LUT", round(dt * 1e6, 1),
              round(data.nbytes / dt / 1e9, 3))
         )
+        # Bit-sliced data plane: 8 concurrent 4 KiB-chunk stripes, the
+        # per-stripe loop vs one fused batched dispatch (both with the
+        # adaptive tile, so the ratio isolates batching).
+        batch = rng.integers(0, 256, (8, k, 4096), dtype=np.uint8)
+        for name, fn in [
+            ("loop", lambda b=batch: [np.asarray(ops.rs_encode(s, k, m,
+                                                               block_w=None))
+                                      for s in b]),
+            ("batched", lambda b=batch: np.asarray(
+                ops.rs_encode_stripes(b, k, m))),
+        ]:
+            fn()  # warmup (jit trace)
+            t0 = time.perf_counter()
+            for _ in range(3):
+                fn()
+            dt = (time.perf_counter() - t0) / 3
+            rows.append(
+                (f"kernel/rs{k}{m}/bitsliced_{name}_S8", round(dt * 1e6, 1),
+                 round(batch.nbytes / dt / 1e9, 3))
+            )
     return rows
 
 

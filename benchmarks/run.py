@@ -3,10 +3,14 @@
 Prints ``name,us_per_call,derived`` CSV rows.  Usage:
 
   PYTHONPATH=src python -m benchmarks.run [--only fig6,fig15] [--roofline]
-                                          [--contention]
+                                          [--contention] [--json OUT]
 
 ``--contention`` appends the multi-client sweep (p99 latency / goodput per
-client count; see benchmarks/contention.py for the full CLI).
+client count; see benchmarks/contention.py for the full CLI).  ``--json``
+additionally writes every emitted row to ``OUT`` as a ``BENCH_*.json``
+artifact ({"bench", "rows": [{"name", "us_per_call", "derived"}]}) so any
+bench table can be tracked across PRs.  (The kernel data-plane sweep has
+its own dedicated artifact: ``benchmarks/dataplane.py``.)
 """
 
 from __future__ import annotations
@@ -49,23 +53,46 @@ def main() -> None:
                     help="also print the dry-run roofline table")
     ap.add_argument("--contention", action="store_true",
                     help="also print the multi-client contention sweep")
+    ap.add_argument("--json", default=None, metavar="OUT",
+                    help="also write the emitted rows to OUT as a "
+                         "BENCH_*.json artifact")
     args = ap.parse_args()
     filters = [f for f in args.only.split(",") if f]
+
+    rows: list[tuple] = []
+
+    def emit(name, us, derived):
+        rows.append((name, us, derived))
+        print(f"{name},{us},{derived}")
 
     print("name,us_per_call,derived")
     for bench in ALL_BENCHES:
         if filters and not any(f in bench.__name__ for f in filters):
             continue
         for name, us, derived in bench():
-            print(f"{name},{us},{derived}")
+            emit(name, us, derived)
     if args.roofline or not filters:
         for name, us, derived in roofline_rows():
-            print(f"{name},{us},{derived}")
+            emit(name, us, derived)
     if args.contention:
         from benchmarks.contention import bench_rows
 
         for name, us, derived in bench_rows():
-            print(f"{name},{us},{derived}")
+            emit(name, us, derived)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(
+                {
+                    "bench": "paper_figs",
+                    "rows": [
+                        {"name": n, "us_per_call": u, "derived": d}
+                        for n, u, d in rows
+                    ],
+                },
+                f,
+                indent=1,
+            )
+        print(f"# wrote {args.json}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -14,7 +14,13 @@ in :mod:`repro.sim`; the production consumer is :mod:`repro.checkpoint`.
 """
 
 from repro.core.auth import Capability, CapabilityAuthority, Rights, sponge_mac
-from repro.core.erasure import RSCode, split_stripe, join_stripe, stream_encode
+from repro.core.erasure import (
+    RSCode,
+    split_stripe,
+    join_stripe,
+    stream_encode,
+    stream_encode_packets,
+)
 from repro.core.handlers import DFSClient, DFSNode, Router, StorageTarget
 from repro.core.packets import (
     DEFAULT_MTU,
@@ -47,6 +53,7 @@ __all__ = [
     "split_stripe",
     "join_stripe",
     "stream_encode",
+    "stream_encode_packets",
     "DFSClient",
     "DFSNode",
     "Router",

@@ -78,7 +78,35 @@ class RSCode:
         if backend == "jax":
             from repro.kernels import ops
 
-            return np.asarray(ops.rs_encode(data, self.k, self.m, kind=self.kind))
+            return np.asarray(
+                ops.rs_encode_stripes(
+                    data[None], self.k, self.m, kind=self.kind
+                )[0]
+            )
+        raise ValueError(f"unknown backend {backend!r}")
+
+    def encode_stripes(self, data: np.ndarray, backend: str = "jax") -> np.ndarray:
+        """Batched encode: (S, k, L) data -> (S, m, L) parity.
+
+        backend="jax" is one fused kernel dispatch for the whole batch
+        (kernels/ops.py); backend="numpy" is the vectorized host LUT path.
+        """
+        data = np.asarray(data, dtype=np.uint8)
+        if data.ndim != 3 or data.shape[1] != self.k:
+            raise ValueError(f"expected (S, {self.k}, L) stripes, got {data.shape}")
+        s, _, length = data.shape
+        if self.m == 0:
+            return np.zeros((s, 0, length), dtype=np.uint8)
+        if backend == "numpy":
+            flat = data.transpose(1, 0, 2).reshape(self.k, s * length)
+            out = gf256.gf_matmul(self.parity_matrix, flat)
+            return out.reshape(self.m, s, length).transpose(1, 0, 2)
+        if backend == "jax":
+            from repro.kernels import ops
+
+            return np.asarray(
+                ops.rs_encode_stripes(data, self.k, self.m, kind=self.kind)
+            )
         raise ValueError(f"unknown backend {backend!r}")
 
     def decode(
@@ -108,8 +136,46 @@ class RSCode:
         if backend == "jax":
             from repro.kernels import ops
 
-            return np.asarray(ops.gf_matmul_bytes(inv, stacked))
+            return np.asarray(ops.gf_matmul_bytes(inv, stacked, block_w=None))
         return gf256.gf_matmul(inv, stacked)
+
+    def decode_stripes(
+        self,
+        shards: Sequence[np.ndarray | None],
+        backend: str = "jax",
+    ) -> np.ndarray:
+        """Batched decode: reconstruct (S, k, L) data from surviving shards.
+
+        ``shards`` has length k+m like :meth:`decode`, but each present
+        entry is a (S, L) batch (the same erasure pattern applies to every
+        stripe — the common whole-node-failure case).  One fused kernel
+        dispatch recovers all S stripes.
+        """
+        if len(shards) != self.n:
+            raise ValueError(f"expected {self.n} shard slots, got {len(shards)}")
+        present = [i for i, s in enumerate(shards) if s is not None]
+        if len(present) < self.k:
+            raise ValueError(
+                f"unrecoverable: only {len(present)} of >= {self.k} shards present"
+            )
+        missing_data = [i for i in range(self.k) if shards[i] is None]
+        if not missing_data:
+            return np.stack(
+                [np.asarray(shards[i], dtype=np.uint8) for i in range(self.k)], axis=1
+            )
+        rows = present[: self.k]
+        inv = gf256.gf_mat_inv(self.generator[rows])
+        stacked = np.stack(
+            [np.asarray(shards[i], dtype=np.uint8) for i in rows], axis=1
+        )  # (S, k, L)
+        if backend == "jax":
+            from repro.kernels import ops
+
+            return np.asarray(ops.gf_matmul_bytes_batched(inv, stacked))
+        s, _, length = stacked.shape
+        flat = stacked.transpose(1, 0, 2).reshape(self.k, s * length)
+        out = gf256.gf_matmul(inv, flat)
+        return out.reshape(self.k, s, length).transpose(1, 0, 2)
 
     def reconstruct_shard(
         self, shards: Sequence[np.ndarray | None], index: int
@@ -189,11 +255,12 @@ class TriECDataNode:
 
     def process_packet(self, seq: int, payload: np.ndarray) -> list[IntermediateParity]:
         payload = np.asarray(payload, dtype=np.uint8)
-        out = []
-        for i in range(self.code.m):
-            enc = gf256.gf_mul_vec(payload, self._coeffs[i])
-            out.append(IntermediateParity(seq, self.data_index, i, enc))
-        return out
+        # One broadcast LUT multiply for all m parity targets at once.
+        encs = gf256.gf_mul_vec(payload[None, :], self._coeffs[:, None])
+        return [
+            IntermediateParity(seq, self.data_index, i, encs[i])
+            for i in range(self.code.m)
+        ]
 
 
 class AccumulatorPool:
@@ -275,17 +342,81 @@ def stream_encode(
     packet_payload: int,
     pool_size: int = 64,
     interleaved: bool = True,
+    backend: str = "numpy",
 ) -> np.ndarray:
-    """End-to-end streaming TriEC encode of a (k, L) stripe.
+    """End-to-end streaming TriEC encode of a (k, L) stripe — batched.
 
-    Reference implementation of the full per-packet dataflow (client
-    interleaving -> data-node intermediate parities -> parity-node
-    aggregation).  Must equal ``code.encode(data)`` — property-tested.
+    Computes the same two-stage dataflow as :func:`stream_encode_packets`
+    (data-node intermediate parities -> parity-node XOR aggregation) but
+    with every packet of every sequence as one batched op per stage
+    instead of a pure-Python per-packet schedule loop.  Must equal
+    ``code.encode(data)`` — property-tested.
+
+    Accumulator-pool pressure is modeled analytically from the schedule:
+    ``interleaved`` (the paper's section VI-B1 client schedule) delivers
+    the k intermediate parities of each aggregation sequence back-to-back,
+    so each parity node holds at most one live accumulator; the chunk-major
+    schedule keeps every sequence open until its k-th stream arrives, i.e.
+    all ``npkts`` accumulators concurrently.  Exceeding ``pool_size``
+    raises, exactly like the per-packet path.
+
+    backend="jax" routes both stages through the fused batched kernels
+    (kernels/ops.py): one dispatch for all m*k intermediate-parity streams,
+    one batched XOR-reduce for the m parity-node aggregations.
+    """
+    data = np.asarray(data, dtype=np.uint8)
+    k, length = data.shape
+    assert k == code.k
+    npkts = -(-length // packet_payload) if packet_payload > 0 else 0
+    if code.m == 0 or npkts == 0:
+        return np.zeros((code.m, length), dtype=np.uint8)
+    concurrent = 1 if (interleaved or k == 1) else npkts
+    if concurrent > pool_size:
+        # Same failure mode (and count) as the per-packet path: in the
+        # chunk-major schedule, sequences >= pool_size fall back during the
+        # first k-1 passes; in the final pass the slots freed by completing
+        # sequences are re-taken by the next pool_size starved sequences,
+        # so only sequences >= 2*pool_size fall back again.
+        fallback = (npkts - pool_size) * (k - 1) + max(0, npkts - 2 * pool_size)
+        raise RuntimeError(
+            f"accumulator pool exhausted ({fallback} packets fell back); "
+            "increase pool_size"
+        )
+    padded = np.zeros((k, npkts * packet_payload), dtype=np.uint8)
+    padded[:, :length] = data
+    parity_mat = code.parity_matrix
+    if backend == "jax":
+        from repro.kernels import ops
+
+        # Stage 1, one dispatch: every (parity, chunk) intermediate stream
+        # g[i, j] * chunk_j from the fused bit-sliced scaling kernel.
+        inter = np.asarray(ops.gf_scale_streams(parity_mat, padded))
+        # Stage 2, one dispatch: batched parity-node aggregation.
+        parity = np.asarray(ops.xor_reduce_bytes_batched(inter))
+    else:
+        inter = gf256.gf_mul_vec(parity_mat[:, :, None], padded[None, :, :])
+        parity = np.bitwise_xor.reduce(inter, axis=1)
+    return parity[:, :length]
+
+
+def stream_encode_packets(
+    code: RSCode,
+    data: np.ndarray,
+    packet_payload: int,
+    pool_size: int = 64,
+    interleaved: bool = True,
+) -> np.ndarray:
+    """Per-packet reference implementation of the streaming TriEC dataflow
+    (client interleaving -> data-node intermediate parities -> parity-node
+    aggregation), walking the schedule one packet at a time through the
+    :class:`TriECDataNode` / :class:`TriECParityNode` objects.
 
     ``interleaved`` mirrors the paper's client transmission schedule
     (section VI-B1): packets from the k data chunks are interleaved so
     parity nodes can aggregate each sequence as early as possible.  The
     result is schedule-independent; only accumulator pressure changes.
+    This path pins the semantics of the batched :func:`stream_encode`
+    (equality property-tested) and backs the accumulator-pressure model.
     """
     data = np.asarray(data, dtype=np.uint8)
     k, length = data.shape

@@ -31,7 +31,7 @@ from typing import Callable
 
 import numpy as np
 
-from repro.core import erasure
+from repro.core import erasure, gf256
 from repro.core.auth import CapabilityAuthority, Rights
 from repro.core.packets import (
     DEFAULT_MTU,
@@ -242,11 +242,13 @@ class DFSNode:
         code = erasure.RSCode(wrh.ec_k, wrh.ec_m)
         coeffs = code.parity_matrix[:, wrh.ec_index]
         seq = pkt.pkt_index
+        # One broadcast LUT multiply produces the payloads for all m parity
+        # targets (the batched data-plane idiom; see kernels/ops.py for the
+        # stripe-batched kernel the whole-stripe paths use).
+        encs = gf256.gf_mul_vec(pkt.payload[None, :], coeffs[:, None])
         for i in range(wrh.ec_m):
             coord = wrh.replicas[i]  # parity coordinates (section VI)
-            from repro.core import gf256
-
-            enc = gf256.gf_mul_vec(pkt.payload, coeffs[i])
+            enc = encs[i]
             # NB: wrh.seq (the stripe id) is preserved — the parity node
             # aggregates across the k streams of the stripe by this id;
             # the aggregation sequence index travels in pkt_index.

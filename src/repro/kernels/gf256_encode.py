@@ -32,21 +32,48 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
+def _xor_fold(x: jax.Array, axis: int) -> jax.Array:
+    """Log-depth pairwise XOR reduction over ``axis`` (size a power of two)."""
+    n = x.shape[axis]
+    while n > 1:
+        half = n // 2
+        lo = jax.lax.slice_in_dim(x, 0, half, axis=axis)
+        hi = jax.lax.slice_in_dim(x, half, n, axis=axis)
+        x = lo ^ hi
+        n = half
+    return jnp.squeeze(x, axis=axis)
+
+
+def _gf_bitsliced_body(bitmat: jax.Array, planes: jax.Array, *, m: int, k: int) -> jax.Array:
+    """(k, 8, block_w) planes x (m, k, 8, 8) bit-matrices -> (m, 8, block_w).
+
+    Fully vectorized: per input chunk ``j`` one broadcast mask-tensor AND of
+    shape (m, 8, 8, block_w) followed by a log-depth XOR fold over the
+    input-bit axis — k VPU-wide ops instead of the m*8*k*8 scalar-indexed
+    AND/XOR unroll this replaced.  Masks are 0x0/0xFFFFFFFF words derived
+    branchlessly from the coefficient bits.
+    """
+    masks = jnp.uint32(0) - bitmat  # (m, k, 8, 8): bit -> all-ones mask
+    acc = jnp.zeros((m, 8, planes.shape[-1]), dtype=jnp.uint32)
+    for j in range(k):
+        # (m, 8_out, 8_in, 1) & (8_in, block_w) -> (m, 8_out, 8_in, block_w)
+        masked = masks[:, j, :, :, None] & planes[j][None, None, :, :]
+        acc = acc ^ _xor_fold(masked, axis=2)
+    return acc
+
+
 def _gf_bitsliced_kernel(bitmat_ref, planes_ref, out_ref, *, m: int, k: int):
     """One grid step: (k, 8, block_w) planes x (m, k, 8, 8) -> (m, 8, block_w)."""
-    planes = planes_ref[...]  # (k, 8, block_w) uint32
-    bitmat = bitmat_ref[...]  # (m, k, 8, 8) uint32 (0/1)
-    for i in range(m):
-        for ob in range(8):
-            acc = jnp.zeros(planes.shape[-1:], dtype=jnp.uint32)
-            for j in range(k):
-                for ib in range(8):
-                    # mask = 0x0 or 0xFFFFFFFF from the coefficient bit;
-                    # branchless select keeps the loop fully vectorized.
-                    bit = bitmat[i, j, ob, ib]
-                    mask = jnp.uint32(0) - bit
-                    acc = acc ^ (planes[j, ib] & mask)
-            out_ref[i, ob, :] = acc
+    out_ref[...] = _gf_bitsliced_body(
+        bitmat_ref[...], planes_ref[...], m=m, k=k
+    )
+
+
+def _gf_bitsliced_batched_kernel(bitmat_ref, planes_ref, out_ref, *, m: int, k: int):
+    """One (stripe, word-block) grid step: (1, k, 8, block_w) -> (1, m, 8, block_w)."""
+    out_ref[...] = _gf_bitsliced_body(
+        bitmat_ref[...], planes_ref[...][0], m=m, k=k
+    )[None]
 
 
 @functools.partial(
@@ -87,6 +114,104 @@ def gf_matmul_bitsliced(
         ],
         out_specs=pl.BlockSpec((m, 8, block_w), lambda i: (0, 0, i)),
         out_shape=jax.ShapeDtypeStruct((m, 8, w), jnp.uint32),
+        interpret=interpret,
+    )(bitmat.astype(jnp.uint32), planes)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("m", "k", "block_w", "interpret")
+)
+def gf_matmul_bitsliced_batched(
+    bitmat: jax.Array,
+    planes: jax.Array,
+    *,
+    m: int,
+    k: int,
+    block_w: int = 1024,
+    interpret: bool = True,
+) -> jax.Array:
+    """Batched bit-sliced GF(2^8) matmul: one dispatch for a stripe batch.
+
+    A single Pallas call over a 2D (stripe, word-block) grid: every grid
+    step encodes one ``block_w``-word tile of one stripe, so S concurrent
+    stripes share one kernel launch, one coefficient upload, and one
+    HBM->VMEM pipeline instead of S per-stripe dispatches.
+
+    Args:
+      bitmat: (m, k, 8, 8) uint32 0/1 coefficient bit-matrices (shared by
+        every stripe in the batch).
+      planes: (S, k, 8, w) uint32 input bit-planes; w % block_w == 0.
+      m, k: static code dimensions.
+      block_w: words per VMEM tile (lane-dim multiple of 128 on TPU).
+      interpret: run the kernel body in Python on CPU (validation mode).
+
+    Returns:
+      (S, m, 8, w) uint32 output bit-planes.
+    """
+    s, kk, eight, w = planes.shape
+    assert kk == k and eight == 8, planes.shape
+    assert bitmat.shape == (m, k, 8, 8), bitmat.shape
+    assert w % block_w == 0, (w, block_w)
+    grid = (s, w // block_w)
+    return pl.pallas_call(
+        functools.partial(_gf_bitsliced_batched_kernel, m=m, k=k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, k, 8, 8), lambda si, wi: (0, 0, 0, 0)),
+            pl.BlockSpec((1, k, 8, block_w), lambda si, wi: (si, 0, 0, wi)),
+        ],
+        out_specs=pl.BlockSpec((1, m, 8, block_w), lambda si, wi: (si, 0, 0, wi)),
+        out_shape=jax.ShapeDtypeStruct((s, m, 8, w), jnp.uint32),
+        interpret=interpret,
+    )(bitmat.astype(jnp.uint32), planes)
+
+
+def _gf_scale_kernel(bitmat_ref, planes_ref, out_ref, *, m: int, k: int):
+    """One grid step of the stream-scaling (TriEC data-node) stage:
+    out[i, j] = g[i, j] * chunk_j — the bit-sliced matmul body *without*
+    the fold over chunks, so every (parity, chunk) intermediate stream
+    survives for downstream parity-node aggregation."""
+    planes = planes_ref[...]                    # (k, 8, block_w)
+    masks = jnp.uint32(0) - bitmat_ref[...]     # (m, k, 8, 8)
+    for j in range(k):
+        masked = masks[:, j, :, :, None] & planes[j][None, None, :, :]
+        out_ref[:, j, :, :] = _xor_fold(masked, axis=2)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("m", "k", "block_w", "interpret")
+)
+def gf_scale_bitsliced(
+    bitmat: jax.Array,
+    planes: jax.Array,
+    *,
+    m: int,
+    k: int,
+    block_w: int = 1024,
+    interpret: bool = True,
+) -> jax.Array:
+    """Bit-sliced GF(2^8) constant-multiply of k chunks by an (m, k)
+    coefficient grid: (k, 8, w) planes -> (m, k, 8, w) scaled streams.
+
+    This is the data-node stage of the streaming TriEC dataflow (paper
+    section VI-B1): each chunk j fans out to m intermediate-parity
+    streams g[i, j] * chunk_j in one dispatch, without the k-fold the
+    full matmul applies (the fold happens at the parity nodes).
+    """
+    kk, eight, w = planes.shape
+    assert kk == k and eight == 8, planes.shape
+    assert bitmat.shape == (m, k, 8, 8), bitmat.shape
+    assert w % block_w == 0, (w, block_w)
+    grid = (w // block_w,)
+    return pl.pallas_call(
+        functools.partial(_gf_scale_kernel, m=m, k=k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, k, 8, 8), lambda i: (0, 0, 0, 0)),
+            pl.BlockSpec((k, 8, block_w), lambda i: (0, 0, i)),
+        ],
+        out_specs=pl.BlockSpec((m, k, 8, block_w), lambda i: (0, 0, 0, i)),
+        out_shape=jax.ShapeDtypeStruct((m, k, 8, w), jnp.uint32),
         interpret=interpret,
     )(bitmat.astype(jnp.uint32), planes)
 

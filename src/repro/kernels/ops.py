@@ -16,8 +16,14 @@ import numpy as np
 
 from repro.core import gf256
 from repro.kernels import ref
-from repro.kernels.gf256_encode import gf_matmul_bitsliced, gf_matmul_mxu
+from repro.kernels.gf256_encode import (
+    gf_matmul_bitsliced,
+    gf_matmul_bitsliced_batched,
+    gf_matmul_mxu,
+    gf_scale_bitsliced,
+)
 from repro.kernels.xor_reduce import xor_reduce as _xor_reduce_kernel
+from repro.kernels.xor_reduce import xor_reduce_batched as _xor_reduce_batched
 
 
 def _on_tpu() -> bool:
@@ -43,38 +49,147 @@ def _pad_to(x: jax.Array, mult: int, axis: int) -> tuple[jax.Array, int]:
     return jnp.pad(x, pad), size
 
 
+@functools.lru_cache(maxsize=256)
+def _bitmat_device(coeff_bytes: bytes, n: int, k: int) -> jax.Array:
+    """Device-resident (n, k, 8, 8) coefficient bit-matrix tensor.
+
+    Memoized by coefficient bytes on top of the host-side
+    ``gf256.parity_bitmatrix`` cache, so steady-state encode/decode calls
+    skip both the nested-loop numpy build and the host->device upload.
+    """
+    coeffs = np.frombuffer(coeff_bytes, dtype=np.uint8).reshape(n, k)
+    return jnp.asarray(gf256.parity_bitmatrix(coeffs), dtype=jnp.uint32)
+
+
+def _clamp_block_w(words: int) -> int:
+    """Adaptive words-per-VMEM-tile: the smallest covering multiple of the
+    tile granule, capped at 2048 — small payloads stop padding out to a
+    full-size tile, large ones amortize per-grid-step overhead across
+    wider lanes.  The granule is 128 when compiling for a real TPU (the
+    lane-dimension requirement Mosaic enforces) and 8 in interpret mode
+    (keeps CPU-validation shapes small)."""
+    granule = 128 if _on_tpu() else 8
+    return max(granule, min(2048, -(-words // granule) * granule))
+
+
+def _pick_block_w(length: int, block_w: int | None) -> int:
+    """Tile for an ``length``-byte chunk (32 bytes/packed word): the
+    explicit value when given, else adaptive."""
+    return block_w if block_w is not None else _clamp_block_w(-(-length // 32))
+
+
 @functools.partial(jax.jit, static_argnames=("block_w",))
-def _encode_planes(bitmat, data_bytes, block_w):
-    planes = ref.pack_bitplanes(data_bytes)          # (k, 8, w)
+def _encode_planes_batched(bitmat, data_bytes, block_w):
+    """Fused pipeline under one jit: bit-plane pack -> single batched Pallas
+    dispatch over the (stripe, word-block) grid -> unpack."""
+    planes = ref.pack_bitplanes(data_bytes)          # (S, k, 8, w)
     m, k = bitmat.shape[0], bitmat.shape[1]
-    out_planes = gf_matmul_bitsliced(
+    out_planes = gf_matmul_bitsliced_batched(
         bitmat, planes, m=m, k=k, block_w=block_w, interpret=_interpret()
     )
-    return ref.unpack_bitplanes(out_planes)          # (m, L)
+    return ref.unpack_bitplanes(out_planes)          # (S, m, L)
+
+
+def gf_matmul_bytes_batched(
+    coeffs: np.ndarray | jax.Array,
+    data: jax.Array,
+    backend: str = "pallas",
+    block_w: int | None = None,
+) -> jax.Array:
+    """(n, k) GF coefficient bytes x (S, k, L) stripe batch -> (S, n, L).
+
+    The batched workhorse: S concurrent stripes share one coefficient
+    upload and one fused pack/matmul/unpack dispatch instead of S
+    per-stripe round trips.  ``block_w=None`` picks the tile adaptively
+    from L (multiple of 8 words, capped at 2048 lanes).
+    """
+    data = jnp.asarray(data, dtype=jnp.uint8)
+    assert data.ndim == 3, data.shape
+    coeffs_np = np.ascontiguousarray(coeffs, dtype=np.uint8)
+    n, k = coeffs_np.shape
+    assert data.shape[1] == k, (coeffs_np.shape, data.shape)
+    if n == 0:
+        return jnp.zeros((data.shape[0], 0, data.shape[2]), dtype=jnp.uint8)
+    if backend == "ref":
+        return ref.gf_matmul_batched_ref(jnp.asarray(coeffs_np), data)
+    bw = _pick_block_w(data.shape[2], block_w)
+    # Pad L so the packed word count divides the kernel block.
+    data_p, orig = _pad_to(data, 32 * bw, axis=2)
+    bitmat = _bitmat_device(coeffs_np.tobytes(), n, k)
+    out = _encode_planes_batched(bitmat, data_p, bw)
+    return out[:, :, :orig]
+
+
+def rs_encode_stripes(
+    data: jax.Array,
+    k: int,
+    m: int,
+    kind: str = "cauchy",
+    backend: str = "pallas",
+    block_w: int | None = None,
+) -> jax.Array:
+    """Batched systematic RS(k, m): (S, k, L) uint8 -> (S, m, L) parity.
+
+    One kernel launch for the whole stripe batch — the data-plane shape the
+    paper's NIC pipeline sustains when many object writes stream through
+    concurrently.
+    """
+    parity = gf256.generator_matrix(k, m, kind)[k:]
+    return gf_matmul_bytes_batched(parity, data, backend=backend, block_w=block_w)
+
+
+@functools.partial(jax.jit, static_argnames=("block_w",))
+def _scale_planes(bitmat, data_bytes, block_w):
+    """Fused pack -> bit-sliced stream scaling -> unpack, one jit."""
+    planes = ref.pack_bitplanes(data_bytes)          # (k, 8, w)
+    m, k = bitmat.shape[0], bitmat.shape[1]
+    out_planes = gf_scale_bitsliced(
+        bitmat, planes, m=m, k=k, block_w=block_w, interpret=_interpret()
+    )
+    return ref.unpack_bitplanes(out_planes)          # (m, k, L)
+
+
+def gf_scale_streams(
+    coeffs: np.ndarray | jax.Array,
+    data: jax.Array,
+    block_w: int | None = None,
+) -> jax.Array:
+    """(m, k) GF coefficients x (k, L) chunks -> (m, k, L) scaled streams.
+
+    The data-node stage of streaming TriEC: stream (i, j) is
+    g[i, j] * chunk_j, every (parity, chunk) pair in one fused dispatch —
+    no folding, so the parity-node XOR aggregation stays a separate
+    (batched) stage.
+    """
+    data = jnp.asarray(data, dtype=jnp.uint8)
+    coeffs_np = np.ascontiguousarray(coeffs, dtype=np.uint8)
+    m, k = coeffs_np.shape
+    assert data.shape[0] == k, (coeffs_np.shape, data.shape)
+    if m == 0:
+        return jnp.zeros((0, k, data.shape[1]), dtype=jnp.uint8)
+    bw = _pick_block_w(data.shape[1], block_w)
+    data_p, orig = _pad_to(data, 32 * bw, axis=1)
+    bitmat = _bitmat_device(coeffs_np.tobytes(), m, k)
+    out = _scale_planes(bitmat, data_p, bw)
+    return out[:, :, :orig]
 
 
 def gf_matmul_bytes(
     coeffs: np.ndarray | jax.Array,
     data: jax.Array,
     backend: str = "pallas",
-    block_w: int = 1024,
+    block_w: int | None = 1024,
 ) -> jax.Array:
     """(n, k) GF coefficient bytes x (k, L) byte rows -> (n, L).
 
-    The workhorse for both encode (coeffs = parity matrix) and decode
-    (coeffs = inverted generator submatrix).
+    Single-stripe wrapper over :func:`gf_matmul_bytes_batched` (S=1); used
+    for both encode (coeffs = parity matrix) and decode (coeffs = inverted
+    generator submatrix).
     """
     data = jnp.asarray(data, dtype=jnp.uint8)
-    coeffs_np = np.asarray(coeffs, dtype=np.uint8)
-    n, k = coeffs_np.shape
-    assert data.shape[0] == k, (coeffs_np.shape, data.shape)
-    if backend == "ref":
-        return ref.gf_matmul_ref(jnp.asarray(coeffs_np), data)
-    # Pad L so the packed word count divides the kernel block.
-    data_p, orig = _pad_to(data, 32 * block_w, axis=1)
-    bitmat = jnp.asarray(gf256.parity_bitmatrix(coeffs_np), dtype=jnp.uint32)
-    out = _encode_planes(bitmat, data_p, block_w)
-    return out[:, :orig]
+    return gf_matmul_bytes_batched(
+        coeffs, data[None], backend=backend, block_w=block_w
+    )[0]
 
 
 def rs_encode(
@@ -83,7 +198,7 @@ def rs_encode(
     m: int,
     kind: str = "cauchy",
     backend: str = "pallas",
-    block_w: int = 1024,
+    block_w: int | None = 1024,
 ) -> jax.Array:
     """Systematic RS(k, m) parity: (k, L) uint8 -> (m, L) uint8."""
     parity = gf256.generator_matrix(k, m, kind)[k:]
@@ -128,18 +243,50 @@ def rs_encode_mxu(
 
 
 def xor_reduce_bytes(x: jax.Array, backend: str = "pallas") -> jax.Array:
-    """XOR-fold (n, L) uint8 over axis 0 -> (L,) uint8."""
+    """XOR-fold (n, L) uint8 over axis 0 -> (L,) uint8.
+
+    Odd-sized payloads are zero-padded to uint32 word granularity and
+    sliced back, so every L stays on the kernel path (XOR of zero is a
+    no-op; previously L % 4 != 0 silently fell back to the jnp ref path).
+    """
     x = jnp.asarray(x, dtype=jnp.uint8)
-    if backend == "ref" or x.shape[1] % 4 != 0:
+    if backend == "ref":
         return ref.xor_reduce_ref(x)
     n, L = x.shape
+    xp, _ = _pad_to(x, 4, axis=1)
     words = jax.lax.bitcast_convert_type(
-        x.reshape(n, L // 4, 4), jnp.uint32
-    ).reshape(n, L // 4)
-    words_p, orig = _pad_to(words, 2048, axis=1)
-    out = _xor_reduce_kernel(words_p, interpret=_interpret())[:orig]
+        xp.reshape(n, -1, 4), jnp.uint32
+    ).reshape(n, -1)
+    bw = _clamp_block_w(words.shape[1])
+    words_p, orig = _pad_to(words, bw, axis=1)
+    out = _xor_reduce_kernel(words_p, block_w=bw, interpret=_interpret())[:orig]
     out_bytes = jax.lax.bitcast_convert_type(out[:, None], jnp.uint8)
-    return out_bytes.reshape(L)
+    return out_bytes.reshape(-1)[:L]
+
+
+def xor_reduce_bytes_batched(x: jax.Array, backend: str = "pallas") -> jax.Array:
+    """Batched XOR-fold: (S, n, L) uint8 over axis 1 -> (S, L) uint8.
+
+    The parity-node accumulator aggregation for S concurrent sequences in
+    a single 2D-grid kernel dispatch (paper section VI-B3, batched).
+    """
+    x = jnp.asarray(x, dtype=jnp.uint8)
+    assert x.ndim == 3, x.shape
+    s, n, L = x.shape
+    if backend == "ref":
+        out = x[:, 0]
+        for i in range(1, n):
+            out = out ^ x[:, i]
+        return out
+    xp, _ = _pad_to(x, 4, axis=2)
+    words = jax.lax.bitcast_convert_type(
+        xp.reshape(s, n, -1, 4), jnp.uint32
+    ).reshape(s, n, -1)
+    bw = _clamp_block_w(words.shape[2])
+    words_p, orig = _pad_to(words, bw, axis=2)
+    out = _xor_reduce_batched(words_p, block_w=bw, interpret=_interpret())[:, :orig]
+    out_bytes = jax.lax.bitcast_convert_type(out[..., None], jnp.uint8)
+    return out_bytes.reshape(s, -1)[:, :L]
 
 
 # ---------------------------------------------------------------------------

@@ -42,6 +42,17 @@ def gf_matmul_ref(coeffs: jnp.ndarray, data: jnp.ndarray) -> jnp.ndarray:
     return out
 
 
+def gf_matmul_batched_ref(coeffs: jnp.ndarray, data: jnp.ndarray) -> jnp.ndarray:
+    """Stripe-batched LUT-path matmul: (n, k) x (S, k, L) -> (S, n, L)."""
+    coeffs = coeffs.astype(jnp.uint8)
+    data = data.astype(jnp.uint8)
+    prods = gf_mul_ref(coeffs[None, :, :, None], data[:, None, :, :])  # (S, n, k, L)
+    out = prods[:, :, 0, :]
+    for j in range(1, data.shape[1]):
+        out = out ^ prods[:, :, j, :]
+    return out
+
+
 def rs_encode_ref(data: jnp.ndarray, k: int, m: int, kind: str = "cauchy") -> jnp.ndarray:
     """(k, L) uint8 -> (m, L) parity via the LUT path."""
     parity = jnp.asarray(gf256.generator_matrix(k, m, kind)[k:])

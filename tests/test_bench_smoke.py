@@ -1,0 +1,63 @@
+"""Bench-harness smoke tests: imports stay clean under tier-1, the
+dataplane sweep emits a schema-stable JSON artifact, and run.py --json
+writes any bench table as a BENCH_*.json artifact.  Tiny shapes only."""
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def test_bench_modules_import_clean():
+    sys.path.insert(0, str(REPO))
+    try:
+        import benchmarks.contention  # noqa: F401
+        import benchmarks.dataplane  # noqa: F401
+        import benchmarks.paper_figs  # noqa: F401
+        import benchmarks.run  # noqa: F401
+    finally:
+        sys.path.remove(str(REPO))
+
+
+def test_dataplane_sweep_schema():
+    sys.path.insert(0, str(REPO))
+    try:
+        from benchmarks.dataplane import sweep
+    finally:
+        sys.path.remove(str(REPO))
+    result = sweep(codes=((3, 2),), stripes=(1, 2), chunk_sizes=(256,),
+                   repeats=1)
+    assert result["bench"] == "dataplane"
+    assert result["metric"] == "bytes_per_s"
+    assert {"backend", "interpret", "rows"} <= set(result)
+    assert len(result["rows"]) == 2
+    for row in result["rows"]:
+        assert {
+            "code", "k", "m", "stripes", "chunk_bytes", "data_bytes",
+            "per_stripe_us", "batched_us", "per_stripe_bytes_per_s",
+            "batched_bytes_per_s", "speedup",
+        } <= set(row)
+        assert row["batched_bytes_per_s"] > 0
+        assert row["per_stripe_bytes_per_s"] > 0
+    json.dumps(result)  # artifact must be JSON-serializable
+
+
+def test_run_py_json_artifact(tmp_path):
+    out = tmp_path / "BENCH_fig4.json"
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--only", "fig4",
+         "--json", str(out)],
+        cwd=REPO,
+        capture_output=True,
+        text=True,
+        timeout=300,
+    )
+    assert proc.returncode == 0, proc.stderr
+    doc = json.loads(out.read_text())
+    assert doc["bench"] == "paper_figs"
+    assert doc["rows"], "no rows emitted"
+    for row in doc["rows"]:
+        assert {"name", "us_per_call", "derived"} <= set(row)
+    assert any(r["name"].startswith("fig4/") for r in doc["rows"])
