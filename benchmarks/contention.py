@@ -29,12 +29,31 @@ import time
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.sim.protocols import PROTOCOL_NAMES, run_single_shot  # noqa: E402
-from repro.sim.workload import KiB, Scenario, run_scenario  # noqa: E402
+from repro.sim.workload import (  # noqa: E402
+    KiB,
+    Scenario,
+    SizeDist,
+    run_scenario,
+)
 
 CORE_PROTOCOLS = ("spin-write", "spin-ring", "spin-triec")
 
 HDR = ("protocol,clients,arrival,issued,completed,dropped,p50_us,p95_us,"
        "p99_us,goodput_GBps,hpu_qpeak,ingress_qpeak,single_shot_us,delta_pct")
+
+
+def size_dist_for(args) -> SizeDist | None:
+    """Per-request size distribution from the CLI (None: fixed --size)."""
+    if args.size_dist == "fixed":
+        return None
+    return SizeDist(
+        kind=args.size_dist,
+        mean=args.size,
+        sigma=args.size_sigma,
+        small=args.small,
+        large=args.large,
+        p_large=args.p_large,
+    )
 
 
 def scenario_for(protocol: str, args, num_clients: int, **over) -> Scenario:
@@ -49,6 +68,7 @@ def scenario_for(protocol: str, args, num_clients: int, **over) -> Scenario:
         seed=args.seed,
         k=k,
         m=m,
+        size_dist=size_dist_for(args),
     )
     base.update(over)
     return Scenario(**base)
@@ -60,7 +80,7 @@ def sweep_clients(protocol: str, args) -> list[str]:
         sc = scenario_for(protocol, args, n)
         rep = run_scenario(sc)
         single = parity = ""
-        if n == 1 and protocol in PROTOCOL_NAMES:
+        if n == 1 and protocol in PROTOCOL_NAMES and sc.size_dist is None:
             ss_us = run_single_shot(
                 protocol, sc.size, k=sc.k, m=sc.m).latency_ns / 1e3
             delta = (rep["p50_us"] - ss_us) / ss_us * 100.0
@@ -146,6 +166,17 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--only", nargs="+", default=[],
                     help="sweep exactly these protocols (skip the trio)")
     ap.add_argument("--size", type=int, default=64 * KiB)
+    ap.add_argument("--size-dist", default="fixed",
+                    choices=("fixed", "lognormal", "bimodal"),
+                    help="per-request size distribution (mean: --size)")
+    ap.add_argument("--size-sigma", type=float, default=0.6,
+                    help="lognormal shape parameter")
+    ap.add_argument("--small", type=int, default=4 * KiB,
+                    help="bimodal low mode (bytes)")
+    ap.add_argument("--large", type=int, default=256 * KiB,
+                    help="bimodal high mode (bytes)")
+    ap.add_argument("--p-large", type=float, default=0.125,
+                    help="bimodal probability of the high mode")
     ap.add_argument("--requests", type=int, default=8,
                     help="closed-loop requests per client")
     ap.add_argument("--k", type=int, default=4, help="replication factor")

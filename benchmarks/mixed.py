@@ -1,0 +1,111 @@
+"""Mixed-policy contention benchmark: writes + EC on shared storage nodes.
+
+The paper's scaling claims (Fig. 16) live in the mixed regime: small
+authenticated writes contending with erasure-coded bulk stripes for the
+same links and HPU pools.  This sweep compiles two policies onto ONE
+shared ``Env`` — lognormal-sized sPIN writes plus fixed-block sPIN-TriEC
+RS(3, 2) — and reports aggregate and per-policy goodput and tail latency
+per client count.
+
+Usage:
+
+  PYTHONPATH=src python benchmarks/mixed.py [--clients 2 4 8] \
+      [--json BENCH_mixed.json]
+
+``benchmarks/run.py --mixed`` runs the same sweep and always writes the
+``BENCH_mixed.json`` artifact (the cross-PR regression anchor).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.sim.workload import (  # noqa: E402
+    KiB,
+    PolicyLoad,
+    Scenario,
+    SizeDist,
+    run_scenario,
+)
+
+DEFAULT_CLIENTS = (2, 4, 8)
+
+
+def mixed_scenario(num_clients: int, requests: int = 6,
+                   seed: int = 0) -> Scenario:
+    """Writes (2/3 of traffic, lognormal sizes) + EC stripes (1/3, fixed
+    128 KiB blocks) sharing one Env and its storage nodes."""
+    return Scenario(
+        policies=[
+            PolicyLoad("spin-write", 2.0,
+                       SizeDist("lognormal", mean=64 * KiB, sigma=0.6)),
+            PolicyLoad("spin-triec", 1.0,
+                       SizeDist("fixed", mean=128 * KiB)),
+        ],
+        size=128 * KiB,
+        num_clients=num_clients,
+        requests_per_client=requests,
+        k=3,
+        m=2,
+        seed=seed,
+    )
+
+
+def bench_rows(clients=DEFAULT_CLIENTS, requests: int = 6) -> list[tuple]:
+    """(name, p99_us, goodput_GBps) rows: aggregate + per policy."""
+    rows = []
+    for n in clients:
+        rep = run_scenario(mixed_scenario(n, requests))
+        assert rep["issued"] == (rep["completed"] + rep["in_flight"]
+                                 + rep["dropped"])
+        rows.append(
+            (f"mixed/write+ec/c{n}", round(rep["p99_us"], 2),
+             round(rep["goodput_GBps"], 2))
+        )
+        for name, pp in rep["per_policy"].items():
+            rows.append(
+                (f"mixed/{name}/c{n}", round(pp["p99_us"], 2),
+                 round(pp["goodput_GBps"], 2))
+            )
+    return rows
+
+
+def write_artifact(rows: list[tuple], out: str) -> None:
+    with open(out, "w") as f:
+        json.dump(
+            {
+                "bench": "mixed",
+                "metric": "p99_us/goodput_GBps",
+                "rows": [
+                    {"name": n, "us_per_call": u, "derived": d}
+                    for n, u, d in rows
+                ],
+            },
+            f,
+            indent=1,
+        )
+    print(f"# wrote {out}", file=sys.stderr)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--clients", type=int, nargs="+",
+                    default=list(DEFAULT_CLIENTS))
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--json", default=None, metavar="OUT")
+    args = ap.parse_args()
+    rows = bench_rows(tuple(args.clients), args.requests)
+    print("name,p99_us,goodput_GBps")
+    for name, us, derived in rows:
+        print(f"{name},{us},{derived}")
+    if args.json:
+        write_artifact(rows, args.json)
+
+
+if __name__ == "__main__":
+    main()

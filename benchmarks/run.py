@@ -3,14 +3,18 @@
 Prints ``name,us_per_call,derived`` CSV rows.  Usage:
 
   PYTHONPATH=src python -m benchmarks.run [--only fig6,fig15] [--roofline]
-                                          [--contention] [--json OUT]
+                                          [--contention] [--mixed]
+                                          [--json OUT]
 
 ``--contention`` appends the multi-client sweep (p99 latency / goodput per
-client count; see benchmarks/contention.py for the full CLI).  ``--json``
-additionally writes every emitted row to ``OUT`` as a ``BENCH_*.json``
-artifact ({"bench", "rows": [{"name", "us_per_call", "derived"}]}) so any
-bench table can be tracked across PRs.  (The kernel data-plane sweep has
-its own dedicated artifact: ``benchmarks/dataplane.py``.)
+client count; see benchmarks/contention.py for the full CLI).  ``--mixed``
+appends the mixed-policy sweep (writes + EC sharing storage nodes on one
+Env; see benchmarks/mixed.py) and always writes its ``BENCH_mixed.json``
+artifact.  ``--json`` additionally writes every emitted row to ``OUT`` as
+a ``BENCH_*.json`` artifact ({"bench", "rows": [{"name", "us_per_call",
+"derived"}]}) so any bench table can be tracked across PRs.  (The kernel
+data-plane sweep has its own dedicated artifact: ``benchmarks/
+dataplane.py``.)
 """
 
 from __future__ import annotations
@@ -53,6 +57,11 @@ def main() -> None:
                     help="also print the dry-run roofline table")
     ap.add_argument("--contention", action="store_true",
                     help="also print the multi-client contention sweep")
+    ap.add_argument("--mixed", action="store_true",
+                    help="also run the mixed-policy sweep (writes + EC on "
+                         "shared nodes) and write BENCH_mixed.json")
+    ap.add_argument("--mixed-out", default="BENCH_mixed.json",
+                    metavar="OUT", help="artifact path for --mixed")
     ap.add_argument("--json", default=None, metavar="OUT",
                     help="also write the emitted rows to OUT as a "
                          "BENCH_*.json artifact")
@@ -79,6 +88,14 @@ def main() -> None:
 
         for name, us, derived in bench_rows():
             emit(name, us, derived)
+    if args.mixed:
+        from benchmarks.mixed import bench_rows as mixed_rows
+        from benchmarks.mixed import write_artifact
+
+        mrows = mixed_rows()
+        for name, us, derived in mrows:
+            emit(name, us, derived)
+        write_artifact(mrows, args.mixed_out)
     if args.json:
         with open(args.json, "w") as f:
             json.dump(

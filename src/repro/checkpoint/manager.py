@@ -25,6 +25,8 @@ import numpy as np
 from repro.checkpoint.storage import ObjectLayout, StorageCluster
 from repro.core.auth import sponge_mac
 from repro.core.packets import ReplStrategy, Resiliency
+from repro.policy.functional import write_plan
+from repro.policy.spec import PolicySpec, RS, SpongeAuth, Tree
 
 
 @dataclasses.dataclass(frozen=True)
@@ -34,6 +36,51 @@ class CheckpointPolicy:
     m: int = 2
     strategy: ReplStrategy = ReplStrategy.RING
     stripe_bytes: int = 1 << 20       # split big leaves into stripe objects
+    #: EC encode locus: "client" batches every stripe of a leaf through one
+    #: RSCode.encode_stripes call (PR 2's fused data plane) and writes the
+    #: shards as authenticated plain writes; "nic" streams per-packet
+    #: intermediate parities through the policy engine (paper section VI).
+    encode: str = "client"
+
+    def spec(self) -> PolicySpec:
+        """The equivalent declarative policy (single source of truth —
+        ``from_spec`` round-trips)."""
+        if self.resiliency == Resiliency.ERASURE_CODING:
+            engine = "client" if self.encode == "client" else "spin"
+            return PolicySpec(
+                "spin", SpongeAuth(), erasure=RS(self.k, self.m, engine),
+                name="checkpoint-ec",
+            )
+        if self.resiliency == Resiliency.REPLICATION:
+            return PolicySpec(
+                "spin", SpongeAuth(), replication=Tree(self.k, self.strategy),
+                name="checkpoint-repl",
+            )
+        return PolicySpec("spin", SpongeAuth(), name="checkpoint-plain")
+
+    @classmethod
+    def from_spec(
+        cls, spec: PolicySpec, stripe_bytes: int = 1 << 20
+    ) -> "CheckpointPolicy":
+        plan = write_plan(spec)
+        if plan.kind == "flat":
+            # Flat has no object layout; silently storing one copy would
+            # drop the requested redundancy.
+            raise ValueError(
+                "Flat replication has no checkpoint layout; use a Tree spec"
+            )
+        if plan.resiliency == Resiliency.ERASURE_CODING:
+            return cls(
+                Resiliency.ERASURE_CODING, plan.k, plan.m,
+                stripe_bytes=stripe_bytes,
+                encode="client" if plan.kind == "ec-client" else "nic",
+            )
+        if plan.resiliency == Resiliency.REPLICATION:
+            return cls(
+                Resiliency.REPLICATION, plan.k, 0, plan.strategy,
+                stripe_bytes=stripe_bytes,
+            )
+        return cls(Resiliency.NONE, 1, 0, stripe_bytes=stripe_bytes)
 
 
 def _leaf_to_bytes(x) -> tuple[bytes, dict]:
@@ -52,9 +99,11 @@ class CheckpointManager:
     def __init__(
         self,
         cluster: StorageCluster,
-        policy: CheckpointPolicy | None = None,
+        policy: CheckpointPolicy | PolicySpec | None = None,
     ):
         self.cluster = cluster
+        if isinstance(policy, PolicySpec):
+            policy = CheckpointPolicy.from_spec(policy)
         self.policy = policy or CheckpointPolicy()
         self._manifests: dict[int, dict] = {}
         self._pending: threading.Thread | None = None
@@ -74,25 +123,40 @@ class CheckpointManager:
 
         def worker():
             t0 = time.time()
+            pol = self.policy
+            bulk_ec = (pol.resiliency == Resiliency.ERASURE_CODING
+                       and pol.encode == "client")
             manifest = {"step": step, "leaves": [], "policy": {
-                "resiliency": int(self.policy.resiliency),
-                "k": self.policy.k, "m": self.policy.m,
+                "resiliency": int(pol.resiliency),
+                "k": pol.k, "m": pol.m, "encode": pol.encode,
             }}
             for path, arr in snap:
                 raw, meta = _leaf_to_bytes(arr)
-                stripes = []
-                for off in range(0, max(len(raw), 1), self.policy.stripe_bytes):
-                    chunk = raw[off : off + self.policy.stripe_bytes]
-                    layout = self.cluster.write_object(
-                        chunk,
-                        resiliency=self.policy.resiliency,
-                        k=self.policy.k,
-                        m=self.policy.m,
-                        strategy=self.policy.strategy,
+                blobs = [
+                    raw[off : off + pol.stripe_bytes]
+                    for off in range(0, max(len(raw), 1), pol.stripe_bytes)
+                ]
+                if bulk_ec:
+                    # one batched RSCode.encode_stripes per chunk-length
+                    # group across all stripes of this leaf
+                    layouts = self.cluster.write_object_bulk(
+                        blobs, k=pol.k, m=pol.m
                     )
-                    stripes.append(
-                        {"oid": layout.object_id, "size": len(chunk)}
-                    )
+                else:
+                    layouts = [
+                        self.cluster.write_object(
+                            blob,
+                            resiliency=pol.resiliency,
+                            k=pol.k,
+                            m=pol.m,
+                            strategy=pol.strategy,
+                        )
+                        for blob in blobs
+                    ]
+                stripes = [
+                    {"oid": layout.object_id, "size": len(blob)}
+                    for layout, blob in zip(layouts, blobs)
+                ]
                 mac = sponge_mac(
                     np.frombuffer(raw[:64].ljust(64, b"\0"), np.uint32),
                     self.cluster.meta.authority.key,

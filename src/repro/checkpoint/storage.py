@@ -25,7 +25,8 @@ import numpy as np
 
 from repro.core.auth import CapabilityAuthority, Rights
 from repro.core.handlers import DFSClient, DFSNode, Router
-from repro.core.packets import ReplicaCoord, ReplStrategy, Resiliency
+from repro.core.packets import OpType, ReplicaCoord, ReplStrategy, Resiliency
+from repro.policy.functional import write_plan
 
 
 @dataclasses.dataclass
@@ -151,7 +152,22 @@ class StorageCluster:
         k: int = 4,
         m: int = 2,
         strategy: ReplStrategy = ReplStrategy.RING,
+        spec=None,
     ) -> ObjectLayout:
+        """Write one object.  ``spec`` (a :class:`repro.policy.PolicySpec`)
+        overrides the positional policy knobs; an ``RS(engine='client')``
+        spec routes through the batched host encode
+        (:meth:`write_object_bulk`)."""
+        if spec is not None:
+            plan = write_plan(spec)
+            if plan.kind == "ec-client":
+                return self.write_object_bulk([data], k=plan.k, m=plan.m)[0]
+            if plan.kind == "flat":
+                raise NotImplementedError(
+                    "Flat replication has no object layout; use a Tree spec"
+                )
+            resiliency, strategy = plan.resiliency, plan.strategy
+            k, m = plan.k, plan.m
         blob = np.frombuffer(bytes(data), np.uint8) if isinstance(
             data, (bytes, bytearray)) else np.asarray(data, np.uint8).ravel()
         layout = self.meta.create_object(
@@ -171,16 +187,75 @@ class StorageCluster:
                 resiliency=resiliency, strategy=strategy,
             )
             expect = 1
-        acks = self.client.acks()[before:]
-        from repro.core.packets import OpType
+        self._check_acks(layout, before, expect)
+        return layout
 
+    def _check_acks(self, layout: ObjectLayout, before: int, expect: int) -> None:
+        acks = self.client.acks()[before:]
         good = [a for a in acks if a.ctrl == OpType.WRITE_ACK]
         if len(good) < expect:
             raise IOError(
                 f"object {layout.object_id}: {len(good)}/{expect} acks "
                 f"(NACK or loss)"
             )
-        return layout
+
+    def write_object_bulk(
+        self,
+        blobs: list[bytes | np.ndarray],
+        k: int = 4,
+        m: int = 2,
+        backend: str = "numpy",
+    ) -> list[ObjectLayout]:
+        """Batched client-side EC — the ``RS(engine='client')`` plan.
+
+        All same-geometry stripes are encoded in *one*
+        ``RSCode.encode_stripes`` call (the PR 2 batched data plane:
+        backend="jax" is a single fused kernel dispatch per chunk-length
+        group), then every data/parity shard is written as an
+        authenticated plain write through the policy engine."""
+        from repro.core.erasure import RSCode, split_stripe
+
+        arrs = [
+            np.frombuffer(bytes(b), np.uint8)
+            if isinstance(b, (bytes, bytearray))
+            else np.asarray(b, np.uint8).ravel()
+            for b in blobs
+        ]
+        layouts = [
+            self.meta.create_object(
+                int(a.size), Resiliency.ERASURE_CODING, k, m,
+                ReplStrategy.RING,
+            )
+            for a in arrs
+        ]
+        # Group stripes by chunk length -> one batched encode each.
+        chunks_list: list[np.ndarray] = []
+        groups: dict[int, list[int]] = {}
+        for idx, (a, lay) in enumerate(zip(arrs, layouts)):
+            chunks = split_stripe(a, k)
+            assert chunks.shape[1] == lay.chunk_len, (
+                chunks.shape, lay.chunk_len)
+            chunks_list.append(chunks)
+            groups.setdefault(chunks.shape[1], []).append(idx)
+        code = RSCode(k, m)
+        parities: dict[int, np.ndarray] = {}
+        for length, idxs in groups.items():
+            if length == 0:
+                for i in idxs:
+                    parities[i] = np.zeros((m, 0), np.uint8)
+                continue
+            batch = np.stack([chunks_list[i] for i in idxs])   # (S, k, L)
+            par = code.encode_stripes(batch, backend=backend)  # (S, m, L)
+            for s, i in enumerate(idxs):
+                parities[i] = par[s]
+        for i, lay in enumerate(layouts):
+            before = len(self.client.acks())
+            for j, coord in enumerate(lay.data_coords):
+                self.client.write(self.capability, chunks_list[i][j], [coord])
+            for pi, coord in enumerate(lay.parity_coords):
+                self.client.write(self.capability, parities[i][pi], [coord])
+            self._check_acks(lay, before, lay.ec_k + lay.ec_m)
+        return layouts
 
     def read_object(self, layout: ObjectLayout) -> bytes:
         """Read with degraded-mode EC reconstruction / replica failover."""

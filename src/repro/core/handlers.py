@@ -45,8 +45,13 @@ from repro.core.packets import (
     WriteRequestHeader,
     packetize_write,
 )
+from repro.core.packets import ReadRequestHeader
 from repro.core.replication import children_of
 from repro.core.state import RequestEntry, RequestTable
+
+# NB: repro.policy.functional is imported lazily (function scope) — the
+# policy package imports repro.core.packets, so a module-level import here
+# would make `import repro.policy` circular.
 
 
 class StorageTarget:
@@ -124,6 +129,9 @@ class _ReqState:
     child_acks: int = 0
     parent: int | None = None  # node id to ack (None => ack the client)
     acked: bool = False
+    #: payload-handler pipeline for this request, assembled from the policy
+    #: carried by the WRH (repro.policy.functional.payload_stages)
+    stages: tuple[str, ...] = ()
 
 
 class DFSNode:
@@ -174,12 +182,15 @@ class DFSNode:
         if accept and not entry_ok:
             accept = False  # table full: deny, client retries (section III-B2)
             self.events.append(Event("deny_full", dfs.greq_id))
+        from repro.policy.functional import payload_stages
+
         self._reqs[dfs.greq_id] = _ReqState(
             accept=accept,
             wrh=wrh,
             client_id=dfs.client_id,
             children=children,
             parent=parent,
+            stages=payload_stages(wrh),
         )
         if not accept:
             self._nack(dfs.greq_id, dfs.client_id)
@@ -209,19 +220,39 @@ class DFSNode:
         st = self._reqs.get(pkt.greq_id)
         if st is None or not st.accept:
             return  # packet dropped (Listing 1 else-branch)
-        wrh = st.wrh
-        assert wrh is not None
-        if wrh.resiliency == Resiliency.ERASURE_CODING and wrh.ec_index >= wrh.ec_k:
-            self._aggregate_parity(pkt, st)
-            return
-        # Store to the local target.
-        self.storage.write(wrh.addr + pkt.payload_offset, pkt.payload)
-        # Replication: forward to children (per-packet, before host memory).
+        for stage in st.stages:
+            self.PAYLOAD_STAGES[stage](self, pkt, st)
+
+    # Payload-pipeline stages (policy building blocks; the pipeline for a
+    # request is assembled at header time by repro.policy.functional):
+
+    def _stage_store(self, pkt: Packet, st: _ReqState) -> None:
+        """Store to the local target."""
+        assert st.wrh is not None
+        self.storage.write(st.wrh.addr + pkt.payload_offset, pkt.payload)
+
+    def _stage_forward(self, pkt: Packet, st: _ReqState) -> None:
+        """Replication: forward to children (per-packet, before host
+        memory) — section V."""
         for child_rank in st.children:
             self._forward_to_child(pkt, st, child_rank)
-        # EC data node: emit intermediate parities for each parity target.
-        if wrh.resiliency == Resiliency.ERASURE_CODING and wrh.ec_index < wrh.ec_k:
-            self._emit_intermediate_parities(pkt, st)
+
+    def _stage_emit_parity(self, pkt: Packet, st: _ReqState) -> None:
+        """EC data node: emit intermediate parities — section VI."""
+        self._emit_intermediate_parities(pkt, st)
+
+    def _stage_aggregate(self, pkt: Packet, st: _ReqState) -> None:
+        """EC parity node: XOR-aggregate intermediate parities."""
+        self._aggregate_parity(pkt, st)
+
+    # keys are the stage names of repro.policy.functional (STORE, FORWARD,
+    # EMIT_PARITY, AGGREGATE) — literals here to keep the import lazy
+    PAYLOAD_STAGES = {
+        "store": _stage_store,
+        "forward": _stage_forward,
+        "emit_parity": _stage_emit_parity,
+        "aggregate": _stage_aggregate,
+    }
 
     def _forward_to_child(self, pkt: Packet, st: _ReqState, child_rank: int) -> None:
         wrh = st.wrh
@@ -334,12 +365,7 @@ class DFSNode:
         st = self._reqs.get(pkt.greq_id)
         if st is None or not st.accept:
             return
-        wrh = st.wrh
-        if (
-            wrh is not None
-            and wrh.resiliency == Resiliency.ERASURE_CODING
-            and wrh.ec_index >= wrh.ec_k
-        ):
+        if "aggregate" in st.stages:
             return  # parity streams ack at stripe granularity (_aggregate_parity)
         st.local_done = True
         self._maybe_ack(pkt.greq_id)
@@ -368,12 +394,62 @@ class DFSNode:
         self.router.send_to_client(client_id, _control_packet(greq_id, OpType.NACK))
         self.events.append(Event("nack", greq_id))
 
+    # -- read path (first read-policy: request up, data streamed back) -------
+
+    def _read_handler(self, pkt: Packet) -> None:
+        """HH of the read pipeline: capability check (Rights.READ), then
+        the PH streams the extent back in MTU-sized READ_RESP packets."""
+        dfs, rrh = pkt.dfs, pkt.rrh
+        assert dfs is not None and rrh is not None
+        ok = self.authority.verify(
+            dfs.capability,
+            now=self.now_fn(),
+            op_rights=Rights.READ,
+            offset=rrh.addr,
+            length=rrh.size,
+            client_id=dfs.client_id,
+        )
+        if not ok:
+            self._nack(dfs.greq_id, dfs.client_id)
+            return
+        data = self.storage.read(rrh.addr, rrh.size)
+        cap = self.mtu - RDMA_HEADER_SIZE
+        off = 0
+        idx = 0
+        while True:
+            chunk = data[off : off + cap]
+            is_last = off + chunk.size >= data.size
+            self.router.send_to_client(
+                dfs.client_id,
+                Packet(
+                    greq_id=dfs.greq_id,
+                    pkt_index=idx,
+                    is_header=(idx == 0),
+                    is_completion=is_last,
+                    dfs=None,
+                    wrh=None,
+                    rrh=rrh,
+                    payload=np.ascontiguousarray(chunk),
+                    payload_offset=off,
+                    wire_size=RDMA_HEADER_SIZE + int(chunk.size),
+                    ctrl=OpType.READ_RESP,
+                ),
+            )
+            off += int(chunk.size)
+            idx += 1
+            if is_last:
+                break
+        self.events.append(Event("read_done", dfs.greq_id))
+
     # -- dispatch -------------------------------------------------------------
 
     def handle_packet(self, pkt: Packet) -> None:
         if pkt.ctrl is not None:
             if pkt.ctrl == OpType.WRITE_ACK:
                 self._on_child_ack(pkt.greq_id)
+            return
+        if pkt.rrh is not None:
+            self._read_handler(pkt)
             return
         if pkt.is_header:
             self._header_handler(pkt)
@@ -493,6 +569,80 @@ class DFSClient:
                 if i < len(pkt_streams[j]):
                     self.router.send(targets[j].node, pkt_streams[j][i])
         return greqs
+
+    def write_spec(
+        self,
+        capability,
+        data: np.ndarray,
+        spec,
+        targets: list[ReplicaCoord],
+        parity_targets: list[ReplicaCoord] | None = None,
+    ) -> list[int]:
+        """Issue a write under a declarative :class:`repro.policy.PolicySpec`
+        (the spec's stages are lowered by ``repro.policy.functional``)."""
+        from repro.policy.functional import write_plan
+
+        plan = write_plan(spec)
+        if plan.kind == "flat":
+            greqs: list[int] = []
+            for t in targets[: plan.k]:
+                greqs += self.write(capability, data, [t])
+            return greqs
+        if plan.kind == "tree":
+            return self.write(
+                capability, data, targets,
+                resiliency=Resiliency.REPLICATION, strategy=plan.strategy,
+            )
+        if plan.kind == "ec-nic":
+            return self.write(
+                capability, data, targets,
+                resiliency=Resiliency.ERASURE_CODING, ec_m=plan.m,
+                parity_targets=parity_targets,
+            )
+        if plan.kind == "ec-client":
+            raise ValueError(
+                "ec-client plans batch-encode on the host; use "
+                "StorageCluster.write_object_bulk, not the packet client"
+            )
+        return self.write(capability, data, targets[:1])
+
+    def read(self, capability, coord: ReplicaCoord, size: int) -> np.ndarray:
+        """Authenticated read: READ request up, READ_RESP packets streamed
+        back by the node's read pipeline.  Returns the bytes; raises
+        :class:`IOError` on NACK or short data."""
+        greq = self._greq()
+        dfs = DFSHeader(OpType.READ, greq, self.client_id, capability)
+        rrh = ReadRequestHeader(addr=coord.addr, size=size)
+        req = Packet(
+            greq_id=greq,
+            pkt_index=0,
+            is_header=True,
+            is_completion=True,
+            dfs=dfs,
+            wrh=None,
+            rrh=rrh,
+            payload=np.zeros(0, dtype=np.uint8),
+            payload_offset=0,
+            wire_size=RDMA_HEADER_SIZE + DFSHeader.packed_size()
+            + rrh.packed_size(),
+        )
+        inbox = self.router.client_acks[self.client_id]
+        before = len(inbox)
+        self.router.send(coord.node, req)
+        resps = inbox[before:]
+        del inbox[before:]  # reads are consumed; acks() stays write-centric
+        if any(p.ctrl == OpType.NACK and p.greq_id == greq for p in resps):
+            raise IOError(f"read {greq}: denied (NACK)")
+        out = np.zeros(size, dtype=np.uint8)
+        got = 0
+        for p in resps:
+            if p.ctrl != OpType.READ_RESP or p.greq_id != greq:
+                continue
+            out[p.payload_offset : p.payload_offset + p.payload_size] = p.payload
+            got += p.payload_size
+        if got != size:
+            raise IOError(f"read {greq}: got {got}/{size} bytes")
+        return out
 
     def acks(self) -> list[Packet]:
         return self.router.client_acks[self.client_id]

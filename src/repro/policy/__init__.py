@@ -1,0 +1,28 @@
+"""Composable storage-policy API (see :mod:`repro.policy.spec`).
+
+One declarative :class:`PolicySpec` drives every plane of the repro:
+``repro.policy.timed`` compiles it to a timed stage pipeline on a shared
+sim :class:`~repro.sim.protocols.Env`; ``repro.policy.functional`` maps it
+onto the byte-accurate handler pipeline of ``repro.core.handlers``; the
+checkpoint plane derives its shard encoding from it.
+"""
+
+from repro.policy.spec import (  # noqa: F401
+    Flat,
+    HostAuth,
+    NoAuth,
+    PolicySpec,
+    PRESET_NAMES,
+    RS,
+    SpongeAuth,
+    Tree,
+    preset_spec,
+)
+
+
+def compile_policy(env, spec, size, **kw):
+    """Compile ``spec`` to a timed protocol pipeline on ``env`` (lazy
+    import: the sim plane is optional for functional-only users)."""
+    from repro.policy.timed import compile_policy as _compile
+
+    return _compile(env, spec, size, **kw)

@@ -1,0 +1,241 @@
+"""Declarative storage-policy specs: the building blocks, as data.
+
+The paper's thesis is that DFS storage policies are *composable building
+blocks* on the NIC data path: authentication (section IV), replication
+(section V), and erasure coding (section VI) stack onto a base transport
+and are recombined per deployment.  :class:`PolicySpec` is that idea as a
+value: one small declarative record naming each stage, which every plane
+of the reproduction compiles for itself:
+
+  * ``repro.policy.timed``      -> a timed stage pipeline over a shared
+    simulation :class:`~repro.sim.protocols.Env` (latency/goodput studies);
+  * ``repro.policy.functional`` -> the byte-accurate handler pipeline of
+    ``repro.core.handlers`` (Listing 1, actual payload bytes);
+  * ``repro.checkpoint``        -> the checkpoint plane's shard encoding
+    (client-batched RS via ``RSCode.encode_stripes`` or NIC streaming).
+
+Stage vocabulary (paper section in parentheses):
+
+  transport    "rdma" (plain one-sided write), "rpc" (host-CPU delivery),
+               or "spin" (per-packet NIC handlers, section II-B)
+  auth         :class:`NoAuth`, :class:`SpongeAuth` (on-NIC capability
+               check, section IV), :class:`HostAuth` (CPU validation; with
+               ``rdma_read`` it is the validate-then-RDMA-read of Fig. 5)
+  replication  :class:`Flat` (client fan-out), :class:`Tree` (chunked
+               ring/PBT broadcast, section V; ``engine`` picks the
+               forwarding plane: "spin", "host", or "hyperloop")
+  erasure      :class:`RS` (RS(k, m), section VI; ``engine`` picks "spin"
+               streaming, "inec" chunk-granularity offload, or "client"
+               batched host encode via ``RSCode.encode_stripes``)
+  op           "write" or "read" (read path: request up, data stream back)
+
+The 12 hand-written protocol simulators of ``repro.sim.legacy`` are the
+:data:`PRESETS` of this module; ``repro.sim.protocols.make_protocol`` and
+the ``run_*`` wrappers are thin shims over them.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.packets import ReplStrategy
+
+TRANSPORTS = ("rdma", "rpc", "spin")
+OPS = ("write", "read")
+
+
+@dataclasses.dataclass(frozen=True)
+class NoAuth:
+    """No request validation: the raw-RDMA speed-of-light baseline."""
+
+
+@dataclasses.dataclass(frozen=True)
+class SpongeAuth:
+    """Section IV: on-NIC capability validation (sponge MAC) in the
+    header handler; payload handlers are gated on its completion."""
+
+    handler: str = "auth"  # HANDLER_NS key for the (HH, PH, CH) costs
+
+
+@dataclasses.dataclass(frozen=True)
+class HostAuth:
+    """Host-CPU request validation (the RPC baselines of Fig. 6).
+
+    ``rdma_read=True`` is the RPC+RDMA hybrid of Fig. 5: validate via RPC,
+    then RDMA-read the payload from the client."""
+
+    rdma_read: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class Flat:
+    """Section V baseline: the client fans out one write per replica."""
+
+    k: int = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class Tree:
+    """Section V: broadcast along a ring / perfectly-balanced tree.
+
+    ``engine`` selects the forwarding plane: "spin" (per-packet NIC
+    handlers), "host" (chunked store-and-forward through host memory), or
+    "hyperloop" (pre-posted WQE chains with a client config phase)."""
+
+    k: int = 2
+    strategy: ReplStrategy = ReplStrategy.RING
+    engine: str = "spin"
+
+
+@dataclasses.dataclass(frozen=True)
+class RS:
+    """Section VI: RS(k, m) erasure coding.
+
+    ``engine``: "spin" (streaming per-packet TriEC encode), "inec"
+    (chunk-granularity NIC engine with host staging), or "client"
+    (host-side batched encode through ``RSCode.encode_stripes`` — the
+    checkpoint plane's bulk path; not a timed-sim engine)."""
+
+    k: int = 4
+    m: int = 2
+    engine: str = "spin"
+
+
+_TREE_ENGINES = ("spin", "host", "hyperloop")
+_RS_ENGINES = ("spin", "inec", "client")
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicySpec:
+    """One storage policy: transport x auth x replication x erasure x op.
+
+    Example::
+
+        PolicySpec(transport="spin", auth=SpongeAuth(),
+                   replication=Tree(k=8, strategy=ReplStrategy.PBT),
+                   op="write")
+    """
+
+    transport: str = "rdma"
+    auth: NoAuth | SpongeAuth | HostAuth = NoAuth()
+    replication: Flat | Tree | None = None
+    erasure: RS | None = None
+    op: str = "write"
+    name: str | None = None  # preset name (reports / registries)
+
+    def __post_init__(self):
+        self.validate()
+
+    # -- structure ----------------------------------------------------------
+
+    def validate(self) -> None:
+        if self.transport not in TRANSPORTS:
+            raise ValueError(f"unknown transport {self.transport!r}")
+        if self.op not in OPS:
+            raise ValueError(f"unknown op {self.op!r}")
+        if self.replication is not None and self.erasure is not None:
+            raise ValueError("replication and erasure stages are exclusive "
+                             "(nest objects instead)")
+        if isinstance(self.auth, HostAuth) and self.transport != "rpc":
+            raise ValueError("HostAuth requires the rpc transport")
+        if self.transport == "rpc" and not isinstance(self.auth, HostAuth):
+            raise ValueError("rpc transport requires HostAuth")
+        if isinstance(self.auth, SpongeAuth) and self.transport != "spin":
+            raise ValueError(
+                "SpongeAuth runs in NIC handlers; it requires the spin "
+                "transport"
+            )
+        if self.transport == "spin" and not isinstance(self.auth, SpongeAuth):
+            raise ValueError(
+                "spin transport requires SpongeAuth (the NIC handler "
+                "pipeline validates every request)"
+            )
+        if isinstance(self.replication, Tree):
+            if self.replication.engine not in _TREE_ENGINES:
+                raise ValueError(
+                    f"unknown Tree engine {self.replication.engine!r}")
+            if self.replication.engine == "spin" and self.transport != "spin":
+                raise ValueError("Tree(engine='spin') requires spin transport")
+        if self.erasure is not None:
+            if self.erasure.engine not in _RS_ENGINES:
+                raise ValueError(f"unknown RS engine {self.erasure.engine!r}")
+            if self.erasure.engine == "spin" and self.transport != "spin":
+                raise ValueError("RS(engine='spin') requires spin transport")
+        if self.op == "read" and (self.replication or self.erasure):
+            raise ValueError("read policies do not take replication/erasure "
+                             "stages yet (reads hit one target)")
+
+    @property
+    def storage_node_count(self) -> int:
+        """Storage-side nodes this policy occupies (1..count on an Env)."""
+        if self.erasure is not None:
+            return self.erasure.k + self.erasure.m
+        if self.replication is not None:
+            return self.replication.k
+        return 1
+
+    def describe(self) -> str:
+        stages = [self.op, self.transport, type(self.auth).__name__]
+        if self.replication is not None:
+            r = self.replication
+            stages.append(
+                f"Flat(k={r.k})" if isinstance(r, Flat)
+                else f"Tree(k={r.k},{r.strategy.name.lower()},{r.engine})"
+            )
+        if self.erasure is not None:
+            e = self.erasure
+            stages.append(f"RS({e.k},{e.m},{e.engine})")
+        return " | ".join(stages)
+
+
+# ---------------------------------------------------------------------------
+# Presets: the named policies of the paper's figures.
+# ---------------------------------------------------------------------------
+
+
+def preset_spec(
+    name: str,
+    k: int = 4,
+    m: int = 2,
+    strategy: ReplStrategy = ReplStrategy.RING,
+) -> PolicySpec:
+    """Build a named preset.  ``k``/``m``/``strategy`` parameterize the
+    replication / erasure presets; write presets ignore them."""
+    builders = {
+        "raw-write": lambda: PolicySpec("rdma", NoAuth()),
+        "spin-write": lambda: PolicySpec("spin", SpongeAuth()),
+        "rpc-write": lambda: PolicySpec("rpc", HostAuth()),
+        "rpc-rdma-write": lambda: PolicySpec("rpc", HostAuth(rdma_read=True)),
+        "rdma-flat": lambda: PolicySpec("rdma", NoAuth(), Flat(k)),
+        "cpu-ring": lambda: PolicySpec(
+            "rdma", NoAuth(), Tree(k, ReplStrategy.RING, "host")),
+        "cpu-pbt": lambda: PolicySpec(
+            "rdma", NoAuth(), Tree(k, ReplStrategy.PBT, "host")),
+        "hyperloop": lambda: PolicySpec(
+            "rdma", NoAuth(), Tree(k, ReplStrategy.RING, "hyperloop")),
+        "spin-ring": lambda: PolicySpec(
+            "spin", SpongeAuth(), Tree(k, ReplStrategy.RING, "spin")),
+        "spin-pbt": lambda: PolicySpec(
+            "spin", SpongeAuth(), Tree(k, ReplStrategy.PBT, "spin")),
+        "spin-repl": lambda: PolicySpec(
+            "spin", SpongeAuth(), Tree(k, strategy, "spin")),
+        "spin-triec": lambda: PolicySpec(
+            "spin", SpongeAuth(), erasure=RS(k, m, "spin")),
+        "inec-triec": lambda: PolicySpec(
+            "rdma", NoAuth(), erasure=RS(k, m, "inec")),
+        "spin-read": lambda: PolicySpec("spin", SpongeAuth(), op="read"),
+    }
+    if name not in builders:
+        raise ValueError(
+            f"unknown policy preset {name!r}; available: {sorted(builders)}"
+        )
+    return dataclasses.replace(builders[name](), name=name)
+
+
+#: every named preset ("spin-repl" is the parameterized alias of
+#: spin-ring/spin-pbt; "spin-read" is the first read-path policy).
+PRESET_NAMES = (
+    "raw-write", "spin-write", "rpc-write", "rpc-rdma-write", "rdma-flat",
+    "cpu-ring", "cpu-pbt", "hyperloop", "spin-ring", "spin-pbt",
+    "spin-triec", "inec-triec", "spin-read",
+)

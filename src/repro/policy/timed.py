@@ -1,0 +1,1080 @@
+"""Timed compiler: :class:`PolicySpec` -> stage pipeline over a shared Env.
+
+A compiled policy is a :class:`PipelineProtocol`: one client-side
+*injector* stage (how requests are posted and packets injected) plus one
+*sink* stage per storage node (how that node ingests, validates, forwards,
+encodes, and acks).  The stage classes are the timed realizations of the
+spec vocabulary (``repro.policy.spec``); composing them reproduces every
+hand-written protocol of ``repro.sim.legacy`` bit-exactly — enforced by
+tests/test_policy.py — while adding what the monolithic classes could
+not express:
+
+  * per-request payload sizes (``Protocol.issue(..., size=)``), so one
+    compiled policy serves a whole size distribution;
+  * several policies sharing one Env *and its storage nodes*: every
+    packet carries the policy id (``pid``) and the per-node dispatcher
+    (:meth:`repro.sim.protocols.Env.bind`) demultiplexes — mixed-policy
+    contention (writes + EC on the same nodes) composes mechanically;
+  * a read path (:class:`SpinReadSink`): authenticated request up, data
+    streamed back by the NIC handlers.
+
+Stage -> paper map: SpongeAuth / SpinStreamSink gating = section IV;
+Flat / Tree forwarding sinks = section V; RS data/parity sinks = section
+VI (sPIN-TriEC streaming vs INEC chunk staging).
+"""
+
+from __future__ import annotations
+
+from repro.core.packets import ReplStrategy
+from repro.core.replication import children_of, optimal_chunk_count
+from repro.policy.spec import Flat, HostAuth, PolicySpec, RS, SpongeAuth, Tree
+from repro.sim.engine import SerialResource
+from repro.sim.protocols import (
+    ACK_WIRE,
+    HYPERLOOP_CONFIG_WIRE,
+    HYPERLOOP_TRIGGER_NS,
+    INEC_EC_ENGINE_GBPS,
+    INEC_PCIE_BW_GBPS,
+    INEC_TRIGGER_NS,
+    INEC_WINDOW,
+    Env,
+    Protocol,
+    _Pending,
+    _chunk_counts,
+    _send_message,
+    ec_data_ph_ns,
+    ec_parity_ph_ns,
+    read_header_extra,
+    write_header_extra,
+)
+from repro.sim.pspin import Emit, HANDLER_NS, HandlerSpec, RequestGate
+
+
+class Stage:
+    """One pipeline stage, attached to its protocol after construction."""
+
+    proto: "PipelineProtocol"
+
+    def attach(self, proto: "PipelineProtocol") -> None:
+        self.proto = proto
+
+    # injector hooks (no-ops for sinks):
+    def expected_acks(self, size: int) -> int:
+        return 1
+
+    def on_client_pkt(self, pkt) -> bool:
+        return False
+
+    def on_cfg_ack(self, pend: _Pending) -> None:
+        pass
+
+    def on_request_complete(self, pend: _Pending) -> None:
+        pass
+
+
+class PipelineProtocol(Protocol):
+    """A timed protocol assembled from stages: injector + per-node sinks.
+
+    All packets carry ``meta['pid']`` so several pipelines can share one
+    Env (and storage nodes); ``meta['sz']`` carries the request payload so
+    sinks handle per-request sizes."""
+
+    def __init__(
+        self,
+        env: Env,
+        spec: PolicySpec | None,
+        size: int,
+        injector: Stage,
+        sinks: dict[int, Stage],
+    ):
+        super().__init__(env)
+        self.spec = spec
+        self.size = size
+        self.request_bytes = size
+        self.pid = env.new_pid()
+        self.injector = injector
+        self.sinks = dict(sinks)
+        self.storage_nodes = tuple(sorted(self.sinks))
+        self.first_inject_ns: float | None = None
+        self.chunk: int | None = None  # tree pipelines: chunk @ default size
+        injector.attach(self)
+        for node, sink in self.sinks.items():
+            sink.attach(self)
+            env.bind(node, self.pid, sink.on_packet)
+
+    @property
+    def name(self) -> str:
+        if self.spec is None:
+            return "pipeline"
+        return self.spec.name or self.spec.describe()
+
+    def req_size(self, pend: _Pending) -> int:
+        return self.size if pend.size is None else pend.size
+
+    def mark_inject(self) -> None:
+        if self.first_inject_ns is None:
+            self.first_inject_ns = self.env.sim.now
+
+    # -- Protocol plumbing, routed through the stages -----------------------
+
+    def _install(self, node: int, handler) -> None:
+        self.env.bind(node, self.pid, handler)
+
+    def _expected_acks_of(self, pend: _Pending) -> int:
+        return self.injector.expected_acks(self.req_size(pend))
+
+    def _start(self, pend: _Pending) -> None:
+        self.injector.start(pend)
+
+    def _on_cfg_ack(self, pend: _Pending) -> None:
+        self.injector.on_cfg_ack(pend)
+
+    def _on_request_complete(self, pend: _Pending) -> None:
+        self.injector.on_request_complete(pend)
+
+    def _on_client_pkt(self, pkt) -> None:
+        if self.injector.on_client_pkt(pkt):
+            return
+        super()._on_client_pkt(pkt)
+
+
+# ---------------------------------------------------------------------------
+# Client-side injector stages.
+# ---------------------------------------------------------------------------
+
+
+class MessageInjector(Stage):
+    """Post one message to a single storage node after ``client_post_ns``."""
+
+    def __init__(self, node: int = 1, header_extra: int = 0, acks: int = 1):
+        self.node = node
+        self.header_extra = header_extra
+        self.acks = acks
+
+    def expected_acks(self, size: int) -> int:
+        return self.acks
+
+    def start(self, pend: _Pending) -> None:
+        p = self.proto
+        cfg, net = p.env.cfg, p.env.net
+        size = p.req_size(pend)
+        meta = {"rid": pend.rid, "cl": pend.client, "pid": p.pid, "sz": size}
+        p.env.sim.after(
+            cfg.client_post_ns,
+            lambda: _send_message(
+                net, pend.client, self.node, size, self.header_extra,
+                lambda i, n, w: {**meta, "i": i, "n": n},
+            ),
+        )
+
+
+class FanoutInjector(Stage):
+    """Section V baseline: one write per replica, staggered by the
+    per-WQE post cost (RDMA-Flat)."""
+
+    def __init__(self, nodes: tuple[int, ...]):
+        self.nodes = nodes
+
+    def expected_acks(self, size: int) -> int:
+        return len(self.nodes)
+
+    def start(self, pend: _Pending) -> None:
+        p = self.proto
+        cfg, net = p.env.cfg, p.env.net
+        size = p.req_size(pend)
+        meta = {"rid": pend.rid, "cl": pend.client, "pid": p.pid, "sz": size}
+        for idx, node in enumerate(self.nodes):
+            delay = cfg.client_post_ns + idx * cfg.client_post_extra_ns
+            p.env.sim.after(
+                delay,
+                lambda node=node: _send_message(
+                    net, pend.client, node, size, 0,
+                    lambda i, n, w: {**meta, "i": i, "n": n},
+                ),
+            )
+
+
+class RpcRdmaInjector(Stage):
+    """RPC+RDMA (Fig. 5): small request out; when the storage CPU posts
+    the RDMA read, the client NIC streams the payload."""
+
+    def __init__(self, node: int = 1):
+        self.node = node
+
+    def start(self, pend: _Pending) -> None:
+        p = self.proto
+        cfg, net = p.env.cfg, p.env.net
+        size = p.req_size(pend)
+        p.env.sim.after(
+            cfg.client_post_ns,
+            lambda: net.send(
+                pend.client, self.node,
+                cfg.rdma_header + write_header_extra(),
+                {"rid": pend.rid, "cl": pend.client, "pid": p.pid,
+                 "sz": size, "kind": "req"},
+            ),
+        )
+
+    def on_client_pkt(self, pkt) -> bool:
+        if pkt.meta.get("kind") != "read_req":
+            return False
+        p = self.proto
+        rid, client = pkt.meta["rid"], pkt.meta["cl"]
+        pend = p._pending.get(rid)
+        if pend is None:
+            return True
+        size = p.req_size(pend)
+        _send_message(
+            p.env.net, client, self.node, size, 0,
+            lambda i, n, w: {"rid": rid, "cl": client, "pid": p.pid,
+                             "kind": "data", "i": i, "n": n, "sz": size},
+        )
+        return True
+
+
+class TreeRootInjector(Stage):
+    """Send the whole message to the tree root (node 1); with
+    ``config_phase_writes`` it first runs HyperLoop's configuration phase
+    (WQE descriptor writes to every node, wait for acks)."""
+
+    def __init__(self, k: int, config_phase_writes: int = 0):
+        self.k = k
+        self.config_phase_writes = config_phase_writes
+
+    def expected_acks(self, size: int) -> int:
+        return self.k
+
+    def _broadcast(self, pend: _Pending) -> None:
+        p = self.proto
+        size = p.req_size(pend)
+        meta = {"rid": pend.rid, "cl": pend.client, "pid": p.pid, "sz": size}
+        _send_message(
+            p.env.net, pend.client, 1, size, 0,
+            lambda i, n, w: {**meta, "i": i, "n": n},
+        )
+
+    def on_cfg_ack(self, pend: _Pending) -> None:
+        pend.cfg_acks += 1
+        if pend.cfg_acks == self.config_phase_writes:
+            cfg = self.proto.env.cfg
+            self.proto.env.sim.after(
+                cfg.client_complete_ns + cfg.client_post_ns,
+                lambda: self._broadcast(pend),
+            )
+
+    def start(self, pend: _Pending) -> None:
+        p = self.proto
+        cfg, sim = p.env.cfg, p.env.sim
+        if self.config_phase_writes:
+            for r in range(self.config_phase_writes):
+                node = r + 1
+                delay = cfg.client_post_ns + r * cfg.client_post_extra_ns
+                sim.after(
+                    delay,
+                    lambda node=node: p.env.net.send(
+                        pend.client, node, HYPERLOOP_CONFIG_WIRE,
+                        {"rid": pend.rid, "cl": pend.client, "pid": p.pid,
+                         "cfg": 1},
+                    ),
+                )
+        else:
+            sim.after(cfg.client_post_ns, lambda: self._broadcast(pend))
+
+
+class InterleavedEcInjector(Stage):
+    """Section VI-B1: k chunk streams, packet i of every chunk before
+    packet i+1 of any (sPIN-TriEC)."""
+
+    def __init__(self, k: int, m: int):
+        self.k = k
+        self.m = m
+
+    def expected_acks(self, size: int) -> int:
+        return self.k + self.m
+
+    def start(self, pend: _Pending) -> None:
+        p = self.proto
+        cfg, net, sim = p.env.cfg, p.env.net, p.env.sim
+        k = self.k
+        size = p.req_size(pend)
+        chunk = -(-size // k)
+        header_extra = write_header_extra(self.m)
+
+        def inject() -> None:
+            p.mark_inject()
+            streams = [net.cfg.packets_of(chunk, header_extra)
+                       for _ in range(k)]
+            nmax = max(len(s) for s in streams)
+            for i in range(nmax):
+                for j in range(k):
+                    if i < len(streams[j]):
+                        net.send(
+                            pend.client,
+                            j + 1,
+                            streams[j][i],
+                            {"rid": pend.rid, "cl": pend.client, "pid": p.pid,
+                             "i": i, "n": len(streams[j]), "sz": size},
+                        )
+
+        post = cfg.client_post_ns + (k - 1) * cfg.client_post_extra_ns
+        sim.after(post, inject)
+
+
+class InecInjector(Stage):
+    """INEC posting: host-paced per client — at most ``window`` blocks
+    outstanding; excess requests queue at the client."""
+
+    def __init__(self, k: int, m: int, window: int = INEC_WINDOW):
+        self.k = k
+        self.m = m
+        self.window = window
+        self._outstanding: dict[int, int] = {}
+        self._queued: dict[int, list[_Pending]] = {}
+
+    def expected_acks(self, size: int) -> int:
+        return self.k + self.m
+
+    def _inject(self, pend: _Pending) -> None:
+        p = self.proto
+        p.mark_inject()
+        size = p.req_size(pend)
+        chunk = -(-size // self.k)
+        for j in range(self.k):
+            _send_message(
+                p.env.net, pend.client, j + 1, chunk, 0,
+                lambda i, n, w: {"rid": pend.rid, "cl": pend.client,
+                                 "pid": p.pid, "i": i, "n": n, "sz": size},
+            )
+
+    def start(self, pend: _Pending) -> None:
+        p = self.proto
+        cfg, sim = p.env.cfg, p.env.sim
+        client = pend.client
+        if self._outstanding.get(client, 0) < self.window:
+            self._outstanding[client] = self._outstanding.get(client, 0) + 1
+            post = cfg.client_post_ns + (self.k - 1) * cfg.client_post_extra_ns
+            sim.after(post, lambda: self._inject(pend))
+        else:
+            self._queued.setdefault(client, []).append(pend)
+
+    def on_request_complete(self, pend: _Pending) -> None:
+        client = pend.client
+        queue = self._queued.get(client)
+        if queue:
+            # Re-armed chains pay only client_post_ns (the k WQEs were
+            # batched when the chain was configured).
+            nxt = queue.pop(0)
+            self.proto.env.sim.after(
+                self.proto.env.cfg.client_post_ns,
+                lambda: self._inject(nxt),
+            )
+        else:
+            self._outstanding[client] -= 1
+
+
+class ReadInjector(Stage):
+    """Post one small authenticated read request; completion is counted
+    in received data packets (one 'ack' per response packet)."""
+
+    def __init__(self, node: int = 1):
+        self.node = node
+
+    def expected_acks(self, size: int) -> int:
+        return len(self.proto.env.cfg.packets_of(size, 0))
+
+    def start(self, pend: _Pending) -> None:
+        p = self.proto
+        cfg, net = p.env.cfg, p.env.net
+        size = p.req_size(pend)
+        wire = cfg.rdma_header + read_header_extra()
+        p.env.sim.after(
+            cfg.client_post_ns,
+            lambda: net.send(
+                pend.client, self.node, wire,
+                {"rid": pend.rid, "cl": pend.client, "pid": p.pid,
+                 "sz": size, "req": 1},
+            ),
+        )
+
+
+# ---------------------------------------------------------------------------
+# Storage-node sink stages.
+# ---------------------------------------------------------------------------
+
+
+class NicWriteSink(Stage):
+    """Plain-RDMA ingest: the NIC acks once the full message arrived."""
+
+    def __init__(self, node: int):
+        self.node = node
+        self._got: dict[int, int] = {}
+
+    def on_packet(self, pkt) -> None:
+        rid = pkt.meta["rid"]
+        got = self._got.get(rid, 0) + 1
+        self._got[rid] = got
+        if got == pkt.meta["n"]:
+            del self._got[rid]
+            p = self.proto
+            cfg, net = p.env.cfg, p.env.net
+            client = pkt.meta["cl"]
+            node = self.node
+            p.env.sim.after(
+                cfg.nic_fixed_ns,
+                lambda: net.send(node, client, ACK_WIRE,
+                                 {"rid": rid, "ack": node, "pid": p.pid}),
+            )
+
+
+class SpinStreamSink(Stage):
+    """Section II-B/IV: gated HH/PH/CH pipeline on the node's PsPIN unit.
+
+    The HH (its own short handler) opens the request gate; each payload
+    packet runs a PH (``ph_ns_fn``) that may emit packets (``emits_fn`` —
+    replication forwarding, EC intermediate parities); once all packets
+    of the request were processed, the CH acks the client."""
+
+    class _Req:
+        __slots__ = ("gate", "processed", "n", "fired")
+
+        def __init__(self):
+            self.gate = RequestGate()
+            self.processed = 0
+            self.n: int | None = None
+            self.fired = False
+
+    def __init__(self, node, hh_ns, ch_ns, ph_ns_fn, emits_fn=None,
+                 ack_tag=None):
+        self.node = node
+        self.hh_ns = hh_ns
+        self.ch_ns = ch_ns
+        self.ph_ns_fn = ph_ns_fn      # (sink, pkt) -> compute ns
+        self.emits_fn = emits_fn      # (sink, pkt) -> list[Emit]
+        self.ack_tag = node if ack_tag is None else ack_tag
+        self._reqs: dict[int, SpinStreamSink._Req] = {}
+
+    def attach(self, proto) -> None:
+        super().attach(proto)
+        self.unit = proto.env.pspin(self.node)
+
+    def on_packet(self, pkt) -> None:
+        meta = pkt.meta
+        rid, i = meta["rid"], meta["i"]
+        req = self._reqs.setdefault(rid, self._Req())
+        req.n = meta["n"]
+        emits = self.emits_fn(self, pkt) if self.emits_fn is not None else []
+        unit = self.unit
+        pid = self.proto.pid
+        ack_tag = self.ack_tag
+
+        def packet_done() -> None:
+            req.processed += 1
+            if req.processed == req.n and not req.fired:
+                req.fired = True
+                del self._reqs[rid]
+                unit.process(
+                    ACK_WIRE,
+                    HandlerSpec(
+                        self.ch_ns,
+                        [Emit(meta["cl"], ACK_WIRE,
+                              {"rid": rid, "ack": ack_tag, "pid": pid})],
+                    ),
+                )
+
+        if i == 0:
+            unit.process(pkt.wire_size, HandlerSpec(self.hh_ns, gate=req.gate))
+        spec = HandlerSpec(self.ph_ns_fn(self, pkt), emits,
+                           on_complete=packet_done, gate=req.gate)
+        unit.process_gated(pkt.wire_size, spec)
+
+
+class SpinParitySink(Stage):
+    """Section VI-B3: XOR-aggregate k intermediate-parity streams per
+    aggregation sequence; ack the client at stripe granularity."""
+
+    class _Req:
+        __slots__ = ("seq_counts", "seqs_done", "streams_done",
+                     "expected_seqs", "acked")
+
+        def __init__(self):
+            self.seq_counts: dict[int, int] = {}
+            self.seqs_done = 0
+            self.streams_done = 0
+            self.expected_seqs: int | None = None
+            self.acked = False
+
+    def __init__(self, node: int, k: int, ack_tag):
+        self.node = node
+        self.k = k
+        self.ack_tag = ack_tag
+        self._reqs: dict[int, SpinParitySink._Req] = {}
+
+    def attach(self, proto) -> None:
+        super().attach(proto)
+        self.unit = proto.env.pspin(self.node)
+        self.pch = HANDLER_NS["ec_parity"][2]
+
+    def on_packet(self, pkt) -> None:
+        cfg = self.proto.env.cfg
+        meta = pkt.meta
+        rid, seq = meta["rid"], meta["seq"]
+        req = self._reqs.setdefault(rid, self._Req())
+        payload = pkt.wire_size - cfg.rdma_header
+        k = self.k
+        unit = self.unit
+        pid = self.proto.pid
+
+        def packet_done() -> None:
+            c = req.seq_counts.get(seq, 0) + 1
+            req.seq_counts[seq] = c
+            if c == k:
+                req.seqs_done += 1
+            if meta["last"]:
+                req.streams_done += 1
+                req.expected_seqs = meta["n"]
+            if (
+                not req.acked
+                and req.streams_done == k
+                and req.expected_seqs is not None
+                and req.seqs_done == req.expected_seqs
+            ):
+                req.acked = True
+                del self._reqs[rid]
+                unit.process(
+                    ACK_WIRE,
+                    HandlerSpec(
+                        self.pch,
+                        [Emit(meta["cl"], ACK_WIRE,
+                              {"rid": rid, "ack": self.ack_tag, "pid": pid})],
+                    ),
+                )
+
+        compute = ec_parity_ph_ns(payload)
+        unit.process(pkt.wire_size,
+                     HandlerSpec(compute, on_complete=packet_done))
+
+
+class HostCpuSink(Stage):
+    """RPC ingest: message lands in a host buffer; the (serial) CPU
+    notifies, validates, copies, then acks — the CPU data path."""
+
+    def __init__(self, node: int):
+        self.node = node
+        self._got: dict[int, int] = {}
+
+    def on_packet(self, pkt) -> None:
+        rid = pkt.meta["rid"]
+        got = self._got.get(rid, 0) + 1
+        self._got[rid] = got
+        if got == pkt.meta["n"]:
+            del self._got[rid]
+            p = self.proto
+            cfg, net = p.env.cfg, p.env.net
+            client = pkt.meta["cl"]
+            cpu = p.env.host_cpu(self.node)
+            node = self.node
+            pid = p.pid
+            work = (cfg.host_notify_ns + cfg.cpu_validate_ns
+                    + cfg.memcpy_ns(pkt.meta["sz"]))
+
+            # last packet DMA'd to the host ring: notify, validate, copy, ack
+            def at_host() -> None:
+                cpu.acquire(
+                    work,
+                    lambda _s, _e: net.send(node, client, ACK_WIRE,
+                                            {"rid": rid, "ack": 1,
+                                             "pid": pid}),
+                )
+
+            p.env.sim.after(cfg.pcie_latency_ns / 2, at_host)
+
+
+class RpcRdmaSink(Stage):
+    """RPC+RDMA ingest: CPU validates and posts an RDMA read towards the
+    client; the completion event triggers the ack."""
+
+    def __init__(self, node: int):
+        self.node = node
+        self._got: dict[int, int] = {}
+
+    def on_packet(self, pkt) -> None:
+        p = self.proto
+        cfg, net, sim = p.env.cfg, p.env.net, p.env.sim
+        rid, client = pkt.meta["rid"], pkt.meta["cl"]
+        cpu = p.env.host_cpu(self.node)
+        node = self.node
+        pid = p.pid
+        if pkt.meta.get("kind") == "req":
+            # CPU posts an RDMA read towards the client.
+            def at_host() -> None:
+                cpu.acquire(
+                    cfg.host_notify_ns + cfg.cpu_validate_ns,
+                    lambda _s, _e: net.send(
+                        node, client, ACK_WIRE,
+                        {"rid": rid, "cl": client, "kind": "read_req",
+                         "pid": pid},
+                    ),
+                )
+
+            sim.after(cfg.pcie_latency_ns / 2, at_host)
+        else:
+            got = self._got.get(rid, 0) + 1
+            self._got[rid] = got
+            if got == pkt.meta["n"]:
+                del self._got[rid]
+
+                # completion event -> CPU -> ack (data already at target).
+                def at_host() -> None:
+                    cpu.acquire(
+                        cfg.host_notify_ns,
+                        lambda _s, _e: net.send(node, client, ACK_WIRE,
+                                                {"rid": rid, "ack": 1,
+                                                 "pid": pid}),
+                    )
+
+                sim.after(cfg.pcie_latency_ns / 2, at_host)
+
+
+class ChunkedTreeSink(Stage):
+    """Section V host engines: chunked store-and-forward broadcast node
+    (CPU ring/PBT: per-chunk notify + buffer copy; HyperLoop: per-chunk
+    WQE trigger).  Acks the client once it holds the full message."""
+
+    class _NodeState:
+        __slots__ = ("received", "chunk_acc", "next_chunk", "acked")
+
+        def __init__(self):
+            self.received = 0
+            self.chunk_acc = 0
+            self.next_chunk = 0
+            self.acked = False
+
+    def __init__(self, rank, k, strategy, per_chunk_overhead_ns, copy_GBps,
+                 chunks_for):
+        self.rank = rank
+        self.k = k
+        self.strategy = strategy
+        self.per_chunk_overhead_ns = per_chunk_overhead_ns
+        self.copy_GBps = copy_GBps
+        self.chunks_for = chunks_for   # size -> list of chunk byte counts
+        self._states: dict[int, ChunkedTreeSink._NodeState] = {}
+
+    def _forward_chunk(self, rid, client, size, chunks, chunk_idx) -> None:
+        p = self.proto
+        for c in children_of(self.rank, self.k, self.strategy):
+            _send_message(
+                p.env.net,
+                self.rank + 1,
+                c + 1,
+                chunks[chunk_idx],
+                0,
+                lambda i, n, w: {"rid": rid, "cl": client, "pid": p.pid,
+                                 "i": i, "n": n, "chunk": chunk_idx,
+                                 "sz": size},
+            )
+
+    def on_packet(self, pkt) -> None:
+        p = self.proto
+        cfg, sim = p.env.cfg, p.env.sim
+        meta = pkt.meta
+        if meta.get("cfg"):
+            # HyperLoop configuration write: ack it.
+            node = self.rank + 1
+            pid = p.pid
+            sim.after(
+                cfg.nic_fixed_ns,
+                lambda: p.env.net.send(
+                    node, meta["cl"], ACK_WIRE,
+                    {"rid": meta["rid"], "cfg_ack": 1, "pid": pid},
+                ),
+            )
+            return
+        rid, client = meta["rid"], meta["cl"]
+        size = meta["sz"]
+        st = self._states.setdefault(rid, self._NodeState())
+        payload = pkt.wire_size - cfg.rdma_header
+        if meta.get("hdr"):
+            payload -= meta["hdr"]
+        st.received += payload
+        st.chunk_acc += payload
+        chunks = self.chunks_for(size)
+        while (st.next_chunk < len(chunks)
+               and st.chunk_acc >= chunks[st.next_chunk]):
+            st.chunk_acc -= chunks[st.next_chunk]
+            ci = st.next_chunk
+            st.next_chunk += 1
+            delay = self.per_chunk_overhead_ns
+            if self.copy_GBps is not None:
+                delay += chunks[ci] / self.copy_GBps
+            sim.after(
+                delay,
+                lambda ci=ci: self._forward_chunk(rid, client, size,
+                                                  chunks, ci),
+            )
+        if st.received >= size and not st.acked:
+            st.acked = True
+            node = self.rank + 1
+            pid = p.pid
+            sim.after(
+                cfg.nic_fixed_ns,
+                lambda: p.env.net.send(node, client, ACK_WIRE,
+                                       {"rid": rid, "ack": self.rank,
+                                        "pid": pid}),
+            )
+        if st.acked and st.next_chunk == len(chunks):
+            del self._states[rid]
+
+
+class InecDataSink(Stage):
+    """Section VI INEC data node: chunk staged through host memory (PCIe
+    flush), read back by the on-NIC EC engine, m intermediates sent."""
+
+    def __init__(self, j: int, k: int, m: int):
+        self.j = j
+        self.k = k
+        self.m = m
+        self._got: dict[int, int] = {}
+
+    def attach(self, proto) -> None:
+        super().attach(proto)
+        node = self.j + 1
+        self.pcie = proto.inec_pcie[node]
+        self.engine = proto.inec_engine[node]
+
+    def on_packet(self, pkt) -> None:
+        p = self.proto
+        cfg, net = p.env.cfg, p.env.net
+        meta = pkt.meta
+        rid, client = meta["rid"], meta["cl"]
+        self._got[rid] = self._got.get(rid, 0) + 1
+        if self._got[rid] != meta["n"]:
+            return
+        del self._got[rid]
+        size = meta["sz"]
+        chunk = -(-size // self.k)
+        m = self.m
+        node = self.j + 1
+        j = self.j
+        pid = p.pid
+
+        # full chunk in NIC; flush to host memory:
+        def staged(_s, _e) -> None:
+            def read_back(_s2, _e2) -> None:
+                def encoded(_s3, _e3) -> None:
+                    for pi in range(m):
+                        _send_message(
+                            net, node, self.k + 1 + pi, chunk, 0,
+                            lambda i, n, w: {"rid": rid, "cl": client,
+                                             "pid": pid, "src": j,
+                                             "i": i, "n": n, "sz": size},
+                        )
+                    net.send(node, client, ACK_WIRE,
+                             {"rid": rid, "ack": ("d", j), "pid": pid})
+
+                self.engine.acquire(
+                    INEC_TRIGGER_NS + chunk / INEC_EC_ENGINE_GBPS, encoded
+                )
+
+            self.pcie.acquire(
+                cfg.pcie_latency_ns + chunk / INEC_PCIE_BW_GBPS, read_back
+            )
+
+        self.pcie.acquire(
+            cfg.pcie_latency_ns / 2 + chunk / INEC_PCIE_BW_GBPS, staged
+        )
+
+
+class InecParitySink(Stage):
+    """Section VI INEC parity node: stage k intermediates through host
+    memory, XOR them on the NIC engine, write the final parity."""
+
+    def __init__(self, pi: int, k: int):
+        self.pi = pi
+        self.k = k
+        self._got: dict[int, int] = {}
+
+    def attach(self, proto) -> None:
+        super().attach(proto)
+        node = self.k + 1 + self.pi
+        self.pcie = proto.inec_pcie[node]
+        self.engine = proto.inec_engine[node]
+
+    def on_packet(self, pkt) -> None:
+        p = self.proto
+        cfg, net = p.env.cfg, p.env.net
+        meta = pkt.meta
+        rid, client = meta["rid"], meta["cl"]
+        self._got[rid] = self._got.get(rid, 0) + 1
+        # every intermediate chunk stages through host memory:
+        if self._got[rid] != self.k * meta["n"]:
+            return
+        del self._got[rid]
+        size = meta["sz"]
+        chunk = -(-size // self.k)
+        k = self.k
+        node = self.k + 1 + self.pi
+        pi = self.pi
+        pid = p.pid
+
+        def staged(_s, _e) -> None:
+            def xored(_s2, _e2) -> None:
+                def written(_s3, _e3) -> None:
+                    net.send(node, client, ACK_WIRE,
+                             {"rid": rid, "ack": ("p", pi), "pid": pid})
+
+                self.pcie.acquire(
+                    cfg.pcie_latency_ns / 2 + chunk / INEC_PCIE_BW_GBPS,
+                    written,
+                )
+
+            self.engine.acquire(
+                INEC_TRIGGER_NS + k * chunk / INEC_EC_ENGINE_GBPS, xored
+            )
+
+        # NIC XOR engine reads the k staged chunks back over PCIe.
+        self.pcie.acquire(
+            cfg.pcie_latency_ns + k * chunk / INEC_PCIE_BW_GBPS, staged
+        )
+
+
+class SpinReadSink(Stage):
+    """Read path: the request's HH validates the capability (section IV),
+    then the PH streams the object back to the client packet by packet."""
+
+    def __init__(self, node: int, hh_ns: float, ph_ns: float):
+        self.node = node
+        self.hh_ns = hh_ns
+        self.ph_ns = ph_ns
+
+    def attach(self, proto) -> None:
+        super().attach(proto)
+        self.unit = proto.env.pspin(self.node)
+
+    def on_packet(self, pkt) -> None:
+        p = self.proto
+        cfg = p.env.cfg
+        meta = pkt.meta
+        rid, client = meta["rid"], meta["cl"]
+        size = meta["sz"]
+        pid = p.pid
+        gate = RequestGate()
+        sizes = cfg.packets_of(size, 0)
+        n = len(sizes)
+        emits = [
+            Emit(client, w, {"rid": rid, "pid": pid, "data": 1,
+                             "i": i, "n": n})
+            for i, w in enumerate(sizes)
+        ]
+        self.unit.process(pkt.wire_size, HandlerSpec(self.hh_ns, gate=gate))
+        self.unit.process_gated(pkt.wire_size,
+                                HandlerSpec(self.ph_ns, emits, gate=gate))
+
+
+# ---------------------------------------------------------------------------
+# The compiler.
+# ---------------------------------------------------------------------------
+
+
+def chunked_tree_protocol(
+    env: Env,
+    size: int,
+    k: int,
+    strategy: ReplStrategy,
+    per_chunk_overhead_ns: float,
+    copy_GBps: float | None,
+    chunk: int | None = None,
+    config_phase_writes: int = 0,
+    message_chunks: bool = False,
+    spec: PolicySpec | None = None,
+) -> PipelineProtocol:
+    """Assemble a chunked-tree pipeline with explicit stage knobs (the
+    machinery under the cpu-ring / cpu-pbt / hyperloop presets)."""
+    cfg = env.cfg
+    cache: dict[int, list[int]] = {}
+
+    def chunk_of(sz: int) -> int:
+        if chunk is not None:
+            return chunk
+        if message_chunks:
+            return sz
+        nchunks = optimal_chunk_count(
+            sz, k, strategy, cfg.bytes_per_ns * 1e9,
+            per_chunk_overhead_ns * 1e-9,
+        )
+        return -(-sz // nchunks)
+
+    def chunks_for(sz: int) -> list[int]:
+        got = cache.get(sz)
+        if got is None:
+            got = cache[sz] = _chunk_counts(sz, chunk_of(sz))
+        return got
+
+    sinks = {
+        r + 1: ChunkedTreeSink(r, k, strategy, per_chunk_overhead_ns,
+                               copy_GBps, chunks_for)
+        for r in range(k)
+    }
+    proto = PipelineProtocol(
+        env, spec, size, TreeRootInjector(k, config_phase_writes), sinks
+    )
+    proto.chunk = chunk_of(size)
+    return proto
+
+
+def _spin_write_sinks(spec: PolicySpec) -> dict[int, Stage]:
+    hh, ph, ch = HANDLER_NS[spec.auth.handler]
+    return {1: SpinStreamSink(1, hh, ch, lambda sink, pkt: ph, ack_tag=1)}
+
+
+def _spin_tree_sinks(r: Tree) -> dict[int, Stage]:
+    key = "repl_ring" if r.strategy == ReplStrategy.RING else "repl_pbt"
+    hh, ph, ch = HANDLER_NS[key]
+    sinks: dict[int, Stage] = {}
+    for rank in range(r.k):
+        kids = children_of(rank, r.k, r.strategy)
+
+        def emits(sink, pkt, kids=kids):
+            return [Emit(c + 1, pkt.wire_size, dict(pkt.meta)) for c in kids]
+
+        sinks[rank + 1] = SpinStreamSink(
+            rank + 1, hh, ch, lambda sink, pkt: ph, emits, ack_tag=rank
+        )
+    return sinks
+
+
+def _spin_ec_sinks(e: RS) -> dict[int, Stage]:
+    hh, _, ch = HANDLER_NS["ec_data_rs32"]
+    header_extra = write_header_extra(e.m)
+    sinks: dict[int, Stage] = {}
+    for j in range(e.k):
+
+        def ph_ns(sink, pkt, header_extra=header_extra, m=e.m):
+            cfg = sink.proto.env.cfg
+            payload = (pkt.wire_size - cfg.rdma_header
+                       - (header_extra if pkt.meta["i"] == 0 else 0))
+            return ec_data_ph_ns(payload, m)
+
+        def emits(sink, pkt, header_extra=header_extra, j=j, k=e.k, m=e.m):
+            cfg = sink.proto.env.cfg
+            meta = pkt.meta
+            i, n = meta["i"], meta["n"]
+            payload = (pkt.wire_size - cfg.rdma_header
+                       - (header_extra if i == 0 else 0))
+            return [
+                Emit(
+                    k + 1 + pi,
+                    cfg.rdma_header + payload,
+                    {"rid": meta["rid"], "cl": meta["cl"],
+                     "pid": sink.proto.pid, "seq": i, "src": j,
+                     "n": n, "last": i == n - 1},
+                )
+                for pi in range(m)
+            ]
+
+        sinks[j + 1] = SpinStreamSink(j + 1, hh, ch, ph_ns, emits,
+                                      ack_tag=("d", j))
+    for pi in range(e.m):
+        sinks[e.k + 1 + pi] = SpinParitySink(e.k + 1 + pi, e.k, ("p", pi))
+    return sinks
+
+
+def compile_policy(
+    env: Env,
+    spec: PolicySpec,
+    size: int,
+    window: int = INEC_WINDOW,
+) -> PipelineProtocol:
+    """Compile ``spec`` to a timed stage pipeline on ``env``.
+
+    ``size`` is the default request payload (``issue(size=...)`` overrides
+    per request); ``window`` is the INEC host-pacing window."""
+    spec.validate()
+    cfg = env.cfg
+
+    if spec.op == "read":
+        if spec.transport != "spin" or not isinstance(spec.auth, SpongeAuth):
+            raise ValueError("read policies currently require the spin "
+                             "transport with SpongeAuth")
+        hh, ph, _ = HANDLER_NS[spec.auth.handler]
+        return PipelineProtocol(
+            env, spec, size, ReadInjector(1), {1: SpinReadSink(1, hh, ph)}
+        )
+
+    if spec.erasure is not None:
+        e = spec.erasure
+        if e.engine == "spin":
+            proto = PipelineProtocol(
+                env, spec, size, InterleavedEcInjector(e.k, e.m),
+                _spin_ec_sinks(e),
+            )
+            return proto
+        if e.engine == "inec":
+            nodes = tuple(range(1, e.k + e.m + 1))
+            proto = PipelineProtocol.__new__(PipelineProtocol)
+            # Per-protocol NIC staging/EC engines (as in the hand-written
+            # model: INEC chains are private to the posting chain).
+            sinks: dict[int, Stage] = {}
+            for j in range(e.k):
+                sinks[j + 1] = InecDataSink(j, e.k, e.m)
+            for pi in range(e.m):
+                sinks[e.k + 1 + pi] = InecParitySink(pi, e.k)
+            # build resources before attach (sinks resolve them in attach)
+            proto.inec_pcie = {n: SerialResource(env.sim) for n in nodes}
+            proto.inec_engine = {n: SerialResource(env.sim) for n in nodes}
+            PipelineProtocol.__init__(
+                proto, env, spec, size, InecInjector(e.k, e.m, window), sinks
+            )
+            return proto
+        raise ValueError(
+            "RS(engine='client') is the checkpoint plane's batched host "
+            "encode; it has no timed pipeline"
+        )
+
+    if spec.replication is not None:
+        r = spec.replication
+        if isinstance(r, Flat):
+            nodes = tuple(range(1, r.k + 1))
+            return PipelineProtocol(
+                env, spec, size, FanoutInjector(nodes),
+                {n: NicWriteSink(n) for n in nodes},
+            )
+        if r.engine == "spin":
+            return PipelineProtocol(
+                env, spec, size,
+                MessageInjector(1, write_header_extra(r.k), acks=r.k),
+                _spin_tree_sinks(r),
+            )
+        if r.engine == "host":
+            overhead = cfg.pcie_latency_ns / 2 + cfg.host_notify_ns
+            return chunked_tree_protocol(
+                env, size, r.k, r.strategy, overhead,
+                cfg.host_memcpy_GBps / 2, spec=spec,
+            )
+        if r.engine == "hyperloop":
+            return chunked_tree_protocol(
+                env, size, r.k, r.strategy, HYPERLOOP_TRIGGER_NS, None,
+                message_chunks=True, config_phase_writes=r.k, spec=spec,
+            )
+        raise ValueError(f"unknown Tree engine {r.engine!r}")
+
+    # plain writes
+    if spec.transport == "rdma":
+        return PipelineProtocol(
+            env, spec, size, MessageInjector(1, 0), {1: NicWriteSink(1)}
+        )
+    if spec.transport == "spin":
+        return PipelineProtocol(
+            env, spec, size, MessageInjector(1, write_header_extra()),
+            _spin_write_sinks(spec),
+        )
+    if spec.transport == "rpc":
+        assert isinstance(spec.auth, HostAuth)
+        if spec.auth.rdma_read:
+            return PipelineProtocol(
+                env, spec, size, RpcRdmaInjector(1), {1: RpcRdmaSink(1)}
+            )
+        return PipelineProtocol(
+            env, spec, size, MessageInjector(1, write_header_extra()),
+            {1: HostCpuSink(1)},
+        )
+    raise ValueError(f"cannot compile spec: {spec}")

@@ -1,20 +1,29 @@
-"""Write / replication / erasure-coding protocol simulations.
+"""Timed storage-protocol plane: shared Env, policy presets, runners.
 
-One protocol *factory* per scheme the paper compares (sections IV-VI):
+The protocols the paper compares (sections IV-VI) —
 
   writes:      raw RDMA, RPC, RPC+RDMA, sPIN          (Fig. 6)
   replication: RDMA-Flat, RDMA-HyperLoop, CPU-Ring,
                CPU-PBT, sPIN-Ring, sPIN-PBT           (Fig. 9, 10)
   erasure:     INEC-TriEC, sPIN-TriEC                 (Fig. 15)
+  reads:       sPIN-Read                              (first read path)
 
-Each protocol is a reusable per-request factory over a shared :class:`Env`
-(one simulator + network + PsPIN units): install the storage-side handlers
-once, then :meth:`Protocol.issue` any number of concurrent requests — from
-any number of client nodes — that contend mechanistically for link ports,
-HPU pools, and host CPUs.  The ``run_*`` functions at the bottom keep the
-original single-shot API (one client, one request) and are thin wrappers
-over the factories; the multi-client workload engine lives in
-:mod:`repro.sim.workload`.
+— are *policy presets*: declarative :class:`repro.policy.PolicySpec`
+values compiled by :mod:`repro.policy.timed` into timed stage pipelines
+over a shared :class:`Env` (one simulator + network + PsPIN units).
+Install a compiled policy once, then :meth:`Protocol.issue` any number of
+concurrent requests — from any number of client nodes, with per-request
+sizes — that contend mechanistically for link ports, HPU pools, and host
+CPUs.  Several policies can share one Env (and its storage nodes): every
+pipeline packet carries a policy id (``pid``) that the per-node receive
+dispatcher demultiplexes on, so mixed-policy scenarios (writes + EC on
+the same nodes) compose without stealing each other's packets.
+
+This module keeps the stable surface: the :class:`Env`/:class:`Protocol`
+machinery the pipelines are built from, ``make_protocol`` and the
+``run_*`` single-shot wrappers (thin shims over the presets), and — via
+lazy re-export — the original hand-written protocol classes, now frozen
+in :mod:`repro.sim.legacy` as the bit-exactness parity reference.
 
 Node ids: 0 = default client (extra clients use negative ids), 1..k =
 storage (data) nodes, k+1..k+m = parity nodes.  All runners return latency
@@ -28,22 +37,15 @@ import dataclasses
 from typing import Callable
 
 from repro.core.packets import ReplStrategy
-from repro.core.replication import children_of, optimal_chunk_count
 from repro.sim.engine import SerialResource, Simulator
 from repro.sim.network import NetConfig, Network
-from repro.sim.pspin import (
-    Emit,
-    HANDLER_NS,
-    HandlerSpec,
-    PsPINConfig,
-    PsPINUnit,
-    RequestGate,
-)
+from repro.sim.pspin import PsPINConfig, PsPINUnit
 
 CLIENT = 0
 ACK_WIRE = 28
 DFS_HEADER_BYTES = 64          # DFSHeader.packed_size()
 WRH_BASE_BYTES = 30
+RRH_BYTES = 16                 # ReadRequestHeader.packed_size()
 REPLICA_COORD_BYTES = 12
 HYPERLOOP_CONFIG_WIRE = 156    # WQE descriptor write (HyperLoop [35])
 HYPERLOOP_TRIGGER_NS = 300.0   # pre-posted WQE trigger on CQ event
@@ -75,6 +77,10 @@ def write_header_extra(num_replicas: int = 0) -> int:
     return DFS_HEADER_BYTES + WRH_BASE_BYTES + REPLICA_COORD_BYTES * num_replicas
 
 
+def read_header_extra() -> int:
+    return DFS_HEADER_BYTES + RRH_BYTES
+
+
 @dataclasses.dataclass
 class Result:
     latency_ns: float
@@ -86,7 +92,12 @@ class Env:
 
     Lazily builds PsPIN units (one per storage node) and host CPUs (one
     serial dispatch+validate engine per storage node), so concurrent
-    requests — from one client or many — queue on the same resources."""
+    requests — from one client or many — queue on the same resources.
+
+    Receive dispatch comes in two flavours: the legacy classes claim a
+    node *exclusively* (:meth:`claim_node` — one protocol per node), while
+    policy pipelines :meth:`bind` under a policy id and share nodes, with
+    packets routed by their ``pid`` meta key."""
 
     def __init__(
         self, cfg: NetConfig | None = None, pcfg: PsPINConfig | None = None
@@ -98,14 +109,19 @@ class Env:
         self._pspin: dict[int, PsPINUnit] = {}
         self._cpu: dict[int, SerialResource] = {}
         self._node_owner: dict[int, "Protocol"] = {}
+        self._bindings: dict[int, dict[int, Callable]] = {}
+        self._next_pid = 0
 
     def claim_node(self, node: int, proto: "Protocol") -> None:
-        """Register ``proto`` as the receive-handler owner of ``node``.
-
-        One protocol per node per Env: a second protocol installing a
-        handler on the same node would silently steal the first one's
-        packets, so that is an error (mixed-protocol scenarios need
-        disjoint node sets for now — see ROADMAP)."""
+        """Register ``proto`` as the *exclusive* receive-handler owner of
+        ``node`` (legacy protocols): a second protocol installing a handler
+        on the same node would silently steal the first one's packets, so
+        that is an error.  Shared-node scenarios use :meth:`bind`."""
+        if self._bindings.get(node):
+            raise ValueError(
+                f"node {node} carries policy-pipeline bindings; "
+                f"exclusive claim refused"
+            )
         owner = self._node_owner.get(node)
         if owner is not None and owner is not proto:
             raise ValueError(
@@ -113,6 +129,37 @@ class Env:
                 f"{type(owner).__name__}; one protocol per node per Env"
             )
         self._node_owner[node] = proto
+
+    def new_pid(self) -> int:
+        """Allocate a policy id for packet demultiplexing."""
+        pid = self._next_pid
+        self._next_pid += 1
+        return pid
+
+    def bind(self, node: int, pid: int, handler: Callable) -> None:
+        """Bind ``handler`` for packets carrying ``meta['pid'] == pid`` at
+        ``node``.  Many policies may bind the same node (mixed-policy
+        contention); the dispatch itself costs no simulated time."""
+        if self._node_owner.get(node) is not None:
+            raise ValueError(
+                f"node {node} receive handler already owned by "
+                f"{type(self._node_owner[node]).__name__}; cannot bind"
+            )
+        table = self._bindings.get(node)
+        if table is None:
+            table = self._bindings[node] = {}
+
+            def dispatch(pkt, _table=table, _node=node):
+                h = _table.get(pkt.meta.get("pid"))
+                if h is None:
+                    raise ValueError(
+                        f"packet with pid {pkt.meta.get('pid')!r} at node "
+                        f"{_node} has no bound policy"
+                    )
+                h(pkt)
+
+            self.net.node(node).on_receive = dispatch
+        table[pid] = handler
 
     def pspin(self, node: int) -> PsPINUnit:
         if node not in self._pspin:
@@ -135,7 +182,7 @@ class _Pending:
     """One in-flight request as seen from its client."""
 
     __slots__ = ("rid", "client", "expected", "acks", "t_issue", "on_done",
-                 "extra", "cfg_acks")
+                 "extra", "cfg_acks", "size")
 
     def __init__(self, rid: int, client: int, expected: int, t_issue: float,
                  on_done: Callable[[Result], None] | None):
@@ -147,6 +194,7 @@ class _Pending:
         self.on_done = on_done
         self.extra: dict = {}
         self.cfg_acks = 0
+        self.size: int | None = None   # per-request payload (pipelines)
 
 
 class Protocol:
@@ -179,8 +227,12 @@ class Protocol:
     # -- client side --------------------------------------------------------
 
     def issue(self, client: int = CLIENT,
-              on_done: Callable[[Result], None] | None = None) -> int:
-        """Post one request from ``client`` at the current sim time."""
+              on_done: Callable[[Result], None] | None = None,
+              size: int | None = None) -> int:
+        """Post one request from ``client`` at the current sim time.
+
+        ``size`` overrides the per-request payload where the protocol
+        supports it (policy pipelines); the legacy classes ignore it."""
         if client in self.storage_nodes:
             raise ValueError(f"client id {client} collides with storage node")
         if client not in self._clients:
@@ -188,8 +240,9 @@ class Protocol:
             self._install(client, self._on_client_pkt)
         rid = self._next_rid
         self._next_rid += 1
-        pend = _Pending(rid, client, self._expected_acks(), self.env.sim.now,
-                        on_done)
+        pend = _Pending(rid, client, 0, self.env.sim.now, on_done)
+        pend.size = size
+        pend.expected = self._expected_acks_of(pend)
         self._pending[rid] = pend
         self._start(pend)
         return rid
@@ -199,6 +252,10 @@ class Protocol:
 
     def _expected_acks(self) -> int:
         return 1
+
+    def _expected_acks_of(self, pend: _Pending) -> int:
+        """Per-request ack count (size-dependent for read pipelines)."""
+        return self._expected_acks()
 
     def _on_client_pkt(self, pkt) -> None:
         pend = self._pending.get(pkt.meta.get("rid"))
@@ -246,852 +303,11 @@ def _send_message(
     return n
 
 
-# ---------------------------------------------------------------------------
-# Fig. 6 — single-write protocols.
-# ---------------------------------------------------------------------------
-
-
-class RawWriteProtocol(Protocol):
-    """Speed-of-light: plain RDMA write, NIC acks after the last packet."""
-
-    name = "raw-write"
-
-    def __init__(self, env: Env, size: int, node: int = 1):
-        super().__init__(env)
-        self.size = size
-        self.request_bytes = size
-        self.node = node
-        self.storage_nodes = (node,)
-        self._got: dict[int, int] = {}
-        self._install(node, self._on_storage)
-
-    def _on_storage(self, pkt) -> None:
-        rid = pkt.meta["rid"]
-        got = self._got.get(rid, 0) + 1
-        self._got[rid] = got
-        if got == pkt.meta["n"]:
-            del self._got[rid]
-            cfg, net = self.env.cfg, self.env.net
-            client = pkt.meta["cl"]
-            self.env.sim.after(
-                cfg.nic_fixed_ns,
-                lambda: net.send(self.node, client, ACK_WIRE,
-                                 {"rid": rid, "ack": 1}),
-            )
-
-    def _start(self, pend: _Pending) -> None:
-        cfg, net = self.env.cfg, self.env.net
-        meta = {"rid": pend.rid, "cl": pend.client}
-        self.env.sim.after(
-            cfg.client_post_ns,
-            lambda: _send_message(
-                net, pend.client, self.node, self.size, 0,
-                lambda i, n, w: {**meta, "i": i, "n": n},
-            ),
-        )
-
-
-class SpinAuthWriteProtocol(Protocol):
-    """sPIN write: per-packet handlers validate the request on the NIC."""
-
-    name = "spin-write"
-
-    class _Req:
-        __slots__ = ("gate", "processed", "n")
-
-        def __init__(self):
-            self.gate = RequestGate()
-            self.processed = 0
-            self.n: int | None = None
-
-    def __init__(self, env: Env, size: int, node: int = 1):
-        super().__init__(env)
-        self.size = size
-        self.request_bytes = size
-        self.node = node
-        self.storage_nodes = (node,)
-        self.unit = env.pspin(node)
-        self._reqs: dict[int, SpinAuthWriteProtocol._Req] = {}
-        self._install(node, self._on_storage)
-
-    def _on_storage(self, pkt) -> None:
-        hh, ph, ch = HANDLER_NS["auth"]
-        rid, client = pkt.meta["rid"], pkt.meta["cl"]
-        i = pkt.meta["i"]
-        req = self._reqs.setdefault(rid, self._Req())
-        req.n = pkt.meta["n"]
-        unit = self.unit
-
-        def packet_done() -> None:
-            req.processed += 1
-            if req.processed == req.n:
-                # CH: runs once all packets were processed; sends the
-                # response.
-                del self._reqs[rid]
-                unit.process(
-                    ACK_WIRE,
-                    HandlerSpec(ch, [Emit(client, ACK_WIRE,
-                                          {"rid": rid, "ack": 1})]),
-                )
-
-        if i == 0:
-            # HH is its own (short) handler invocation; it opens the gate so
-            # payload handlers — including the header packet's own PH — can
-            # proceed on other HPUs.
-            unit.process(pkt.wire_size, HandlerSpec(hh, gate=req.gate))
-        spec = HandlerSpec(ph, on_complete=packet_done, gate=req.gate)
-        unit.process_gated(pkt.wire_size, spec)
-
-    def _start(self, pend: _Pending) -> None:
-        cfg, net = self.env.cfg, self.env.net
-        meta = {"rid": pend.rid, "cl": pend.client}
-        self.env.sim.after(
-            cfg.client_post_ns,
-            lambda: _send_message(
-                net, pend.client, self.node, self.size, write_header_extra(),
-                lambda i, n, w: {**meta, "i": i, "n": n},
-            ),
-        )
-
-
-class RpcWriteProtocol(Protocol):
-    """RPC: message lands in a host buffer; CPU validates, copies, acks.
-
-    The notify+validate+buffer-copy runs on the storage node's (serial)
-    host CPU, so concurrent requests queue for it — the contention the
-    paper's CPU data path suffers under load."""
-
-    name = "rpc-write"
-
-    def __init__(self, env: Env, size: int, node: int = 1):
-        super().__init__(env)
-        self.size = size
-        self.request_bytes = size
-        self.node = node
-        self.storage_nodes = (node,)
-        self._got: dict[int, int] = {}
-        self._install(node, self._on_storage)
-
-    def _on_storage(self, pkt) -> None:
-        rid = pkt.meta["rid"]
-        got = self._got.get(rid, 0) + 1
-        self._got[rid] = got
-        if got == pkt.meta["n"]:
-            del self._got[rid]
-            cfg, net = self.env.cfg, self.env.net
-            client = pkt.meta["cl"]
-            cpu = self.env.host_cpu(self.node)
-            work = (cfg.host_notify_ns + cfg.cpu_validate_ns
-                    + cfg.memcpy_ns(self.size))
-
-            # last packet DMA'd to the host ring: notify, validate, copy, ack
-            def at_host() -> None:
-                cpu.acquire(
-                    work,
-                    lambda _s, _e: net.send(self.node, client, ACK_WIRE,
-                                            {"rid": rid, "ack": 1}),
-                )
-
-            self.env.sim.after(cfg.pcie_latency_ns / 2, at_host)
-
-    def _start(self, pend: _Pending) -> None:
-        cfg, net = self.env.cfg, self.env.net
-        meta = {"rid": pend.rid, "cl": pend.client}
-        self.env.sim.after(
-            cfg.client_post_ns,
-            lambda: _send_message(
-                net, pend.client, self.node, self.size, write_header_extra(),
-                lambda i, n, w: {**meta, "i": i, "n": n},
-            ),
-        )
-
-
-class RpcRdmaWriteProtocol(Protocol):
-    """RPC+RDMA: validate via RPC, then RDMA-read the payload (Fig. 5)."""
-
-    name = "rpc-rdma-write"
-
-    def __init__(self, env: Env, size: int, node: int = 1):
-        super().__init__(env)
-        self.size = size
-        self.request_bytes = size
-        self.node = node
-        self.storage_nodes = (node,)
-        self._got: dict[int, int] = {}
-        self._install(node, self._on_storage)
-
-    def _on_storage(self, pkt) -> None:
-        cfg, net, sim = self.env.cfg, self.env.net, self.env.sim
-        rid, client = pkt.meta["rid"], pkt.meta["cl"]
-        cpu = self.env.host_cpu(self.node)
-        if pkt.meta.get("kind") == "req":
-            # CPU posts an RDMA read towards the client.
-            def at_host() -> None:
-                cpu.acquire(
-                    cfg.host_notify_ns + cfg.cpu_validate_ns,
-                    lambda _s, _e: net.send(
-                        self.node, client, ACK_WIRE,
-                        {"rid": rid, "cl": client, "kind": "read_req"},
-                    ),
-                )
-
-            sim.after(cfg.pcie_latency_ns / 2, at_host)
-        else:
-            got = self._got.get(rid, 0) + 1
-            self._got[rid] = got
-            if got == pkt.meta["n"]:
-                del self._got[rid]
-
-                # completion event -> CPU -> ack (data already at target).
-                def at_host() -> None:
-                    cpu.acquire(
-                        cfg.host_notify_ns,
-                        lambda _s, _e: net.send(self.node, client, ACK_WIRE,
-                                                {"rid": rid, "ack": 1}),
-                    )
-
-                sim.after(cfg.pcie_latency_ns / 2, at_host)
-
-    def _on_client_pkt(self, pkt) -> None:
-        if pkt.meta.get("kind") == "read_req":
-            # client NIC serves the RDMA read: stream the data.
-            rid, client = pkt.meta["rid"], pkt.meta["cl"]
-            _send_message(
-                self.env.net, client, self.node, self.size, 0,
-                lambda i, n, w: {"rid": rid, "cl": client, "kind": "data",
-                                 "i": i, "n": n},
-            )
-            return
-        super()._on_client_pkt(pkt)
-
-    def _start(self, pend: _Pending) -> None:
-        cfg, net = self.env.cfg, self.env.net
-        self.env.sim.after(
-            cfg.client_post_ns,
-            lambda: net.send(
-                pend.client, self.node,
-                cfg.rdma_header + write_header_extra(),
-                {"rid": pend.rid, "cl": pend.client, "kind": "req"},
-            ),
-        )
-
-
-# ---------------------------------------------------------------------------
-# Fig. 9 / 10 — replication strategies.
-# ---------------------------------------------------------------------------
-
-
-class RdmaFlatProtocol(Protocol):
-    """Client issues k writes, one per replica (no validation)."""
-
-    name = "rdma-flat"
-
-    def __init__(self, env: Env, size: int, k: int):
-        super().__init__(env)
-        self.size = size
-        self.request_bytes = size
-        self.k = k
-        self.storage_nodes = tuple(range(1, k + 1))
-        self._got: dict[tuple[int, int], int] = {}
-        for node in self.storage_nodes:
-            self._install(node, self._mk_storage(node))
-
-    def _expected_acks(self) -> int:
-        return self.k
-
-    def _mk_storage(self, node: int):
-        def on_storage(pkt) -> None:
-            rid = pkt.meta["rid"]
-            key = (rid, node)
-            got = self._got.get(key, 0) + 1
-            self._got[key] = got
-            if got == pkt.meta["n"]:
-                del self._got[key]
-                cfg, net = self.env.cfg, self.env.net
-                client = pkt.meta["cl"]
-                self.env.sim.after(
-                    cfg.nic_fixed_ns,
-                    lambda: net.send(node, client, ACK_WIRE,
-                                     {"rid": rid, "ack": node}),
-                )
-
-        return on_storage
-
-    def _start(self, pend: _Pending) -> None:
-        cfg, net = self.env.cfg, self.env.net
-        meta = {"rid": pend.rid, "cl": pend.client}
-        for idx, node in enumerate(self.storage_nodes):
-            delay = cfg.client_post_ns + idx * cfg.client_post_extra_ns
-            self.env.sim.after(
-                delay,
-                lambda node=node: _send_message(
-                    net, pend.client, node, self.size, 0,
-                    lambda i, n, w: {**meta, "i": i, "n": n},
-                ),
-            )
-
-
 def _chunk_counts(size: int, chunk: int) -> list[int]:
     n = -(-size // chunk)
     sizes = [chunk] * n
     sizes[-1] = size - chunk * (n - 1)
     return sizes
-
-
-class ChunkedTreeProtocol(Protocol):
-    """Chunked store-and-forward broadcast over a ring/tree.
-
-    Models both CPU-based replication (per-chunk host notify + buffer copy)
-    and RDMA-HyperLoop (per-chunk WQE trigger, optional config phase).
-    Every node acks the client when it holds the full message.
-
-    The per-chunk copy engine is modeled as parallel (a multi-core host
-    memcpy at half single-copy bandwidth), matching the paper's stated
-    penalty; contention across concurrent requests arises at the network
-    ports."""
-
-    name = "chunked-tree"
-
-    class _NodeState:
-        __slots__ = ("received", "chunk_acc", "next_chunk", "acked")
-
-        def __init__(self):
-            self.received = 0
-            self.chunk_acc = 0
-            self.next_chunk = 0
-            self.acked = False
-
-    def __init__(
-        self,
-        env: Env,
-        size: int,
-        k: int,
-        strategy: ReplStrategy,
-        per_chunk_overhead_ns: float,
-        copy_GBps: float | None,
-        chunk: int | None = None,
-        config_phase_writes: int = 0,
-    ):
-        super().__init__(env)
-        self.size = size
-        self.request_bytes = size
-        self.k = k
-        self.strategy = strategy
-        self.per_chunk_overhead_ns = per_chunk_overhead_ns
-        self.copy_GBps = copy_GBps
-        self.config_phase_writes = config_phase_writes
-        cfg = env.cfg
-        if chunk is None:
-            nchunks = optimal_chunk_count(
-                size, k, strategy, cfg.bytes_per_ns * 1e9,
-                per_chunk_overhead_ns * 1e-9,
-            )
-            chunk = -(-size // nchunks)
-        self.chunk = chunk
-        self.chunks = _chunk_counts(size, chunk)
-        self.storage_nodes = tuple(range(1, k + 1))
-        self._states: dict[tuple[int, int], ChunkedTreeProtocol._NodeState] = {}
-        for r in range(k):
-            self._install(r + 1, self._mk_node(r))
-
-    def _expected_acks(self) -> int:
-        return self.k
-
-    def _forward_chunk(self, rid: int, client: int, rank: int,
-                       chunk_idx: int) -> None:
-        for c in children_of(rank, self.k, self.strategy):
-            _send_message(
-                self.env.net,
-                rank + 1,
-                c + 1,
-                self.chunks[chunk_idx],
-                0,
-                lambda i, n, w: {"rid": rid, "cl": client, "i": i, "n": n,
-                                 "chunk": chunk_idx},
-            )
-
-    def _mk_node(self, rank: int):
-        def on_node(pkt) -> None:
-            cfg, sim = self.env.cfg, self.env.sim
-            meta = pkt.meta
-            if meta.get("cfg"):
-                # HyperLoop configuration write: ack it.
-                node = rank + 1
-                sim.after(
-                    cfg.nic_fixed_ns,
-                    lambda: self.env.net.send(
-                        node, meta["cl"], ACK_WIRE,
-                        {"rid": meta["rid"], "cfg_ack": 1},
-                    ),
-                )
-                return
-            rid, client = meta["rid"], meta["cl"]
-            st = self._states.setdefault((rid, rank), self._NodeState())
-            payload = pkt.wire_size - cfg.rdma_header
-            if meta.get("hdr"):
-                payload -= meta["hdr"]
-            st.received += payload
-            st.chunk_acc += payload
-            chunks = self.chunks
-            while (st.next_chunk < len(chunks)
-                   and st.chunk_acc >= chunks[st.next_chunk]):
-                st.chunk_acc -= chunks[st.next_chunk]
-                ci = st.next_chunk
-                st.next_chunk += 1
-                delay = self.per_chunk_overhead_ns
-                if self.copy_GBps is not None:
-                    delay += chunks[ci] / self.copy_GBps
-                sim.after(
-                    delay,
-                    lambda ci=ci: self._forward_chunk(rid, client, rank, ci),
-                )
-            if st.received >= self.size and not st.acked:
-                st.acked = True
-                node = rank + 1
-                sim.after(
-                    cfg.nic_fixed_ns,
-                    lambda: self.env.net.send(node, client, ACK_WIRE,
-                                              {"rid": rid, "ack": rank}),
-                )
-            if st.acked and st.next_chunk == len(chunks):
-                del self._states[(rid, rank)]
-
-        return on_node
-
-    def _broadcast(self, pend: _Pending) -> None:
-        meta = {"rid": pend.rid, "cl": pend.client}
-        _send_message(
-            self.env.net, pend.client, 1, self.size, 0,
-            lambda i, n, w: {**meta, "i": i, "n": n},
-        )
-
-    def _on_cfg_ack(self, pend: _Pending) -> None:
-        pend.cfg_acks += 1
-        if pend.cfg_acks == self.config_phase_writes:
-            cfg = self.env.cfg
-            self.env.sim.after(
-                cfg.client_complete_ns + cfg.client_post_ns,
-                lambda: self._broadcast(pend),
-            )
-
-    def _start(self, pend: _Pending) -> None:
-        cfg, sim = self.env.cfg, self.env.sim
-        if self.config_phase_writes:
-            # HyperLoop: write WQE descriptors to each node, wait for acks,
-            # then post the actual data write.
-            for r in range(self.config_phase_writes):
-                node = r + 1
-                delay = cfg.client_post_ns + r * cfg.client_post_extra_ns
-                sim.after(
-                    delay,
-                    lambda node=node: self.env.net.send(
-                        pend.client, node, HYPERLOOP_CONFIG_WIRE,
-                        {"rid": pend.rid, "cl": pend.client, "cfg": 1},
-                    ),
-                )
-        else:
-            sim.after(cfg.client_post_ns, lambda: self._broadcast(pend))
-
-
-class SpinReplicationProtocol(Protocol):
-    """sPIN-Ring / sPIN-PBT: per-packet forwarding by NIC handlers."""
-
-    name = "spin-repl"
-
-    class _Req:
-        __slots__ = ("gate", "processed", "n", "ch_fired")
-
-        def __init__(self):
-            self.gate = RequestGate()
-            self.processed = 0
-            self.n: int | None = None
-            self.ch_fired = False
-
-    def __init__(self, env: Env, size: int, k: int, strategy: ReplStrategy):
-        super().__init__(env)
-        self.size = size
-        self.request_bytes = size
-        self.k = k
-        self.strategy = strategy
-        key = "repl_ring" if strategy == ReplStrategy.RING else "repl_pbt"
-        self.handler_ns = HANDLER_NS[key]
-        self.header_extra = write_header_extra(k)
-        self.storage_nodes = tuple(range(1, k + 1))
-        self.units = {r: env.pspin(r + 1) for r in range(k)}
-        self._reqs: dict[tuple[int, int], SpinReplicationProtocol._Req] = {}
-        for r in range(k):
-            self._install(r + 1, self._mk_node(r))
-
-    def _expected_acks(self) -> int:
-        return self.k
-
-    def _mk_node(self, rank: int):
-        unit = self.units[rank]
-        kids = children_of(rank, self.k, self.strategy)
-        hh, ph, ch = self.handler_ns
-
-        def on_node(pkt) -> None:
-            meta = pkt.meta
-            rid, i = meta["rid"], meta["i"]
-            req = self._reqs.setdefault((rid, rank), self._Req())
-            req.n = meta["n"]
-            emits = [Emit(c + 1, pkt.wire_size, dict(meta)) for c in kids]
-
-            def packet_done() -> None:
-                req.processed += 1
-                if req.processed == req.n and not req.ch_fired:
-                    req.ch_fired = True
-                    del self._reqs[(rid, rank)]
-                    unit.process(
-                        ACK_WIRE,
-                        HandlerSpec(
-                            ch,
-                            [Emit(meta["cl"], ACK_WIRE,
-                                  {"rid": rid, "ack": rank})],
-                        ),
-                    )
-
-            if i == 0:
-                unit.process(pkt.wire_size, HandlerSpec(hh, gate=req.gate))
-            spec = HandlerSpec(ph, emits, on_complete=packet_done,
-                               gate=req.gate)
-            unit.process_gated(pkt.wire_size, spec)
-
-        return on_node
-
-    def _start(self, pend: _Pending) -> None:
-        cfg, net = self.env.cfg, self.env.net
-        meta = {"rid": pend.rid, "cl": pend.client}
-        self.env.sim.after(
-            cfg.client_post_ns,
-            lambda: _send_message(
-                net, pend.client, 1, self.size, self.header_extra,
-                lambda i, n, w: {**meta, "i": i, "n": n},
-            ),
-        )
-
-
-# ---------------------------------------------------------------------------
-# Fig. 15 — erasure coding: sPIN-TriEC vs INEC-TriEC.
-# ---------------------------------------------------------------------------
-
-
-class SpinTriecProtocol(Protocol):
-    """Streaming per-packet TriEC encode on the NIC (section VI-B)."""
-
-    name = "spin-triec"
-
-    class _DataReq:
-        __slots__ = ("gate", "processed", "n", "done")
-
-        def __init__(self):
-            self.gate = RequestGate()
-            self.processed = 0
-            self.n: int | None = None
-            self.done = False
-
-    class _ParReq:
-        __slots__ = ("seq_counts", "seqs_done", "streams_done",
-                     "expected_seqs", "acked")
-
-        def __init__(self):
-            self.seq_counts: dict[int, int] = {}
-            self.seqs_done = 0
-            self.streams_done = 0
-            self.expected_seqs: int | None = None
-            self.acked = False
-
-    def __init__(self, env: Env, block: int, k: int, m: int):
-        super().__init__(env)
-        self.block = block
-        self.request_bytes = block
-        self.k = k
-        self.m = m
-        self.chunk = -(-block // k)
-        self.header_extra = write_header_extra(m)
-        self.storage_nodes = tuple(range(1, k + m + 1))
-        self.data_units = {j: env.pspin(j + 1) for j in range(k)}
-        self.par_units = {i: env.pspin(k + 1 + i) for i in range(m)}
-        self._dreqs: dict[tuple[int, int], SpinTriecProtocol._DataReq] = {}
-        self._preqs: dict[tuple[int, int], SpinTriecProtocol._ParReq] = {}
-        self.first_inject_ns: float | None = None
-        for j in range(k):
-            self._install(j + 1, self._mk_data(j))
-        for pi in range(m):
-            self._install(k + 1 + pi, self._mk_parity(pi))
-
-    def _expected_acks(self) -> int:
-        return self.k + self.m
-
-    def _mk_data(self, j: int):
-        unit = self.data_units[j]
-        hh, _, ch = HANDLER_NS["ec_data_rs32"]
-        k, m = self.k, self.m
-
-        def on_node(pkt) -> None:
-            cfg = self.env.cfg
-            meta = pkt.meta
-            rid, i, n = meta["rid"], meta["i"], meta["n"]
-            req = self._dreqs.setdefault((rid, j), self._DataReq())
-            req.n = n
-            payload = (pkt.wire_size - cfg.rdma_header
-                       - (self.header_extra if i == 0 else 0))
-            emits = [
-                Emit(
-                    k + 1 + pi,
-                    cfg.rdma_header + payload,
-                    {"rid": rid, "cl": meta["cl"], "seq": i, "src": j,
-                     "n": n, "last": i == n - 1},
-                )
-                for pi in range(m)
-            ]
-            compute = ec_data_ph_ns(payload, m)
-
-            def packet_done() -> None:
-                req.processed += 1
-                if req.processed == req.n and not req.done:
-                    req.done = True
-                    del self._dreqs[(rid, j)]
-                    unit.process(
-                        ACK_WIRE,
-                        HandlerSpec(
-                            ch,
-                            [Emit(meta["cl"], ACK_WIRE,
-                                  {"rid": rid, "ack": ("d", j)})],
-                        ),
-                    )
-
-            if i == 0:
-                unit.process(pkt.wire_size, HandlerSpec(hh, gate=req.gate))
-            spec = HandlerSpec(compute, emits, on_complete=packet_done,
-                               gate=req.gate)
-            unit.process_gated(pkt.wire_size, spec)
-
-        return on_node
-
-    def _mk_parity(self, pi: int):
-        unit = self.par_units[pi]
-        _, _, pch = HANDLER_NS["ec_parity"]
-        k = self.k
-
-        def on_node(pkt) -> None:
-            cfg = self.env.cfg
-            meta = pkt.meta
-            rid, seq = meta["rid"], meta["seq"]
-            req = self._preqs.setdefault((rid, pi), self._ParReq())
-            payload = pkt.wire_size - cfg.rdma_header
-
-            def packet_done() -> None:
-                c = req.seq_counts.get(seq, 0) + 1
-                req.seq_counts[seq] = c
-                if c == k:
-                    req.seqs_done += 1
-                if meta["last"]:
-                    req.streams_done += 1
-                    req.expected_seqs = meta["n"]
-                if (
-                    not req.acked
-                    and req.streams_done == k
-                    and req.expected_seqs is not None
-                    and req.seqs_done == req.expected_seqs
-                ):
-                    req.acked = True
-                    del self._preqs[(rid, pi)]
-                    unit.process(
-                        ACK_WIRE,
-                        HandlerSpec(
-                            pch,
-                            [Emit(meta["cl"], ACK_WIRE,
-                                  {"rid": rid, "ack": ("p", pi)})],
-                        ),
-                    )
-
-            compute = ec_parity_ph_ns(payload)
-            unit.process(pkt.wire_size,
-                         HandlerSpec(compute, on_complete=packet_done))
-
-        return on_node
-
-    def _start(self, pend: _Pending) -> None:
-        cfg, net, sim = self.env.cfg, self.env.net, self.env.sim
-        k = self.k
-
-        # Interleaved transmission (section VI-B1): packet i of every chunk
-        # before packet i+1 of any.
-        def inject() -> None:
-            if self.first_inject_ns is None:
-                self.first_inject_ns = sim.now
-            streams = [net.cfg.packets_of(self.chunk, self.header_extra)
-                       for _ in range(k)]
-            nmax = max(len(s) for s in streams)
-            for i in range(nmax):
-                for j in range(k):
-                    if i < len(streams[j]):
-                        net.send(
-                            pend.client,
-                            j + 1,
-                            streams[j][i],
-                            {"rid": pend.rid, "cl": pend.client,
-                             "i": i, "n": len(streams[j])},
-                        )
-
-        post = cfg.client_post_ns + (k - 1) * cfg.client_post_extra_ns
-        sim.after(post, inject)
-
-
-class InecTriecProtocol(Protocol):
-    """INEC-TriEC: chunk-granularity NIC-offloaded EC with host staging.
-
-    Data path per chunk (Fig. 13 left): chunk lands in host memory (PCIe
-    flush), the on-NIC EC engine reads it back over PCIe, encodes, sends m
-    intermediate chunks; parity nodes stage k chunks in host memory, the
-    NIC XOR engine reads them back, writes the final parity.  No packet-
-    level overlap — per-chunk pipelining only (INEC's triggered ops).
-
-    Posting is host-paced per client: at most ``window`` blocks
-    outstanding (the INEC benchmark chains are posted per block by host
-    software); excess requests queue at the client."""
-
-    name = "inec-triec"
-
-    def __init__(self, env: Env, block: int, k: int, m: int,
-                 window: int = INEC_WINDOW):
-        super().__init__(env)
-        self.block = block
-        self.request_bytes = block
-        self.k = k
-        self.m = m
-        self.window = window
-        self.chunk = -(-block // k)
-        self.storage_nodes = tuple(range(1, k + m + 1))
-        # Per-node serial engines: PCIe staging + EC/XOR engine.  Each
-        # engine dispatch pays the triggered-op chain overhead (WAIT WQE +
-        # doorbell).
-        self.pcie = {n: SerialResource(env.sim) for n in self.storage_nodes}
-        self.engine = {n: SerialResource(env.sim) for n in self.storage_nodes}
-        self._got: dict[tuple[int, int], int] = {}
-        self._par_got: dict[tuple[int, int], int] = {}
-        self._outstanding: dict[int, int] = {}   # client -> in-flight blocks
-        self._queued: dict[int, list[_Pending]] = {}
-        self.first_inject_ns: float | None = None
-        for j in range(k):
-            self._install(j + 1, self._mk_data(j))
-        for pi in range(m):
-            self._install(k + 1 + pi, self._mk_parity(pi))
-
-    def _expected_acks(self) -> int:
-        return self.k + self.m
-
-    def _mk_data(self, j: int):
-        node = j + 1
-
-        def on_node(pkt) -> None:
-            cfg, net = self.env.cfg, self.env.net
-            meta = pkt.meta
-            rid, client = meta["rid"], meta["cl"]
-            key = (rid, j)
-            self._got[key] = self._got.get(key, 0) + 1
-            if self._got[key] != meta["n"]:
-                return
-            del self._got[key]
-            chunk, m = self.chunk, self.m
-
-            # full chunk in NIC; flush to host memory:
-            def staged(_s, _e) -> None:
-                def read_back(_s2, _e2) -> None:
-                    def encoded(_s3, _e3) -> None:
-                        for pi in range(m):
-                            _send_message(
-                                net, node, self.k + 1 + pi, chunk, 0,
-                                lambda i, n, w: {"rid": rid, "cl": client,
-                                                 "src": j, "i": i, "n": n},
-                            )
-                        net.send(node, client, ACK_WIRE,
-                                 {"rid": rid, "ack": ("d", j)})
-
-                    self.engine[node].acquire(
-                        INEC_TRIGGER_NS + chunk / INEC_EC_ENGINE_GBPS, encoded
-                    )
-
-                self.pcie[node].acquire(
-                    cfg.pcie_latency_ns + chunk / INEC_PCIE_BW_GBPS, read_back
-                )
-
-            self.pcie[node].acquire(
-                cfg.pcie_latency_ns / 2 + chunk / INEC_PCIE_BW_GBPS, staged
-            )
-
-        return on_node
-
-    def _mk_parity(self, pi: int):
-        node = self.k + 1 + pi
-
-        def on_node(pkt) -> None:
-            cfg, net = self.env.cfg, self.env.net
-            meta = pkt.meta
-            rid, client = meta["rid"], meta["cl"]
-            key = (rid, pi)
-            self._par_got[key] = self._par_got.get(key, 0) + 1
-            # every intermediate chunk stages through host memory:
-            if self._par_got[key] != self.k * meta["n"]:
-                return
-            del self._par_got[key]
-            chunk, k = self.chunk, self.k
-
-            def staged(_s, _e) -> None:
-                def xored(_s2, _e2) -> None:
-                    def written(_s3, _e3) -> None:
-                        net.send(node, client, ACK_WIRE,
-                                 {"rid": rid, "ack": ("p", pi)})
-
-                    self.pcie[node].acquire(
-                        cfg.pcie_latency_ns / 2 + chunk / INEC_PCIE_BW_GBPS,
-                        written,
-                    )
-
-                self.engine[node].acquire(
-                    INEC_TRIGGER_NS + k * chunk / INEC_EC_ENGINE_GBPS, xored
-                )
-
-            # NIC XOR engine reads the k staged chunks back over PCIe.
-            self.pcie[node].acquire(
-                cfg.pcie_latency_ns + k * chunk / INEC_PCIE_BW_GBPS, staged
-            )
-
-        return on_node
-
-    def _inject(self, pend: _Pending) -> None:
-        if self.first_inject_ns is None:
-            self.first_inject_ns = self.env.sim.now
-        for j in range(self.k):
-            _send_message(
-                self.env.net, pend.client, j + 1, self.chunk, 0,
-                lambda i, n, w: {"rid": pend.rid, "cl": pend.client,
-                                 "i": i, "n": n},
-            )
-
-    def _start(self, pend: _Pending) -> None:
-        cfg, sim = self.env.cfg, self.env.sim
-        client = pend.client
-        if self._outstanding.get(client, 0) < self.window:
-            self._outstanding[client] = self._outstanding.get(client, 0) + 1
-            post = cfg.client_post_ns + (self.k - 1) * cfg.client_post_extra_ns
-            sim.after(post, lambda: self._inject(pend))
-        else:
-            self._queued.setdefault(client, []).append(pend)
-
-    def _on_request_complete(self, pend: _Pending) -> None:
-        client = pend.client
-        queue = self._queued.get(client)
-        if queue:
-            # Re-armed chains pay only client_post_ns (the k WQEs were
-            # batched when the chain was configured) — matches the
-            # pre-refactor host-pacing model.
-            nxt = queue.pop(0)
-            self.env.sim.after(self.env.cfg.client_post_ns,
-                               lambda: self._inject(nxt))
-        else:
-            self._outstanding[client] -= 1
 
 
 # ---------------------------------------------------------------------------
@@ -1110,37 +326,18 @@ def make_protocol(
     """Build a protocol instance by name on a shared :class:`Env`.
 
     ``size`` is the write/block payload; ``k``/``m``/``strategy`` apply to
-    the replication and erasure protocols."""
-    cfg = env.cfg
-    host_overhead = cfg.pcie_latency_ns / 2 + cfg.host_notify_ns
-    factories: dict[str, Callable[[], Protocol]] = {
-        "raw-write": lambda: RawWriteProtocol(env, size),
-        "spin-write": lambda: SpinAuthWriteProtocol(env, size),
-        "rpc-write": lambda: RpcWriteProtocol(env, size),
-        "rpc-rdma-write": lambda: RpcRdmaWriteProtocol(env, size),
-        "rdma-flat": lambda: RdmaFlatProtocol(env, size, k),
-        "cpu-ring": lambda: ChunkedTreeProtocol(
-            env, size, k, ReplStrategy.RING, host_overhead,
-            cfg.host_memcpy_GBps / 2),
-        "cpu-pbt": lambda: ChunkedTreeProtocol(
-            env, size, k, ReplStrategy.PBT, host_overhead,
-            cfg.host_memcpy_GBps / 2),
-        "hyperloop": lambda: ChunkedTreeProtocol(
-            env, size, k, ReplStrategy.RING, HYPERLOOP_TRIGGER_NS, None,
-            chunk=size, config_phase_writes=k),
-        "spin-ring": lambda: SpinReplicationProtocol(
-            env, size, k, ReplStrategy.RING),
-        "spin-pbt": lambda: SpinReplicationProtocol(
-            env, size, k, ReplStrategy.PBT),
-        "spin-repl": lambda: SpinReplicationProtocol(env, size, k, strategy),
-        "spin-triec": lambda: SpinTriecProtocol(env, size, k, m),
-        "inec-triec": lambda: InecTriecProtocol(env, size, k, m),
-    }
-    if name not in factories:
-        raise ValueError(
-            f"unknown protocol {name!r}; available: {sorted(factories)}"
-        )
-    return factories[name]()
+    the replication and erasure protocols.
+
+    .. deprecated:: PR 3
+       This is a thin shim over the :mod:`repro.policy` presets — the name
+       is looked up with :func:`repro.policy.preset_spec` and compiled by
+       :func:`repro.policy.timed.compile_policy`.  New callers should build
+       a :class:`~repro.policy.PolicySpec` directly (specs compose; names
+       don't)."""
+    from repro.policy.spec import preset_spec
+    from repro.policy.timed import compile_policy
+
+    return compile_policy(env, preset_spec(name, k, m, strategy), size)
 
 
 PROTOCOL_NAMES = (
@@ -1158,8 +355,8 @@ def run_single_shot(
     cfg: NetConfig | None = None,
 ) -> Result:
     """One-request reference latency for protocol ``name`` via the
-    original single-shot runners (the N=1 parity baseline used by the
-    contention benchmark and the workload tests)."""
+    single-shot runners (the N=1 parity baseline used by the contention
+    benchmark and the workload tests)."""
     runners: dict[str, Callable[[], Result]] = {
         "raw-write": lambda: run_raw_write(size, cfg=cfg),
         "spin-write": lambda: run_spin_auth_write(size, cfg=cfg),
@@ -1175,6 +372,7 @@ def run_single_shot(
             size, k, ReplStrategy.PBT, cfg=cfg),
         "spin-triec": lambda: run_spin_triec(size, k, m, cfg=cfg),
         "inec-triec": lambda: run_inec_triec(size, k, m, cfg=cfg),
+        "spin-read": lambda: run_spin_read(size, cfg=cfg),
     }
     if name not in runners:
         raise ValueError(
@@ -1185,6 +383,8 @@ def run_single_shot(
 
 # ---------------------------------------------------------------------------
 # Single-shot runners (original API): one client, sequential requests.
+# All are thin shims over the policy presets (deprecation: prefer
+# ``compile_policy(env, preset_spec(name, ...), size)`` directly).
 # ---------------------------------------------------------------------------
 
 
@@ -1196,9 +396,23 @@ def _run_single(proto: Protocol, env: Env) -> Result:
     return out["res"]
 
 
+def _run_preset(
+    name: str,
+    size: int,
+    k: int = 4,
+    m: int = 2,
+    strategy: ReplStrategy = ReplStrategy.RING,
+    cfg: NetConfig | None = None,
+    pcfg: PsPINConfig | None = None,
+) -> tuple[Protocol, Env, Result]:
+    env = Env(cfg, pcfg)
+    proto = make_protocol(env, name, size, k=k, m=m, strategy=strategy)
+    res = _run_single(proto, env)
+    return proto, env, res
+
+
 def run_raw_write(size: int, cfg: NetConfig | None = None) -> Result:
-    env = Env(cfg)
-    return _run_single(RawWriteProtocol(env, size), env)
+    return _run_preset("raw-write", size, cfg=cfg)[2]
 
 
 def run_spin_auth_write(
@@ -1206,29 +420,33 @@ def run_spin_auth_write(
     cfg: NetConfig | None = None,
     pcfg: PsPINConfig | None = None,
 ) -> Result:
-    env = Env(cfg, pcfg)
-    proto = SpinAuthWriteProtocol(env, size)
-    res = _run_single(proto, env)
+    _, env, res = _run_preset("spin-write", size, cfg=cfg, pcfg=pcfg)
+    unit = env.pspin(1)
     res.extra.update(
-        {"handler_ns": proto.unit.handler_time_ns,
-         "handlers": proto.unit.handler_count}
+        {"handler_ns": unit.handler_time_ns, "handlers": unit.handler_count}
     )
     return res
 
 
+def run_spin_read(
+    size: int,
+    cfg: NetConfig | None = None,
+    pcfg: PsPINConfig | None = None,
+) -> Result:
+    """sPIN read: authenticated request up, data streamed back by the NIC."""
+    return _run_preset("spin-read", size, cfg=cfg, pcfg=pcfg)[2]
+
+
 def run_rpc_write(size: int, cfg: NetConfig | None = None) -> Result:
-    env = Env(cfg)
-    return _run_single(RpcWriteProtocol(env, size), env)
+    return _run_preset("rpc-write", size, cfg=cfg)[2]
 
 
 def run_rpc_rdma_write(size: int, cfg: NetConfig | None = None) -> Result:
-    env = Env(cfg)
-    return _run_single(RpcRdmaWriteProtocol(env, size), env)
+    return _run_preset("rpc-rdma-write", size, cfg=cfg)[2]
 
 
 def run_rdma_flat(size: int, k: int, cfg: NetConfig | None = None) -> Result:
-    env = Env(cfg)
-    return _run_single(RdmaFlatProtocol(env, size, k), env)
+    return _run_preset("rdma-flat", size, k=k, cfg=cfg)[2]
 
 
 def run_chunked_tree(
@@ -1241,8 +459,12 @@ def run_chunked_tree(
     cfg: NetConfig | None = None,
     config_phase_writes: int = 0,
 ) -> Result:
+    """Generic chunked-tree runner with explicit stage knobs (the escape
+    hatch under the cpu-ring / cpu-pbt / hyperloop presets)."""
+    from repro.policy.timed import chunked_tree_protocol
+
     env = Env(cfg)
-    proto = ChunkedTreeProtocol(
+    proto = chunked_tree_protocol(
         env, size, k, strategy, per_chunk_overhead_ns, copy_GBps,
         chunk=chunk, config_phase_writes=config_phase_writes,
     )
@@ -1255,19 +477,17 @@ def run_cpu_ring(size: int, k: int, cfg: NetConfig | None = None) -> Result:
     # Per-chunk host notify + PCIe; data moves *to and from* host memory
     # (two traversals => half the effective single-copy bandwidth) — the
     # paper's stated penalty for CPU-based strategies.
-    cfg = cfg or NetConfig()
-    overhead = cfg.pcie_latency_ns / 2 + cfg.host_notify_ns
-    return run_chunked_tree(
-        size, k, ReplStrategy.RING, overhead, cfg.host_memcpy_GBps / 2, cfg=cfg
-    )
+    proto, _, res = _run_preset(
+        "cpu-ring", size, k=k, strategy=ReplStrategy.RING, cfg=cfg)
+    res.extra["chunk"] = proto.chunk
+    return res
 
 
 def run_cpu_pbt(size: int, k: int, cfg: NetConfig | None = None) -> Result:
-    cfg = cfg or NetConfig()
-    overhead = cfg.pcie_latency_ns / 2 + cfg.host_notify_ns
-    return run_chunked_tree(
-        size, k, ReplStrategy.PBT, overhead, cfg.host_memcpy_GBps / 2, cfg=cfg
-    )
+    proto, _, res = _run_preset(
+        "cpu-pbt", size, k=k, strategy=ReplStrategy.PBT, cfg=cfg)
+    res.extra["chunk"] = proto.chunk
+    return res
 
 
 def run_hyperloop(size: int, k: int, cfg: NetConfig | None = None) -> Result:
@@ -1275,16 +495,9 @@ def run_hyperloop(size: int, k: int, cfg: NetConfig | None = None) -> Result:
     # (WAIT on CQE -> RDMA WRITE of the full received buffer), so the ring
     # is store-and-forward at message granularity; the client pays an
     # explicit configuration phase first (Fig. 8).
-    return run_chunked_tree(
-        size,
-        k,
-        ReplStrategy.RING,
-        HYPERLOOP_TRIGGER_NS,
-        None,
-        chunk=size,
-        cfg=cfg,
-        config_phase_writes=k,
-    )
+    proto, _, res = _run_preset("hyperloop", size, k=k, cfg=cfg)
+    res.extra["chunk"] = proto.chunk
+    return res
 
 
 def run_spin_replication(
@@ -1302,7 +515,7 @@ def run_spin_replication(
     (Fig. 9 right): returns ingested GB/s at the primary in ``extra``.
     """
     env = Env(cfg, pcfg)
-    proto = SpinReplicationProtocol(env, size, k, strategy)
+    proto = make_protocol(env, "spin-repl", size, k=k, strategy=strategy)
     cfg = env.cfg
     for w in range(num_writes):
         # back-to-back posts: one batched WQE every client_post_extra_ns
@@ -1331,7 +544,7 @@ def run_spin_triec(
     num_blocks: int = 1,
 ) -> Result:
     env = Env(cfg, pcfg)
-    proto = SpinTriecProtocol(env, block, k, m)
+    proto = make_protocol(env, "spin-triec", block, k=k, m=m)
     for _ in range(num_blocks):
         proto.issue(CLIENT)
     env.sim.run()
@@ -1351,7 +564,7 @@ def run_inec_triec(
     num_blocks: int = 1,
 ) -> Result:
     env = Env(cfg)
-    proto = InecTriecProtocol(env, block, k, m)
+    proto = make_protocol(env, "inec-triec", block, k=k, m=m)
     for _ in range(num_blocks):
         proto.issue(CLIENT)
     env.sim.run()
@@ -1380,3 +593,22 @@ def run_spin_goodput(
         size, k, strategy, cfg=cfg, pcfg=pcfg, num_writes=num_writes
     )
     return res.extra["goodput_GBps"]
+
+
+# ---------------------------------------------------------------------------
+# Lazy re-export of the frozen hand-written classes (parity reference).
+# ---------------------------------------------------------------------------
+
+_LEGACY_CLASSES = (
+    "RawWriteProtocol", "SpinAuthWriteProtocol", "RpcWriteProtocol",
+    "RpcRdmaWriteProtocol", "RdmaFlatProtocol", "ChunkedTreeProtocol",
+    "SpinReplicationProtocol", "SpinTriecProtocol", "InecTriecProtocol",
+)
+
+
+def __getattr__(name: str):
+    if name in _LEGACY_CLASSES:
+        from repro.sim import legacy
+
+        return getattr(legacy, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -22,9 +22,18 @@ Open-loop arrivals admit at most ``max_outstanding`` in-flight requests
 per client (admission control); excess arrivals are *dropped* and counted,
 so overload shows up as drops + queueing rather than an unbounded heap.
 
+Mixed-policy scenarios: ``Scenario.policies`` takes a list of
+:class:`PolicyLoad` — ``(PolicySpec | preset name, weight, size_dist)`` —
+all compiled onto *one* shared :class:`Env` (policy-id packet demux lets
+them share storage nodes), and every request picks its policy by weighted
+draw and its payload from the load's :class:`SizeDist` (``fixed`` /
+``lognormal`` / ``bimodal``).  That is the regime the paper's scaling
+claims live in: writes and EC contending for the same links and HPUs.
+
 Everything is deterministic: a seeded ``random.Random`` drives arrivals,
-and the discrete-event core has no other nondeterminism, so the same
-:class:`Scenario` always produces the identical event trace and metrics.
+policy picks, and size draws, and the discrete-event core has no other
+nondeterminism, so the same :class:`Scenario` always produces the
+identical event trace and metrics.
 """
 
 from __future__ import annotations
@@ -52,6 +61,48 @@ def client_node_ids(n: int) -> list[int]:
     return [CLIENT - i for i in range(n)]
 
 
+@dataclasses.dataclass(frozen=True)
+class SizeDist:
+    """Per-request payload size distribution.
+
+    ``fixed``: always ``mean``.  ``lognormal``: mean ``mean`` with shape
+    ``sigma`` (heavy right tail — many small requests, occasional large
+    ones).  ``bimodal``: ``small`` with probability ``1 - p_large`` else
+    ``large`` (metadata-ops vs bulk-data mix)."""
+
+    kind: str = "fixed"          # fixed | lognormal | bimodal
+    mean: int = 64 * KiB
+    sigma: float = 0.6
+    small: int = 4 * KiB
+    large: int = 256 * KiB
+    p_large: float = 0.125
+    min_bytes: int = 64
+    max_bytes: int = 4 << 20
+
+    def sample(self, rnd: random.Random) -> int:
+        if self.kind == "fixed":
+            return self.mean
+        if self.kind == "lognormal":
+            mu = math.log(self.mean) - self.sigma ** 2 / 2.0
+            v = int(rnd.lognormvariate(mu, self.sigma))
+            return max(self.min_bytes, min(v, self.max_bytes))
+        if self.kind == "bimodal":
+            return self.large if rnd.random() < self.p_large else self.small
+        raise ValueError(f"unknown size distribution {self.kind!r}")
+
+
+@dataclasses.dataclass
+class PolicyLoad:
+    """One component of a mixed scenario: a policy (a
+    :class:`repro.policy.PolicySpec` or preset name), its share of the
+    request traffic, and its request-size distribution (None: the
+    scenario's ``size_dist`` / fixed ``size``)."""
+
+    spec: object                      # PolicySpec | preset name
+    weight: float = 1.0
+    size_dist: SizeDist | None = None
+
+
 @dataclasses.dataclass
 class Scenario:
     """One contention experiment: who sends what, how fast, to which
@@ -73,6 +124,11 @@ class Scenario:
     k: int = 4
     m: int = 2
     strategy: ReplStrategy = ReplStrategy.RING
+    # per-request size distribution (None: fixed ``size``):
+    size_dist: SizeDist | None = None
+    # mixed-policy mode: compile every load onto ONE shared Env (weighted
+    # per-request policy pick); ``protocol`` is ignored when set.
+    policies: list[PolicyLoad] | None = None
 
     def per_client_gap_ns(self, cfg: NetConfig | None = None) -> float:
         """Mean open-loop inter-arrival gap per client (``cfg``: the
@@ -122,7 +178,7 @@ class Metrics:
 
     # -- queue stats (exact peaks from the engine's resource counters) -------
 
-    def finalize_queues(self, env: Env, proto: Protocol) -> None:
+    def finalize_queues(self, env: Env, storage_nodes) -> None:
         """Pull the exact peak queue depths tracked by the resources
         themselves (SerialResource/Pool.peak_queued) — event-time sampling
         would systematically under-report the maxima."""
@@ -130,8 +186,7 @@ class Metrics:
             (u.hpus.peak_queued for u in env.pspin_units()), default=0
         )
         self.ingress_queue_peak = max(
-            (env.net.node(s).ingress.peak_queued
-             for s in proto.storage_nodes),
+            (env.net.node(s).ingress.peak_queued for s in storage_nodes),
             default=0,
         )
         self.cpu_queue_peak = max(
@@ -173,8 +228,28 @@ class Metrics:
         }
 
 
+def _unique_names(loads) -> list[str]:
+    names = []
+    for pl in loads:
+        if isinstance(pl.spec, str):
+            names.append(pl.spec)
+        else:
+            names.append(pl.spec.name or pl.spec.describe())
+    seen: dict[str, int] = {}
+    out = []
+    for n in names:
+        c = seen.get(n, 0)
+        seen[n] = c + 1
+        out.append(n if c == 0 else f"{n}@{c}")
+    return out
+
+
 class Workload:
-    """Drive one :class:`Scenario` to completion on a fresh :class:`Env`."""
+    """Drive one :class:`Scenario` to completion on a fresh :class:`Env`.
+
+    Single-policy scenarios compile ``scenario.protocol``; mixed scenarios
+    compile every :class:`PolicyLoad` onto the same Env (shared storage
+    nodes, pid-demultiplexed) and draw the policy per request."""
 
     def __init__(
         self,
@@ -184,33 +259,83 @@ class Workload:
     ):
         self.sc = scenario
         self.env = Env(cfg, pcfg)
-        self.proto = make_protocol(
-            self.env, scenario.protocol, scenario.size,
-            k=scenario.k, m=scenario.m, strategy=scenario.strategy,
-        )
+        sc = scenario
+        if sc.policies:
+            from repro.policy import compile_policy, preset_spec
+
+            self.loads: list[PolicyLoad] = list(sc.policies)
+            self.protos: list[Protocol] = []
+            for pl in self.loads:
+                spec = pl.spec
+                if isinstance(spec, str):
+                    spec = preset_spec(spec, k=sc.k, m=sc.m,
+                                       strategy=sc.strategy)
+                self.protos.append(compile_policy(self.env, spec, sc.size))
+        else:
+            self.loads = [PolicyLoad(sc.protocol, 1.0, sc.size_dist)]
+            self.protos = [make_protocol(
+                self.env, sc.protocol, sc.size,
+                k=sc.k, m=sc.m, strategy=sc.strategy,
+            )]
+        self.proto = self.protos[0]
+        self.policy_names = _unique_names(self.loads)
+        total_w = sum(pl.weight for pl in self.loads)
+        acc = 0.0
+        self._cum_weights = []
+        for pl in self.loads:
+            acc += pl.weight / total_w
+            self._cum_weights.append(acc)
         self.metrics = Metrics()
+        self.per_policy = [
+            {"issued": 0, "completed": 0, "bytes": 0, "latencies_ns": []}
+            for _ in self.loads
+        ]
         self._outstanding: dict[int, int] = {}
+
+    def storage_nodes(self) -> tuple[int, ...]:
+        nodes: set[int] = set()
+        for proto in self.protos:
+            nodes.update(proto.storage_nodes)
+        return tuple(sorted(nodes))
 
     # -- request plumbing ----------------------------------------------------
 
-    def _issue(self, client: int, after_done=None) -> None:
+    def _pick(self, rnd: random.Random) -> int:
+        if len(self.loads) == 1:
+            return 0
+        x = rnd.random()
+        for i, c in enumerate(self._cum_weights):
+            if x <= c:
+                return i
+        return len(self.loads) - 1
+
+    def _issue(self, client: int, rnd: random.Random, after_done=None) -> None:
         sim = self.env.sim
+        i = self._pick(rnd)
+        proto = self.protos[i]
+        pl = self.loads[i]
+        dist = pl.size_dist or self.sc.size_dist
+        size = dist.sample(rnd) if dist is not None else None
+        nbytes = proto.request_bytes if size is None else size
         self.metrics.on_issue(sim.now)
+        pp = self.per_policy[i]
+        pp["issued"] += 1
         self._outstanding[client] = self._outstanding.get(client, 0) + 1
 
         def done(res: Result) -> None:
             self._outstanding[client] -= 1
-            self.metrics.on_complete(
-                sim.now, res.latency_ns, self.proto.request_bytes
-            )
+            self.metrics.on_complete(sim.now, res.latency_ns, nbytes)
+            pp["completed"] += 1
+            pp["bytes"] += nbytes
+            pp["latencies_ns"].append(res.latency_ns)
             if after_done is not None:
                 after_done()
 
-        self.proto.issue(client, on_done=done)
+        proto.issue(client, on_done=done, size=size)
 
     # -- arrival processes ---------------------------------------------------
 
-    def _schedule_closed(self, client: int) -> None:
+    def _schedule_closed(self, client: int, rnd: random.Random) -> None:
         sc, sim = self.sc, self.env.sim
         remaining = {"n": sc.requests_per_client}
 
@@ -218,7 +343,7 @@ class Workload:
             if remaining["n"] == 0:
                 return
             remaining["n"] -= 1
-            self._issue(client, after_done=maybe_next)
+            self._issue(client, rnd, after_done=maybe_next)
 
         def maybe_next() -> None:
             if remaining["n"] > 0:
@@ -262,29 +387,51 @@ class Workload:
                     self.metrics.on_issue(self.env.sim.now)
                     self.metrics.on_drop()
                     return
-                self._issue(client)
+                self._issue(client, rnd)
 
             sim.at(t, arrive)
 
     # -- run -----------------------------------------------------------------
 
+    def _policy_report(self) -> dict:
+        elapsed = self.metrics.last_done_ns - (self.metrics.first_issue_ns
+                                               or 0.0)
+        out = {}
+        for name, pp in zip(self.policy_names, self.per_policy):
+            lat = sorted(pp["latencies_ns"])
+
+            def pct(p):
+                if not lat:
+                    return math.nan
+                return lat[max(1, math.ceil(p / 100.0 * len(lat))) - 1] / 1e3
+
+            out[name] = {
+                "issued": pp["issued"],
+                "completed": pp["completed"],
+                "bytes": pp["bytes"],
+                "p50_us": pct(50),
+                "p99_us": pct(99),
+                "goodput_GBps": (pp["bytes"] / elapsed) if elapsed > 0 else 0.0,
+            }
+        return out
+
     def run(self) -> dict:
         sc = self.sc
         for idx, client in enumerate(client_node_ids(sc.num_clients)):
+            rnd = random.Random((sc.seed * 1_000_003) ^ (idx * 7919))
             if sc.arrival == "closed":
-                self._schedule_closed(client)
+                self._schedule_closed(client, rnd)
             else:
-                rnd = random.Random((sc.seed * 1_000_003) ^ (idx * 7919))
                 self._schedule_open(client, rnd)
         self.env.sim.run(until=sc.duration_ns)
-        self.metrics.finalize_queues(self.env, self.proto)
+        storage_nodes = self.storage_nodes()
+        self.metrics.finalize_queues(self.env, storage_nodes)
         rep = self.metrics.report()
-        ingress = [
-            self.env.net.node(s).ingress for s in self.proto.storage_nodes
-        ]
+        ingress = [self.env.net.node(s).ingress for s in storage_nodes]
         rep.update(
             {
-                "protocol": sc.protocol,
+                "protocol": "+".join(self.policy_names),
+                "per_policy": self._policy_report(),
                 "clients": sc.num_clients,
                 "arrival": sc.arrival,
                 "size": sc.size,

@@ -15,6 +15,7 @@ def test_bench_modules_import_clean():
     try:
         import benchmarks.contention  # noqa: F401
         import benchmarks.dataplane  # noqa: F401
+        import benchmarks.mixed  # noqa: F401
         import benchmarks.paper_figs  # noqa: F401
         import benchmarks.run  # noqa: F401
     finally:
@@ -61,3 +62,25 @@ def test_run_py_json_artifact(tmp_path):
     for row in doc["rows"]:
         assert {"name", "us_per_call", "derived"} <= set(row)
     assert any(r["name"].startswith("fig4/") for r in doc["rows"])
+
+
+def test_run_py_mixed_artifact(tmp_path):
+    """run.py --mixed sweeps the mixed write+EC scenario on one shared
+    Env and always writes the BENCH_mixed.json artifact."""
+    out = tmp_path / "BENCH_mixed.json"
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--only", "fig4",
+         "--mixed", "--mixed-out", str(out)],
+        cwd=REPO,
+        capture_output=True,
+        text=True,
+        timeout=300,
+    )
+    assert proc.returncode == 0, proc.stderr
+    doc = json.loads(out.read_text())
+    assert doc["bench"] == "mixed"
+    names = [r["name"] for r in doc["rows"]]
+    assert any(n.startswith("mixed/write+ec/") for n in names)
+    assert any(n.startswith("mixed/spin-triec/") for n in names)
+    for row in doc["rows"]:
+        assert {"name", "us_per_call", "derived"} <= set(row)

@@ -104,3 +104,77 @@ def test_spill_and_reload_from_disk(tmp_path):
     revived.fail_node(layout.parity_coords[0].node)
     assert revived.read_object(revived.meta.lookup(layout.object_id)) == \
         blob.tobytes()
+
+
+# -- PolicySpec-routed EC: batched client encode (RSCode.encode_stripes) ----
+
+
+def test_bulk_client_encode_matches_nic_streaming_path():
+    """encode='client' (one batched RSCode.encode_stripes per leaf) must
+    lay out byte-identical shards to the per-packet NIC streaming path."""
+    blob = np.random.default_rng(7).integers(0, 256, 70_001, dtype=np.uint8)
+    a = StorageCluster(num_nodes=6, node_capacity=1 << 22)
+    b = StorageCluster(num_nodes=6, node_capacity=1 << 22)
+    la = a.write_object_bulk([blob.tobytes()], k=3, m=2)[0]
+    lb = b.write_object(blob.tobytes(), k=3, m=2)  # NIC streaming EC
+    assert la.chunk_len == lb.chunk_len
+    for ca, cb in zip(
+        list(la.data_coords) + list(la.parity_coords),
+        list(lb.data_coords) + list(lb.parity_coords),
+    ):
+        sa = a.nodes[ca.node].read(ca.addr, la.chunk_len)
+        sb = b.nodes[cb.node].read(cb.addr, lb.chunk_len)
+        assert np.array_equal(sa, sb)
+    assert a.read_object(la) == blob.tobytes()
+
+
+def test_bulk_encode_roundtrip_under_erasures():
+    """ROADMAP item: encode_stripes wired into checkpoint EC — the bulk
+    path must survive m node losses end to end."""
+    cluster = StorageCluster(num_nodes=8, node_capacity=1 << 23)
+    mgr = CheckpointManager(
+        cluster,
+        CheckpointPolicy(k=4, m=2, stripe_bytes=1 << 15, encode="client"),
+    )
+    tree = _tree(9)
+    mgr.save(3, tree, blocking=True)
+    cluster.fail_node(2)
+    cluster.fail_node(5)
+    _assert_tree_equal(mgr.restore(3, treedef=tree), tree)
+    # beyond m failures the stripe must be unrecoverable
+    cluster.fail_node(0)
+    cluster.fail_node(1)
+    with pytest.raises((ValueError, IOError)):
+        mgr.restore(3, treedef=tree)
+
+
+def test_manager_accepts_policy_spec():
+    """CheckpointManager lowers a declarative PolicySpec directly."""
+    from repro.policy import PolicySpec, RS, SpongeAuth
+
+    spec = PolicySpec("spin", SpongeAuth(), erasure=RS(3, 2, "client"))
+    cluster = StorageCluster(num_nodes=6, node_capacity=1 << 23)
+    mgr = CheckpointManager(cluster, spec)
+    assert mgr.policy.k == 3 and mgr.policy.m == 2
+    assert mgr.policy.encode == "client"
+    tree = _tree(11)
+    mgr.save(1, tree, blocking=True)
+    cluster.fail_node(1)
+    _assert_tree_equal(mgr.restore(1, treedef=tree), tree)
+
+
+def test_checkpoint_policy_spec_roundtrip():
+    for pol in (
+        CheckpointPolicy(k=5, m=3, encode="client"),
+        CheckpointPolicy(k=4, m=2, encode="nic"),
+        CheckpointPolicy(resiliency=Resiliency.REPLICATION, k=3,
+                         strategy=ReplStrategy.PBT),
+    ):
+        back = CheckpointPolicy.from_spec(pol.spec(),
+                                          stripe_bytes=pol.stripe_bytes)
+        assert back.resiliency == pol.resiliency
+        assert back.k == pol.k
+        if pol.resiliency == Resiliency.ERASURE_CODING:
+            assert back.m == pol.m and back.encode == pol.encode
+        else:
+            assert back.strategy == pol.strategy

@@ -1,0 +1,355 @@
+"""Composable StoragePolicy API invariants.
+
+(a) bit-exactness — every PolicySpec preset compiled by repro.policy.timed
+    reports latencies bit-identical to its hand-written predecessor
+    (repro.sim.legacy, the frozen parity reference), across sizes and k;
+(b) anchor guard — preset single-shot latencies must not drift from the
+    recorded anchors (tests/data/policy_anchors.json);
+(c) spec hygiene — validation rejects inconsistent stage combinations;
+(d) mixed scenarios — several policies share one Env (and storage nodes)
+    with request conservation, and size distributions drive per-request
+    payloads;
+(e) read path — spin-read through the timed plane, and read-after-write
+    byte equality through the functional plane.
+"""
+
+import json
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core.packets import ReplStrategy
+from repro.policy import (
+    Flat,
+    HostAuth,
+    NoAuth,
+    PolicySpec,
+    RS,
+    SpongeAuth,
+    Tree,
+    compile_policy,
+    preset_spec,
+)
+from repro.sim import legacy as L
+from repro.sim import protocols as P
+from repro.sim.workload import (
+    KiB,
+    PolicyLoad,
+    Scenario,
+    SizeDist,
+    Workload,
+    run_scenario,
+)
+
+ANCHORS = json.loads(
+    (Path(__file__).parent / "data" / "policy_anchors.json").read_text()
+)
+
+
+def _legacy_single(name, size, k=4, m=2):
+    env = P.Env()
+    cfg = env.cfg
+    host_overhead = cfg.pcie_latency_ns / 2 + cfg.host_notify_ns
+    mk = {
+        "raw-write": lambda: L.RawWriteProtocol(env, size),
+        "spin-write": lambda: L.SpinAuthWriteProtocol(env, size),
+        "rpc-write": lambda: L.RpcWriteProtocol(env, size),
+        "rpc-rdma-write": lambda: L.RpcRdmaWriteProtocol(env, size),
+        "rdma-flat": lambda: L.RdmaFlatProtocol(env, size, k),
+        "cpu-ring": lambda: L.ChunkedTreeProtocol(
+            env, size, k, ReplStrategy.RING, host_overhead,
+            cfg.host_memcpy_GBps / 2),
+        "cpu-pbt": lambda: L.ChunkedTreeProtocol(
+            env, size, k, ReplStrategy.PBT, host_overhead,
+            cfg.host_memcpy_GBps / 2),
+        "hyperloop": lambda: L.ChunkedTreeProtocol(
+            env, size, k, ReplStrategy.RING, P.HYPERLOOP_TRIGGER_NS, None,
+            chunk=size, config_phase_writes=k),
+        "spin-ring": lambda: L.SpinReplicationProtocol(
+            env, size, k, ReplStrategy.RING),
+        "spin-pbt": lambda: L.SpinReplicationProtocol(
+            env, size, k, ReplStrategy.PBT),
+        "spin-triec": lambda: L.SpinTriecProtocol(env, size, k, m),
+        "inec-triec": lambda: L.InecTriecProtocol(env, size, k, m),
+    }
+    return P._run_single(mk[name](), env).latency_ns
+
+
+def _piped_single(name, size, k=4, m=2):
+    env = P.Env()
+    proto = P.make_protocol(env, name, size, k=k, m=m)
+    return P._run_single(proto, env).latency_ns
+
+
+# -- (a) bit-exactness parity suite ------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(P.PROTOCOL_NAMES))
+@pytest.mark.parametrize("size", [3 * KiB, 96 * KiB])
+def test_pipeline_bit_exact_vs_legacy(name, size):
+    k = 3 if name in ("spin-triec", "inec-triec") else 4
+    legacy = _legacy_single(name, size, k=k)
+    piped = _piped_single(name, size, k=k)
+    assert piped == legacy, (name, size, piped, legacy)
+
+
+@pytest.mark.parametrize("name", [
+    "rdma-flat", "cpu-ring", "cpu-pbt", "hyperloop", "spin-ring", "spin-pbt",
+])
+@pytest.mark.parametrize("k", [2, 8])
+def test_pipeline_bit_exact_across_k(name, k):
+    size = 24 * KiB
+    assert _piped_single(name, size, k=k) == _legacy_single(name, size, k=k)
+
+
+@pytest.mark.parametrize("name", ["spin-triec", "inec-triec"])
+@pytest.mark.parametrize("km", [(3, 2), (6, 3)])
+def test_pipeline_bit_exact_ec_geometries(name, km):
+    k, m = km
+    size = 48 * KiB
+    assert (_piped_single(name, size, k=k, m=m)
+            == _legacy_single(name, size, k=k, m=m))
+
+
+# -- (b) anchor drift guard --------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(ANCHORS["latency_ns"]))
+def test_preset_latency_matches_anchor(name):
+    """Tier-1 guard: a preset's single-shot latency must not drift from
+    its recorded anchor (regenerate tests/data/policy_anchors.json only
+    for deliberate model changes)."""
+    cfgd = ANCHORS["config"]
+    k = cfgd["ec_k"] if name in ("spin-triec", "inec-triec") else cfgd["k"]
+    for size_s, want in ANCHORS["latency_ns"][name].items():
+        got = P.run_single_shot(name, int(size_s), k=k, m=2).latency_ns
+        assert got == pytest.approx(want, rel=1e-12), (name, size_s)
+
+
+# -- (c) spec hygiene --------------------------------------------------------
+
+
+def test_spec_validation_rejects_bad_combinations():
+    with pytest.raises(ValueError, match="exclusive"):
+        PolicySpec("spin", SpongeAuth(), replication=Tree(2),
+                   erasure=RS(3, 2))
+    with pytest.raises(ValueError, match="HostAuth"):
+        PolicySpec("rdma", HostAuth())
+    with pytest.raises(ValueError, match="rpc transport"):
+        PolicySpec("rpc", NoAuth())
+    with pytest.raises(ValueError, match="SpongeAuth"):
+        PolicySpec("rdma", SpongeAuth())   # auth stage would silently drop
+    with pytest.raises(ValueError, match="requires SpongeAuth"):
+        PolicySpec("spin", NoAuth())       # NIC pipeline always validates
+    with pytest.raises(ValueError, match="spin transport"):
+        PolicySpec("rdma", NoAuth(), replication=Tree(2, engine="spin"))
+    with pytest.raises(ValueError, match="unknown RS engine"):
+        PolicySpec("spin", SpongeAuth(), erasure=RS(3, 2, engine="fpga"))
+    with pytest.raises(ValueError, match="unknown policy preset"):
+        preset_spec("warp-drive")
+
+
+def test_policy_package_imports_standalone():
+    """`import repro.policy` must work in a fresh interpreter (no prior
+    repro.core import) — guards against the core<->policy import cycle."""
+    import subprocess
+    import sys
+
+    proc = subprocess.run(
+        [sys.executable, "-c",
+         "import repro.policy; repro.policy.preset_spec('spin-write')"],
+        capture_output=True, text=True, timeout=120,
+        env={"PYTHONPATH": str(Path(__file__).parent.parent / "src"),
+             "PATH": "/usr/bin:/bin"},
+    )
+    assert proc.returncode == 0, proc.stderr
+
+
+def test_checkpoint_from_spec_rejects_flat():
+    from repro.checkpoint.manager import CheckpointPolicy
+
+    flat = PolicySpec("rdma", NoAuth(), replication=Flat(3))
+    with pytest.raises(ValueError, match="Flat replication"):
+        CheckpointPolicy.from_spec(flat)
+
+
+def test_spec_describe_and_nodes():
+    spec = preset_spec("spin-triec", k=6, m=3)
+    assert spec.storage_node_count == 9
+    assert "RS(6,3,spin)" in spec.describe()
+    assert preset_spec("rdma-flat", k=5).storage_node_count == 5
+    assert preset_spec("spin-read").op == "read"
+
+
+def test_client_rs_engine_has_no_timed_pipeline():
+    env = P.Env()
+    spec = PolicySpec("spin", SpongeAuth(), erasure=RS(3, 2, "client"))
+    with pytest.raises(ValueError, match="no timed pipeline"):
+        compile_policy(env, spec, 4 * KiB)
+
+
+# -- (d) mixed scenarios + size distributions --------------------------------
+
+
+def _conserves(rep):
+    return rep["issued"] == rep["completed"] + rep["in_flight"] + rep["dropped"]
+
+
+def test_mixed_policies_share_env_and_nodes():
+    """Writes + EC compiled onto one Env, sharing storage node 1, with
+    request conservation and per-policy accounting."""
+    sc = Scenario(
+        policies=[
+            PolicyLoad("spin-write", 2.0,
+                       SizeDist("lognormal", mean=32 * KiB)),
+            PolicyLoad("spin-triec", 1.0),
+        ],
+        size=64 * KiB, num_clients=4, requests_per_client=6,
+        k=3, m=2, seed=5,
+    )
+    w = Workload(sc)
+    assert set(w.protos[0].storage_nodes) & set(w.protos[1].storage_nodes)
+    rep = w.run()
+    assert _conserves(rep)
+    assert rep["completed"] == 4 * 6
+    per = rep["per_policy"]
+    assert set(per) == {"spin-write", "spin-triec"}
+    assert sum(p["issued"] for p in per.values()) == rep["issued"]
+    assert sum(p["completed"] for p in per.values()) == rep["completed"]
+    assert all(p["completed"] > 0 for p in per.values())
+
+
+def test_mixed_scenario_deterministic():
+    sc = Scenario(
+        policies=[
+            PolicyLoad("spin-write", 1.0, SizeDist("bimodal")),
+            PolicyLoad(preset_spec("spin-ring", k=3), 1.0),
+        ],
+        size=16 * KiB, num_clients=3, requests_per_client=5, k=3, seed=11,
+        arrival="poisson", offered_load_GBps=20.0,
+    )
+    assert run_scenario(sc) == run_scenario(sc)
+
+
+def test_mixed_open_loop_conserves_with_drops():
+    sc = Scenario(
+        policies=[
+            PolicyLoad("spin-write", 1.0,
+                       SizeDist("fixed", mean=256 * KiB)),
+            PolicyLoad("spin-triec", 1.0,
+                       SizeDist("fixed", mean=256 * KiB)),
+        ],
+        size=256 * KiB, num_clients=6, requests_per_client=24,
+        arrival="poisson", offered_load_GBps=200.0, max_outstanding=3,
+        k=3, m=2, seed=2,
+    )
+    rep = run_scenario(sc)
+    assert rep["dropped"] > 0
+    assert rep["in_flight"] == 0
+    assert _conserves(rep)
+
+
+def test_size_dist_sampling_properties():
+    import random
+
+    rnd = random.Random(0)
+    fixed = SizeDist("fixed", mean=7 * KiB)
+    assert {fixed.sample(rnd) for _ in range(8)} == {7 * KiB}
+    logn = SizeDist("lognormal", mean=64 * KiB, sigma=0.6)
+    xs = [logn.sample(rnd) for _ in range(4000)]
+    assert all(logn.min_bytes <= x <= logn.max_bytes for x in xs)
+    mean = sum(xs) / len(xs)
+    assert 0.8 * 64 * KiB < mean < 1.25 * 64 * KiB
+    bim = SizeDist("bimodal", small=4 * KiB, large=256 * KiB, p_large=0.25)
+    ys = [bim.sample(rnd) for _ in range(2000)]
+    assert set(ys) == {4 * KiB, 256 * KiB}
+    frac = sum(y == 256 * KiB for y in ys) / len(ys)
+    assert 0.2 < frac < 0.3
+    with pytest.raises(ValueError):
+        SizeDist("zipf").sample(rnd)
+
+
+def test_size_dist_drives_per_request_payloads():
+    """Per-request sizes actually change the wire traffic: lognormal mix
+    moves a different byte volume than the fixed-size run."""
+    base = dict(protocol="spin-write", size=64 * KiB, num_clients=2,
+                requests_per_client=8, seed=3)
+    fixed = Workload(Scenario(**base))
+    fixed.run()
+    mixed = Workload(Scenario(size_dist=SizeDist("lognormal", mean=64 * KiB),
+                              **base))
+    mixed.run()
+    assert fixed.metrics.bytes_completed == 16 * 64 * KiB
+    assert mixed.metrics.bytes_completed != fixed.metrics.bytes_completed
+    assert len(set(mixed.metrics.latencies_ns)) > 1
+
+
+def test_legacy_exclusive_claim_still_guards():
+    """Legacy-style exclusive installs still refuse to share a node, and
+    refuse nodes already carrying pipeline bindings."""
+    env = P.Env()
+    P.make_protocol(env, "spin-write", 4 * KiB)
+    with pytest.raises(ValueError, match="policy-pipeline bindings"):
+        env.claim_node(1, object())
+
+
+# -- (e) read path -----------------------------------------------------------
+
+
+def test_spin_read_timed_policy():
+    res = P.run_single_shot("spin-read", 64 * KiB)
+    # a read streams the object back: it must cost at least the wire time
+    env_cfg_bytes_per_ns = 50.0
+    assert res.latency_ns > 64 * KiB / env_cfg_bytes_per_ns
+    rep = run_scenario(Scenario(protocol="spin-read", size=64 * KiB,
+                                num_clients=2, requests_per_client=4))
+    assert rep["completed"] == 8 and _conserves(rep)
+
+
+def test_read_after_write_byte_equality_functional_plane():
+    """Write through the policy engine, read back through the packet read
+    path: bytes must match exactly (and unauthorized reads NACK)."""
+    from repro.core.auth import CapabilityAuthority, Rights
+    from repro.core.handlers import DFSClient, DFSNode, Router
+    from repro.core.packets import ReplicaCoord
+
+    auth = CapabilityAuthority(b"fedcba9876543210")
+    router = Router()
+    nodes = [DFSNode(i, router, auth) for i in range(4)]
+    client = DFSClient(client_id=9, router=router)
+    cap = auth.issue(client_id=9, object_id=1, offset=0, length=1 << 22,
+                     rights=Rights.WRITE | Rights.READ, expiry=10**10)
+    data = np.random.default_rng(4).integers(0, 256, 12_345, dtype=np.uint8)
+    spec = preset_spec("spin-ring", k=3)
+    targets = [ReplicaCoord(i, 4096) for i in range(3)]
+    client.write_spec(cap, data, spec, targets)
+    # read each replica back through the packet plane
+    for t in targets:
+        got = client.read(cap, t, data.size)
+        assert np.array_equal(got, data)
+    # write-only capability is NACKed on the read path
+    wr_only = auth.issue(client_id=9, object_id=1, offset=0, length=1 << 22,
+                         rights=Rights.WRITE, expiry=10**10)
+    with pytest.raises(IOError):
+        client.read(wr_only, targets[0], data.size)
+
+
+def test_write_spec_flat_and_plain_plans():
+    from repro.core.auth import CapabilityAuthority, Rights
+    from repro.core.handlers import DFSClient, DFSNode, Router
+    from repro.core.packets import ReplicaCoord
+
+    auth = CapabilityAuthority(b"0123456789abcdef")
+    router = Router()
+    nodes = [DFSNode(i, router, auth) for i in range(3)]
+    client = DFSClient(client_id=2, router=router)
+    cap = auth.issue(client_id=2, object_id=1, offset=0, length=1 << 22,
+                     rights=Rights.WRITE | Rights.READ, expiry=10**10)
+    data = np.arange(5000, dtype=np.uint8) % 251
+    flat = PolicySpec("rdma", NoAuth(), replication=Flat(3))
+    greqs = client.write_spec(cap, data, flat,
+                              [ReplicaCoord(i, 0) for i in range(3)])
+    assert len(greqs) == 3          # one independent plain write per replica
+    for i in range(3):
+        assert np.array_equal(nodes[i].read(0, data.size), data)
