@@ -1,0 +1,213 @@
+"""Degraded-read & repair benchmark: failure injection across the planes.
+
+Sweeps the timed degraded-read pipelines (``spin-read-ec`` NIC-side
+reconstruction vs ``cpu-read-ec`` host-CPU reconstruction) over RS
+geometry x failed-node count, the mixed read/write shared-extent workload
+over read ratios under failure injection, and one functional-plane repair
+row (batched ``decode_stripes`` rebuild of a dead node).  The artifact
+``BENCH_degraded.json`` carries two gated claims:
+
+  * ``rs32_f1_vs_healthy`` — degraded-read latency at RS(3,2) with one
+    failed data node stays <= 2x the healthy spin-read preset;
+  * ``rs32_f1_host_over_spin`` — NIC-side reconstruction holds >= 2x
+    over the host-CPU reconstruction path even degraded (the paper's
+    offload claim surviving failures).
+
+The latency sweep runs at ``--hpus 256`` so the per-packet decode PH
+pipeline sustains line rate (Fig. 16: line-rate EC wants hundreds of
+HPUs); ``--hpus 32`` shows the compute-bound regime honestly.
+
+Usage:
+
+  PYTHONPATH=src python benchmarks/degraded.py [--size BYTES] [--hpus N]
+      [--quick] [--json BENCH_degraded.json]
+
+``benchmarks/run.py --degraded`` runs the same sweep and always writes
+the ``BENCH_degraded.json`` artifact (the cross-PR regression anchor).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.policy import FailureModel  # noqa: E402
+from repro.sim.protocols import run_degraded_read  # noqa: E402
+from repro.sim.pspin import PsPINConfig  # noqa: E402
+from repro.sim.workload import (  # noqa: E402
+    KiB,
+    PolicyLoad,
+    Scenario,
+    SizeDist,
+    run_scenario,
+)
+
+MiB = 1 << 20
+GEOMETRIES = ((3, 2), (6, 3), (10, 4))
+
+
+def latency_rows(
+    size: int = MiB,
+    num_hpus: int = 256,
+    geometries=GEOMETRIES,
+) -> tuple[list[tuple], dict]:
+    """Degraded-read latency sweep: geometry x failed data nodes x decode
+    locus, each as a ratio over the healthy single-node spin-read."""
+    pcfg = PsPINConfig(num_hpus=num_hpus)
+    # the healthy baseline runs at the sweep's HPU count so the ratios
+    # are apples-to-apples
+    healthy = run_degraded_read("spin-read", size, pcfg=pcfg).latency_ns
+    rows = [("degraded/spin-read/healthy", round(healthy / 1e3, 2), "x1.00")]
+    claims: dict[str, float] = {}
+    for k, m in geometries:
+        for failed in range(0, m + 1):
+            fm = (FailureModel(crashed=tuple(range(1, failed + 1)))
+                  if failed else None)
+            for preset, tag in (("spin-read-ec", "spin"),
+                                ("cpu-read-ec", "host")):
+                ns = run_degraded_read(
+                    preset, size, k=k, m=m, failures=fm, pcfg=pcfg
+                ).latency_ns
+                ratio = ns / healthy
+                rows.append(
+                    (f"degraded/rs{k}.{m}/f{failed}/{tag}",
+                     round(ns / 1e3, 2), f"x{ratio:.2f}_vs_healthy")
+                )
+                if (k, m) == (3, 2) and failed == 1:
+                    claims[f"rs32_f1_{tag}_vs_healthy"] = round(ratio, 3)
+    if {"rs32_f1_spin_vs_healthy", "rs32_f1_host_vs_healthy"} <= set(claims):
+        claims["rs32_f1_vs_healthy"] = claims["rs32_f1_spin_vs_healthy"]
+        claims["rs32_f1_host_over_spin"] = round(
+            claims["rs32_f1_host_vs_healthy"]
+            / claims["rs32_f1_spin_vs_healthy"], 3,
+        )
+    return rows, claims
+
+
+def mixed_rows(
+    read_ratios=(0.25, 0.5, 0.75),
+    num_clients: int = 4,
+    requests: int = 8,
+    size: int = 128 * KiB,
+) -> list[tuple]:
+    """Mixed read/write over shared extents with one crashed data node:
+    writers populate the object space, degraded reads consume it."""
+    rows = []
+    for ratio in read_ratios:
+        sc = Scenario(
+            policies=[
+                PolicyLoad("spin-write", 1.0 - ratio,
+                           SizeDist("fixed", mean=size)),
+                PolicyLoad("spin-read-ec", ratio),
+            ],
+            size=size,
+            num_clients=num_clients,
+            requests_per_client=requests,
+            k=3, m=2, seed=9,
+            shared_extents=True,
+            failures=FailureModel(crashed=(2,)),
+        )
+        rep = run_scenario(sc)
+        assert rep["issued"] == (rep["completed"] + rep["in_flight"]
+                                 + rep["dropped"]), "conservation violated"
+        rows.append(
+            (f"degraded/mixed/read{int(ratio * 100)}/c{num_clients}",
+             round(rep["p99_us"], 2), round(rep["goodput_GBps"], 2))
+        )
+    return rows
+
+
+def repair_rows(
+    objects: int = 8,
+    obj_bytes: int = 256 * KiB,
+    k: int = 3,
+    m: int = 2,
+) -> list[tuple]:
+    """Functional-plane repair: rebuild a dead node's shards via batched
+    decode_stripes + authenticated writes; wall-clock MB/s (host path)."""
+    import numpy as np
+
+    from repro.checkpoint.storage import StorageCluster
+
+    rng = np.random.default_rng(5)
+    cluster = StorageCluster(num_nodes=k + m + 1,
+                             node_capacity=objects * obj_bytes * 2)
+    blobs = [rng.integers(0, 256, obj_bytes, dtype=np.uint8).tobytes()
+             for _ in range(objects)]
+    layouts = cluster.write_object_bulk(blobs, k=k, m=m)
+    dead = layouts[0].data_coords[0].node
+    cluster.fail_node(dead)
+    t0 = time.perf_counter()
+    stats = cluster.repair_node(dead)
+    dt = time.perf_counter() - t0
+    for lay, blob in zip(layouts, blobs):
+        assert cluster.read_object(lay) == blob, "post-repair mismatch"
+    mbps = stats["bytes"] / max(dt, 1e-9) / 1e6
+    return [(f"degraded/repair/rs{k}.{m}/{objects}x{obj_bytes // KiB}KiB",
+             round(dt * 1e6, 1), f"{mbps:.0f}MBps")]
+
+
+def bench_rows(
+    size: int = MiB,
+    num_hpus: int = 256,
+    quick: bool = False,
+) -> tuple[list[tuple], dict]:
+    geoms = GEOMETRIES[:1] if quick else GEOMETRIES
+    rows, claims = latency_rows(size=size, num_hpus=num_hpus,
+                                geometries=geoms)
+    rows += mixed_rows(read_ratios=(0.5,) if quick else (0.25, 0.5, 0.75))
+    rows += repair_rows(objects=2 if quick else 8)
+    return rows, claims
+
+
+def write_artifact(rows: list[tuple], claims: dict, out: str,
+                   config: dict | None = None) -> None:
+    with open(out, "w") as f:
+        json.dump(
+            {
+                "bench": "degraded",
+                "metric": "us_per_call/ratio",
+                "config": config or {},
+                "claims": claims,
+                "rows": [
+                    {"name": n, "us_per_call": u, "derived": d}
+                    for n, u, d in rows
+                ],
+            },
+            f,
+            indent=1,
+        )
+    print(f"# wrote {out}", file=sys.stderr)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--size", type=int, default=MiB,
+                    help="read payload bytes for the latency sweep")
+    ap.add_argument("--hpus", type=int, default=256,
+                    help="PsPIN HPUs per NIC (256: line-rate decode; "
+                         "32: the compute-bound default)")
+    ap.add_argument("--quick", action="store_true",
+                    help="small sweep for smoke tests")
+    ap.add_argument("--json", default=None, metavar="OUT")
+    args = ap.parse_args()
+    rows, claims = bench_rows(size=args.size, num_hpus=args.hpus,
+                              quick=args.quick)
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us},{derived}")
+    for key, val in sorted(claims.items()):
+        print(f"# claim {key} = {val}", file=sys.stderr)
+    if args.json:
+        write_artifact(rows, claims, args.json,
+                       {"size": args.size, "num_hpus": args.hpus,
+                        "quick": args.quick})
+
+
+if __name__ == "__main__":
+    main()

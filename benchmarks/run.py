@@ -4,13 +4,15 @@ Prints ``name,us_per_call,derived`` CSV rows.  Usage:
 
   PYTHONPATH=src python -m benchmarks.run [--only fig6,fig15] [--roofline]
                                           [--contention] [--mixed]
-                                          [--json OUT]
+                                          [--degraded] [--json OUT]
 
 ``--contention`` appends the multi-client sweep (p99 latency / goodput per
 client count; see benchmarks/contention.py for the full CLI).  ``--mixed``
 appends the mixed-policy sweep (writes + EC sharing storage nodes on one
 Env; see benchmarks/mixed.py) and always writes its ``BENCH_mixed.json``
-artifact.  ``--json`` additionally writes every emitted row to ``OUT`` as
+artifact.  ``--degraded`` appends the failure-injection degraded-read /
+repair sweep (see benchmarks/degraded.py) and always writes its
+``BENCH_degraded.json`` artifact.  ``--json`` additionally writes every emitted row to ``OUT`` as
 a ``BENCH_*.json`` artifact ({"bench", "rows": [{"name", "us_per_call",
 "derived"}]}) so any bench table can be tracked across PRs.  (The kernel
 data-plane sweep has its own dedicated artifact: ``benchmarks/
@@ -62,6 +64,13 @@ def main() -> None:
                          "shared nodes) and write BENCH_mixed.json")
     ap.add_argument("--mixed-out", default="BENCH_mixed.json",
                     metavar="OUT", help="artifact path for --mixed")
+    ap.add_argument("--degraded", action="store_true",
+                    help="also run the degraded-read/repair sweep (failure "
+                         "injection) and write BENCH_degraded.json")
+    ap.add_argument("--degraded-out", default="BENCH_degraded.json",
+                    metavar="OUT", help="artifact path for --degraded")
+    ap.add_argument("--degraded-quick", action="store_true",
+                    help="small degraded sweep (CI smoke)")
     ap.add_argument("--json", default=None, metavar="OUT",
                     help="also write the emitted rows to OUT as a "
                          "BENCH_*.json artifact")
@@ -96,6 +105,15 @@ def main() -> None:
         for name, us, derived in mrows:
             emit(name, us, derived)
         write_artifact(mrows, args.mixed_out)
+    if args.degraded:
+        from benchmarks.degraded import bench_rows as degraded_rows
+        from benchmarks.degraded import write_artifact as degraded_artifact
+
+        drows, claims = degraded_rows(quick=args.degraded_quick)
+        for name, us, derived in drows:
+            emit(name, us, derived)
+        degraded_artifact(drows, claims, args.degraded_out,
+                          {"quick": args.degraded_quick})
     if args.json:
         with open(args.json, "w") as f:
             json.dump(

@@ -14,15 +14,13 @@ The manifest itself (tiny) is written with max replication to all nodes.
 from __future__ import annotations
 
 import dataclasses
-import io
-import json
 import threading
 import time
 from typing import Any
 
 import numpy as np
 
-from repro.checkpoint.storage import ObjectLayout, StorageCluster
+from repro.checkpoint.storage import StorageCluster
 from repro.core.auth import sponge_mac
 from repro.core.packets import ReplStrategy, Resiliency
 from repro.policy.functional import write_plan
@@ -195,12 +193,16 @@ class CheckpointManager:
         manifest = self._manifests[step]
         out: dict[str, np.ndarray] = {}
         for leaf in manifest["leaves"]:
-            parts = []
-            for stripe in leaf["stripes"]:
-                layout = self.cluster.meta.lookup(stripe["oid"])
-                raw = self.cluster.read_object(layout)[: stripe["size"]]
-                parts.append(raw)
-            raw = b"".join(parts)
+            # All stripes of the leaf read (and, degraded, reconstructed)
+            # together: read_objects batches every same-pattern stripe
+            # through ONE RSCode.decode_stripes call.
+            layouts = [self.cluster.meta.lookup(s["oid"])
+                       for s in leaf["stripes"]]
+            raws = self.cluster.read_objects(layouts)
+            raw = b"".join(
+                raw[: stripe["size"]]
+                for raw, stripe in zip(raws, leaf["stripes"])
+            )
             mac = sponge_mac(
                 np.frombuffer(raw[:64].ljust(64, b"\0"), np.uint32),
                 self.cluster.meta.authority.key,

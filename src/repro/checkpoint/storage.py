@@ -16,10 +16,11 @@ storage nodes directly).
 from __future__ import annotations
 
 import dataclasses
+import functools
 import os
 import secrets
+import threading
 import time
-from typing import Any
 
 import numpy as np
 
@@ -42,6 +43,10 @@ class ObjectLayout:
     ec_k: int = 0
     ec_m: int = 0
     chunk_len: int = 0  # per-node chunk length (EC) or full size (repl)
+    #: set by repair when the object exceeded its loss tolerance: reads
+    #: raise and the audit ledger pins the bytes as lost — re-provisioned
+    #: nodes must not resurrect zeroed shards as "readable"
+    lost: bool = False
 
 
 class MetadataService:
@@ -55,10 +60,23 @@ class MetadataService:
         self._objects: dict[int, ObjectLayout] = {}
         self._next_oid = 1
         self._rr = 0  # round-robin placement cursor
+        #: nodes excluded from new placements (StorageCluster aliases its
+        #: ``failed`` set here, so crashes steer future writes away)
+        self.unavailable: set[int] = set()
 
     def _place(self, n: int) -> list[int]:
-        nodes = [(self._rr + i) % self.num_nodes for i in range(n)]
-        self._rr = (self._rr + n) % self.num_nodes
+        live = self.num_nodes - len(self.unavailable)
+        if live < n:
+            raise RuntimeError(
+                f"cannot place {n} shards: only {live} live nodes")
+        nodes: list[int] = []
+        step = 0
+        while len(nodes) < n:
+            cand = (self._rr + step) % self.num_nodes
+            step += 1
+            if cand not in self.unavailable:
+                nodes.append(cand)
+        self._rr = (self._rr + step) % self.num_nodes
         return nodes
 
     def _extent(self, node: int, size: int) -> int:
@@ -118,6 +136,17 @@ class MetadataService:
         )
 
 
+def _io_locked(fn):
+    """Serialize a packet-plane method on the cluster's I/O lock."""
+
+    @functools.wraps(fn)
+    def wrapper(self, *args, **kwargs):
+        with self._io_lock:
+            return fn(self, *args, **kwargs)
+
+    return wrapper
+
+
 class StorageCluster:
     """N policy-enforcing storage nodes + a metadata service + a client."""
 
@@ -142,9 +171,16 @@ class StorageCluster:
         self.num_nodes = num_nodes
         self.node_capacity = node_capacity
         self.failed: set[int] = set()
+        # the metadata service places new extents on live nodes only
+        self.meta.unavailable = self.failed
+        # serializes packet-plane operations (reads/writes/repair): the
+        # Router is synchronous and not thread-safe, and background
+        # repair / async checkpoint saves run on their own threads
+        self._io_lock = threading.RLock()
 
     # -- data plane -----------------------------------------------------------
 
+    @_io_locked
     def write_object(
         self,
         data: bytes | np.ndarray,
@@ -173,6 +209,26 @@ class StorageCluster:
         layout = self.meta.create_object(
             int(blob.size), resiliency, k, m, strategy
         )
+        try:
+            self._write_object_shards(layout, blob, resiliency, m, strategy)
+        except IOError:
+            # a placed node crashed between allocation and the write: drop
+            # the dead layout, re-place on live nodes, retry once
+            del self.meta._objects[layout.object_id]
+            layout = self.meta.create_object(
+                int(blob.size), resiliency, k, m, strategy
+            )
+            self._write_object_shards(layout, blob, resiliency, m, strategy)
+        return layout
+
+    def _write_object_shards(
+        self,
+        layout: ObjectLayout,
+        blob: np.ndarray,
+        resiliency: Resiliency,
+        m: int,
+        strategy: ReplStrategy,
+    ) -> None:
         before = len(self.client.acks())
         if resiliency == Resiliency.ERASURE_CODING:
             self.client.write(
@@ -188,7 +244,6 @@ class StorageCluster:
             )
             expect = 1
         self._check_acks(layout, before, expect)
-        return layout
 
     def _check_acks(self, layout: ObjectLayout, before: int, expect: int) -> None:
         acks = self.client.acks()[before:]
@@ -199,6 +254,7 @@ class StorageCluster:
                 f"(NACK or loss)"
             )
 
+    @_io_locked
     def write_object_bulk(
         self,
         blobs: list[bytes | np.ndarray],
@@ -249,71 +305,376 @@ class StorageCluster:
             for s, i in enumerate(idxs):
                 parities[i] = par[s]
         for i, lay in enumerate(layouts):
-            before = len(self.client.acks())
-            for j, coord in enumerate(lay.data_coords):
-                self.client.write(self.capability, chunks_list[i][j], [coord])
-            for pi, coord in enumerate(lay.parity_coords):
-                self.client.write(self.capability, parities[i][pi], [coord])
-            self._check_acks(lay, before, lay.ec_k + lay.ec_m)
+            try:
+                self._write_bulk_shards(lay, chunks_list[i], parities[i])
+            except IOError:
+                # mid-batch crash of a placed node: re-place this object on
+                # live nodes (same size -> same chunk length) and retry once
+                del self.meta._objects[lay.object_id]
+                lay = self.meta.create_object(
+                    lay.size, Resiliency.ERASURE_CODING, k, m,
+                    ReplStrategy.RING,
+                )
+                assert lay.chunk_len == chunks_list[i].shape[1]
+                layouts[i] = lay
+                self._write_bulk_shards(lay, chunks_list[i], parities[i])
         return layouts
 
-    def read_object(self, layout: ObjectLayout) -> bytes:
-        """Read with degraded-mode EC reconstruction / replica failover."""
+    def _write_bulk_shards(
+        self, lay: ObjectLayout, chunks: np.ndarray, parity: np.ndarray
+    ) -> None:
+        before = len(self.client.acks())
+        for j, coord in enumerate(lay.data_coords):
+            self.client.write(self.capability, chunks[j], [coord])
+        for pi, coord in enumerate(lay.parity_coords):
+            self.client.write(self.capability, parity[pi], [coord])
+        self._check_acks(lay, before, lay.ec_k + lay.ec_m)
+
+    def _read_shard(self, coord: ReplicaCoord, length: int) -> np.ndarray | None:
+        """One shard through the authenticated packet read path; ``None``
+        when the node is failed/unreachable (the read is blackholed)."""
+        if coord.node in self.failed:
+            return None
+        try:
+            return self.client.read(self.capability, coord, length)
+        except IOError:
+            return None
+
+    def read_object(self, layout: ObjectLayout, verify: bool = True) -> bytes:
+        """Read one object (degraded-mode capable); see
+        :meth:`read_objects`."""
+        return self.read_objects([layout], verify=verify)[0]
+
+    @_io_locked
+    def read_objects(
+        self,
+        layouts: list[ObjectLayout],
+        verify: bool = True,
+        backend: str = "numpy",
+    ) -> list[bytes]:
+        """Batched degraded-capable read through the packet plane.
+
+        Every surviving shard is fetched with an authenticated
+        ``DFSClient.read`` (failed nodes blackhole, so missing shards are
+        *observed*, not assumed).  EC objects with missing shards are
+        reconstructed by ``RSCode.decode_stripes`` — all stripes sharing
+        (geometry, chunk length, erasure pattern) go through ONE batched
+        decode call (the common whole-node-failure case).  With
+        ``verify`` (default), recovered stripes are re-encoded and
+        checked bit-exact against every surviving parity shard before
+        the bytes are returned.  Replicated objects fail over to the
+        first surviving replica.
+        """
         from repro.core.erasure import RSCode
 
-        if layout.resiliency == Resiliency.ERASURE_CODING:
-            k, m, chunk = layout.ec_k, layout.ec_m, layout.chunk_len
-            shards: list[np.ndarray | None] = []
-            for coord in list(layout.data_coords) + list(layout.parity_coords):
-                if coord.node in self.failed:
-                    shards.append(None)
+        out: list[bytes | None] = [None] * len(layouts)
+        # (k, m, chunk_len, missing-pattern) -> [(pos, shards)]
+        groups: dict[tuple, list[tuple[int, list]]] = {}
+        for pos, layout in enumerate(layouts):
+            if layout.lost:
+                raise IOError(
+                    f"object {layout.object_id}: lost (exceeded its loss "
+                    f"tolerance; repair could not reconstruct it)"
+                )
+            if layout.resiliency == Resiliency.ERASURE_CODING:
+                chunk = layout.chunk_len
+                data_shards = [self._read_shard(c, chunk)
+                               for c in layout.data_coords]
+                if all(s is not None for s in data_shards):
+                    # healthy fast path: k data reads, no parity traffic,
+                    # no decode
+                    out[pos] = np.concatenate(
+                        data_shards)[: layout.size].tobytes()
+                    continue
+                # degraded: fetch parity lazily, group by erasure pattern
+                shards = data_shards + [self._read_shard(c, chunk)
+                                        for c in layout.parity_coords]
+                pattern = tuple(i for i, s in enumerate(shards) if s is None)
+                key = (layout.ec_k, layout.ec_m, chunk, pattern)
+                groups.setdefault(key, []).append((pos, shards))
+            elif layout.resiliency == Resiliency.REPLICATION:
+                for coord in layout.data_coords:
+                    got = self._read_shard(coord, layout.size)
+                    if got is not None:
+                        out[pos] = got.tobytes()
+                        break
                 else:
-                    shards.append(self.nodes[coord.node].read(coord.addr, chunk))
+                    raise IOError(
+                        f"object {layout.object_id}: all replicas failed")
+            else:
+                got = self._read_shard(layout.data_coords[0], layout.size)
+                if got is None:
+                    raise IOError(f"object {layout.object_id}: node failed")
+                out[pos] = got.tobytes()
+        for (k, m, chunk, pattern), members in groups.items():
             code = RSCode(k, m)
-            datam = code.decode(shards, backend="numpy")
-            return datam.reshape(-1)[: layout.size].tobytes()
-        # replication: first live replica
-        for coord in layout.data_coords:
-            if coord.node not in self.failed:
-                return self.nodes[coord.node].read(
-                    coord.addr, layout.size
-                ).tobytes()
-        raise IOError(f"object {layout.object_id}: all replicas failed")
+            if chunk == 0:
+                for pos, _ in members:
+                    out[pos] = b""
+                continue
+            # one batched decode per (geometry, chunk, erasure pattern)
+            try:
+                batched, datam = self._decode_shard_group(
+                    code, [shards for _, shards in members], pattern, backend)
+            except ValueError as exc:
+                # normalize to the method's failure contract (IOError),
+                # like every other unreadable-object path
+                oids = [layouts[pos].object_id for pos, _ in members]
+                raise IOError(f"objects {oids}: {exc}") from exc
+            if verify and pattern:
+                # recovered stripes must re-encode bit-exact to every
+                # surviving parity shard (the encode layout is the truth)
+                par = code.encode_stripes(datam, backend=backend)
+                for pi in range(m):
+                    slot = k + pi
+                    if slot in pattern:
+                        continue
+                    if not np.array_equal(par[:, pi, :], batched[slot]):
+                        oids = [layouts[pos].object_id for pos, _ in members]
+                        raise IOError(
+                            f"reconstruction mismatch vs parity {pi} for "
+                            f"objects {oids} (corrupt shard?)"
+                        )
+            for s, (pos, _) in enumerate(members):
+                layout = layouts[pos]
+                out[pos] = datam[s].reshape(-1)[: layout.size].tobytes()
+        return out  # type: ignore[return-value]
 
     # -- failure injection / recovery ------------------------------------------
 
     def fail_node(self, node_id: int) -> None:
+        """Crash a node: its packets are blackholed at the router and
+        its shards become unreadable until repaired."""
         self.failed.add(node_id)
+        self.router.fail(node_id)
 
     def heal_node(self, node_id: int) -> None:
-        """Re-provision a node and rebuild every shard it held."""
+        """Re-provision a node in place and rebuild every shard it held
+        (thin wrapper over :meth:`repair_node`)."""
+        self.repair_node(node_id)
+
+    def repair_node(
+        self,
+        node_id: int,
+        replacement: int | None = None,
+        background: bool = False,
+    ) -> dict | None:
+        """Rebuild every shard ``node_id`` held.
+
+        ``replacement=None`` re-provisions the node in place (storage
+        wiped, router healed); otherwise new extents are allocated on the
+        ``replacement`` node and the object layouts are repointed.  Lost
+        EC shards are reconstructed through batched
+        ``RSCode.decode_stripes`` / re-encoded with ``encode_stripes``
+        (one call per (geometry, chunk, erasure-pattern) group) and
+        written back as authenticated plain writes through the policy
+        engine.  ``background=True`` runs the rebuild on a repair thread
+        (:meth:`repair_wait` joins it); stats land in ``repair_stats``.
+        """
+        # validate on the caller thread so bad arguments raise here, not
+        # silently on the repair daemon
+        if (replacement is not None and replacement != node_id
+                and replacement in self.failed):
+            raise ValueError(f"replacement node {replacement} is failed")
+        if background:
+            self.repair_stats = None
+            self._repair_error: BaseException | None = None
+
+            def run() -> None:
+                try:
+                    self._repair(node_id, replacement)
+                except BaseException as exc:  # surfaced by repair_wait
+                    self._repair_error = exc
+
+            self._repair_thread = threading.Thread(target=run, daemon=True)
+            self._repair_thread.start()
+            return None
+        return self._repair(node_id, replacement)
+
+    def repair_wait(self) -> dict | None:
+        """Join a background repair; re-raises its exception (a repair
+        that died must not read as a success) and returns its stats."""
+        t = getattr(self, "_repair_thread", None)
+        if t is not None and t.is_alive():
+            t.join()
+        err = getattr(self, "_repair_error", None)
+        if err is not None:
+            self._repair_error = None
+            raise err
+        return getattr(self, "repair_stats", None)
+
+    def _layout_coords(self, layout: ObjectLayout) -> list[ReplicaCoord]:
+        return list(layout.data_coords) + list(layout.parity_coords)
+
+    def _set_coord(self, layout: ObjectLayout, idx: int,
+                   coord: ReplicaCoord) -> None:
+        if idx < len(layout.data_coords):
+            layout.data_coords[idx] = coord
+        else:
+            layout.parity_coords[idx - len(layout.data_coords)] = coord
+
+    @staticmethod
+    def _decode_shard_group(code, shard_lists, pattern, backend="numpy"):
+        """Stack each slot's per-member shards into an (S, L) batch and
+        reconstruct the whole (geometry, chunk, erasure-pattern) group in
+        ONE ``decode_stripes`` call.  Returns (batched_slots, (S, k, L))."""
+        batched = [
+            None if i in pattern
+            else np.stack([shards[i] for shards in shard_lists])
+            for i in range(code.n)
+        ]
+        return batched, code.decode_stripes(batched, backend=backend)
+
+    def _repair(self, node_id: int, replacement: int | None) -> dict:
+        in_place = replacement is None or replacement == node_id
+        if not in_place and replacement in self.failed:
+            raise ValueError(f"replacement node {replacement} is failed")
+        with self._io_lock:
+            return self._repair_locked(node_id, replacement, in_place)
+
+    def _repair_locked(self, node_id: int, replacement: int | None,
+                       in_place: bool) -> dict:
         from repro.core.erasure import RSCode
 
-        self.nodes[node_id].storage.mem[:] = 0
-        self.failed.discard(node_id)
+        stats = {"objects": 0, "shards": 0, "bytes": 0, "unrecoverable": 0}
+        touched: set[int] = set()
+        # Phase 1 — collect (node_id still failed): every (layout, slot)
+        # the dead node held, EC slots grouped by (k, m, chunk, erasure
+        # pattern) for batched reconstruction, replication sources staged.
+        # Anything unrecoverable is decided NOW, before the node comes
+        # back: an in-place re-provision must not resurrect zeroed shards
+        # as "readable", so those layouts are pinned lost.
+        ec_groups: dict[tuple, list[tuple[ObjectLayout, int, list]]] = {}
+        repl_tasks: list[tuple[ObjectLayout, int, np.ndarray]] = []
         for layout in self.meta._objects.values():
-            coords = list(layout.data_coords) + list(layout.parity_coords)
+            coords = self._layout_coords(layout)
             for idx, coord in enumerate(coords):
-                if coord.node != node_id:
+                if coord.node != node_id or layout.lost:
                     continue
                 if layout.resiliency == Resiliency.ERASURE_CODING:
                     chunk = layout.chunk_len
                     shards = [
-                        None
-                        if c.node in self.failed or c.node == node_id
-                        else self.nodes[c.node].read(c.addr, chunk)
+                        None if c.node == node_id
+                        else self._read_shard(c, chunk)
                         for c in coords
                     ]
-                    code = RSCode(layout.ec_k, layout.ec_m)
-                    rebuilt = code.reconstruct_shard(shards, idx)
-                    self.nodes[node_id].storage.write(coord.addr, rebuilt)
+                    if sum(s is not None for s in shards) < layout.ec_k:
+                        self._mark_unrecoverable(layout, in_place, stats)
+                        continue
+                    pattern = tuple(
+                        i for i, s in enumerate(shards) if s is None)
+                    key = (layout.ec_k, layout.ec_m, chunk, pattern)
+                    ec_groups.setdefault(key, []).append(
+                        (layout, idx, shards))
                 elif layout.resiliency == Resiliency.REPLICATION:
                     src = next(
-                        c for c in coords
-                        if c.node != node_id and c.node not in self.failed
+                        (c for c in coords
+                         if c.node != node_id and c.node not in self.failed),
+                        None,
                     )
-                    data = self.nodes[src.node].read(src.addr, layout.size)
-                    self.nodes[node_id].storage.write(coord.addr, data)
+                    data = (self._read_shard(src, layout.size)
+                            if src is not None else None)
+                    if data is None:
+                        self._mark_unrecoverable(layout, in_place, stats)
+                        continue
+                    repl_tasks.append((layout, idx, data))
+                else:
+                    # the only copy is gone
+                    self._mark_unrecoverable(layout, in_place, stats)
+        # Phase 2 — re-provision the target (in place) or validate it.
+        if in_place:
+            self.nodes[node_id].storage.mem[:] = 0
+            self.failed.discard(node_id)
+            self.router.heal(node_id)
+        # Phase 3 — reconstruct and write back through the policy engine.
+        for layout, idx, data in repl_tasks:
+            self._write_rebuilt(layout, idx, data, node_id,
+                                replacement, stats)
+            touched.add(id(layout))
+        for (k, m, chunk, pattern), members in ec_groups.items():
+            code = RSCode(k, m)
+            _, datam = self._decode_shard_group(
+                code, [shards for _, _, shards in members], pattern)
+            parm = None
+            if any(idx >= k for _, idx, _ in members):
+                parm = code.encode_stripes(datam, backend="numpy")
+            for s, (layout, idx, _) in enumerate(members):
+                rebuilt = datam[s, idx] if idx < k else parm[s, idx - k]
+                self._write_rebuilt(layout, idx, rebuilt, node_id,
+                                    replacement, stats)
+                touched.add(id(layout))
+        stats["objects"] = len(touched)
+        self.repair_stats = stats
+        return stats
+
+    @staticmethod
+    def _mark_unrecoverable(layout: ObjectLayout, in_place: bool,
+                            stats: dict) -> None:
+        stats["unrecoverable"] += 1
+        if in_place:
+            # the zeroed re-provisioned shard must never masquerade as
+            # data: the object is explicitly lost (reads raise, audit
+            # counts the bytes as lost)
+            layout.lost = True
+
+    def _write_rebuilt(
+        self,
+        layout: ObjectLayout,
+        idx: int,
+        shard: np.ndarray,
+        node_id: int,
+        replacement: int | None,
+        stats: dict,
+    ) -> None:
+        """Write one rebuilt shard via an authenticated plain write and
+        repoint the layout when repairing onto a replacement node."""
+        coord = self._layout_coords(layout)[idx]
+        if replacement is not None and replacement != node_id:
+            addr = self.meta._extent(replacement, int(shard.size))
+            coord = ReplicaCoord(replacement, addr)
+            self._set_coord(layout, idx, coord)
+        self.client.write(self.capability, shard, [coord])
+        stats["shards"] += 1
+        stats["bytes"] += int(shard.size)
+
+    # -- conservation audit -----------------------------------------------------
+
+    def audit(self) -> dict:
+        """Byte-conservation ledger under failure injection: every byte
+        written is *readable* (all data shards / a replica live),
+        *reconstructable* (EC with <= m shards lost), or *lost* (beyond
+        the policy's tolerance) — the three buckets partition
+        ``bytes_written`` exactly, so nothing goes silently missing."""
+        out = {"objects": 0, "bytes_written": 0, "readable_bytes": 0,
+               "reconstructable_bytes": 0, "lost_bytes": 0}
+        for layout in self.meta._objects.values():
+            out["objects"] += 1
+            out["bytes_written"] += layout.size
+            if layout.lost:
+                # pinned by repair: a re-provisioned node's zeroed shards
+                # must never count as readable
+                out["lost_bytes"] += layout.size
+                continue
+            if layout.resiliency == Resiliency.ERASURE_CODING:
+                coords = self._layout_coords(layout)
+                live = sum(c.node not in self.failed for c in coords)
+                data_live = all(
+                    c.node not in self.failed for c in layout.data_coords)
+                if data_live:
+                    out["readable_bytes"] += layout.size
+                elif live >= layout.ec_k:
+                    out["reconstructable_bytes"] += layout.size
+                else:
+                    out["lost_bytes"] += layout.size
+            else:
+                if any(c.node not in self.failed
+                       for c in layout.data_coords):
+                    out["readable_bytes"] += layout.size
+                else:
+                    out["lost_bytes"] += layout.size
+        assert (out["readable_bytes"] + out["reconstructable_bytes"]
+                + out["lost_bytes"]) == out["bytes_written"]
+        return out
 
     def stats(self) -> dict:
         return {

@@ -6,13 +6,7 @@ CPU in tests) + the shape cells it participates in.
 
 from __future__ import annotations
 
-from repro.configs.base import (
-    ENCODER_ONLY_DECODE_SKIP,
-    FULL_ATTENTION_LONG_SKIP,
-    ArchConfig,
-    ShapeConfig,
-    SHAPES,
-)
+from repro.configs.base import ArchConfig
 from repro.models.model import ModelConfig
 
 _STD_SHAPES = ("train_4k", "prefill_32k", "decode_32k")

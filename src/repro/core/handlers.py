@@ -96,9 +96,20 @@ class Router:
         self._queue: list[tuple[int, Packet]] = []
         self._draining = False
         self.packets_delivered = 0
+        self.packets_dropped = 0
+        self.failed: set[int] = set()
 
     def register(self, node: "DFSNode") -> None:
         self.nodes[node.node_id] = node
+
+    def fail(self, node_id: int) -> None:
+        """Crash a node: packets towards it are blackholed (counted),
+        so reads/writes against it time out at the caller instead of
+        silently succeeding."""
+        self.failed.add(node_id)
+
+    def heal(self, node_id: int) -> None:
+        self.failed.discard(node_id)
 
     def send(self, dest: int, pkt: Packet) -> None:
         self._queue.append((dest, pkt))
@@ -113,6 +124,9 @@ class Router:
         try:
             while self._queue:
                 dest, pkt = self._queue.pop(0)
+                if dest in self.failed:
+                    self.packets_dropped += 1
+                    continue
                 self.packets_delivered += 1
                 self.nodes[dest].handle_packet(pkt)
         finally:

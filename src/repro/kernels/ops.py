@@ -17,7 +17,6 @@ import numpy as np
 from repro.core import gf256
 from repro.kernels import ref
 from repro.kernels.gf256_encode import (
-    gf_matmul_bitsliced,
     gf_matmul_bitsliced_batched,
     gf_matmul_mxu,
     gf_scale_bitsliced,

@@ -15,8 +15,6 @@ are reported analytically in the dry-run output).
 
 from __future__ import annotations
 
-import dataclasses
-import functools
 from typing import Any
 
 import jax

@@ -13,8 +13,6 @@ Decode is the O(1) recurrence: h' = da * h + dt * (B x); y = C h + D x.
 from __future__ import annotations
 
 import math
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 

@@ -15,8 +15,6 @@ routed (DBRX: 16 routed top-4).
 from __future__ import annotations
 
 import math
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 

@@ -8,17 +8,14 @@ compile quickly in the 512-device dry-run.
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable
 
 import jax
-import jax.numpy as jnp
 
 from repro.models import attention as attn
 from repro.models import moe as moe_mod
 from repro.models.layers import (
     Params,
-    dense_init,
     gelu_mlp_apply,
     gelu_mlp_init,
     rmsnorm_apply,

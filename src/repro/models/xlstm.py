@@ -15,8 +15,6 @@ mLSTM and sLSTM blocks at the given ratio.
 from __future__ import annotations
 
 import math
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 

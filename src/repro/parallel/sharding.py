@@ -17,7 +17,6 @@ model axis without special cases.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Any
 
 import jax

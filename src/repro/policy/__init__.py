@@ -8,11 +8,13 @@ checkpoint plane derives its shard encoding from it.
 """
 
 from repro.policy.spec import (  # noqa: F401
+    FailureModel,
     Flat,
     HostAuth,
     NoAuth,
     PolicySpec,
     PRESET_NAMES,
+    ReadPolicy,
     RS,
     SpongeAuth,
     Tree,

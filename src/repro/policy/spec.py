@@ -101,6 +101,73 @@ class RS:
     engine: str = "spin"
 
 
+@dataclasses.dataclass(frozen=True)
+class ReadPolicy:
+    """How a read policy behaves when storage nodes are unavailable.
+
+    ``mode``:
+
+      direct           read one extent from one node (the spin-read
+                       baseline; no resiliency stage on the spec)
+      degraded-rs      the object is RS(k, m)-striped; the read fans out
+                       to k surviving shards (data first, then parity)
+                       and reconstructs missing data chunks
+      replica-failover the object is k-way replicated; the read targets
+                       the first surviving replica
+
+    ``engine`` picks the reconstruction locus for degraded-rs: "spin"
+    runs a per-packet decode stage on the client NIC's HPUs (cost model
+    symmetric to the SpinStream encode handlers), "host" stages all
+    shards through client host memory and decodes on the (serial) CPU —
+    the host-CPU detour the paper's offloads avoid."""
+
+    mode: str = "direct"        # direct | degraded-rs | replica-failover
+    engine: str = "spin"        # spin | host (degraded-rs decode locus)
+
+
+_READ_MODES = ("direct", "degraded-rs", "replica-failover")
+_READ_ENGINES = ("spin", "host")
+
+
+@dataclasses.dataclass(frozen=True)
+class FailureModel:
+    """Injected storage-node failures, attached to a workload Scenario.
+
+    ``crashed``: node ids that are gone — every packet to (or from) them
+    is blackholed and counted as dropped.  ``loss``: per-node ingress
+    packet-loss probabilities ``(node, p)`` — packets still occupy the
+    sender's egress port, then vanish (a lossy link/NIC).  ``slow``:
+    straggler factors ``(node, f)`` — the node's NIC handler compute
+    runs ``f``x slower (a thermally-throttled / contended PsPIN unit).
+    ``seed`` drives the deterministic loss draw."""
+
+    crashed: tuple[int, ...] = ()
+    loss: tuple[tuple[int, float], ...] = ()
+    slow: tuple[tuple[int, float], ...] = ()
+    seed: int = 0
+
+    def __post_init__(self):
+        for node, p in self.loss:
+            if not 0.0 <= p <= 1.0:
+                raise ValueError(f"loss probability {p} for node {node} "
+                                 "outside [0, 1]")
+        for node, f in self.slow:
+            if f < 1.0:
+                raise ValueError(f"slowdown factor {f} for node {node} "
+                                 "must be >= 1")
+
+    @property
+    def loss_map(self) -> dict[int, float]:
+        return dict(self.loss)
+
+    @property
+    def slow_map(self) -> dict[int, float]:
+        return dict(self.slow)
+
+    def is_healthy(self) -> bool:
+        return not (self.crashed or self.loss or self.slow)
+
+
 _TREE_ENGINES = ("spin", "host", "hyperloop")
 _RS_ENGINES = ("spin", "inec", "client")
 
@@ -121,6 +188,7 @@ class PolicySpec:
     replication: Flat | Tree | None = None
     erasure: RS | None = None
     op: str = "write"
+    read: ReadPolicy | None = None  # read-path behavior (op == "read")
     name: str | None = None  # preset name (reports / registries)
 
     def __post_init__(self):
@@ -159,11 +227,31 @@ class PolicySpec:
         if self.erasure is not None:
             if self.erasure.engine not in _RS_ENGINES:
                 raise ValueError(f"unknown RS engine {self.erasure.engine!r}")
-            if self.erasure.engine == "spin" and self.transport != "spin":
+            if (self.erasure.engine == "spin" and self.transport != "spin"
+                    and self.op != "read"):
                 raise ValueError("RS(engine='spin') requires spin transport")
-        if self.op == "read" and (self.replication or self.erasure):
-            raise ValueError("read policies do not take replication/erasure "
-                             "stages yet (reads hit one target)")
+        if self.read is not None:
+            if self.op != "read":
+                raise ValueError("ReadPolicy only applies to op='read'")
+            if self.read.mode not in _READ_MODES:
+                raise ValueError(f"unknown read mode {self.read.mode!r}")
+            if self.read.engine not in _READ_ENGINES:
+                raise ValueError(
+                    f"unknown read decode engine {self.read.engine!r}")
+        if self.op == "read":
+            mode = self.read.mode if self.read is not None else "direct"
+            if mode == "direct" and (self.replication or self.erasure):
+                raise ValueError(
+                    "direct reads hit one target; use "
+                    "ReadPolicy('degraded-rs') / ('replica-failover') for "
+                    "resilient read policies"
+                )
+            if mode == "degraded-rs" and self.erasure is None:
+                raise ValueError("ReadPolicy('degraded-rs') needs an RS "
+                                 "erasure stage (the object's geometry)")
+            if mode == "replica-failover" and self.replication is None:
+                raise ValueError("ReadPolicy('replica-failover') needs a "
+                                 "replication stage (the replica set)")
 
     @property
     def storage_node_count(self) -> int:
@@ -185,6 +273,8 @@ class PolicySpec:
         if self.erasure is not None:
             e = self.erasure
             stages.append(f"RS({e.k},{e.m},{e.engine})")
+        if self.read is not None:
+            stages.append(f"Read({self.read.mode},{self.read.engine})")
         return " | ".join(stages)
 
 
@@ -224,6 +314,15 @@ def preset_spec(
         "inec-triec": lambda: PolicySpec(
             "rdma", NoAuth(), erasure=RS(k, m, "inec")),
         "spin-read": lambda: PolicySpec("spin", SpongeAuth(), op="read"),
+        "spin-read-ec": lambda: PolicySpec(
+            "spin", SpongeAuth(), erasure=RS(k, m, "spin"), op="read",
+            read=ReadPolicy("degraded-rs", "spin")),
+        "cpu-read-ec": lambda: PolicySpec(
+            "rpc", HostAuth(), erasure=RS(k, m, "inec"), op="read",
+            read=ReadPolicy("degraded-rs", "host")),
+        "spin-read-repl": lambda: PolicySpec(
+            "spin", SpongeAuth(), replication=Tree(k, strategy, "spin"),
+            op="read", read=ReadPolicy("replica-failover")),
     }
     if name not in builders:
         raise ValueError(
@@ -233,9 +332,21 @@ def preset_spec(
 
 
 #: every named preset ("spin-repl" is the parameterized alias of
-#: spin-ring/spin-pbt; "spin-read" is the first read-path policy).
+#: spin-ring/spin-pbt; "spin-read" is the direct read-path policy;
+#: "spin-read-ec"/"cpu-read-ec" are the degraded-capable striped EC reads
+#: with NIC- vs host-side reconstruction; "spin-read-repl" is the
+#: replica-failover read).
 PRESET_NAMES = (
     "raw-write", "spin-write", "rpc-write", "rpc-rdma-write", "rdma-flat",
     "cpu-ring", "cpu-pbt", "hyperloop", "spin-ring", "spin-pbt",
-    "spin-triec", "inec-triec", "spin-read",
+    "spin-triec", "inec-triec", "spin-read", "spin-read-ec", "cpu-read-ec",
+    "spin-read-repl",
+)
+
+#: presets parameterized by the EC geometry (their anchors and latency
+#: runs take ``k`` from the RS stage, not the replication factor) — the
+#: single source of truth for tests/test_policy.py and
+#: tools/check_anchors.py
+EC_GEOMETRY_PRESETS = (
+    "spin-triec", "inec-triec", "spin-read-ec", "cpu-read-ec",
 )

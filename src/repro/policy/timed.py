@@ -16,7 +16,14 @@ not express:
     (:meth:`repro.sim.protocols.Env.bind`) demultiplexes — mixed-policy
     contention (writes + EC on the same nodes) composes mechanically;
   * a read path (:class:`SpinReadSink`): authenticated request up, data
-    streamed back by the NIC handlers.
+    streamed back by the NIC handlers;
+  * degraded reads (:class:`EcReadInjector`): compiled against the Env's
+    :class:`repro.policy.FailureModel`, the striped-EC read fans out to
+    the k surviving shards and reconstructs missing data chunks with a
+    per-packet decode stage — on the client NIC's HPUs (cost model
+    symmetric to the SpinStream encode handlers) or on the host CPU
+    (:class:`HostReadSink` + :data:`HOST_DECODE_GBPS`, the detour the
+    paper's offloads avoid) — plus replica-failover reads.
 
 Stage -> paper map: SpongeAuth / SpinStreamSink gating = section IV;
 Flat / Tree forwarding sinks = section V; RS data/parity sinks = section
@@ -27,10 +34,18 @@ from __future__ import annotations
 
 from repro.core.packets import ReplStrategy
 from repro.core.replication import children_of, optimal_chunk_count
-from repro.policy.spec import Flat, HostAuth, PolicySpec, RS, SpongeAuth, Tree
+from repro.policy.spec import (
+    Flat,
+    HostAuth,
+    PolicySpec,
+    RS,
+    SpongeAuth,
+    Tree,
+)
 from repro.sim.engine import SerialResource
 from repro.sim.protocols import (
     ACK_WIRE,
+    HOST_DECODE_GBPS,
     HYPERLOOP_CONFIG_WIRE,
     HYPERLOOP_TRIGGER_NS,
     INEC_EC_ENGINE_GBPS,
@@ -43,6 +58,7 @@ from repro.sim.protocols import (
     _chunk_counts,
     _send_message,
     ec_data_ph_ns,
+    ec_decode_ph_ns,
     ec_parity_ph_ns,
     read_header_extra,
     write_header_extra,
@@ -370,6 +386,106 @@ class InecInjector(Stage):
             )
         else:
             self._outstanding[client] -= 1
+
+
+class EcReadInjector(Stage):
+    """Striped (degraded-capable) EC read — the failure story of section
+    VI: one read request per surviving shard node; survivors stream their
+    chunks back concurrently.  With ``r > 0`` missing data chunks, every
+    received shard packet is multiply-accumulated into the reconstruction
+    by a timed decode stage:
+
+      decode="spin"  a per-packet PH on the *client* NIC's HPUs with an
+                     HPU cost model symmetric to the SpinStream encode
+                     handlers (:func:`ec_decode_ph_ns`) — reconstruction
+                     pipelines with the incoming streams;
+      decode="host"  all shards land in client host memory first; after
+                     the last packet the (serial) host CPU is notified
+                     and reconstructs at :data:`HOST_DECODE_GBPS` — the
+                     CPU detour the paper's offloads avoid.
+    """
+
+    def __init__(self, nodes: tuple[int, ...], k: int, r: int,
+                 decode: str = "spin"):
+        self.nodes = tuple(nodes)
+        self.k = k
+        self.r = r
+        self.decode = decode
+        self._arrived: dict[int, int] = {}
+
+    def _chunk(self, size: int) -> int:
+        return -(-size // self.k)
+
+    def expected_acks(self, size: int) -> int:
+        cfg = self.proto.env.cfg
+        per_stream = len(cfg.packets_of(self._chunk(size), 0))
+        total = per_stream * len(self.nodes)
+        if self.decode == "host":
+            total += 1  # the host-CPU decode completion
+        return total
+
+    def start(self, pend: _Pending) -> None:
+        p = self.proto
+        cfg, net = p.env.cfg, p.env.net
+        chunk = self._chunk(p.req_size(pend))
+        wire = cfg.rdma_header + read_header_extra()
+        for idx, node in enumerate(self.nodes):
+            delay = cfg.client_post_ns + idx * cfg.client_post_extra_ns
+            p.env.sim.after(
+                delay,
+                lambda node=node: net.send(
+                    pend.client, node, wire,
+                    {"rid": pend.rid, "cl": pend.client, "pid": p.pid,
+                     "sz": chunk, "req": 1},
+                ),
+            )
+
+    def _ack(self, rid: int) -> None:
+        pend = self.proto._pending.get(rid)
+        if pend is not None:
+            self.proto._register_ack(pend)
+
+    def on_client_pkt(self, pkt) -> bool:
+        if not pkt.meta.get("data"):
+            return False
+        p = self.proto
+        rid = pkt.meta["rid"]
+        pend = p._pending.get(rid)
+        if pend is None:
+            return True
+        if self.decode == "host":
+            # Count the arrival; the last one hands off to the host CPU
+            # (completion notify + reconstruction of the missing chunks).
+            p._register_ack(pend)
+            got = self._arrived.get(rid, 0) + 1
+            if got == pend.expected - 1:
+                self._arrived.pop(rid, None)
+                cfg = p.env.cfg
+                chunk = self._chunk(p.req_size(pend))
+                work = cfg.host_notify_ns
+                if self.r > 0:
+                    work += self.k * chunk / HOST_DECODE_GBPS
+                cpu = p.env.host_cpu(pend.client)
+                p.env.sim.after(
+                    cfg.pcie_latency_ns / 2,
+                    lambda: cpu.acquire(work,
+                                        lambda _s, _e: self._ack(rid)),
+                )
+            else:
+                self._arrived[rid] = got
+            return True
+        if self.r > 0:
+            # NIC-side decode: the packet's ack registers only once its
+            # reconstruction PH retired on the client NIC.
+            payload = pkt.wire_size - p.env.cfg.rdma_header
+            unit = p.env.pspin(pend.client)
+            unit.process(
+                pkt.wire_size,
+                HandlerSpec(ec_decode_ph_ns(payload, self.r),
+                            on_complete=lambda: self._ack(rid)),
+            )
+            return True
+        return False  # healthy striped read: plain arrival counting
 
 
 class ReadInjector(Stage):
@@ -837,6 +953,36 @@ class InecParitySink(Stage):
         )
 
 
+class HostReadSink(Stage):
+    """RPC read server: the request lands in the host ring, the (serial)
+    CPU is notified and validates, then the NIC streams the extent from
+    host memory at line rate — the host-CPU read baseline."""
+
+    def __init__(self, node: int):
+        self.node = node
+
+    def on_packet(self, pkt) -> None:
+        p = self.proto
+        cfg, net, sim = p.env.cfg, p.env.net, p.env.sim
+        meta = pkt.meta
+        rid, client, sz = meta["rid"], meta["cl"], meta["sz"]
+        cpu = p.env.host_cpu(self.node)
+        node = self.node
+        pid = p.pid
+
+        def at_host() -> None:
+            cpu.acquire(
+                cfg.host_notify_ns + cfg.cpu_validate_ns,
+                lambda _s, _e: _send_message(
+                    net, node, client, sz, 0,
+                    lambda i, n, w: {"rid": rid, "pid": pid, "data": 1,
+                                     "i": i, "n": n},
+                ),
+            )
+
+        sim.after(cfg.pcie_latency_ns / 2, at_host)
+
+
 class SpinReadSink(Stage):
     """Read path: the request's HH validates the capability (section IV),
     then the PH streams the object back to the client packet by packet."""
@@ -978,6 +1124,63 @@ def _spin_ec_sinks(e: RS) -> dict[int, Stage]:
     return sinks
 
 
+def ec_read_survivors(e: RS, crashed: set[int]) -> tuple[list[int], int]:
+    """Pick the k shard nodes a degraded-rs read fans out to (surviving
+    data nodes first, then parities) and the number of data chunks to
+    reconstruct.  Raises when fewer than k shards survive."""
+    live_data = [n for n in range(1, e.k + 1) if n not in crashed]
+    live_parity = [n for n in range(e.k + 1, e.k + e.m + 1)
+                   if n not in crashed]
+    missing = e.k - len(live_data)
+    survivors = live_data + live_parity[:missing]
+    if len(survivors) < e.k:
+        raise ValueError(
+            f"unrecoverable: {len(live_data) + len(live_parity)} of >= "
+            f"{e.k} shards survive RS({e.k},{e.m}) under crashes {sorted(crashed)}"
+        )
+    return survivors, missing
+
+
+def _compile_read(env: Env, spec: PolicySpec, size: int) -> PipelineProtocol:
+    rp = spec.read
+    mode = rp.mode if rp is not None else "direct"
+    if mode == "direct":
+        if spec.transport != "spin" or not isinstance(spec.auth, SpongeAuth):
+            raise ValueError("direct read policies currently require the "
+                             "spin transport with SpongeAuth")
+        hh, ph, _ = HANDLER_NS[spec.auth.handler]
+        return PipelineProtocol(
+            env, spec, size, ReadInjector(1), {1: SpinReadSink(1, hh, ph)}
+        )
+    crashed = env.crashed_nodes()
+    if mode == "replica-failover":
+        r = spec.replication
+        if spec.transport != "spin" or not isinstance(spec.auth, SpongeAuth):
+            raise ValueError("replica-failover reads currently require the "
+                             "spin transport with SpongeAuth")
+        live = [n for n in range(1, r.k + 1) if n not in crashed]
+        if not live:
+            raise ValueError(f"unrecoverable: all {r.k} replicas crashed")
+        hh, ph, _ = HANDLER_NS[spec.auth.handler]
+        sinks: dict[int, Stage] = {n: SpinReadSink(n, hh, ph) for n in live}
+        return PipelineProtocol(env, spec, size, ReadInjector(live[0]), sinks)
+    # degraded-rs: fan out to k surviving shards, reconstruct the rest
+    e = spec.erasure
+    survivors, missing = ec_read_survivors(e, crashed)
+    if rp.engine == "spin":
+        if spec.transport != "spin" or not isinstance(spec.auth, SpongeAuth):
+            raise ValueError("ReadPolicy(engine='spin') requires the spin "
+                             "transport with SpongeAuth")
+        hh, ph, _ = HANDLER_NS[spec.auth.handler]
+        sinks = {n: SpinReadSink(n, hh, ph) for n in survivors}
+    else:
+        sinks = {n: HostReadSink(n) for n in survivors}
+    return PipelineProtocol(
+        env, spec, size,
+        EcReadInjector(tuple(survivors), e.k, missing, rp.engine), sinks,
+    )
+
+
 def compile_policy(
     env: Env,
     spec: PolicySpec,
@@ -992,13 +1195,7 @@ def compile_policy(
     cfg = env.cfg
 
     if spec.op == "read":
-        if spec.transport != "spin" or not isinstance(spec.auth, SpongeAuth):
-            raise ValueError("read policies currently require the spin "
-                             "transport with SpongeAuth")
-        hh, ph, _ = HANDLER_NS[spec.auth.handler]
-        return PipelineProtocol(
-            env, spec, size, ReadInjector(1), {1: SpinReadSink(1, hh, ph)}
-        )
+        return _compile_read(env, spec, size)
 
     if spec.erasure is not None:
         e = spec.erasure

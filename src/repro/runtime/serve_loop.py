@@ -14,7 +14,6 @@ import dataclasses
 import time
 from typing import Any, Callable
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

@@ -20,7 +20,6 @@ from repro.sim.network import Network  # noqa: F401  (type reference)
 from repro.sim.protocols import (
     ACK_WIRE,
     HYPERLOOP_CONFIG_WIRE,
-    HYPERLOOP_TRIGGER_NS,
     INEC_EC_ENGINE_GBPS,
     INEC_PCIE_BW_GBPS,
     INEC_TRIGGER_NS,

@@ -17,6 +17,7 @@ mirroring the 200-cycle NIC handler check.
 from __future__ import annotations
 
 import dataclasses
+import random
 from typing import Callable
 
 from repro.sim.engine import SerialResource, Simulator
@@ -95,11 +96,32 @@ class SimNode:
 
 
 class Network:
+    """Packet transport with optional failure injection: ``crashed``
+    nodes blackhole traffic in both directions, ``loss`` drops packets
+    towards a node with a per-node probability (seeded, deterministic).
+    Every dropped packet is counted in ``packets_dropped`` so workload
+    metrics can account for lost bytes (no silent loss)."""
+
     def __init__(self, sim: Simulator, cfg: NetConfig):
         self.sim = sim
         self.cfg = cfg
         self.nodes: dict[int, SimNode] = {}
         self.packets_sent = 0
+        self.packets_dropped = 0
+        self.bytes_dropped = 0
+        self.crashed: set[int] = set()
+        self.loss: dict[int, float] = {}
+        self._loss_rng = random.Random(0)
+
+    def set_failures(
+        self,
+        crashed=(),
+        loss: dict[int, float] | None = None,
+        seed: int = 0,
+    ) -> None:
+        self.crashed = set(crashed)
+        self.loss = dict(loss or {})
+        self._loss_rng = random.Random(seed)
 
     def node(self, node_id: int) -> SimNode:
         if node_id not in self.nodes:
@@ -120,6 +142,19 @@ class Network:
         (the moment a NIC handler that blocks on egress can retire).
         """
         meta = meta or {}
+        if src in self.crashed or dst in self.crashed:
+            # A crashed endpoint neither sends nor receives; the sender's
+            # handler (if any) retires immediately — its DMA completes
+            # into the void.
+            self.packets_dropped += 1
+            self.bytes_dropped += wire_size
+            if on_sent is not None:
+                self.sim.after(0.0, on_sent)
+            return
+        # Loss is decided at send time (deterministic event order) but
+        # takes effect after egress: the sender still pays serialization.
+        p = self.loss.get(dst, 0.0)
+        lost = p > 0.0 and self._loss_rng.random() < p
         s, d = self.node(src), self.node(dst)
         ser = self.cfg.ser_ns(wire_size)
         s.bytes_out += wire_size
@@ -128,6 +163,10 @@ class Network:
         def after_egress(start: float, end: float) -> None:
             if on_sent is not None:
                 on_sent()
+            if lost:
+                self.packets_dropped += 1
+                self.bytes_dropped += wire_size
+                return
             arrive = end + self.cfg.link_latency_ns
 
             def at_ingress() -> None:

@@ -57,6 +57,10 @@ INEC_WINDOW = 1                # outstanding blocks: triggered chains are
                                # consumed per block and re-armed by the host
 EC_IPC = 0.62                  # calibrated so RS(3,2)/RS(6,3) PH times
                                # match Table II (16.7 us / 23.0 us @ 2 KiB)
+HOST_DECODE_GBPS = 6.0         # host-CPU RS reconstruction throughput
+                               # (vectorized GF LUT walk, single socket) —
+                               # the CPU detour degraded reads pay without
+                               # NIC offload
 
 
 def ec_data_ph_ns(payload: int, m: int) -> float:
@@ -71,6 +75,15 @@ def ec_data_ph_ns(payload: int, m: int) -> float:
 def ec_parity_ph_ns(payload: int) -> float:
     """Parity-node XOR PH: ~1 instr/byte at the same IPC (assumption)."""
     return payload / EC_IPC
+
+
+def ec_decode_ph_ns(payload: int, r: int) -> float:
+    """Degraded-read decode PH duration, symmetric to the encode model:
+    every surviving shard packet is multiply-accumulated into the ``r``
+    missing chunks it reconstructs — (2r+1) instr/byte at the same
+    calibrated EC IPC as :func:`ec_data_ph_ns` (``r == m`` erasures cost
+    exactly what the streaming encode of ``m`` parities costs)."""
+    return payload * (2 * r + 1) / EC_IPC
 
 
 def write_header_extra(num_replicas: int = 0) -> int:
@@ -100,17 +113,31 @@ class Env:
     packets routed by their ``pid`` meta key."""
 
     def __init__(
-        self, cfg: NetConfig | None = None, pcfg: PsPINConfig | None = None
+        self,
+        cfg: NetConfig | None = None,
+        pcfg: PsPINConfig | None = None,
+        failures=None,
     ):
         self.cfg = cfg or NetConfig()
         self.pcfg = pcfg
         self.sim = Simulator()
         self.net = Network(self.sim, self.cfg)
+        #: injected :class:`repro.policy.FailureModel` (None == healthy);
+        #: crashed/lossy nodes apply at the network, slow nodes stretch
+        #: the node's NIC handler compute, and degraded-read pipelines
+        #: compile their survivor fan-out against it.
+        self.failures = failures
+        if failures is not None:
+            self.net.set_failures(failures.crashed, failures.loss_map,
+                                  failures.seed)
         self._pspin: dict[int, PsPINUnit] = {}
         self._cpu: dict[int, SerialResource] = {}
         self._node_owner: dict[int, "Protocol"] = {}
         self._bindings: dict[int, dict[int, Callable]] = {}
         self._next_pid = 0
+
+    def crashed_nodes(self) -> set[int]:
+        return set(self.failures.crashed) if self.failures is not None else set()
 
     def claim_node(self, node: int, proto: "Protocol") -> None:
         """Register ``proto`` as the *exclusive* receive-handler owner of
@@ -163,7 +190,11 @@ class Env:
 
     def pspin(self, node: int) -> PsPINUnit:
         if node not in self._pspin:
-            self._pspin[node] = PsPINUnit(self.sim, self.net, node, self.pcfg)
+            scale = 1.0
+            if self.failures is not None:
+                scale = self.failures.slow_map.get(node, 1.0)
+            self._pspin[node] = PsPINUnit(self.sim, self.net, node, self.pcfg,
+                                          compute_scale=scale)
         return self._pspin[node]
 
     def host_cpu(self, node: int) -> SerialResource:
@@ -264,6 +295,11 @@ class Protocol:
         if pkt.meta.get("cfg_ack"):
             self._on_cfg_ack(pend)
             return
+        self._register_ack(pend)
+
+    def _register_ack(self, pend: _Pending) -> None:
+        """Count one ack/response unit; completes the request on the last
+        one (also the completion hook for decode-gated read pipelines)."""
         pend.acks += 1
         if pend.acks == pend.expected:
             del self._pending[pend.rid]
@@ -373,6 +409,12 @@ def run_single_shot(
         "spin-triec": lambda: run_spin_triec(size, k, m, cfg=cfg),
         "inec-triec": lambda: run_inec_triec(size, k, m, cfg=cfg),
         "spin-read": lambda: run_spin_read(size, cfg=cfg),
+        "spin-read-ec": lambda: _run_preset(
+            "spin-read-ec", size, k=k, m=m, cfg=cfg)[2],
+        "cpu-read-ec": lambda: _run_preset(
+            "cpu-read-ec", size, k=k, m=m, cfg=cfg)[2],
+        "spin-read-repl": lambda: _run_preset(
+            "spin-read-repl", size, k=k, cfg=cfg)[2],
     }
     if name not in runners:
         raise ValueError(
@@ -409,6 +451,23 @@ def _run_preset(
     proto = make_protocol(env, name, size, k=k, m=m, strategy=strategy)
     res = _run_single(proto, env)
     return proto, env, res
+
+
+def run_degraded_read(
+    name: str,
+    size: int,
+    k: int = 4,
+    m: int = 2,
+    failures=None,
+    cfg: NetConfig | None = None,
+    pcfg: PsPINConfig | None = None,
+) -> Result:
+    """Single-shot read preset under an injected
+    :class:`repro.policy.FailureModel` (None == healthy): the pipeline
+    compiles its survivor fan-out / decode stage against the failures."""
+    env = Env(cfg, pcfg, failures=failures)
+    proto = make_protocol(env, name, size, k=k, m=m)
+    return _run_single(proto, env)
 
 
 def run_raw_write(size: int, cfg: NetConfig | None = None) -> Result:

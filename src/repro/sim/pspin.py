@@ -107,11 +107,15 @@ class PsPINUnit:
         network: Network,
         node_id: int,
         cfg: PsPINConfig | None = None,
+        compute_scale: float = 1.0,
     ):
         self.sim = sim
         self.network = network
         self.node_id = node_id
         self.cfg = cfg or PsPINConfig()
+        #: straggler factor: >1 stretches every handler's compute time
+        #: (failure-model slow nodes — thermal throttling, HPU contention)
+        self.compute_scale = compute_scale
         self.hpus = Pool(sim, self.cfg.num_hpus)
         self.handler_time_ns = 0.0
         self.handler_count = 0
@@ -128,7 +132,7 @@ class PsPINUnit:
         def start() -> None:
             def acquired() -> None:
                 t0 = self.sim.now
-                t_compute_done = t0 + spec.compute_ns
+                t_compute_done = t0 + spec.compute_ns * self.compute_scale
 
                 def finish() -> None:
                     self.handler_time_ns += self.sim.now - t0

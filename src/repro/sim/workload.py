@@ -30,6 +30,20 @@ draw and its payload from the load's :class:`SizeDist` (``fixed`` /
 ``lognormal`` / ``bimodal``).  That is the regime the paper's scaling
 claims live in: writes and EC contending for the same links and HPUs.
 
+Mixed *read/write* scenarios share extents: with
+``Scenario.shared_extents`` writers populate an object space and read
+policies consume it — every read draws its payload size from a
+previously *completed* write (a read arriving before anything was
+written is shed and counted as a drop), so ``bytes_read`` only ever
+covers bytes that were actually written.  ``Scenario.failures`` attaches
+a :class:`repro.policy.FailureModel` (crashed / lossy / slow nodes) to
+the shared Env: degraded-read policies compile their survivor fan-out
+against it, lost packets are counted by the network (``lost_packets`` /
+``lost_bytes`` in the report), and requests whose packets were lost
+remain in flight — conservation (issued == completed + in_flight +
+dropped) holds under every failure mix, so no byte goes silently
+missing.
+
 Everything is deterministic: a seeded ``random.Random`` drives arrivals,
 policy picks, and size draws, and the discrete-event core has no other
 nondeterminism, so the same :class:`Scenario` always produces the
@@ -129,6 +143,11 @@ class Scenario:
     # mixed-policy mode: compile every load onto ONE shared Env (weighted
     # per-request policy pick); ``protocol`` is ignored when set.
     policies: list[PolicyLoad] | None = None
+    # injected failures (repro.policy.FailureModel | None == healthy)
+    failures: object | None = None
+    # mixed read/write extent sharing: reads draw their size from
+    # completed writes (and are shed while nothing has been written yet)
+    shared_extents: bool = False
 
     def per_client_gap_ns(self, cfg: NetConfig | None = None) -> float:
         """Mean open-loop inter-arrival gap per client (``cfg``: the
@@ -150,6 +169,8 @@ class Metrics:
         self.completed = 0
         self.dropped = 0
         self.bytes_completed = 0
+        self.bytes_written = 0   # completed write-op request payloads
+        self.bytes_read = 0      # completed read-op request payloads
         self.first_issue_ns: float | None = None
         self.last_done_ns = 0.0
         self.hpu_queue_peak = 0
@@ -166,10 +187,15 @@ class Metrics:
     def on_drop(self) -> None:
         self.dropped += 1
 
-    def on_complete(self, now: float, latency_ns: float, nbytes: int) -> None:
+    def on_complete(self, now: float, latency_ns: float, nbytes: int,
+                    op: str = "write") -> None:
         self.completed += 1
         self.latencies_ns.append(latency_ns)
         self.bytes_completed += nbytes
+        if op == "read":
+            self.bytes_read += nbytes
+        else:
+            self.bytes_written += nbytes
         self.last_done_ns = now
 
     @property
@@ -258,7 +284,7 @@ class Workload:
         pcfg: PsPINConfig | None = None,
     ):
         self.sc = scenario
-        self.env = Env(cfg, pcfg)
+        self.env = Env(cfg, pcfg, failures=scenario.failures)
         sc = scenario
         if sc.policies:
             from repro.policy import compile_policy, preset_spec
@@ -287,10 +313,19 @@ class Workload:
             self._cum_weights.append(acc)
         self.metrics = Metrics()
         self.per_policy = [
-            {"issued": 0, "completed": 0, "bytes": 0, "latencies_ns": []}
+            {"issued": 0, "completed": 0, "dropped": 0, "bytes": 0,
+             "latencies_ns": []}
             for _ in self.loads
         ]
         self._outstanding: dict[int, int] = {}
+        #: shared object space: payload sizes of completed writes, drawn
+        #: from by read policies when ``scenario.shared_extents`` is set
+        self.extents: list[int] = []
+
+    @staticmethod
+    def _op_of(proto: Protocol) -> str:
+        spec = getattr(proto, "spec", None)
+        return spec.op if spec is not None else "write"
 
     def storage_nodes(self) -> tuple[int, ...]:
         nodes: set[int] = set()
@@ -314,8 +349,23 @@ class Workload:
         i = self._pick(rnd)
         proto = self.protos[i]
         pl = self.loads[i]
+        op = self._op_of(proto)
         dist = pl.size_dist or self.sc.size_dist
         size = dist.sample(rnd) if dist is not None else None
+        if self.sc.shared_extents and op == "read":
+            if not self.extents:
+                # nothing written yet: the read targets unpopulated space
+                # and is shed (counted — no silent loss).  The closed-loop
+                # continuation goes through the event queue so a long run
+                # of sheds iterates instead of recursing.
+                self.metrics.on_issue(sim.now)
+                self.per_policy[i]["issued"] += 1
+                self.per_policy[i]["dropped"] += 1
+                self.metrics.on_drop()
+                if after_done is not None:
+                    sim.after(0.0, after_done)
+                return
+            size = self.extents[rnd.randrange(len(self.extents))]
         nbytes = proto.request_bytes if size is None else size
         self.metrics.on_issue(sim.now)
         pp = self.per_policy[i]
@@ -324,7 +374,9 @@ class Workload:
 
         def done(res: Result) -> None:
             self._outstanding[client] -= 1
-            self.metrics.on_complete(sim.now, res.latency_ns, nbytes)
+            self.metrics.on_complete(sim.now, res.latency_ns, nbytes, op)
+            if self.sc.shared_extents and op != "read":
+                self.extents.append(nbytes)
             pp["completed"] += 1
             pp["bytes"] += nbytes
             pp["latencies_ns"].append(res.latency_ns)
@@ -408,6 +460,7 @@ class Workload:
             out[name] = {
                 "issued": pp["issued"],
                 "completed": pp["completed"],
+                "dropped": pp["dropped"],
                 "bytes": pp["bytes"],
                 "p50_us": pct(50),
                 "p99_us": pct(99),
@@ -435,6 +488,10 @@ class Workload:
                 "clients": sc.num_clients,
                 "arrival": sc.arrival,
                 "size": sc.size,
+                "bytes_written": self.metrics.bytes_written,
+                "bytes_read": self.metrics.bytes_read,
+                "lost_packets": self.env.net.packets_dropped,
+                "lost_bytes": self.env.net.bytes_dropped,
                 "events": self.env.sim.events_processed,
                 "sim_ns": self.env.sim.now,
                 "packets": self.env.net.packets_sent,

@@ -7,7 +7,6 @@ no allocation.)
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs import ARCHS

@@ -1,7 +1,5 @@
 """Capability authentication: issue/verify, forgery rejection, np/jnp parity."""
 
-import dataclasses
-
 import jax.numpy as jnp
 import numpy as np
 try:

@@ -15,6 +15,7 @@ def test_bench_modules_import_clean():
     try:
         import benchmarks.contention  # noqa: F401
         import benchmarks.dataplane  # noqa: F401
+        import benchmarks.degraded  # noqa: F401
         import benchmarks.mixed  # noqa: F401
         import benchmarks.paper_figs  # noqa: F401
         import benchmarks.run  # noqa: F401
@@ -62,6 +63,30 @@ def test_run_py_json_artifact(tmp_path):
     for row in doc["rows"]:
         assert {"name", "us_per_call", "derived"} <= set(row)
     assert any(r["name"].startswith("fig4/") for r in doc["rows"])
+
+
+def test_run_py_degraded_artifact(tmp_path):
+    """run.py --degraded emits the BENCH_degraded.json artifact with the
+    gated claims (degraded <= 2x healthy; NIC >= 2x over host-CPU)."""
+    out = tmp_path / "BENCH_degraded.json"
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--only", "fig4",
+         "--degraded", "--degraded-quick", "--degraded-out", str(out)],
+        cwd=REPO,
+        capture_output=True,
+        text=True,
+        timeout=300,
+    )
+    assert proc.returncode == 0, proc.stderr
+    doc = json.loads(out.read_text())
+    assert doc["bench"] == "degraded"
+    names = [r["name"] for r in doc["rows"]]
+    assert any(n.startswith("degraded/rs3.2/f1/spin") for n in names)
+    assert any(n.startswith("degraded/mixed/") for n in names)
+    assert any(n.startswith("degraded/repair/") for n in names)
+    claims = doc["claims"]
+    assert claims["rs32_f1_vs_healthy"] <= 2.0
+    assert claims["rs32_f1_host_over_spin"] >= 2.0
 
 
 def test_run_py_mixed_artifact(tmp_path):

@@ -3,10 +3,10 @@
 import numpy as np
 import pytest
 try:
-    from hypothesis import given, settings
+    from hypothesis import given
     from hypothesis import strategies as st
 except ImportError:  # fall back to the deterministic local shim
-    from _hypothesis_shim import given, settings
+    from _hypothesis_shim import given
     from _hypothesis_shim import strategies as st
 
 from repro.core import gf256 as g

@@ -120,8 +120,10 @@ def test_preset_latency_matches_anchor(name):
     """Tier-1 guard: a preset's single-shot latency must not drift from
     its recorded anchor (regenerate tests/data/policy_anchors.json only
     for deliberate model changes)."""
+    from repro.policy.spec import EC_GEOMETRY_PRESETS
+
     cfgd = ANCHORS["config"]
-    k = cfgd["ec_k"] if name in ("spin-triec", "inec-triec") else cfgd["k"]
+    k = cfgd["ec_k"] if name in EC_GEOMETRY_PRESETS else cfgd["k"]
     for size_s, want in ANCHORS["latency_ns"][name].items():
         got = P.run_single_shot(name, int(size_s), k=k, m=2).latency_ns
         assert got == pytest.approx(want, rel=1e-12), (name, size_s)

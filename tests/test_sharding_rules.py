@@ -6,9 +6,6 @@ hide divisibility behavior — we construct a fake Mesh over the single CPU
 device reshaped logically via jax.sharding.AbstractMesh.
 """
 
-import jax
-import numpy as np
-import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.parallel import sharding as sh

@@ -1,0 +1,164 @@
+"""Anchor-drift gate: deterministic-model anchors + benchmark floors.
+
+Four checks, each with a readable diff on failure:
+
+  1. policy latency anchors — re-runs every preset/size recorded in
+     ``tests/data/policy_anchors.json`` through the timed plane (the sim
+     is deterministic, so these must match to ``--rel-tol``);
+  2. ``BENCH_dataplane.json`` floors — the committed batched-vs-per-stripe
+     speedups must stay above ``--dataplane-floor`` at S >= 8 (the PR 2
+     regression bar, with slack for timing noise across machines);
+  3. ``BENCH_degraded.json`` claims — degraded-read latency at RS(3,2)
+     with one failed node stays <= ``--degraded-ceiling`` x the healthy
+     spin-read, and NIC-side reconstruction holds >= ``--offload-floor`` x
+     over the host-CPU path;
+  4. ``BENCH_mixed.json`` — schema sanity (rows present, goodput > 0).
+
+Usage (CI invokes this as its own workflow step):
+
+  PYTHONPATH=src python tools/check_anchors.py [--repo DIR]
+      [--rel-tol 1e-9] [--dataplane-floor 2.0]
+      [--degraded-ceiling 2.0] [--offload-floor 2.0]
+
+Exit code 0 == no drift.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def check_policy_anchors(path: str, rel_tol: float) -> list[str]:
+    from repro.policy.spec import EC_GEOMETRY_PRESETS
+    from repro.sim.protocols import run_single_shot
+
+    with open(path) as f:
+        anchors = json.load(f)
+    cfgd = anchors["config"]
+    errors = []
+    for name in sorted(anchors["latency_ns"]):
+        k = cfgd["ec_k"] if name in EC_GEOMETRY_PRESETS else cfgd["k"]
+        for size_s, want in anchors["latency_ns"][name].items():
+            got = run_single_shot(name, int(size_s), k=k, m=cfgd["m"]).latency_ns
+            drift = abs(got - want) / max(abs(want), 1e-12)
+            if drift > rel_tol:
+                errors.append(
+                    f"  {name} @ {size_s} B: anchored {want:.3f} ns, "
+                    f"got {got:.3f} ns (drift {drift:.2e} > {rel_tol:.0e})"
+                )
+    return errors
+
+
+def check_dataplane(path: str, floor: float) -> list[str]:
+    if not os.path.exists(path):
+        return [f"  missing artifact {path}"]
+    with open(path) as f:
+        doc = json.load(f)
+    errors = []
+    rows = [r for r in doc.get("rows", []) if r.get("stripes", 0) >= 8]
+    if not rows:
+        errors.append("  no S >= 8 rows in BENCH_dataplane.json")
+    for r in rows:
+        if r["speedup"] < floor:
+            errors.append(
+                f"  {r['code']} S={r['stripes']} chunk={r['chunk_bytes']}: "
+                f"batched speedup {r['speedup']:.2f}x < floor {floor:.2f}x"
+            )
+    return errors
+
+
+def check_degraded(path: str, ceiling: float, offload_floor: float) -> list[str]:
+    if not os.path.exists(path):
+        return [f"  missing artifact {path}"]
+    with open(path) as f:
+        doc = json.load(f)
+    claims = doc.get("claims", {})
+    errors = []
+    ratio = claims.get("rs32_f1_vs_healthy")
+    if ratio is None:
+        errors.append("  claim rs32_f1_vs_healthy missing")
+    elif ratio > ceiling:
+        errors.append(
+            f"  degraded RS(3,2) f=1 read is {ratio:.2f}x the healthy "
+            f"spin-read (> ceiling {ceiling:.2f}x)"
+        )
+    off = claims.get("rs32_f1_host_over_spin")
+    if off is None:
+        errors.append("  claim rs32_f1_host_over_spin missing")
+    elif off < offload_floor:
+        errors.append(
+            f"  NIC-side reconstruction only {off:.2f}x over the host-CPU "
+            f"path (< floor {offload_floor:.2f}x)"
+        )
+    return errors
+
+
+def check_mixed(path: str) -> list[str]:
+    if not os.path.exists(path):
+        return [f"  missing artifact {path}"]
+    with open(path) as f:
+        doc = json.load(f)
+    rows = doc.get("rows", [])
+    errors = []
+    if not rows:
+        errors.append("  no rows in BENCH_mixed.json")
+    agg = [r for r in rows if r["name"].startswith("mixed/write+ec/")]
+    if not agg:
+        errors.append("  no aggregate mixed/write+ec rows")
+    for r in agg:
+        if float(r["derived"]) <= 0:
+            errors.append(f"  {r['name']}: goodput {r['derived']} <= 0")
+    return errors
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--repo", default=REPO)
+    ap.add_argument("--rel-tol", type=float, default=1e-9,
+                    help="policy-anchor relative tolerance (the sim is "
+                         "deterministic; drift means a model change)")
+    ap.add_argument("--dataplane-floor", type=float, default=2.0,
+                    help="min batched speedup at S >= 8")
+    ap.add_argument("--degraded-ceiling", type=float, default=2.0,
+                    help="max degraded/healthy read ratio at RS(3,2) f=1")
+    ap.add_argument("--offload-floor", type=float, default=2.0,
+                    help="min NIC-over-host degraded reconstruction ratio")
+    args = ap.parse_args()
+
+    checks = [
+        ("policy latency anchors", check_policy_anchors(
+            os.path.join(args.repo, "tests", "data", "policy_anchors.json"),
+            args.rel_tol)),
+        ("BENCH_dataplane.json floors", check_dataplane(
+            os.path.join(args.repo, "BENCH_dataplane.json"),
+            args.dataplane_floor)),
+        ("BENCH_degraded.json claims", check_degraded(
+            os.path.join(args.repo, "BENCH_degraded.json"),
+            args.degraded_ceiling, args.offload_floor)),
+        ("BENCH_mixed.json sanity", check_mixed(
+            os.path.join(args.repo, "BENCH_mixed.json"))),
+    ]
+    failed = False
+    for title, errors in checks:
+        status = "FAIL" if errors else "ok"
+        print(f"[{status:>4}] {title}")
+        for e in errors:
+            print(e)
+        failed = failed or bool(errors)
+    if failed:
+        print("\nanchor drift detected: regenerate the anchors/artifacts "
+              "only for deliberate model changes (and say so in the PR).")
+        return 1
+    print("\nall anchors hold.")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
