@@ -1,0 +1,51 @@
+"""SLO autoscaling benchmark: the control-plane sweep as a CLI.
+
+Thin entry point over :mod:`repro.control.sweep` — the PolicySpec x HPU
+x failure grid that reproduces the Fig. 16 scaling claim end to end:
+
+  * ``control/fig16/*``     goodput vs ``num_hpus`` for sPIN-TriEC
+    (healthy + one straggler data node), saturating near line rate with
+    the knee within one doubling of the analytic handler model;
+  * ``control/autoscale/*`` the SLO-driven autoscaler's converged HPU
+    count vs the brute-force static optimum, per PolicySpec preset;
+  * ``control/fanout/*``    the cheapest RS fan-out meeting the SLO;
+  * ``control/pacing/*``    foreground p99 with the background rebuild
+    stream unpaced vs paced through the token-bucket governor.
+
+Usage:
+
+  PYTHONPATH=src python benchmarks/autoscale.py [--quick]
+      [--json BENCH_control.json]
+
+``benchmarks/run.py --autoscale`` runs the same sweep and always writes
+the ``BENCH_control.json`` artifact (gated by ``tools/check_anchors.py``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.control.sweep import bench_rows, write_artifact  # noqa: E402
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true", help="small sweep for smoke tests")
+    ap.add_argument("--json", default=None, metavar="OUT")
+    args = ap.parse_args()
+    rows, claims = bench_rows(quick=args.quick)
+    print("name,p99_us_or_hpus,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us},{derived}")
+    for key, val in sorted(claims.items()):
+        print(f"# claim {key} = {val}", file=sys.stderr)
+    if args.json:
+        write_artifact(rows, claims, args.json, {"quick": args.quick})
+
+
+if __name__ == "__main__":
+    main()

@@ -4,7 +4,8 @@ Prints ``name,us_per_call,derived`` CSV rows.  Usage:
 
   PYTHONPATH=src python -m benchmarks.run [--only fig6,fig15] [--roofline]
                                           [--contention] [--mixed]
-                                          [--degraded] [--json OUT]
+                                          [--degraded] [--autoscale]
+                                          [--all] [--json OUT]
 
 ``--contention`` appends the multi-client sweep (p99 latency / goodput per
 client count; see benchmarks/contention.py for the full CLI).  ``--mixed``
@@ -12,11 +13,17 @@ appends the mixed-policy sweep (writes + EC sharing storage nodes on one
 Env; see benchmarks/mixed.py) and always writes its ``BENCH_mixed.json``
 artifact.  ``--degraded`` appends the failure-injection degraded-read /
 repair sweep (see benchmarks/degraded.py) and always writes its
-``BENCH_degraded.json`` artifact.  ``--json`` additionally writes every emitted row to ``OUT`` as
-a ``BENCH_*.json`` artifact ({"bench", "rows": [{"name", "us_per_call",
-"derived"}]}) so any bench table can be tracked across PRs.  (The kernel
-data-plane sweep has its own dedicated artifact: ``benchmarks/
-dataplane.py``.)
+``BENCH_degraded.json`` artifact.  ``--autoscale`` appends the
+control-plane sweep (Fig. 16 goodput-vs-HPUs, SLO autoscaler vs static
+optimum, repair pacing; see benchmarks/autoscale.py) and always writes
+its ``BENCH_control.json`` artifact.  ``--all`` runs every suite above
+(plus the roofline table) and writes one combined manifest
+(``BENCH_all.json`` by default): every emitted row plus the paths of all
+artifacts written in the run.  ``--json`` additionally writes every
+emitted row to ``OUT`` as a ``BENCH_*.json`` artifact ({"bench", "rows":
+[{"name", "us_per_call", "derived"}]}) so any bench table can be tracked
+across PRs.  (The kernel data-plane sweep has its own dedicated
+artifact: ``benchmarks/dataplane.py``.)
 """
 
 from __future__ import annotations
@@ -71,13 +78,35 @@ def main() -> None:
                     metavar="OUT", help="artifact path for --degraded")
     ap.add_argument("--degraded-quick", action="store_true",
                     help="small degraded sweep (CI smoke)")
+    ap.add_argument("--autoscale", action="store_true",
+                    help="also run the control-plane sweep (Fig. 16 "
+                         "scaling, SLO autoscaler, repair pacing) and "
+                         "write BENCH_control.json")
+    ap.add_argument("--autoscale-out", default="BENCH_control.json",
+                    metavar="OUT", help="artifact path for --autoscale")
+    ap.add_argument("--autoscale-quick", action="store_true",
+                    help="small control-plane sweep (CI smoke)")
+    ap.add_argument("--all", action="store_true",
+                    help="run every suite (paper figs, roofline, "
+                         "contention, mixed, degraded, autoscale) and "
+                         "write one combined manifest of all rows + "
+                         "artifact paths")
+    ap.add_argument("--all-out", default="BENCH_all.json", metavar="OUT",
+                    help="manifest path for --all")
     ap.add_argument("--json", default=None, metavar="OUT",
                     help="also write the emitted rows to OUT as a "
                          "BENCH_*.json artifact")
     args = ap.parse_args()
+    if args.all:
+        args.roofline = True
+        args.contention = True
+        args.mixed = True
+        args.degraded = True
+        args.autoscale = True
     filters = [f for f in args.only.split(",") if f]
 
     rows: list[tuple] = []
+    artifacts: dict[str, str] = {}
 
     def emit(name, us, derived):
         rows.append((name, us, derived))
@@ -105,6 +134,7 @@ def main() -> None:
         for name, us, derived in mrows:
             emit(name, us, derived)
         write_artifact(mrows, args.mixed_out)
+        artifacts["mixed"] = args.mixed_out
     if args.degraded:
         from benchmarks.degraded import bench_rows as degraded_rows
         from benchmarks.degraded import write_artifact as degraded_artifact
@@ -114,6 +144,32 @@ def main() -> None:
             emit(name, us, derived)
         degraded_artifact(drows, claims, args.degraded_out,
                           {"quick": args.degraded_quick})
+        artifacts["degraded"] = args.degraded_out
+    if args.autoscale:
+        from repro.control.sweep import bench_rows as control_rows
+        from repro.control.sweep import write_artifact as control_artifact
+
+        crows, cclaims = control_rows(quick=args.autoscale_quick)
+        for name, us, derived in crows:
+            emit(name, us, derived)
+        control_artifact(crows, cclaims, args.autoscale_out,
+                         {"quick": args.autoscale_quick})
+        artifacts["control"] = args.autoscale_out
+    if args.all:
+        with open(args.all_out, "w") as f:
+            json.dump(
+                {
+                    "bench": "all",
+                    "artifacts": artifacts,
+                    "rows": [
+                        {"name": n, "us_per_call": u, "derived": d}
+                        for n, u, d in rows
+                    ],
+                },
+                f,
+                indent=1,
+            )
+        print(f"# wrote {args.all_out}", file=sys.stderr)
     if args.json:
         with open(args.json, "w") as f:
             json.dump(

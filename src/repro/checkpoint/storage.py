@@ -177,6 +177,14 @@ class StorageCluster:
         # Router is synchronous and not thread-safe, and background
         # repair / async checkpoint saves run on their own threads
         self._io_lock = threading.RLock()
+        #: bounded retry budget for shard reads under packet loss: a
+        #: lossy link (see :meth:`set_failures`) drops read requests /
+        #: responses, and each failed attempt is retried up to this many
+        #: times before the shard is treated as missing (degraded-read
+        #: reconstruction takes over).  Counted in the audit ledger.
+        self.max_read_retries = 3
+        self.read_retries = 0      # extra attempts that were needed
+        self.read_timeouts = 0     # shards given up on after the budget
 
     # -- data plane -----------------------------------------------------------
 
@@ -330,15 +338,39 @@ class StorageCluster:
             self.client.write(self.capability, parity[pi], [coord])
         self._check_acks(lay, before, lay.ec_k + lay.ec_m)
 
+    def set_failures(self, failures) -> None:
+        """Attach a :class:`repro.policy.FailureModel` to the functional
+        plane: crashed nodes are failed at the router (blackholed until
+        repaired), lossy nodes drop packets towards them with the model's
+        seeded probabilities.  Loss applies to *all* traffic towards the
+        node; reads carry their own bounded retry budget
+        (``max_read_retries``), writes surface missing acks as
+        :class:`IOError` at the caller."""
+        for node in failures.crashed:
+            self.fail_node(node)
+        self.router.set_loss(failures.loss_map, failures.seed)
+
     def _read_shard(self, coord: ReplicaCoord, length: int) -> np.ndarray | None:
         """One shard through the authenticated packet read path; ``None``
-        when the node is failed/unreachable (the read is blackholed)."""
+        when the node is failed/unreachable (the read is blackholed) or
+        still unreadable after the bounded retry budget (a lossy link
+        dropped every attempt — the functional-plane "timeout").
+
+        Retries are deliberately *bounded*: an endlessly-retrying client
+        would hide a dead node as latency; after ``max_read_retries``
+        extra attempts the shard is reported missing and the caller's
+        degraded-read path reconstructs instead."""
         if coord.node in self.failed:
             return None
-        try:
-            return self.client.read(self.capability, coord, length)
-        except IOError:
-            return None
+        for attempt in range(1 + self.max_read_retries):
+            if attempt > 0:
+                self.read_retries += 1
+            try:
+                return self.client.read(self.capability, coord, length)
+            except IOError:
+                continue
+        self.read_timeouts += 1
+        return None
 
     def read_object(self, layout: ObjectLayout, verify: bool = True) -> bytes:
         """Read one object (degraded-mode capable); see
@@ -458,6 +490,7 @@ class StorageCluster:
         node_id: int,
         replacement: int | None = None,
         background: bool = False,
+        pacer=None,
     ) -> dict | None:
         """Rebuild every shard ``node_id`` held.
 
@@ -470,6 +503,13 @@ class StorageCluster:
         written back as authenticated plain writes through the policy
         engine.  ``background=True`` runs the rebuild on a repair thread
         (:meth:`repair_wait` joins it); stats land in ``repair_stats``.
+
+        ``pacer`` (a :class:`repro.control.RepairPacer`) throttles the
+        rebuild: every rebuilt shard's bytes go through the token
+        bucket, so background repair competes with foreground I/O at a
+        configured rate instead of flat out — the same governor the
+        timed workload engine paces its repair loads with.  The served
+        wait lands in ``stats["paced_wait_s"]``.
         """
         # validate on the caller thread so bad arguments raise here, not
         # silently on the repair daemon
@@ -482,14 +522,14 @@ class StorageCluster:
 
             def run() -> None:
                 try:
-                    self._repair(node_id, replacement)
+                    self._repair(node_id, replacement, pacer)
                 except BaseException as exc:  # surfaced by repair_wait
                     self._repair_error = exc
 
             self._repair_thread = threading.Thread(target=run, daemon=True)
             self._repair_thread.start()
             return None
-        return self._repair(node_id, replacement)
+        return self._repair(node_id, replacement, pacer)
 
     def repair_wait(self) -> dict | None:
         """Join a background repair; re-raises its exception (a repair
@@ -525,19 +565,49 @@ class StorageCluster:
         ]
         return batched, code.decode_stripes(batched, backend=backend)
 
-    def _repair(self, node_id: int, replacement: int | None) -> dict:
+    def _repair(self, node_id: int, replacement: int | None,
+                pacer=None) -> dict:
+        """Collect + reconstruct under the I/O lock, then write back one
+        shard at a time — with any pacer wait served *outside* the lock,
+        so a throttled background rebuild interleaves with foreground
+        I/O instead of blocking it for the whole paced duration.
+
+        During the write-back window the target stays in ``failed``:
+        foreground reads treat its shards as missing (degraded
+        reconstruction returns correct bytes) and placement avoids it —
+        only the final lock acquisition marks it live again."""
         in_place = replacement is None or replacement == node_id
         if not in_place and replacement in self.failed:
             raise ValueError(f"replacement node {replacement} is failed")
         with self._io_lock:
-            return self._repair_locked(node_id, replacement, in_place)
+            stats, tasks = self._repair_collect(node_id, replacement,
+                                                in_place)
+        touched: set[int] = set()
+        for layout, idx, shard in tasks:
+            if pacer is not None:
+                stats["paced_wait_s"] += pacer.throttle(int(shard.size))
+            with self._io_lock:
+                self._write_rebuilt(layout, idx, shard, node_id,
+                                    replacement, stats)
+            touched.add(id(layout))
+        with self._io_lock:
+            if in_place:
+                # every shard is back: the node may serve reads again
+                self.failed.discard(node_id)
+            stats["objects"] = len(touched)
+            self.repair_stats = stats
+        return stats
 
-    def _repair_locked(self, node_id: int, replacement: int | None,
-                       in_place: bool) -> dict:
+    def _repair_collect(
+        self, node_id: int, replacement: int | None, in_place: bool
+    ) -> tuple[dict, list]:
+        """Phases 1+2 under the caller's lock: stage every lost shard,
+        reconstruct the EC groups batched, re-provision the target.
+        Returns (stats, [(layout, slot, rebuilt shard), ...])."""
         from repro.core.erasure import RSCode
 
-        stats = {"objects": 0, "shards": 0, "bytes": 0, "unrecoverable": 0}
-        touched: set[int] = set()
+        stats = {"objects": 0, "shards": 0, "bytes": 0, "unrecoverable": 0,
+                 "paced_wait_s": 0.0}
         # Phase 1 — collect (node_id still failed): every (layout, slot)
         # the dead node held, EC slots grouped by (k, m, chunk, erasure
         # pattern) for batched reconstruction, replication sources staged.
@@ -581,16 +651,15 @@ class StorageCluster:
                 else:
                     # the only copy is gone
                     self._mark_unrecoverable(layout, in_place, stats)
-        # Phase 2 — re-provision the target (in place) or validate it.
+        # Phase 2 — re-provision the target: storage wiped and router
+        # healed so rebuilt writes land, but the node stays in ``failed``
+        # (reads keep reconstructing around it, placement avoids it)
+        # until the caller finishes the write-back.
         if in_place:
             self.nodes[node_id].storage.mem[:] = 0
-            self.failed.discard(node_id)
             self.router.heal(node_id)
-        # Phase 3 — reconstruct and write back through the policy engine.
-        for layout, idx, data in repl_tasks:
-            self._write_rebuilt(layout, idx, data, node_id,
-                                replacement, stats)
-            touched.add(id(layout))
+        # Reconstruct the EC groups batched; the caller writes back.
+        tasks: list = list(repl_tasks)
         for (k, m, chunk, pattern), members in ec_groups.items():
             code = RSCode(k, m)
             _, datam = self._decode_shard_group(
@@ -600,12 +669,8 @@ class StorageCluster:
                 parm = code.encode_stripes(datam, backend="numpy")
             for s, (layout, idx, _) in enumerate(members):
                 rebuilt = datam[s, idx] if idx < k else parm[s, idx - k]
-                self._write_rebuilt(layout, idx, rebuilt, node_id,
-                                    replacement, stats)
-                touched.add(id(layout))
-        stats["objects"] = len(touched)
-        self.repair_stats = stats
-        return stats
+                tasks.append((layout, idx, rebuilt))
+        return stats, tasks
 
     @staticmethod
     def _mark_unrecoverable(layout: ObjectLayout, in_place: bool,
@@ -644,9 +709,14 @@ class StorageCluster:
         written is *readable* (all data shards / a replica live),
         *reconstructable* (EC with <= m shards lost), or *lost* (beyond
         the policy's tolerance) — the three buckets partition
-        ``bytes_written`` exactly, so nothing goes silently missing."""
+        ``bytes_written`` exactly, so nothing goes silently missing.
+        ``read_retries`` / ``read_timeouts`` account the live-loss
+        plane: extra shard-read attempts a lossy link forced, and shards
+        given up on after the bounded budget."""
         out = {"objects": 0, "bytes_written": 0, "readable_bytes": 0,
-               "reconstructable_bytes": 0, "lost_bytes": 0}
+               "reconstructable_bytes": 0, "lost_bytes": 0,
+               "read_retries": self.read_retries,
+               "read_timeouts": self.read_timeouts}
         for layout in self.meta._objects.values():
             out["objects"] += 1
             out["bytes_written"] += layout.size

@@ -1,0 +1,20 @@
+"""SLO-driven control plane over the simulation (see ISSUE/ROADMAP PR 5).
+
+Four pieces close the loop the sweeps left open:
+
+  * :mod:`repro.control.telemetry` — windowed event-time ring
+    (:class:`Telemetry`) the workload engine fills and the controller
+    and benchmarks both read;
+  * :mod:`repro.control.governor` — token-bucket admission + pacing
+    (:class:`TokenBucket`, :class:`RepairPacer`) shared by
+    ``Workload`` admission and ``StorageCluster.repair_node``;
+  * :mod:`repro.control.autoscaler` — the :class:`SLO`-driven
+    :class:`Autoscaler` that resizes ``PsPINConfig.num_hpus`` (and the
+    replica/EC fan-out) between epochs;
+  * :mod:`repro.control.sweep` — the PolicySpec x HPU x failure sweep
+    driver behind ``BENCH_control.json`` and ``run.py --autoscale``.
+"""
+
+from repro.control.autoscaler import SLO, AutoscaleResult, Autoscaler, Epoch  # noqa: F401
+from repro.control.governor import RepairPacer, TokenBucket  # noqa: F401
+from repro.control.telemetry import Telemetry, TelemetryWindow  # noqa: F401

@@ -26,6 +26,7 @@ checkpoint manager needs.  The timed model of the same dataflow lives in
 from __future__ import annotations
 
 import dataclasses
+import random
 from collections import defaultdict
 from typing import Callable
 
@@ -98,6 +99,8 @@ class Router:
         self.packets_delivered = 0
         self.packets_dropped = 0
         self.failed: set[int] = set()
+        self.loss: dict[int, float] = {}
+        self._loss_rng = random.Random(0)
 
     def register(self, node: "DFSNode") -> None:
         self.nodes[node.node_id] = node
@@ -111,7 +114,21 @@ class Router:
     def heal(self, node_id: int) -> None:
         self.failed.discard(node_id)
 
+    def set_loss(self, loss: dict[int, float] | None, seed: int = 0) -> None:
+        """Lossy links: packets towards node ``n`` are dropped with
+        probability ``loss[n]`` (seeded, deterministic; counted in
+        ``packets_dropped``) — the functional-plane mirror of the timed
+        network's :class:`repro.policy.FailureModel` loss axis.  Callers
+        that must make progress under loss retry with a bounded budget
+        (``StorageCluster.read_objects``)."""
+        self.loss = dict(loss or {})
+        self._loss_rng = random.Random(seed)
+
     def send(self, dest: int, pkt: Packet) -> None:
+        p = self.loss.get(dest, 0.0)
+        if p > 0.0 and self._loss_rng.random() < p:
+            self.packets_dropped += 1
+            return
         self._queue.append((dest, pkt))
         if not self._draining:
             self._drain()

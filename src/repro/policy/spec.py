@@ -262,6 +262,25 @@ class PolicySpec:
             return self.replication.k
         return 1
 
+    def with_geometry(self, k: int, m: int | None = None) -> "PolicySpec":
+        """This policy with its fan-out resized: RS(k, m) for erasure
+        specs, k replicas for replication specs — the second actuator of
+        the control plane's autoscaler (``repro.control``), which picks
+        the cheapest fan-out meeting an SLO."""
+        if self.erasure is not None:
+            e = dataclasses.replace(
+                self.erasure, k=k, m=self.erasure.m if m is None else m
+            )
+            return dataclasses.replace(self, erasure=e)
+        if self.replication is not None:
+            if m is not None:
+                raise ValueError("replication fan-out has no parity count m")
+            r = dataclasses.replace(self.replication, k=k)
+            return dataclasses.replace(self, replication=r)
+        raise ValueError(
+            "policy has no replication/erasure stage; nothing to resize"
+        )
+
     def describe(self) -> str:
         stages = [self.op, self.transport, type(self.auth).__name__]
         if self.replication is not None:

@@ -30,6 +30,12 @@ class Simulator:
     def after(self, delay: float, fn: Callable[[], None]) -> None:
         self.at(self.now + delay, fn)
 
+    def pending(self) -> int:
+        """Events still scheduled (lets a periodic sampler — e.g. the
+        telemetry tick — stop once it would be the only event left,
+        instead of keeping the run alive forever)."""
+        return len(self._heap)
+
     def run(self, until: float | None = None, max_events: int = 50_000_000) -> None:
         while self._heap:
             t, _, fn = self._heap[0]
@@ -102,6 +108,10 @@ class Pool:
         self.peak_queued = 0
         self.total_wait_ns: float = 0.0
 
+    def queued(self) -> int:
+        """Acquirers waiting for a unit right now (telemetry gauge)."""
+        return len(self._waiters)
+
     def acquire(self, fn: Callable[[], None]) -> None:
         """Invoke ``fn`` as soon as a unit is available (caller must
         eventually call :meth:`release`)."""
@@ -114,9 +124,27 @@ class Pool:
             self.peak_queued = max(self.peak_queued, len(self._waiters))
 
     def release(self) -> None:
-        if self._waiters:
+        if self._waiters and self.in_use <= self.capacity:
             fn, t_enq = self._waiters.pop(0)
             self.total_wait_ns += self.sim.now - t_enq
             self.sim.after(0.0, fn)  # hand over without changing count
         else:
+            # no waiters, or the pool was shrunk below its occupancy:
+            # the freed unit leaves service instead of being handed over
             self.in_use -= 1
+
+    def resize(self, capacity: int) -> None:
+        """Live-resize the pool (the control plane's HPU actuator).
+
+        Growing admits queued waiters immediately; shrinking lets
+        in-flight services finish and retires units as they release.
+        """
+        if capacity < 1:
+            raise ValueError(f"pool capacity must be >= 1, got {capacity}")
+        self.capacity = capacity
+        while self._waiters and self.in_use < self.capacity:
+            fn, t_enq = self._waiters.pop(0)
+            self.total_wait_ns += self.sim.now - t_enq
+            self.in_use += 1
+            self.peak = max(self.peak, self.in_use)
+            self.sim.after(0.0, fn)

@@ -125,6 +125,12 @@ class PsPINUnit:
         """Cumulative time packets spent queued for an HPU."""
         return self.hpus.total_wait_ns
 
+    def resize(self, num_hpus: int) -> None:
+        """Live-resize this unit's HPU pool (the autoscaler actuator for
+        within-run scaling; epoch-based scaling rebuilds the Env with a
+        new :class:`PsPINConfig` instead)."""
+        self.hpus.resize(num_hpus)
+
     def process(self, wire_size: int, spec: HandlerSpec) -> None:
         """Run the packet pipeline + handler for one received packet."""
         t_ready = self.sim.now + self.cfg.pipeline_ns(wire_size)

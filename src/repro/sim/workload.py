@@ -44,6 +44,17 @@ remain in flight — conservation (issued == completed + in_flight +
 dropped) holds under every failure mix, so no byte goes silently
 missing.
 
+Control-plane hooks (PR 5, :mod:`repro.control`): a
+:class:`~repro.control.Telemetry` passed to :class:`Workload` receives
+every issue/drop/completion in event-time windows plus periodic queue
+gauges (the ring the SLO autoscaler steers on);
+``Scenario.admission_GBps`` sheds arrivals through a global token bucket
+(counted as drops, conservation holds); ``PolicyLoad.pace_GBps`` shapes
+one load's injection through a per-load bucket (repair/rebuild traffic
+paced against the foreground — delayed, never lost), with
+``PolicyLoad.background`` routing its bytes into the telemetry ring's
+repair ledger.
+
 Everything is deterministic: a seeded ``random.Random`` drives arrivals,
 policy picks, and size draws, and the discrete-event core has no other
 nondeterminism, so the same :class:`Scenario` always produces the
@@ -104,17 +115,40 @@ class SizeDist:
             return self.large if rnd.random() < self.p_large else self.small
         raise ValueError(f"unknown size distribution {self.kind!r}")
 
+    def upper_bound(self) -> int:
+        """Largest payload this distribution can produce (admission
+        buckets must be at least this deep or the request can never be
+        admitted)."""
+        if self.kind == "fixed":
+            return self.mean
+        if self.kind == "lognormal":
+            return self.max_bytes
+        if self.kind == "bimodal":
+            return max(self.small, self.large)
+        raise ValueError(f"unknown size distribution {self.kind!r}")
+
 
 @dataclasses.dataclass
 class PolicyLoad:
     """One component of a mixed scenario: a policy (a
     :class:`repro.policy.PolicySpec` or preset name), its share of the
     request traffic, and its request-size distribution (None: the
-    scenario's ``size_dist`` / fixed ``size``)."""
+    scenario's ``size_dist`` / fixed ``size``).
+
+    ``pace_GBps`` shapes this load through a per-load token bucket
+    (:class:`repro.control.TokenBucket`): each request reserves its
+    payload bytes and its injection is *delayed* until the bucket's debt
+    is repaid — repair/rebuild traffic paced against the foreground.
+    ``background=True`` marks the load as background work: its completed
+    bytes land in the telemetry ring's ``repair_bytes`` (not foreground
+    goodput)."""
 
     spec: object                      # PolicySpec | preset name
     weight: float = 1.0
     size_dist: SizeDist | None = None
+    pace_GBps: float | None = None    # token-bucket injection shaping
+    pace_burst_bytes: int = 1 << 20   # bucket depth for a paced load
+    background: bool = False          # repair/rebuild traffic (telemetry)
 
 
 @dataclasses.dataclass
@@ -148,6 +182,10 @@ class Scenario:
     # mixed read/write extent sharing: reads draw their size from
     # completed writes (and are shed while nothing has been written yet)
     shared_extents: bool = False
+    # global token-bucket admission (bytes): requests arriving when the
+    # bucket is empty are shed and counted as drops (None == unlimited)
+    admission_GBps: float | None = None
+    admission_burst_bytes: int = 1 << 20
 
     def per_client_gap_ns(self, cfg: NetConfig | None = None) -> float:
         """Mean open-loop inter-arrival gap per client (``cfg``: the
@@ -161,9 +199,14 @@ class Scenario:
 
 
 class Metrics:
-    """Shared metrics sink: request ledger + queue-depth samples."""
+    """Shared metrics sink: request ledger + queue-depth samples.
 
-    def __init__(self) -> None:
+    With a :class:`repro.control.Telemetry` attached (``telemetry``),
+    every issue / drop / completion is also recorded into the windowed
+    event-time ring the control plane steers on."""
+
+    def __init__(self, telemetry=None) -> None:
+        self.telemetry = telemetry
         self.latencies_ns: list[float] = []
         self.issued = 0
         self.completed = 0
@@ -183,12 +226,16 @@ class Metrics:
         self.issued += 1
         if self.first_issue_ns is None:
             self.first_issue_ns = now
+        if self.telemetry is not None:
+            self.telemetry.record_issue(now)
 
-    def on_drop(self) -> None:
+    def on_drop(self, now: float | None = None) -> None:
         self.dropped += 1
+        if self.telemetry is not None and now is not None:
+            self.telemetry.record_drop(now)
 
     def on_complete(self, now: float, latency_ns: float, nbytes: int,
-                    op: str = "write") -> None:
+                    op: str = "write", background: bool = False) -> None:
         self.completed += 1
         self.latencies_ns.append(latency_ns)
         self.bytes_completed += nbytes
@@ -197,6 +244,9 @@ class Metrics:
         else:
             self.bytes_written += nbytes
         self.last_done_ns = now
+        if self.telemetry is not None:
+            self.telemetry.record_complete(now, latency_ns, nbytes,
+                                           background=background)
 
     @property
     def in_flight(self) -> int:
@@ -282,8 +332,10 @@ class Workload:
         scenario: Scenario,
         cfg: NetConfig | None = None,
         pcfg: PsPINConfig | None = None,
+        telemetry=None,
     ):
         self.sc = scenario
+        self.telemetry = telemetry
         self.env = Env(cfg, pcfg, failures=scenario.failures)
         sc = scenario
         if sc.policies:
@@ -311,13 +363,47 @@ class Workload:
         for pl in self.loads:
             acc += pl.weight / total_w
             self._cum_weights.append(acc)
-        self.metrics = Metrics()
+        self.metrics = Metrics(telemetry=telemetry)
         self.per_policy = [
             {"issued": 0, "completed": 0, "dropped": 0, "bytes": 0,
              "latencies_ns": []}
             for _ in self.loads
         ]
+        # control plane: global admission bucket + per-load pacing buckets
+        # (rate in bytes/ns == GB/s; the sim clock is nanoseconds)
+        self._admission = None
+        if sc.admission_GBps is not None:
+            from repro.control.governor import TokenBucket
+
+            # a request larger than the bucket depth could *never* be
+            # admitted (the level caps at the burst): reject the
+            # misconfiguration instead of silently shedding 100%
+            need = 0
+            for pl, proto in zip(self.loads, self.protos):
+                dist = pl.size_dist or sc.size_dist
+                bound = (dist.upper_bound() if dist is not None
+                         else proto.request_bytes)
+                need = max(need, bound)
+            if need > sc.admission_burst_bytes:
+                raise ValueError(
+                    f"admission_burst_bytes={sc.admission_burst_bytes} is "
+                    f"smaller than the largest possible request "
+                    f"({need} B); such requests would always be shed"
+                )
+            self._admission = TokenBucket(sc.admission_GBps,
+                                          sc.admission_burst_bytes)
+        self._pacers: list[object | None] = []
+        for pl in self.loads:
+            if pl.pace_GBps is not None:
+                from repro.control.governor import TokenBucket
+
+                self._pacers.append(TokenBucket(pl.pace_GBps,
+                                                pl.pace_burst_bytes))
+            else:
+                self._pacers.append(None)
         self._outstanding: dict[int, int] = {}
+        # cumulative network loss counters at the last telemetry sample
+        self._loss_seen = (0, 0)
         #: shared object space: payload sizes of completed writes, drawn
         #: from by read policies when ``scenario.shared_extents`` is set
         self.extents: list[int] = []
@@ -344,6 +430,18 @@ class Workload:
                 return i
         return len(self.loads) - 1
 
+    def _shed(self, i: int, after_done=None) -> None:
+        """Count one shed request (counted — no silent loss).  The
+        closed-loop continuation goes through the event queue so a long
+        run of sheds iterates instead of recursing."""
+        sim = self.env.sim
+        self.metrics.on_issue(sim.now)
+        self.per_policy[i]["issued"] += 1
+        self.per_policy[i]["dropped"] += 1
+        self.metrics.on_drop(sim.now)
+        if after_done is not None:
+            sim.after(0.0, after_done)
+
     def _issue(self, client: int, rnd: random.Random, after_done=None) -> None:
         sim = self.env.sim
         i = self._pick(rnd)
@@ -355,18 +453,53 @@ class Workload:
         if self.sc.shared_extents and op == "read":
             if not self.extents:
                 # nothing written yet: the read targets unpopulated space
-                # and is shed (counted — no silent loss).  The closed-loop
-                # continuation goes through the event queue so a long run
-                # of sheds iterates instead of recursing.
-                self.metrics.on_issue(sim.now)
-                self.per_policy[i]["issued"] += 1
-                self.per_policy[i]["dropped"] += 1
-                self.metrics.on_drop()
-                if after_done is not None:
-                    sim.after(0.0, after_done)
+                self._shed(i, after_done)
                 return
             size = self.extents[rnd.randrange(len(self.extents))]
         nbytes = proto.request_bytes if size is None else size
+        if self._admission is not None and not self._admission.try_take(
+                nbytes, sim.now):
+            if after_done is not None:
+                # closed loop: the client can be backpressured — hold the
+                # request until the bucket has refilled enough, then try
+                # again (tokens may have been taken by other clients in
+                # the meantime, so this re-checks rather than consumes).
+                # Shedding here would drain the whole remaining budget at
+                # one instant: the delay-0 continuation re-issues at the
+                # same sim time, where the bucket is still empty.
+                wait = self._admission.delay_until(nbytes, sim.now)
+                sim.after(
+                    max(wait, 1.0),
+                    lambda: self._issue_admitted(
+                        client, i, size, nbytes, after_done),
+                )
+                return
+            # open loop: arrivals cannot be pushed back — the request is
+            # shed before reaching the network (counted, no silent loss)
+            self._shed(i, after_done)
+            return
+        self._start_request(client, i, size, nbytes, after_done)
+
+    def _issue_admitted(self, client: int, i: int, size, nbytes: int,
+                        after_done) -> None:
+        """Closed-loop admission retry: take the tokens or wait again."""
+        sim = self.env.sim
+        if not self._admission.try_take(nbytes, sim.now):
+            wait = self._admission.delay_until(nbytes, sim.now)
+            sim.after(
+                max(wait, 1.0),
+                lambda: self._issue_admitted(
+                    client, i, size, nbytes, after_done),
+            )
+            return
+        self._start_request(client, i, size, nbytes, after_done)
+
+    def _start_request(self, client: int, i: int, size, nbytes: int,
+                       after_done) -> None:
+        sim = self.env.sim
+        proto = self.protos[i]
+        pl = self.loads[i]
+        op = self._op_of(proto)
         self.metrics.on_issue(sim.now)
         pp = self.per_policy[i]
         pp["issued"] += 1
@@ -374,7 +507,8 @@ class Workload:
 
         def done(res: Result) -> None:
             self._outstanding[client] -= 1
-            self.metrics.on_complete(sim.now, res.latency_ns, nbytes, op)
+            self.metrics.on_complete(sim.now, res.latency_ns, nbytes, op,
+                                     background=pl.background)
             if self.sc.shared_extents and op != "read":
                 self.extents.append(nbytes)
             pp["completed"] += 1
@@ -383,6 +517,15 @@ class Workload:
             if after_done is not None:
                 after_done()
 
+        pacer = self._pacers[i]
+        if pacer is not None:
+            # injection shaping: reserve the bytes now, inject once the
+            # bucket's debt is repaid (FIFO — later requests queue behind)
+            wait = pacer.reserve(nbytes, sim.now)
+            if wait > 0:
+                sim.after(wait,
+                          lambda: proto.issue(client, on_done=done, size=size))
+                return
         proto.issue(client, on_done=done, size=size)
 
     # -- arrival processes ---------------------------------------------------
@@ -437,7 +580,7 @@ class Workload:
                     # admission control: the arrival happened (issued) but
                     # is shed before reaching the network
                     self.metrics.on_issue(self.env.sim.now)
-                    self.metrics.on_drop()
+                    self.metrics.on_drop(self.env.sim.now)
                     return
                 self._issue(client, rnd)
 
@@ -468,6 +611,46 @@ class Workload:
             }
         return out
 
+    def _sample_telemetry(self) -> None:
+        """Record one gauge/loss sample at the current event time (the
+        loss counters are cumulative at the network, so deltas since the
+        previous sample are attributed to the current window)."""
+        tel, env = self.telemetry, self.env
+        units = env.pspin_units()
+        nodes = self.storage_nodes()
+        pkts, nbytes = env.net.packets_dropped, env.net.bytes_dropped
+        tel.sample(
+            env.sim.now,
+            hpu_queued=max((u.hpus.queued() for u in units), default=0),
+            hpu_in_use=max((u.hpus.in_use for u in units), default=0),
+            ingress_queued=max(
+                (env.net.node(s).ingress.queued() for s in nodes),
+                default=0,
+            ),
+            cpu_queued=max(
+                (c.queued() for c in env.host_cpus()), default=0
+            ),
+            lost_packets=pkts - self._loss_seen[0],
+            lost_bytes=nbytes - self._loss_seen[1],
+        )
+        self._loss_seen = (pkts, nbytes)
+
+    def _schedule_sampler(self) -> None:
+        """Periodic event-time gauge sampling into the telemetry ring.
+
+        The tick reschedules itself only while other events are pending,
+        so it never keeps the simulation alive on its own; ``run``
+        flushes one final sample so the trailing partial window (and
+        sub-window runs, where no tick ever fires) still reach the ring."""
+        tel, env = self.telemetry, self.env
+
+        def tick() -> None:
+            self._sample_telemetry()
+            if env.sim.pending() > 0:
+                env.sim.after(tel.window_ns, tick)
+
+        env.sim.after(tel.window_ns, tick)
+
     def run(self) -> dict:
         sc = self.sc
         for idx, client in enumerate(client_node_ids(sc.num_clients)):
@@ -476,7 +659,13 @@ class Workload:
                 self._schedule_closed(client, rnd)
             else:
                 self._schedule_open(client, rnd)
+        if self.telemetry is not None:
+            self._schedule_sampler()
         self.env.sim.run(until=sc.duration_ns)
+        if self.telemetry is not None:
+            # flush the trailing partial window (loss deltas + gauges
+            # since the last periodic tick)
+            self._sample_telemetry()
         storage_nodes = self.storage_nodes()
         self.metrics.finalize_queues(self.env, storage_nodes)
         rep = self.metrics.report()
@@ -507,6 +696,14 @@ class Workload:
                 "ingress_mean_wait_ns": (
                     sum(r.total_wait_ns for r in ingress)
                     / max(1, sum(r.acquires for r in ingress))
+                ),
+                # control plane: injection-shaping debt served and
+                # admission sheds (0 when no governor is configured)
+                "paced_wait_us": sum(
+                    b.total_wait for b in self._pacers if b is not None
+                ) / 1e3,
+                "admission_shed": (
+                    self._admission.shed if self._admission is not None else 0
                 ),
             }
         )

@@ -1,0 +1,455 @@
+"""Control-plane invariants: telemetry ring, governor, autoscaler, sweep.
+
+(a) token bucket — refill/admission/pacing arithmetic and determinism
+(b) telemetry — window attribution conserves the metrics ledger exactly;
+    the event-time sampler terminates and gauges are recorded
+(c) workload integration — admission sheds are counted (conservation
+    holds), pacing delays injection without losing requests, background
+    loads land in repair_bytes
+(d) autoscaler — SLO scoring, bisection convergence to the minimal HPU
+    count (within one doubling of a brute-force scan), determinism
+(e) engine — live Pool resize admits/retires correctly
+(f) sweep — quick artifact has the gated claim schema
+"""
+
+import dataclasses
+import math
+
+import pytest
+
+from repro.control import (
+    SLO,
+    Autoscaler,
+    RepairPacer,
+    Telemetry,
+    TokenBucket,
+)
+from repro.control.sweep import bench_rows, pacing_scenario, write_artifact
+from repro.sim.engine import Pool, Simulator
+from repro.sim.workload import (
+    KiB,
+    PolicyLoad,
+    Scenario,
+    SizeDist,
+    Workload,
+    run_scenario,
+)
+
+
+def _conserves(rep: dict) -> bool:
+    return rep["issued"] == rep["completed"] + rep["in_flight"] + rep["dropped"]
+
+
+# -- (a) token bucket --------------------------------------------------------
+
+
+def test_bucket_refills_at_rate():
+    b = TokenBucket(rate=2.0, burst=10.0)
+    assert b.try_take(10.0, now=0.0)          # drain the burst
+    assert not b.try_take(1.0, now=0.0)       # empty: shed
+    assert b.shed == 1
+    assert b.try_take(4.0, now=2.0)           # 2 time units * rate 2 == 4
+    assert not b.try_take(1.0, now=2.0)
+
+
+def test_bucket_reserve_paces_fifo():
+    b = TokenBucket(rate=1.0, burst=5.0)
+    assert b.reserve(5.0, now=0.0) == 0.0     # burst covers it
+    w1 = b.reserve(3.0, now=0.0)              # 3 tokens of debt
+    w2 = b.reserve(2.0, now=0.0)              # queues behind w1
+    assert w1 == pytest.approx(3.0)
+    assert w2 == pytest.approx(5.0)
+    assert b.total_wait == pytest.approx(8.0)
+
+
+def test_bucket_never_exceeds_burst():
+    b = TokenBucket(rate=100.0, burst=8.0)
+    b.try_take(8.0, now=0.0)
+    assert b.available(1e9) == pytest.approx(8.0)
+
+
+def test_bucket_validates():
+    with pytest.raises(ValueError):
+        TokenBucket(rate=0.0, burst=1.0)
+    with pytest.raises(ValueError):
+        TokenBucket(rate=1.0, burst=0.0)
+
+
+def test_repair_pacer_sleeps_out_debt():
+    t = {"now": 0.0}
+    slept = []
+
+    def sleep(s):
+        slept.append(s)
+        t["now"] += s
+
+    pacer = RepairPacer(rate_MBps=1.0, burst_bytes=1e6,
+                        clock=lambda: t["now"], sleep=sleep)
+    assert pacer.throttle(1_000_000) == 0.0   # burst covers the first MB
+    wait = pacer.throttle(2_000_000)          # 2 s of debt at 1 MB/s
+    assert wait == pytest.approx(2.0)
+    assert slept == [pytest.approx(2.0)]
+    assert pacer.paced_bytes == 3_000_000
+
+
+# -- (b) telemetry ring ------------------------------------------------------
+
+
+def test_windows_conserve_ledger():
+    sc = Scenario(protocol="spin-write", size=64 * KiB, num_clients=4,
+                  requests_per_client=6, seed=2)
+    tel = Telemetry(window_ns=20_000.0)
+    w = Workload(sc, telemetry=tel)
+    rep = w.run()
+    assert sum(win.completed for win in tel.windows) == rep["completed"]
+    assert sum(win.issued for win in tel.windows) == rep["issued"]
+    assert sum(len(win.latencies_ns) for win in tel.windows) == rep["completed"]
+    assert sum(win.bytes for win in tel.windows) == w.metrics.bytes_completed
+    # the sampler ran and saw the HPU pool in use at least once
+    assert any(win.samples > 0 for win in tel.windows)
+    assert max(win.hpu_in_use_max for win in tel.windows) >= 1
+    # windows are strictly ordered
+    idxs = [win.index for win in tel.windows]
+    assert idxs == sorted(idxs) and len(set(idxs)) == len(idxs)
+
+
+def test_ring_is_bounded():
+    tel = Telemetry(window_ns=10.0, capacity=4)
+    for i in range(10):
+        tel.record_issue(i * 10.0)
+    assert len(tel.windows) == 4
+    assert tel.evicted == 6
+    assert [w.index for w in tel.windows] == [6, 7, 8, 9]
+
+
+def test_summary_skips_warmup():
+    tel = Telemetry(window_ns=10.0)
+    for i in range(10):
+        tel.record_complete(i * 10.0 + 5.0, latency_ns=100.0 * (10 - i),
+                            nbytes=1000)
+    full = tel.summary(warmup_frac=0.0)
+    steady = tel.summary(warmup_frac=0.5)
+    assert full["completed"] == 10
+    assert steady["completed"] == 5
+    # warmup windows held the slowest completions
+    assert steady["p99_ns"] < full["p99_ns"]
+
+
+def test_background_latencies_stay_out_of_p99():
+    """A paced rebuild's long transfers must not masquerade as
+    foreground tail latency in the SLO signal."""
+    tel = Telemetry(window_ns=10.0)
+    for i in range(8):
+        tel.record_complete(i * 10.0 + 1.0, latency_ns=100.0, nbytes=10)
+        tel.record_complete(i * 10.0 + 2.0, latency_ns=1e6, nbytes=1000,
+                            background=True)
+    summ = tel.summary(warmup_frac=0.0)
+    assert summ["completed"] == 16
+    assert summ["p99_ns"] == pytest.approx(100.0)
+    assert sum(w.bg_completed for w in tel.windows) == 8
+    assert summ["repair_GBps"] > 0
+    # goodput counts foreground bytes only
+    assert summ["goodput_GBps"] == pytest.approx(80 / 80.0)
+
+
+def test_summary_widens_when_warmup_eats_all_completions():
+    tel = Telemetry(window_ns=10.0)
+    tel.record_complete(5.0, latency_ns=123.0, nbytes=10)
+    for i in range(1, 10):
+        tel.record_issue(i * 10.0 + 5.0)  # later windows: no completions
+    summ = tel.summary(warmup_frac=0.5)
+    assert summ["p99_ns"] == pytest.approx(123.0)
+
+
+def test_telemetry_validates():
+    with pytest.raises(ValueError):
+        Telemetry(window_ns=0.0)
+
+
+# -- (c) workload integration -----------------------------------------------
+
+
+def test_admission_sheds_and_conserves():
+    base = Scenario(protocol="spin-write", size=256 * KiB, num_clients=4,
+                    arrival="poisson", offered_load_GBps=40.0,
+                    requests_per_client=10, seed=4)
+    free = run_scenario(base)
+    throttled = run_scenario(
+        dataclasses.replace(base, admission_GBps=2.0,
+                            admission_burst_bytes=256 * KiB)
+    )
+    assert _conserves(free) and _conserves(throttled)
+    assert throttled["admission_shed"] > 0
+    assert throttled["dropped"] >= throttled["admission_shed"]
+    assert throttled["completed"] < free["completed"]
+
+
+def test_closed_loop_admission_backpressures_not_drains():
+    """Closed-loop clients are elastic: an empty admission bucket delays
+    the next request until refill instead of shedding — nothing is
+    dropped and the aggregate rate is pinned to the configured budget
+    (an earlier bug drained the whole remaining budget at one instant)."""
+    base = Scenario(protocol="spin-write", size=256 * KiB, num_clients=4,
+                    requests_per_client=8, seed=4)
+    free = run_scenario(base)
+    held = run_scenario(
+        dataclasses.replace(base, admission_GBps=5.0,
+                            admission_burst_bytes=1 << 20)
+    )
+    assert _conserves(free) and _conserves(held)
+    assert held["dropped"] == 0
+    assert held["completed"] == free["completed"]
+    # the run is stretched to the admitted rate (well below the ~48 GB/s
+    # unthrottled goodput, with slack for the initial burst)
+    assert held["goodput_GBps"] < 8.0
+    assert held["sim_ns"] > free["sim_ns"]
+
+
+def test_telemetry_counts_loss_including_final_window():
+    """Every lost packet the network counted reaches the ring — the
+    final flush covers drops after the last periodic tick and runs
+    shorter than one window."""
+    from repro.policy import FailureModel
+
+    sc = Scenario(protocol="spin-write", size=64 * KiB, num_clients=4,
+                  requests_per_client=6, seed=2,
+                  failures=FailureModel(loss=((1, 0.3),), seed=7))
+    tel = Telemetry(window_ns=1e9)  # one window: only the flush samples
+    w = Workload(sc, telemetry=tel)
+    rep = w.run()
+    assert rep["lost_packets"] > 0
+    assert sum(win.lost_packets for win in tel.windows) == rep["lost_packets"]
+    assert sum(win.lost_bytes for win in tel.windows) == rep["lost_bytes"]
+
+
+def test_admission_rejects_undersized_burst():
+    # a 2 MiB request can never pass a 1 MiB-deep bucket: constructing
+    # the workload must fail loudly instead of shedding 100% silently
+    sc = Scenario(protocol="spin-write", size=2 << 20,
+                  admission_GBps=40.0, admission_burst_bytes=1 << 20)
+    with pytest.raises(ValueError, match="admission_burst_bytes"):
+        Workload(sc)
+    dist = Scenario(protocol="spin-write", size=64 * KiB,
+                    size_dist=SizeDist("lognormal", mean=64 * KiB,
+                                       max_bytes=4 << 20),
+                    admission_GBps=40.0, admission_burst_bytes=1 << 20)
+    with pytest.raises(ValueError, match="admission_burst_bytes"):
+        Workload(dist)
+
+
+def test_pacing_delays_without_loss():
+    unpaced = run_scenario(pacing_scenario(None, quick=True))
+    paced = run_scenario(pacing_scenario(4.0, quick=True))
+    assert _conserves(unpaced) and _conserves(paced)
+    # pacing delays injection; it never sheds
+    assert paced["completed"] == unpaced["completed"]
+    assert paced["paced_wait_us"] > 0.0
+    assert unpaced["paced_wait_us"] == 0.0
+    fg_paced = paced["per_policy"]["spin-write"]["p99_us"]
+    fg_unpaced = unpaced["per_policy"]["spin-write"]["p99_us"]
+    assert fg_paced < fg_unpaced
+
+
+def test_background_bytes_land_in_repair():
+    sc = Scenario(
+        policies=[
+            PolicyLoad("spin-write", 1.0, SizeDist("fixed", mean=64 * KiB)),
+            PolicyLoad("spin-triec", 1.0, SizeDist("fixed", mean=256 * KiB),
+                       background=True),
+        ],
+        size=64 * KiB, num_clients=2, requests_per_client=4,
+        k=3, m=2, seed=6,
+    )
+    tel = Telemetry(window_ns=20_000.0)
+    w = Workload(sc, telemetry=tel)
+    rep = w.run()
+    repair = sum(win.repair_bytes for win in tel.windows)
+    fg = sum(win.bytes for win in tel.windows)
+    assert repair == rep["per_policy"]["spin-triec"]["bytes"]
+    assert fg == rep["per_policy"]["spin-write"]["bytes"]
+    assert repair > 0 and fg > 0
+
+
+def test_paced_workload_deterministic():
+    sc = pacing_scenario(4.0, quick=True)
+    assert run_scenario(sc) == run_scenario(sc)
+
+
+# -- (d) SLO + autoscaler ----------------------------------------------------
+
+
+def test_slo_scoring():
+    slo = SLO(p99_ns=100.0, goodput_frac=0.5)
+    assert slo.attainment(50.0, 25.0, 50.0) == pytest.approx(1.0)
+    assert slo.attainment(200.0, 50.0, 50.0) == pytest.approx(0.5)
+    assert slo.binding(200.0, 50.0, 50.0) == "p99"
+    assert slo.binding(10.0, 5.0, 50.0) == "goodput"
+    assert SLO().attainment(1e9, 0.0, 50.0) == math.inf
+    assert slo.attainment(math.nan, 25.0, 50.0) == 0.0
+
+
+def test_autoscaler_validates():
+    with pytest.raises(ValueError):
+        Autoscaler(SLO(p99_ns=1.0), hpu_min=0)
+    with pytest.raises(ValueError):
+        Autoscaler(SLO(p99_ns=1.0), hpu_min=8, hpu_max=4)
+
+
+TRIEC_SC = Scenario(protocol="spin-triec", size=256 * KiB, num_clients=4,
+                    requests_per_client=4, k=3, m=2, seed=3)
+TRIEC_SLO = SLO(p99_ns=150_000.0)
+
+
+def test_autoscaler_converges_to_minimum():
+    scaler = Autoscaler(TRIEC_SLO, hpu_max=256)
+    res = scaler.run(TRIEC_SC, start_hpus=8)
+    assert res.met
+    # the converged count meets the SLO...
+    assert scaler.run_epoch(TRIEC_SC, res.num_hpus).met
+    # ...and one HPU fewer violates it (true minimality, not an upper
+    # bound) unless we bottomed out
+    if res.num_hpus > scaler.hpu_min:
+        assert not scaler.run_epoch(TRIEC_SC, res.num_hpus - 1).met
+
+
+def test_autoscaler_within_doubling_of_static_scan():
+    scaler = Autoscaler(TRIEC_SLO, hpu_max=256)
+    static = next(
+        h for h in (1, 2, 4, 8, 16, 32, 64, 128, 256)
+        if scaler.run_epoch(TRIEC_SC, h).met
+    )
+    res = scaler.run(TRIEC_SC, start_hpus=32)
+    assert res.met and res.num_hpus <= 2 * static
+
+
+def test_autoscaler_reports_unattainable():
+    scaler = Autoscaler(SLO(p99_ns=1.0), hpu_max=4, max_epochs=6)
+    res = scaler.run(TRIEC_SC, start_hpus=1)
+    assert not res.met
+    assert res.num_hpus == 4
+
+
+def test_autoscaler_deterministic():
+    scaler = Autoscaler(TRIEC_SLO, hpu_max=256)
+    a = scaler.run(TRIEC_SC, start_hpus=8)
+    b = Autoscaler(TRIEC_SLO, hpu_max=256).run(TRIEC_SC, start_hpus=8)
+    assert a.num_hpus == b.num_hpus
+    assert [(e.num_hpus, e.attainment) for e in a.epochs] == [
+        (e.num_hpus, e.attainment) for e in b.epochs
+    ]
+
+
+def test_pick_fanout_returns_cheapest():
+    scaler = Autoscaler(SLO(p99_ns=300_000.0), hpu_max=256)
+    best, res, all_h = scaler.pick_fanout(TRIEC_SC, [(3, 2), (6, 3)])
+    assert best in all_h and res.met
+    assert res.num_hpus == min(all_h.values())
+
+
+def test_fanout_resizes_policy_spec_loads():
+    from repro.policy import PolicySpec, RS, SpongeAuth
+
+    spec = PolicySpec("spin", SpongeAuth(), erasure=RS(4, 2, "spin"))
+    sc = Scenario(
+        policies=[
+            PolicyLoad(spec, 1.0),
+            PolicyLoad("spin-write", 1.0),  # no fan-out: must pass through
+        ],
+        size=64 * KiB, num_clients=2, requests_per_client=2, seed=1,
+    )
+    out = Autoscaler._scenario_with_geometry(sc, 6, 3)
+    assert out.k == 6 and out.m == 3
+    assert out.policies[0].spec.erasure.k == 6
+    assert out.policies[0].spec.erasure.m == 3
+    assert out.policies[1].spec == "spin-write"
+    # the resized scenario actually compiles and runs
+    rep = run_scenario(out)
+    assert _conserves(rep) and rep["completed"] > 0
+
+
+def test_with_geometry_semantics():
+    from repro.policy import Flat, NoAuth, PolicySpec, RS, SpongeAuth, Tree
+
+    ec = PolicySpec("spin", SpongeAuth(), erasure=RS(4, 2, "spin"))
+    assert ec.with_geometry(6, 3).erasure == RS(6, 3, "spin")
+    assert ec.with_geometry(10).erasure == RS(10, 2, "spin")  # m kept
+    repl = PolicySpec("spin", SpongeAuth(), replication=Tree(2))
+    assert repl.with_geometry(4).replication.k == 4
+    with pytest.raises(ValueError):
+        repl.with_geometry(4, 2)  # replication has no parity count
+    with pytest.raises(ValueError):
+        PolicySpec("rdma", NoAuth()).with_geometry(2)  # nothing to resize
+    assert PolicySpec("rdma", NoAuth(), Flat(2)).with_geometry(3).replication.k == 3
+
+
+# -- (e) live pool resize ----------------------------------------------------
+
+
+def test_pool_resize_grow_admits_waiters():
+    sim = Simulator()
+    pool = Pool(sim, capacity=1)
+    ran = []
+    pool.acquire(lambda: ran.append("a"))
+    pool.acquire(lambda: ran.append("b"))   # queued
+    assert ran == ["a"] and pool.queued() == 1
+    pool.resize(2)
+    sim.run()
+    assert ran == ["a", "b"]
+    assert pool.in_use == 2 and pool.peak == 2
+
+
+def test_pspin_unit_live_resize():
+    from repro.sim.protocols import Env
+
+    env = Env()
+    unit = env.pspin(1)
+    ran = []
+    for _ in range(unit.hpus.capacity):
+        unit.hpus.acquire(lambda: ran.append("x"))
+    unit.hpus.acquire(lambda: ran.append("queued"))
+    assert unit.hpus.queued() == 1
+    unit.resize(unit.hpus.capacity + 1)
+    env.sim.run()
+    assert ran[-1] == "queued" and unit.hpus.queued() == 0
+
+
+def test_pool_resize_shrink_retires_on_release():
+    sim = Simulator()
+    pool = Pool(sim, capacity=2)
+    pool.acquire(lambda: None)
+    pool.acquire(lambda: None)
+    pool.resize(1)
+    pool.release()
+    assert pool.in_use == 1                 # retired, not handed over
+    ran = []
+    pool.acquire(lambda: ran.append("c"))   # queued at the new capacity
+    assert pool.queued() == 1
+    pool.release()
+    sim.run()
+    assert ran == ["c"]
+    with pytest.raises(ValueError):
+        pool.resize(0)
+
+
+# -- (f) sweep artifact schema ----------------------------------------------
+
+
+@pytest.mark.slow
+def test_quick_sweep_claims_schema(tmp_path):
+    rows, claims = bench_rows(quick=True)
+    assert rows
+    for key in (
+        "fig16_goodput_frac", "fig16_saturation_gain",
+        "fig16_knee_within_doubling", "autoscale_within_doubling",
+        "pacing_slo_p99_us", "paced_fg_p99_us", "unpaced_fg_p99_us",
+        "pacing_holds_slo",
+    ):
+        assert key in claims, key
+    assert claims["autoscale_within_doubling"] >= 3
+    assert claims["pacing_holds_slo"]
+    out = tmp_path / "control.json"
+    write_artifact(rows, claims, str(out), {"quick": True})
+    import json
+
+    doc = json.loads(out.read_text())
+    assert doc["bench"] == "control" and doc["claims"] and doc["rows"]

@@ -1,6 +1,6 @@
 """Anchor-drift gate: deterministic-model anchors + benchmark floors.
 
-Four checks, each with a readable diff on failure:
+Five checks, each with a readable diff on failure:
 
   1. policy latency anchors — re-runs every preset/size recorded in
      ``tests/data/policy_anchors.json`` through the timed plane (the sim
@@ -12,13 +12,21 @@ Four checks, each with a readable diff on failure:
      with one failed node stays <= ``--degraded-ceiling`` x the healthy
      spin-read, and NIC-side reconstruction holds >= ``--offload-floor`` x
      over the host-CPU path;
-  4. ``BENCH_mixed.json`` — schema sanity (rows present, goodput > 0).
+  4. ``BENCH_mixed.json`` — schema sanity (rows present, goodput > 0);
+  5. ``BENCH_control.json`` claims — the Fig. 16 reproduction: the
+     goodput-vs-HPUs curve saturates at >= ``--fig16-floor`` of line
+     rate with the knee within one doubling of the analytic handler
+     model, the SLO autoscaler converges within one doubling of the
+     static-optimal HPU count for >= 3 PolicySpec presets, and paced
+     background repair keeps the foreground p99 within the configured
+     SLO while the unpaced stream violates it.
 
 Usage (CI invokes this as its own workflow step):
 
   PYTHONPATH=src python tools/check_anchors.py [--repo DIR]
       [--rel-tol 1e-9] [--dataplane-floor 2.0]
       [--degraded-ceiling 2.0] [--offload-floor 2.0]
+      [--fig16-floor 0.85]
 
 Exit code 0 == no drift.
 """
@@ -118,6 +126,62 @@ def check_mixed(path: str) -> list[str]:
     return errors
 
 
+def check_control(path: str, fig16_floor: float) -> list[str]:
+    if not os.path.exists(path):
+        return [f"  missing artifact {path}"]
+    with open(path) as f:
+        doc = json.load(f)
+    claims = doc.get("claims", {})
+    errors = []
+    frac = claims.get("fig16_goodput_frac")
+    if frac is None:
+        errors.append("  claim fig16_goodput_frac missing")
+    elif frac < fig16_floor:
+        errors.append(
+            f"  fig16 goodput saturates at {frac:.3f} of line rate "
+            f"(< floor {fig16_floor:.2f})"
+        )
+    gain = claims.get("fig16_saturation_gain")
+    if gain is None:
+        errors.append("  claim fig16_saturation_gain missing")
+    elif gain > 1.05:
+        errors.append(
+            f"  fig16 curve still gaining {gain:.3f}x at the last HPU "
+            f"doubling (not saturated)"
+        )
+    if not claims.get("fig16_knee_within_doubling"):
+        errors.append(
+            f"  fig16 knee ({claims.get('fig16_knee_hpus')} HPUs) not "
+            f"within a doubling of the analytic model "
+            f"({claims.get('fig16_model_knee_hpus')} HPUs)"
+        )
+    within = claims.get("autoscale_within_doubling", 0)
+    if within < 3:
+        errors.append(
+            f"  autoscaler within one doubling of static-optimal for only "
+            f"{within} presets (< 3): "
+            f"{claims.get('autoscale_presets')}"
+        )
+    slo = claims.get("pacing_slo_p99_us")
+    paced = claims.get("paced_fg_p99_us")
+    unpaced = claims.get("unpaced_fg_p99_us")
+    if None in (slo, paced, unpaced):
+        errors.append("  pacing claims missing")
+    else:
+        if paced > slo:
+            errors.append(
+                f"  paced repair: foreground p99 {paced:.1f} us exceeds "
+                f"the {slo:.1f} us SLO"
+            )
+        if unpaced <= slo:
+            errors.append(
+                f"  unpaced repair no longer violates the SLO "
+                f"({unpaced:.1f} us <= {slo:.1f} us) — the experiment "
+                f"lost its contrast"
+            )
+    return errors
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--repo", default=REPO)
@@ -130,6 +194,8 @@ def main() -> int:
                     help="max degraded/healthy read ratio at RS(3,2) f=1")
     ap.add_argument("--offload-floor", type=float, default=2.0,
                     help="min NIC-over-host degraded reconstruction ratio")
+    ap.add_argument("--fig16-floor", type=float, default=0.85,
+                    help="min saturated goodput as a fraction of line rate")
     args = ap.parse_args()
 
     checks = [
@@ -144,6 +210,9 @@ def main() -> int:
             args.degraded_ceiling, args.offload_floor)),
         ("BENCH_mixed.json sanity", check_mixed(
             os.path.join(args.repo, "BENCH_mixed.json"))),
+        ("BENCH_control.json claims", check_control(
+            os.path.join(args.repo, "BENCH_control.json"),
+            args.fig16_floor)),
     ]
     failed = False
     for title, errors in checks:
