@@ -1,0 +1,183 @@
+"""Consistency-aware replication benchmark: NIC chain vs host chain vs ABD.
+
+Sweeps the timed consistency pipelines over payload size x fault state:
+chain replication with per-hop forwarding on the NIC (``chain-spin-write``)
+against the host-CPU chain (``chain-host-write``, PCIe + host-notify detour
+per hop), CRAQ-style reads, and the ABD quorum register.  One
+functional-plane section replays the same protocols as real versioned
+handlers under seeded faults and proves every history linearizable with
+the Wing-Gong checker (``repro.verify.linearize``).
+
+The artifact ``BENCH_replication.json`` carries the gated claims:
+
+  * ``chain_nic_over_host_healthy`` — NIC-offloaded chain replication
+    commits >= 1.5x faster than the host-CPU chain at 64 KiB;
+  * ``chain_nic_over_host_f1`` — the edge survives one crashed replica
+    (the chain reconfigures around it);
+  * ``linearizable_runs`` / ``all_linearizable`` — every functional-plane
+    history across the seeded crash x loss x straggler grid checked out.
+
+Usage:
+
+  PYTHONPATH=src python benchmarks/replication.py [--k N] [--quick]
+      [--json BENCH_replication.json]
+
+``benchmarks/run.py --replication`` runs the same sweep and always writes
+the ``BENCH_replication.json`` artifact (the cross-PR regression anchor).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.policy import FailureModel  # noqa: E402
+from repro.sim.protocols import run_under_failures  # noqa: E402
+
+KiB = 1024
+SIZES = (4 * KiB, 64 * KiB, 256 * KiB)
+CLAIM_SIZE = 64 * KiB
+
+
+def latency_rows(k: int = 4, sizes=SIZES) -> tuple[list[tuple], dict]:
+    """Timed-plane sweep: write/read presets x size x fault state."""
+    rows: list[tuple] = []
+    claims: dict[str, float] = {}
+    f1 = FailureModel(crashed=(2,))
+    straggler = FailureModel(slow=((k, 6.0),))
+    for size in sizes:
+        lat = {}
+        for preset in ("chain-spin-write", "chain-host-write",
+                       "abd-spin-write", "chain-spin-read",
+                       "abd-spin-read"):
+            lat[preset] = run_under_failures(preset, size, k=k).latency_ns
+            rows.append((f"replication/{preset}/k{k}/{size // KiB}KiB",
+                         round(lat[preset] / 1e3, 2), "healthy"))
+        for preset in ("chain-spin-write", "chain-host-write"):
+            ns = run_under_failures(preset, size, k=k,
+                                    failures=f1).latency_ns
+            lat[preset + "/f1"] = ns
+            rows.append((f"replication/{preset}/k{k}/{size // KiB}KiB/f1",
+                         round(ns / 1e3, 2),
+                         f"x{ns / lat[preset]:.2f}_vs_healthy"))
+        for preset in ("chain-spin-write", "abd-spin-write"):
+            ns = run_under_failures(preset, size, k=k,
+                                    failures=straggler).latency_ns
+            rows.append(
+                (f"replication/{preset}/k{k}/{size // KiB}KiB/slow-tail",
+                 round(ns / 1e3, 2), f"x{ns / lat[preset]:.2f}_vs_healthy"))
+        if size == CLAIM_SIZE:
+            claims["chain_nic_over_host_healthy"] = round(
+                lat["chain-host-write"] / lat["chain-spin-write"], 3)
+            claims["chain_nic_over_host_f1"] = round(
+                lat["chain-host-write/f1"] / lat["chain-spin-write/f1"], 3)
+    return rows, claims
+
+
+#: functional-plane fault grid (replica ids are 1..3)
+FAULT_GRID = (
+    ("healthy", {}),
+    ("crash-tail", {"crashes": ((40, 3),)}),
+    ("crash-head", {"crashes": ((40, 1),)}),
+    ("loss", {"loss": {2: 0.2}}),
+    ("straggler", {"slow": {3: 6.0}}),
+    ("combined", {"crashes": ((60, 2),), "loss": {1: 0.1},
+                  "slow": {3: 4.0}}),
+)
+
+
+def linearizability_rows(seeds=(0, 1, 2)) -> tuple[list[tuple], dict]:
+    """Functional-plane proof: run both protocols across the fault grid,
+    check every history.  The 'latency' column is wall-clock us for the
+    run+check; the derived column is the verdict."""
+    import random
+    import time
+
+    from repro.core.handlers import ReplicationHarness
+    from repro.verify.linearize import check_records
+
+    def workload(seed, nclients=3, nops=8, keys=(1, 2)):
+        rng = random.Random(seed)
+        return [[("write", rng.choice(keys), (c + 1) * 10_000 + i)
+                 if rng.random() < 0.5 else ("read", rng.choice(keys), None)
+                 for i in range(nops)] for c in range(nclients)]
+
+    rows: list[tuple] = []
+    runs = ok = ops = 0
+    for kind in ("chain", "abd"):
+        for fname, fault in FAULT_GRID:
+            t0 = time.perf_counter()
+            verdicts = []
+            for seed in seeds:
+                h = ReplicationHarness(kind, 3, seed=seed, **fault)
+                for client_ops in workload(seed):
+                    h.add_client(client_ops)
+                res = check_records(h.run().records)
+                runs += 1
+                ok += res.ok
+                ops += res.checked
+                verdicts.append(res.ok)
+            dt_us = (time.perf_counter() - t0) * 1e6
+            verdict = ("linearizable" if all(verdicts)
+                       else "VIOLATION")
+            rows.append((f"replication/linearize/{kind}/{fname}",
+                         round(dt_us, 1), verdict))
+    claims = {"linearizable_runs": runs, "linearizable_ok": ok,
+              "all_linearizable": ok == runs, "ops_checked": ops}
+    return rows, claims
+
+
+def bench_rows(k: int = 4, quick: bool = False) -> tuple[list[tuple], dict]:
+    sizes = (CLAIM_SIZE,) if quick else SIZES
+    rows, claims = latency_rows(k=k, sizes=sizes)
+    lrows, lclaims = linearizability_rows(seeds=(0,) if quick else (0, 1, 2))
+    rows += lrows
+    claims.update(lclaims)
+    return rows, claims
+
+
+def write_artifact(rows: list[tuple], claims: dict, out: str,
+                   config: dict | None = None) -> None:
+    with open(out, "w") as f:
+        json.dump(
+            {
+                "bench": "replication",
+                "metric": "us_per_call/verdict",
+                "config": config or {},
+                "claims": claims,
+                "rows": [
+                    {"name": n, "us_per_call": u, "derived": d}
+                    for n, u, d in rows
+                ],
+            },
+            f,
+            indent=1,
+        )
+    print(f"# wrote {out}", file=sys.stderr)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--k", type=int, default=4,
+                    help="chain length / quorum size for the timed sweep")
+    ap.add_argument("--quick", action="store_true",
+                    help="small sweep for smoke tests")
+    ap.add_argument("--json", default=None, metavar="OUT")
+    args = ap.parse_args()
+    rows, claims = bench_rows(k=args.k, quick=args.quick)
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us},{derived}")
+    for key, val in sorted(claims.items()):
+        print(f"# claim {key} = {val}", file=sys.stderr)
+    if args.json:
+        write_artifact(rows, claims, args.json,
+                       {"k": args.k, "quick": args.quick})
+
+
+if __name__ == "__main__":
+    main()

@@ -4,8 +4,9 @@ Prints ``name,us_per_call,derived`` CSV rows.  Usage:
 
   PYTHONPATH=src python -m benchmarks.run [--only fig6,fig15] [--roofline]
                                           [--contention] [--mixed]
-                                          [--degraded] [--autoscale]
-                                          [--all] [--json OUT]
+                                          [--degraded] [--replication]
+                                          [--autoscale] [--all]
+                                          [--json OUT]
 
 ``--contention`` appends the multi-client sweep (p99 latency / goodput per
 client count; see benchmarks/contention.py for the full CLI).  ``--mixed``
@@ -16,7 +17,10 @@ repair sweep (see benchmarks/degraded.py) and always writes its
 ``BENCH_degraded.json`` artifact.  ``--autoscale`` appends the
 control-plane sweep (Fig. 16 goodput-vs-HPUs, SLO autoscaler vs static
 optimum, repair pacing; see benchmarks/autoscale.py) and always writes
-its ``BENCH_control.json`` artifact.  ``--all`` runs every suite above
+its ``BENCH_control.json`` artifact.  ``--replication`` appends the consistency-aware replication
+sweep (NIC chain vs host chain vs ABD, plus the functional-plane
+linearizability proof; see benchmarks/replication.py) and always writes
+its ``BENCH_replication.json`` artifact.  ``--all`` runs every suite above
 (plus the roofline table) and writes one combined manifest
 (``BENCH_all.json`` by default): every emitted row plus the paths of all
 artifacts written in the run.  ``--json`` additionally writes every
@@ -78,6 +82,14 @@ def main() -> None:
                     metavar="OUT", help="artifact path for --degraded")
     ap.add_argument("--degraded-quick", action="store_true",
                     help="small degraded sweep (CI smoke)")
+    ap.add_argument("--replication", action="store_true",
+                    help="also run the consistency-aware replication "
+                         "sweep (chain/ABD + linearizability proof) and "
+                         "write BENCH_replication.json")
+    ap.add_argument("--replication-out", default="BENCH_replication.json",
+                    metavar="OUT", help="artifact path for --replication")
+    ap.add_argument("--replication-quick", action="store_true",
+                    help="small replication sweep (CI smoke)")
     ap.add_argument("--autoscale", action="store_true",
                     help="also run the control-plane sweep (Fig. 16 "
                          "scaling, SLO autoscaler, repair pacing) and "
@@ -102,6 +114,7 @@ def main() -> None:
         args.contention = True
         args.mixed = True
         args.degraded = True
+        args.replication = True
         args.autoscale = True
     filters = [f for f in args.only.split(",") if f]
 
@@ -145,6 +158,16 @@ def main() -> None:
         degraded_artifact(drows, claims, args.degraded_out,
                           {"quick": args.degraded_quick})
         artifacts["degraded"] = args.degraded_out
+    if args.replication:
+        from benchmarks.replication import bench_rows as repl_rows
+        from benchmarks.replication import write_artifact as repl_artifact
+
+        rrows, rclaims = repl_rows(quick=args.replication_quick)
+        for name, us, derived in rrows:
+            emit(name, us, derived)
+        repl_artifact(rrows, rclaims, args.replication_out,
+                      {"quick": args.replication_quick})
+        artifacts["replication"] = args.replication_out
     if args.autoscale:
         from repro.control.sweep import bench_rows as control_rows
         from repro.control.sweep import write_artifact as control_artifact

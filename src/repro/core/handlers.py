@@ -523,6 +523,501 @@ def _control_packet(greq_id: int, op: OpType) -> Packet:
 
 
 # ---------------------------------------------------------------------------
+# Consistency-axis harness: chain replication (CRAQ reads) and ABD quorums
+# over Router nodes, with every operation logged for the linearizability
+# checker (repro.verify.linearize).
+# ---------------------------------------------------------------------------
+
+
+class HistoryLog:
+    """Operation history with unique, monotonically increasing logical
+    timestamps.  Every invoke/response is one record; the checker
+    (:func:`repro.verify.linearize.check_history`) consumes the records
+    directly."""
+
+    def __init__(self):
+        self._t = 0
+        self.records: list[dict] = []
+
+    def tick(self) -> int:
+        self._t += 1
+        return self._t
+
+    def invoke(self, client: int, op_id: int, kind: str, key: int,
+               value=None) -> None:
+        self.records.append({"ts": self.tick(), "ev": "invoke",
+                             "client": client, "op": op_id, "kind": kind,
+                             "key": key, "value": value})
+
+    def respond(self, client: int, op_id: int, value=None) -> None:
+        self.records.append({"ts": self.tick(), "ev": "ok",
+                             "client": client, "op": op_id, "value": value})
+
+
+@dataclasses.dataclass
+class RMsg:
+    """One consistency-protocol message (small control-plane header; the
+    payload bytes of the timed plane are abstracted to ``body``)."""
+
+    kind: str
+    src: int
+    rid: int
+    key: int
+    body: dict
+
+
+class ChainReplica:
+    """One chain-replication replica with CRAQ clean/dirty reads.
+
+    State per key: ``committed`` (version, value) — the clean value —
+    plus ``pending`` dirty versions awaiting the tail's commit ack.
+    Writes enter at the head (which assigns the version, idempotently
+    per rid so client retries are safe), forward down the chain, commit
+    at the tail, and the ack walks back up marking each copy clean.
+    Reads are served from any replica: clean keys locally, dirty keys
+    after a version query to the tail (CRAQ).
+
+    ``tail_bump=False`` is the mutation hook for the checker self-test:
+    the tail acks *without* committing, so acknowledged writes never
+    become visible at the tail — a stale-read bug the linearizability
+    checker must flag."""
+
+    def __init__(self, node_id: int, harness: "ReplicationHarness",
+                 tail_bump: bool = True):
+        self.node_id = node_id
+        self.h = harness
+        self.tail_bump = tail_bump
+        self.committed: dict[int, tuple[int, int]] = {}
+        self.pending: dict[int, dict[int, tuple[int, int]]] = {}
+        self._max_ver: dict[int, int] = {}
+        self._rid_vers: dict[int, int] = {}
+        harness.router.register(self)
+
+    def handle_packet(self, msg: RMsg) -> None:
+        self.h.enqueue(self, msg)
+
+    # -- write path ---------------------------------------------------------
+
+    def _next_ver(self, key: int) -> int:
+        v = self._max_ver.get(key, self.committed.get(key, (0, 0))[0]) + 1
+        self._max_ver[key] = v
+        return v
+
+    def _note_ver(self, key: int, ver: int) -> None:
+        if ver > self._max_ver.get(key, 0):
+            self._max_ver[key] = ver
+
+    def _commit(self, key: int, ver: int) -> None:
+        pend = self.pending.get(key)
+        cur = self.committed.get(key, (0, 0))[0]
+        if ver > cur and pend and ver in pend:
+            self.committed[key] = (ver, pend[ver][0])
+            cur = ver
+        if pend:
+            for v in [v for v in pend if v <= cur]:
+                del pend[v]
+            if not pend:
+                del self.pending[key]
+
+    def _ack_up(self, key: int, ver: int, rid: int, client: int) -> None:
+        view = self.h.view
+        if self.node_id not in view:
+            return
+        i = view.index(self.node_id)
+        body = {"ver": ver, "cl": client}
+        if i == 0:
+            self.h.send(self.node_id, client,
+                        RMsg("cwa", self.node_id, rid, key, body))
+        else:
+            self.h.send(self.node_id, view[i - 1],
+                        RMsg("ca", self.node_id, rid, key, body))
+
+    def _on_cw(self, m: RMsg) -> None:
+        view = self.h.view
+        if self.node_id not in view:
+            return
+        i = view.index(self.node_id)
+        ver = m.body.get("ver")
+        if ver is None:
+            # entering at the head: assign the version (idempotent per
+            # rid, so a client retry re-propagates the same version)
+            ver = self._rid_vers.get(m.rid)
+            if ver is None:
+                ver = self._next_ver(m.key)
+                self._rid_vers[m.rid] = ver
+        self._note_ver(m.key, ver)
+        self.pending.setdefault(m.key, {})[ver] = (m.body["val"], m.rid)
+        if i == len(view) - 1:
+            # the tail is the commit point
+            if self.tail_bump:
+                self._commit(m.key, ver)
+            else:
+                del self.pending[m.key][ver]  # mutation: ack, never commit
+                if not self.pending[m.key]:
+                    del self.pending[m.key]
+            self._ack_up(m.key, ver, m.rid, m.body["cl"])
+        else:
+            self.h.send(self.node_id, view[i + 1],
+                        RMsg("cw", self.node_id, m.rid, m.key,
+                             {"cl": m.body["cl"], "val": m.body["val"],
+                              "ver": ver}))
+
+    def _on_ca(self, m: RMsg) -> None:
+        # downstream committed: mark clean here, propagate upstream
+        self._commit(m.key, m.body["ver"])
+        self._ack_up(m.key, m.body["ver"], m.rid, m.body["cl"])
+
+    def become_tail(self) -> None:
+        """Chain reconfiguration: this replica is the new tail — commit
+        every pending (fully-replicated-on-the-live-chain) version."""
+        if not self.tail_bump:
+            return
+        for key in list(self.pending):
+            self._commit(key, max(self.pending[key]))
+
+    # -- read path (CRAQ) ---------------------------------------------------
+
+    def _serve(self, m: RMsg, ver: int, val: int) -> None:
+        self.h.send(self.node_id, m.body["cl"],
+                    RMsg("crr", self.node_id, m.rid, m.key,
+                         {"ver": ver, "val": val}))
+
+    def _on_cr(self, m: RMsg) -> None:
+        view = self.h.view
+        if self.node_id not in view:
+            return
+        is_tail = view[-1] == self.node_id
+        dirty = bool(self.pending.get(m.key))
+        if is_tail or not dirty:
+            ver, val = self.committed.get(m.key, (0, 0))
+            self._serve(m, ver, val)
+        else:
+            # dirty: resolve the committed version with the tail (CRAQ)
+            self.h.send(self.node_id, view[-1],
+                        RMsg("vq", self.node_id, m.rid, m.key,
+                             {"cl": m.body["cl"], "org": self.node_id}))
+
+    def _on_vq(self, m: RMsg) -> None:
+        ver = self.committed.get(m.key, (0, 0))[0]
+        self.h.send(self.node_id, m.body["org"],
+                    RMsg("vr", self.node_id, m.rid, m.key,
+                         {"cl": m.body["cl"], "ver": ver}))
+
+    def _on_vr(self, m: RMsg) -> None:
+        v = m.body["ver"]
+        cver, cval = self.committed.get(m.key, (0, 0))
+        if v > cver:
+            pend = self.pending.get(m.key, {})
+            if v in pend:
+                self._serve(m, v, pend[v][0])
+                return
+        # the local copy already advanced past the tail's answer (commit
+        # acks overtook the version reply): the newer committed value is
+        # a valid later linearization point within the read's interval.
+        self._serve(m, cver, cval)
+
+    _DISPATCH = {"cw": _on_cw, "ca": _on_ca, "cr": _on_cr,
+                 "vq": _on_vq, "vr": _on_vr}
+
+    def process(self, m: RMsg) -> None:
+        self._DISPATCH[m.kind](self, m)
+
+
+class AbdReplica:
+    """One ABD quorum replica: a per-key tagged register.  Tags are
+    ``(seq, client_id)`` pairs, totally ordered; writes and read
+    write-backs adopt strictly newer tags only."""
+
+    def __init__(self, node_id: int, harness: "ReplicationHarness"):
+        self.node_id = node_id
+        self.h = harness
+        self.reg: dict[int, tuple[tuple[int, int], int]] = {}
+        harness.router.register(self)
+
+    def handle_packet(self, msg: RMsg) -> None:
+        self.h.enqueue(self, msg)
+
+    def _get(self, key: int) -> tuple[tuple[int, int], int]:
+        return self.reg.get(key, ((0, 0), 0))
+
+    def _adopt(self, key: int, tag: tuple[int, int], val: int) -> None:
+        if tag > self._get(key)[0]:
+            self.reg[key] = (tag, val)
+
+    def process(self, m: RMsg) -> None:
+        reply = {"src": self.node_id}
+        if m.kind == "qt":            # write phase 1: tag query
+            reply["tag"] = self._get(m.key)[0]
+            out = "qtr"
+        elif m.kind == "w2":          # write phase 2: tagged write
+            self._adopt(m.key, tuple(m.body["tag"]), m.body["val"])
+            out = "w2a"
+        elif m.kind == "rq":          # read phase 1: tagged read
+            tag, val = self._get(m.key)
+            reply["tag"], reply["val"] = tag, val
+            out = "rqr"
+        else:                          # "wb" read phase 2: write-back
+            self._adopt(m.key, tuple(m.body["tag"]), m.body["val"])
+            out = "wba"
+        self.h.send(self.node_id, m.body["cl"],
+                    RMsg(out, self.node_id, m.rid, m.key, reply))
+
+
+class _HarnessClient:
+    """Shared client plumbing: op pumping, history logging, timeouts."""
+
+    def __init__(self, cid: int, harness: "ReplicationHarness", ops,
+                 timeout: int):
+        self.node_id = cid
+        self.h = harness
+        self.ops = list(ops)
+        self.timeout = timeout
+        self.idx = 0
+        self.inflight: dict | None = None
+        self.age = 0
+        self._rid = cid << 20
+        harness.router.register(self)
+
+    def handle_packet(self, msg: RMsg) -> None:
+        self.h.enqueue(self, msg)
+
+    @property
+    def done(self) -> bool:
+        return self.inflight is None and self.idx >= len(self.ops)
+
+    def pump(self) -> None:
+        if self.inflight is not None or self.idx >= len(self.ops):
+            return
+        kind, key, val = self.ops[self.idx]
+        self.idx += 1
+        self._rid += 1
+        self.h.log.invoke(self.node_id, self._rid, kind, key,
+                          val if kind == "write" else None)
+        self.inflight = {"op": self._rid, "kind": kind, "key": key,
+                         "val": val}
+        self.age = 0
+        self._send()
+
+    def on_step(self) -> None:
+        if self.inflight is None:
+            return
+        self.age += 1
+        if self.age >= self.timeout:
+            self.age = 0
+            self._retry()
+
+    def _finish(self, value=None) -> None:
+        self.h.log.respond(self.node_id, self.inflight["op"], value=value)
+        self.inflight = None
+
+
+class ChainClient(_HarnessClient):
+    """Chain/CRAQ client: writes to the head, reads round-robin over the
+    replicas (CRAQ serves from any); retries are idempotent (same rid)
+    and re-target the current view, which is how it rides over a chain
+    reconfiguration."""
+
+    def __init__(self, cid, harness, ops, timeout=60):
+        super().__init__(cid, harness, ops, timeout)
+        self._read_rr = cid  # de-phase the round-robin across clients
+
+    def _send(self) -> None:
+        f = self.inflight
+        view = self.h.view
+        if not view:
+            return
+        if f["kind"] == "write":
+            self.h.send(self.node_id, view[0],
+                        RMsg("cw", self.node_id, f["op"], f["key"],
+                             {"cl": self.node_id, "val": f["val"]}))
+        else:
+            if self.h.dirty_read:
+                tgt = view[self._read_rr % len(view)]
+                self._read_rr += 1
+            else:
+                tgt = view[-1]  # classic chain: tail-only reads
+            self.h.send(self.node_id, tgt,
+                        RMsg("cr", self.node_id, f["op"], f["key"],
+                             {"cl": self.node_id}))
+
+    _retry = _send
+
+    def process(self, m: RMsg) -> None:
+        f = self.inflight
+        if f is None or m.rid != f["op"]:
+            return  # stale reply from a retried op
+        if m.kind == "cwa" and f["kind"] == "write":
+            self._finish()
+        elif m.kind == "crr" and f["kind"] == "read":
+            self._finish(value=m.body["val"])
+
+
+class AbdClient(_HarnessClient):
+    """ABD client: two-phase writes (tag query at a majority, then tagged
+    write to all, complete at a majority) and two-phase reads (tagged
+    read at a majority, then write the max tag back to a majority)."""
+
+    def __init__(self, cid, harness, ops, timeout=60):
+        super().__init__(cid, harness, ops, timeout)
+        self.quorum = len(harness.replicas) // 2 + 1
+
+    def _broadcast(self, kind: str, body: dict) -> None:
+        f = self.inflight
+        for n in self.h.replicas:
+            self.h.send(self.node_id, n,
+                        RMsg(kind, self.node_id, f["op"], f["key"],
+                             {"cl": self.node_id, **body}))
+
+    def _send(self) -> None:
+        f = self.inflight
+        f["phase"] = 1
+        f["got"] = {}
+        f["acks"] = set()
+        self._broadcast("qt" if f["kind"] == "write" else "rq", {})
+
+    def _retry(self) -> None:
+        f = self.inflight
+        if f["phase"] == 1:
+            self._broadcast("qt" if f["kind"] == "write" else "rq", {})
+        elif f["kind"] == "write":
+            self._broadcast("w2", {"tag": f["tag"], "val": f["val"]})
+        else:
+            self._broadcast("wb", {"tag": f["tag"], "val": f["wbval"]})
+
+    def process(self, m: RMsg) -> None:
+        f = self.inflight
+        if f is None or m.rid != f["op"]:
+            return
+        if m.kind in ("qtr", "rqr") and f["phase"] == 1:
+            f["got"][m.body["src"]] = m.body
+            if len(f["got"]) < self.quorum:
+                return
+            f["phase"] = 2
+            if f["kind"] == "write":
+                maxseq = max(tuple(b["tag"])[0] for b in f["got"].values())
+                f["tag"] = (maxseq + 1, self.node_id)
+                self._broadcast("w2", {"tag": f["tag"], "val": f["val"]})
+            else:
+                best = max(f["got"].values(),
+                           key=lambda b: tuple(b["tag"]))
+                f["tag"] = tuple(best["tag"])
+                f["wbval"] = best["val"]
+                self._broadcast("wb", {"tag": f["tag"],
+                                       "val": f["wbval"]})
+        elif m.kind in ("w2a", "wba") and f["phase"] == 2:
+            f["acks"].add(m.body["src"])
+            if len(f["acks"]) >= self.quorum:
+                self._finish(value=None if f["kind"] == "write"
+                             else f["wbval"])
+
+
+class ReplicationHarness:
+    """Seeded concurrent executor for the consistency protocols.
+
+    Replica/client ``handle_packet`` calls enqueue; :meth:`step` delivers
+    one pending message chosen by a seeded weighted draw (weights are the
+    inverse of the destination's straggler factor), so operations overlap
+    genuinely and every run is reproducible from its seed.  Fault axes
+    mirror the timed plane's :class:`repro.policy.FailureModel`: ``loss``
+    (seeded per-destination drops via :class:`Router`), ``slow``
+    (delivery de-prioritization), and ``crashes`` — ``(step, node)``
+    pairs that blackhole the node and, for the chain, reconfigure the
+    view (the new tail commits its pending writes).
+
+    Unfinished operations stay open in the history; the checker treats
+    pending writes as possibly-applied and drops pending reads."""
+
+    def __init__(self, kind: str, k: int, *, seed: int = 0,
+                 dirty_read: bool = True, tail_bump: bool = True,
+                 loss: dict[int, float] | None = None,
+                 slow: dict[int, float] | None = None,
+                 crashes: tuple[tuple[int, int], ...] = (),
+                 timeout: int = 60, max_steps: int = 200_000):
+        if kind not in ("chain", "abd"):
+            raise ValueError(f"unknown consistency kind {kind!r}")
+        self.kind = kind
+        self.dirty_read = dirty_read
+        self.timeout = timeout
+        self.max_steps = max_steps
+        self.router = Router()
+        self.router.set_loss(loss, seed)
+        self.rng = random.Random(seed ^ 0x5BD1E995)
+        self.log = HistoryLog()
+        self.view = list(range(1, k + 1))
+        self.slow = dict(slow or {})
+        self.crashes = sorted(crashes)
+        self.steps = 0
+        self.pending: list[tuple[object, RMsg]] = []
+        if kind == "chain":
+            self.replicas = {n: ChainReplica(n, self, tail_bump=tail_bump)
+                             for n in self.view}
+        else:
+            self.replicas = {n: AbdReplica(n, self) for n in self.view}
+        self.clients: list[_HarnessClient] = []
+
+    @classmethod
+    def from_spec(cls, spec, **kw) -> "ReplicationHarness":
+        """Build the harness from a :class:`repro.policy.PolicySpec` via
+        its functional lowering (:func:`repro.policy.functional.
+        consistency_plan`)."""
+        from repro.policy.functional import consistency_plan
+
+        plan = consistency_plan(spec)
+        if plan.kind == "chain":
+            kw.setdefault("dirty_read", plan.dirty_read)
+        return cls(plan.kind, plan.k, **kw)
+
+    def add_client(self, ops) -> _HarnessClient:
+        cid = 101 + len(self.clients)
+        cls = ChainClient if self.kind == "chain" else AbdClient
+        c = cls(cid, self, ops, timeout=self.timeout)
+        self.clients.append(c)
+        return c
+
+    def send(self, src: int, dst: int, msg: RMsg) -> None:
+        self.router.send(dst, msg)
+
+    def enqueue(self, node, msg: RMsg) -> None:
+        self.pending.append((node, msg))
+
+    def step(self) -> None:
+        weights = [1.0 / self.slow.get(n.node_id, 1.0)
+                   for n, _ in self.pending]
+        i = self.rng.choices(range(len(self.pending)), weights=weights)[0]
+        node, msg = self.pending.pop(i)
+        if node.node_id in self.router.failed:
+            self.router.packets_dropped += 1
+            return
+        node.process(msg)
+
+    def crash(self, node_id: int) -> None:
+        self.router.fail(node_id)
+        if node_id in self.view:
+            self.view.remove(node_id)
+            if self.kind == "chain" and self.view:
+                self.replicas[self.view[-1]].become_tail()
+
+    def run(self) -> HistoryLog:
+        while self.steps < self.max_steps:
+            while self.crashes and self.crashes[0][0] <= self.steps:
+                self.crash(self.crashes.pop(0)[1])
+            for c in self.clients:
+                c.pump()
+            if all(c.done for c in self.clients) and not self.pending:
+                break
+            self.steps += 1
+            if self.pending:
+                self.step()
+            else:
+                # everything in flight was lost: force immediate retries
+                for c in self.clients:
+                    c.age = c.timeout
+            for c in self.clients:
+                c.on_step()
+        return self.log
+
+
+# ---------------------------------------------------------------------------
 # Client
 # ---------------------------------------------------------------------------
 

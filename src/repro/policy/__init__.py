@@ -8,12 +8,14 @@ checkpoint plane derives its shard encoding from it.
 """
 
 from repro.policy.spec import (  # noqa: F401
+    Chain,
     FailureModel,
     Flat,
     HostAuth,
     NoAuth,
     PolicySpec,
     PRESET_NAMES,
+    Quorum,
     ReadPolicy,
     RS,
     SpongeAuth,

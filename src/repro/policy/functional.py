@@ -22,7 +22,7 @@ from __future__ import annotations
 import dataclasses
 
 from repro.core.packets import ReplStrategy, Resiliency, WriteRequestHeader
-from repro.policy.spec import Flat, PolicySpec, RS, Tree
+from repro.policy.spec import Chain, Flat, PolicySpec, Quorum, RS, Tree
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,6 +56,34 @@ def write_plan(spec: PolicySpec) -> WritePlan:
         r = spec.replication
         return WritePlan("tree", Resiliency.REPLICATION, r.strategy, k=r.k)
     return WritePlan("plain", Resiliency.NONE)
+
+
+@dataclasses.dataclass(frozen=True)
+class ConsistencyPlan:
+    """Functional-plane lowering of the consistency axis.
+
+    ``kind``: "chain" (chain replication with CRAQ-style reads when
+    ``dirty_read``) or "abd" (quorum read/write register).  The plan is
+    what :class:`repro.core.handlers.ReplicationHarness` executes over
+    real :class:`~repro.core.handlers.Router` nodes, logging every
+    operation for the linearizability checker
+    (:mod:`repro.verify.linearize`)."""
+
+    kind: str
+    k: int
+    dirty_read: bool = True
+
+
+def consistency_plan(spec: PolicySpec) -> ConsistencyPlan:
+    """Lower the consistency axis of ``spec`` for the functional plane."""
+    c = spec.consistency
+    if c is None:
+        raise ValueError("consistency_plan needs a spec with a consistency "
+                         "stage (Chain or Quorum)")
+    if isinstance(c, Chain):
+        return ConsistencyPlan("chain", c.k, c.dirty_read)
+    assert isinstance(c, Quorum)
+    return ConsistencyPlan("abd", c.n)
 
 
 #: payload-handler stage names understood by ``DFSNode`` (executed in

@@ -27,6 +27,11 @@ Stage vocabulary (paper section in parentheses):
   erasure      :class:`RS` (RS(k, m), section VI; ``engine`` picks "spin"
                streaming, "inec" chunk-granularity offload, or "client"
                batched host encode via ``RSCode.encode_stripes``)
+  consistency  :class:`Chain` (CRAQ-style chain replication: head->tail
+               forwarding, commit at the tail, acks back up the chain,
+               reads from any replica) or :class:`Quorum` (ABD quorum
+               read/write); ``None`` keeps the fire-and-forget
+               replication stages as the baseline
   op           "write" or "read" (read path: request up, data stream back)
 
 The 12 hand-written protocol simulators of ``repro.sim.legacy`` are the
@@ -99,6 +104,49 @@ class RS:
     k: int = 4
     m: int = 2
     engine: str = "spin"
+
+
+@dataclasses.dataclass(frozen=True)
+class Chain:
+    """Consistency axis: chain replication with CRAQ-style reads.
+
+    Writes enter at the head, forward replica-to-replica down the chain,
+    and *commit* at the tail (the version bump); acks propagate back up
+    the chain marking the version clean, so the client's ack means every
+    replica holds the committed version.  Reads go to *any* replica
+    (CRAQ): a clean object is served locally, a dirty one first resolves
+    the committed version with a small round-trip to the tail
+    (``dirty_read=True``); ``dirty_read=False`` is classic chain
+    replication — only the tail serves reads, no version query.
+
+    ``engine`` picks the forwarding plane: "spin" (per-packet NIC
+    handlers, the offloaded path) or "host" (chunked store-and-forward
+    through host memory — the CPU baseline the replication claim is
+    measured against)."""
+
+    k: int = 3
+    dirty_read: bool = True
+    engine: str = "spin"
+
+
+@dataclasses.dataclass(frozen=True)
+class Quorum:
+    """Consistency axis: ABD-style quorum register over ``n`` replicas.
+
+    Writes are two round-trips (query the majority's max version tag,
+    then write tag+1 to a majority); reads query a majority for the
+    highest tagged value and write it back to a majority before
+    returning (the ABD read write-back).  No replica is special, so a
+    minority of crashed/lossy/straggling replicas never blocks an
+    operation — the availability story chain replication buys with
+    reconfiguration, bought with quorums instead."""
+
+    n: int = 3
+    engine: str = "spin"
+
+
+_CHAIN_ENGINES = ("spin", "host")
+_QUORUM_ENGINES = ("spin",)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -189,6 +237,10 @@ class PolicySpec:
     erasure: RS | None = None
     op: str = "write"
     read: ReadPolicy | None = None  # read-path behavior (op == "read")
+    #: consistency axis: :class:`Chain` (CRAQ chain replication) or
+    #: :class:`Quorum` (ABD); ``None`` keeps the fire-and-forget
+    #: replication/erasure stages as the baseline.
+    consistency: Chain | Quorum | None = None
     name: str | None = None  # preset name (reports / registries)
 
     def __post_init__(self):
@@ -230,6 +282,44 @@ class PolicySpec:
             if (self.erasure.engine == "spin" and self.transport != "spin"
                     and self.op != "read"):
                 raise ValueError("RS(engine='spin') requires spin transport")
+        if self.consistency is not None:
+            c = self.consistency
+            if self.replication is not None or self.erasure is not None:
+                raise ValueError(
+                    "the consistency stage carries its own replica set; "
+                    "it is exclusive with replication/erasure stages"
+                )
+            if self.read is not None:
+                raise ValueError(
+                    "consistency protocols define their own read "
+                    "semantics; drop the ReadPolicy stage"
+                )
+            if isinstance(c, Chain):
+                if c.engine not in _CHAIN_ENGINES:
+                    raise ValueError(f"unknown Chain engine {c.engine!r}")
+                if c.k < 1:
+                    raise ValueError(f"Chain needs k >= 1, got {c.k}")
+                if c.engine == "spin" and self.transport != "spin":
+                    raise ValueError(
+                        "Chain(engine='spin') requires the spin transport")
+                if c.engine == "host" and self.transport != "rdma":
+                    raise ValueError(
+                        "Chain(engine='host') is the plain-RDMA + host-CPU "
+                        "forwarding baseline; it requires the rdma transport"
+                    )
+                if c.engine == "host" and self.op == "read":
+                    raise ValueError(
+                        "chain reads are only compiled for the spin engine")
+            elif isinstance(c, Quorum):
+                if c.engine not in _QUORUM_ENGINES:
+                    raise ValueError(f"unknown Quorum engine {c.engine!r}")
+                if c.n < 1:
+                    raise ValueError(f"Quorum needs n >= 1, got {c.n}")
+                if self.transport != "spin":
+                    raise ValueError(
+                        "Quorum(engine='spin') requires the spin transport")
+            else:
+                raise ValueError(f"unknown consistency stage {c!r}")
         if self.read is not None:
             if self.op != "read":
                 raise ValueError("ReadPolicy only applies to op='read'")
@@ -260,6 +350,9 @@ class PolicySpec:
             return self.erasure.k + self.erasure.m
         if self.replication is not None:
             return self.replication.k
+        if self.consistency is not None:
+            c = self.consistency
+            return c.k if isinstance(c, Chain) else c.n
         return 1
 
     def with_geometry(self, k: int, m: int | None = None) -> "PolicySpec":
@@ -277,6 +370,13 @@ class PolicySpec:
                 raise ValueError("replication fan-out has no parity count m")
             r = dataclasses.replace(self.replication, k=k)
             return dataclasses.replace(self, replication=r)
+        if self.consistency is not None:
+            if m is not None:
+                raise ValueError("consistency fan-out has no parity count m")
+            c = self.consistency
+            c = (dataclasses.replace(c, k=k) if isinstance(c, Chain)
+                 else dataclasses.replace(c, n=k))
+            return dataclasses.replace(self, consistency=c)
         raise ValueError(
             "policy has no replication/erasure stage; nothing to resize"
         )
@@ -292,6 +392,13 @@ class PolicySpec:
         if self.erasure is not None:
             e = self.erasure
             stages.append(f"RS({e.k},{e.m},{e.engine})")
+        if self.consistency is not None:
+            c = self.consistency
+            stages.append(
+                f"Chain(k={c.k},{'craq' if c.dirty_read else 'tail'},"
+                f"{c.engine})" if isinstance(c, Chain)
+                else f"Quorum(n={c.n},{c.engine})"
+            )
         if self.read is not None:
             stages.append(f"Read({self.read.mode},{self.read.engine})")
         return " | ".join(stages)
@@ -342,6 +449,16 @@ def preset_spec(
         "spin-read-repl": lambda: PolicySpec(
             "spin", SpongeAuth(), replication=Tree(k, strategy, "spin"),
             op="read", read=ReadPolicy("replica-failover")),
+        "chain-spin-write": lambda: PolicySpec(
+            "spin", SpongeAuth(), consistency=Chain(k)),
+        "chain-host-write": lambda: PolicySpec(
+            "rdma", NoAuth(), consistency=Chain(k, engine="host")),
+        "chain-spin-read": lambda: PolicySpec(
+            "spin", SpongeAuth(), consistency=Chain(k), op="read"),
+        "abd-spin-write": lambda: PolicySpec(
+            "spin", SpongeAuth(), consistency=Quorum(k)),
+        "abd-spin-read": lambda: PolicySpec(
+            "spin", SpongeAuth(), consistency=Quorum(k), op="read"),
     }
     if name not in builders:
         raise ValueError(
@@ -359,7 +476,8 @@ PRESET_NAMES = (
     "raw-write", "spin-write", "rpc-write", "rpc-rdma-write", "rdma-flat",
     "cpu-ring", "cpu-pbt", "hyperloop", "spin-ring", "spin-pbt",
     "spin-triec", "inec-triec", "spin-read", "spin-read-ec", "cpu-read-ec",
-    "spin-read-repl",
+    "spin-read-repl", "chain-spin-write", "chain-host-write",
+    "chain-spin-read", "abd-spin-write", "abd-spin-read",
 )
 
 #: presets parameterized by the EC geometry (their anchors and latency

@@ -35,9 +35,11 @@ from __future__ import annotations
 from repro.core.packets import ReplStrategy
 from repro.core.replication import children_of, optimal_chunk_count
 from repro.policy.spec import (
+    Chain,
     Flat,
     HostAuth,
     PolicySpec,
+    Quorum,
     RS,
     SpongeAuth,
     Tree,
@@ -52,6 +54,7 @@ from repro.sim.protocols import (
     INEC_PCIE_BW_GBPS,
     INEC_TRIGGER_NS,
     INEC_WINDOW,
+    VERSION_WIRE,
     Env,
     Protocol,
     _Pending,
@@ -1017,6 +1020,512 @@ class SpinReadSink(Stage):
 
 
 # ---------------------------------------------------------------------------
+# Consistency-axis stages (chain replication / CRAQ and ABD quorums).
+# ---------------------------------------------------------------------------
+
+
+class ChainSpinSink(Stage):
+    """Consistency axis, ``Chain(engine='spin')`` write path: every chain
+    replica's PsPIN unit forwards each payload packet to its successor as
+    it is validated (cut-through, like the ring PH), the tail commits the
+    version, and the commit ack walks back up the chain — each hop's CH
+    marks the local version clean (the CRAQ dirty-list walk) before
+    emitting upstream.  The head's CH acks the client, so the client
+    completion certifies the *committed* write, not just receipt."""
+
+    class _Req:
+        __slots__ = ("gate", "processed", "n", "local_done", "ack_seen",
+                     "fired")
+
+        def __init__(self):
+            self.gate = RequestGate()
+            self.processed = 0
+            self.n: int | None = None
+            self.local_done = False
+            self.ack_seen = False
+            self.fired = False
+
+    def __init__(self, node: int, succ: int | None, pred: int | None):
+        self.node = node
+        self.succ = succ   # next replica down the chain (None == tail)
+        self.pred = pred   # previous replica (None == head)
+        hh, ph, ch = HANDLER_NS["chain_repl"]
+        self.hh_ns, self.ph_ns, self.ch_ns = hh, ph, ch
+        self._reqs: dict[int, ChainSpinSink._Req] = {}
+
+    def attach(self, proto) -> None:
+        super().attach(proto)
+        self.unit = proto.env.pspin(self.node)
+
+    def _commit_ack(self, rid: int, client: int) -> None:
+        # CH: downstream committed -> mark clean locally, ack upstream.
+        pid = self.proto.pid
+        if self.pred is None:
+            emit = Emit(client, ACK_WIRE,
+                        {"rid": rid, "ack": "chain", "pid": pid})
+        else:
+            emit = Emit(self.pred, ACK_WIRE,
+                        {"rid": rid, "cl": client, "pid": pid,
+                         "chain_ack": 1})
+        self.unit.process(ACK_WIRE, HandlerSpec(self.ch_ns, [emit]))
+
+    def _maybe_fire(self, rid: int, req: "ChainSpinSink._Req",
+                    client: int) -> None:
+        if req.fired or not (req.local_done and req.ack_seen):
+            return
+        req.fired = True
+        del self._reqs[rid]
+        self._commit_ack(rid, client)
+
+    def on_packet(self, pkt) -> None:
+        meta = pkt.meta
+        rid = meta["rid"]
+        req = self._reqs.setdefault(rid, self._Req())
+        if meta.get("chain_ack"):
+            req.ack_seen = True
+            self._maybe_fire(rid, req, meta["cl"])
+            return
+        req.n = meta["n"]
+        emits = ([Emit(self.succ, pkt.wire_size, dict(meta))]
+                 if self.succ is not None else [])
+
+        def packet_done() -> None:
+            req.processed += 1
+            if req.processed == req.n:
+                req.local_done = True
+                if self.succ is None:
+                    req.ack_seen = True   # the tail commits locally
+                self._maybe_fire(rid, req, meta["cl"])
+
+        if meta["i"] == 0:
+            self.unit.process(pkt.wire_size,
+                              HandlerSpec(self.hh_ns, gate=req.gate))
+        self.unit.process_gated(
+            pkt.wire_size,
+            HandlerSpec(self.ph_ns, emits, on_complete=packet_done,
+                        gate=req.gate),
+        )
+
+
+class ChainHostSink(Stage):
+    """Consistency axis, ``Chain(engine='host')`` baseline: chunked
+    store-and-forward through host memory down the chain (the cpu-ring
+    data path), then the commit ack walks back up — every hop pays the
+    PCIe + notify detour both ways, which is exactly what the NIC chain
+    avoids."""
+
+    class _St:
+        __slots__ = ("received", "chunk_acc", "next_chunk", "local_done",
+                     "ack_seen", "fired")
+
+        def __init__(self):
+            self.received = 0
+            self.chunk_acc = 0
+            self.next_chunk = 0
+            self.local_done = False
+            self.ack_seen = False
+            self.fired = False
+
+    def __init__(self, node: int, succ: int | None, pred: int | None,
+                 per_chunk_overhead_ns: float, copy_GBps: float,
+                 chunks_for):
+        self.node = node
+        self.succ = succ
+        self.pred = pred
+        self.per_chunk_overhead_ns = per_chunk_overhead_ns
+        self.copy_GBps = copy_GBps
+        self.chunks_for = chunks_for
+        self._states: dict[int, ChainHostSink._St] = {}
+
+    def _send_up(self, rid: int, client: int) -> None:
+        p = self.proto
+        if self.pred is None:
+            p.env.net.send(self.node, client, ACK_WIRE,
+                           {"rid": rid, "ack": "chain", "pid": p.pid})
+        else:
+            p.env.net.send(self.node, self.pred, ACK_WIRE,
+                           {"rid": rid, "cl": client, "pid": p.pid,
+                            "chain_ack": 1})
+
+    def _maybe_fire(self, rid: int, st: "ChainHostSink._St",
+                    client: int) -> None:
+        if st.fired or not (st.local_done and st.ack_seen):
+            return
+        st.fired = True
+        del self._states[rid]
+        cfg = self.proto.env.cfg
+        # commit-ack detour: completion lands in the host ring, the CPU
+        # is notified, then posts the upstream ack.
+        self.proto.env.sim.after(
+            cfg.pcie_latency_ns / 2 + cfg.host_notify_ns,
+            lambda: self._send_up(rid, client),
+        )
+
+    def on_packet(self, pkt) -> None:
+        p = self.proto
+        cfg, sim = p.env.cfg, p.env.sim
+        meta = pkt.meta
+        rid, client = meta["rid"], meta["cl"]
+        st = self._states.setdefault(rid, self._St())
+        if meta.get("chain_ack"):
+            st.ack_seen = True
+            self._maybe_fire(rid, st, client)
+            return
+        size = meta["sz"]
+        payload = pkt.wire_size - cfg.rdma_header
+        st.received += payload
+        st.chunk_acc += payload
+        chunks = self.chunks_for(size)
+        while (st.next_chunk < len(chunks)
+               and st.chunk_acc >= chunks[st.next_chunk]):
+            st.chunk_acc -= chunks[st.next_chunk]
+            ci = st.next_chunk
+            st.next_chunk += 1
+            if self.succ is not None:
+                delay = (self.per_chunk_overhead_ns
+                         + chunks[ci] / self.copy_GBps)
+                sim.after(
+                    delay,
+                    lambda ci=ci: _send_message(
+                        p.env.net, self.node, self.succ, chunks[ci], 0,
+                        lambda i, n, w, ci=ci: {
+                            "rid": rid, "cl": client, "pid": p.pid,
+                            "i": i, "n": n, "chunk": ci, "sz": size},
+                    ),
+                )
+        if st.received >= size and not st.local_done:
+            st.local_done = True
+            if self.succ is None:
+                # the tail commits: notify + validate, then ack upstream.
+                st.ack_seen = True
+                st.fired = True
+                del self._states[rid]
+                sim.after(
+                    cfg.pcie_latency_ns / 2 + cfg.host_notify_ns
+                    + cfg.cpu_validate_ns,
+                    lambda: self._send_up(rid, client),
+                )
+            else:
+                self._maybe_fire(rid, st, client)
+
+
+class ChainReadSink(Stage):
+    """Consistency axis chain read: any replica serves (CRAQ).  The tail
+    (or any replica under ``dirty_read=False``, which pins reads to the
+    tail) streams its committed version straight back; a non-tail replica
+    under CRAQ first resolves the committed version with a small query
+    round-trip to the tail — the timed plane charges this dirty-read
+    worst case, while the functional plane implements the real
+    clean/dirty distinction."""
+
+    def __init__(self, node: int, tail: int):
+        self.node = node
+        self.tail = tail
+        hh, ph, _ = HANDLER_NS["chain_read"]
+        self.hh_ns, self.ph_ns = hh, ph
+        self.vq_probe_ns, self.vr_ns, _ = HANDLER_NS["chain_version"]
+
+    def attach(self, proto) -> None:
+        super().attach(proto)
+        self.unit = proto.env.pspin(self.node)
+
+    def _data_emits(self, rid: int, client: int, size: int) -> list[Emit]:
+        cfg = self.proto.env.cfg
+        sizes = cfg.packets_of(size, 0)
+        n = len(sizes)
+        return [
+            Emit(client, w, {"rid": rid, "pid": self.proto.pid, "data": 1,
+                             "i": i, "n": n})
+            for i, w in enumerate(sizes)
+        ]
+
+    def on_packet(self, pkt) -> None:
+        meta = pkt.meta
+        rid = meta["rid"]
+        pid = self.proto.pid
+        if meta.get("vq"):
+            # tail: committed-version table probe, reply to the origin.
+            self.unit.process(
+                pkt.wire_size,
+                HandlerSpec(self.vq_probe_ns,
+                            [Emit(meta["org"], VERSION_WIRE,
+                                  {"rid": rid, "cl": meta["cl"], "pid": pid,
+                                   "vr": 1, "sz": meta["sz"]})]),
+            )
+            return
+        client, size = meta["cl"], meta["sz"]
+        if meta.get("vr"):
+            # version resolved: stream the (now known-clean) extent back.
+            self.unit.process(
+                pkt.wire_size,
+                HandlerSpec(self.vr_ns + self.ph_ns,
+                            self._data_emits(rid, client, size)),
+            )
+            return
+        # client read request
+        if self.node == self.tail:
+            gate = RequestGate()
+            self.unit.process(pkt.wire_size,
+                              HandlerSpec(self.hh_ns, gate=gate))
+            self.unit.process_gated(
+                pkt.wire_size,
+                HandlerSpec(self.ph_ns, self._data_emits(rid, client, size),
+                            gate=gate),
+            )
+            return
+        # non-tail CRAQ replica: version query to the tail first.
+        self.unit.process(
+            pkt.wire_size,
+            HandlerSpec(self.hh_ns,
+                        [Emit(self.tail, VERSION_WIRE,
+                              {"rid": rid, "cl": client, "pid": pid,
+                               "vq": 1, "org": self.node, "sz": size})]),
+        )
+
+
+class AbdSink(Stage):
+    """ABD quorum replica (``Quorum``): answers tag queries with its
+    current tag, ingests tagged write / write-back streams (ack per
+    message), and streams reads back for the client-side quorum."""
+
+    class _Req:
+        __slots__ = ("gate", "processed", "n", "fired")
+
+        def __init__(self):
+            self.gate = RequestGate()
+            self.processed = 0
+            self.n: int | None = None
+            self.fired = False
+
+    def __init__(self, node: int):
+        self.node = node
+        hh, ph, ch = HANDLER_NS["quorum"]
+        self.hh_ns, self.ph_ns, self.ch_ns = hh, ph, ch
+        self._reqs: dict[tuple[int, str], AbdSink._Req] = {}
+
+    def attach(self, proto) -> None:
+        super().attach(proto)
+        self.unit = proto.env.pspin(self.node)
+
+    def on_packet(self, pkt) -> None:
+        meta = pkt.meta
+        rid = meta["rid"]
+        unit = self.unit
+        pid = self.proto.pid
+        if meta.get("qt"):
+            # phase-1 tag query: reply with the local tag.
+            unit.process(
+                pkt.wire_size,
+                HandlerSpec(self.hh_ns,
+                            [Emit(meta["cl"], VERSION_WIRE,
+                                  {"rid": rid, "pid": pid, "qtr": 1,
+                                   "src": self.node})]),
+            )
+            return
+        if meta.get("rq"):
+            # read query: stream the locally stored extent back, tagged.
+            cfg = self.proto.env.cfg
+            sizes = cfg.packets_of(meta["sz"], 0)
+            n = len(sizes)
+            emits = [
+                Emit(meta["cl"], w,
+                     {"rid": rid, "pid": pid, "abd_data": 1,
+                      "src": self.node, "i": i, "n": n})
+                for i, w in enumerate(sizes)
+            ]
+            gate = RequestGate()
+            unit.process(pkt.wire_size, HandlerSpec(self.hh_ns, gate=gate))
+            unit.process_gated(pkt.wire_size,
+                               HandlerSpec(self.ph_ns, emits, gate=gate))
+            return
+        # tagged write ("w2") or read write-back ("wb") payload stream
+        ack_kind = "wba" if meta.get("wb") else "w2a"
+        key = (rid, ack_kind)
+        req = self._reqs.setdefault(key, self._Req())
+        req.n = meta["n"]
+
+        def packet_done() -> None:
+            req.processed += 1
+            if req.processed == req.n and not req.fired:
+                req.fired = True
+                del self._reqs[key]
+                unit.process(
+                    ACK_WIRE,
+                    HandlerSpec(
+                        self.ch_ns,
+                        [Emit(meta["cl"], ACK_WIRE,
+                              {"rid": rid, "pid": pid, ack_kind: 1,
+                               "src": self.node})],
+                    ),
+                )
+
+        if meta["i"] == 0:
+            unit.process(pkt.wire_size,
+                         HandlerSpec(self.hh_ns, gate=req.gate))
+        unit.process_gated(
+            pkt.wire_size,
+            HandlerSpec(self.ph_ns, on_complete=packet_done, gate=req.gate),
+        )
+
+
+class AbdWriteInjector(Stage):
+    """ABD write: query all n replicas for their tags, adopt max+1 at a
+    majority, then stream the tagged payload to all n and complete at a
+    majority of acks.  A minority of crashed or slow replicas never
+    blocks completion — availability the chain trades away."""
+
+    def __init__(self, nodes: tuple[int, ...], quorum: int):
+        self.nodes = tuple(nodes)
+        self.quorum = quorum
+        self._qtr: dict[int, set[int]] = {}
+        self._acks: dict[int, set[int]] = {}
+        self._phase2: set[int] = set()
+
+    def expected_acks(self, size: int) -> int:
+        return 1  # completion is registered manually at quorum
+
+    def start(self, pend: _Pending) -> None:
+        p = self.proto
+        cfg, net = p.env.cfg, p.env.net
+        size = p.req_size(pend)
+        for idx, node in enumerate(self.nodes):
+            delay = cfg.client_post_ns + idx * cfg.client_post_extra_ns
+            p.env.sim.after(
+                delay,
+                lambda node=node: net.send(
+                    pend.client, node, VERSION_WIRE,
+                    {"rid": pend.rid, "cl": pend.client, "pid": p.pid,
+                     "qt": 1, "sz": size},
+                ),
+            )
+
+    def on_client_pkt(self, pkt) -> bool:
+        meta = pkt.meta
+        rid = meta.get("rid")
+        p = self.proto
+        pend = p._pending.get(rid)
+        if meta.get("qtr"):
+            if pend is None or rid in self._phase2:
+                return True
+            got = self._qtr.setdefault(rid, set())
+            got.add(meta["src"])
+            if len(got) >= self.quorum:
+                self._phase2.add(rid)
+                del self._qtr[rid]
+                cfg, net = p.env.cfg, p.env.net
+                size = p.req_size(pend)
+                header_extra = write_header_extra(1)
+
+                def phase2() -> None:
+                    for node in self.nodes:
+                        _send_message(
+                            net, pend.client, node, size, header_extra,
+                            lambda i, n, w: {
+                                "rid": rid, "cl": pend.client, "pid": p.pid,
+                                "i": i, "n": n, "sz": size, "w2": 1},
+                        )
+
+                post = (cfg.client_post_ns
+                        + (len(self.nodes) - 1) * cfg.client_post_extra_ns)
+                p.env.sim.after(cfg.client_complete_ns + post, phase2)
+            return True
+        if meta.get("w2a"):
+            if pend is None:
+                return True
+            got = self._acks.setdefault(rid, set())
+            got.add(meta["src"])
+            if len(got) >= self.quorum:
+                del self._acks[rid]
+                self._phase2.discard(rid)
+                p._register_ack(pend)
+            return True
+        return False
+
+
+class AbdReadInjector(Stage):
+    """ABD read: query all n replicas; once a majority streamed their
+    (tagged) copies back, write the max-tag value back to a majority so
+    later reads cannot observe an older value — the write-back that makes
+    the register atomic rather than merely regular."""
+
+    def __init__(self, nodes: tuple[int, ...], quorum: int):
+        self.nodes = tuple(nodes)
+        self.quorum = quorum
+        self._streams: dict[int, dict[int, int]] = {}
+        self._done: dict[int, set[int]] = {}
+        self._phase2: set[int] = set()
+        self._wba: dict[int, set[int]] = {}
+
+    def expected_acks(self, size: int) -> int:
+        return 1  # completion is registered manually at quorum
+
+    def start(self, pend: _Pending) -> None:
+        p = self.proto
+        cfg, net = p.env.cfg, p.env.net
+        size = p.req_size(pend)
+        wire = cfg.rdma_header + read_header_extra()
+        for idx, node in enumerate(self.nodes):
+            delay = cfg.client_post_ns + idx * cfg.client_post_extra_ns
+            p.env.sim.after(
+                delay,
+                lambda node=node: net.send(
+                    pend.client, node, wire,
+                    {"rid": pend.rid, "cl": pend.client, "pid": p.pid,
+                     "rq": 1, "sz": size},
+                ),
+            )
+
+    def on_client_pkt(self, pkt) -> bool:
+        meta = pkt.meta
+        rid = meta.get("rid")
+        p = self.proto
+        pend = p._pending.get(rid)
+        if meta.get("abd_data"):
+            if pend is None or rid in self._phase2:
+                return True
+            counts = self._streams.setdefault(rid, {})
+            src = meta["src"]
+            counts[src] = counts.get(src, 0) + 1
+            if counts[src] == meta["n"]:
+                done = self._done.setdefault(rid, set())
+                done.add(src)
+                if len(done) >= self.quorum:
+                    self._phase2.add(rid)
+                    self._streams.pop(rid, None)
+                    self._done.pop(rid, None)
+                    cfg, net = p.env.cfg, p.env.net
+                    size = p.req_size(pend)
+                    header_extra = write_header_extra(1)
+
+                    def writeback() -> None:
+                        for node in self.nodes:
+                            _send_message(
+                                net, pend.client, node, size, header_extra,
+                                lambda i, n, w: {
+                                    "rid": rid, "cl": pend.client,
+                                    "pid": p.pid, "i": i, "n": n,
+                                    "sz": size, "wb": 1},
+                            )
+
+                    post = (cfg.client_post_ns
+                            + (len(self.nodes) - 1)
+                            * cfg.client_post_extra_ns)
+                    p.env.sim.after(cfg.client_complete_ns + post, writeback)
+            return True
+        if meta.get("wba"):
+            if pend is None:
+                return True
+            got = self._wba.setdefault(rid, set())
+            got.add(meta["src"])
+            if len(got) >= self.quorum:
+                del self._wba[rid]
+                self._phase2.discard(rid)
+                p._register_ack(pend)
+            return True
+        return False
+
+
+# ---------------------------------------------------------------------------
 # The compiler.
 # ---------------------------------------------------------------------------
 
@@ -1141,6 +1650,87 @@ def ec_read_survivors(e: RS, crashed: set[int]) -> tuple[list[int], int]:
     return survivors, missing
 
 
+def chain_live_nodes(c: Chain, crashed: set[int]) -> list[int]:
+    """The surviving chain, in chain order (head first).  A crash simply
+    drops the replica out of the chain — the compile-time analogue of the
+    master reconfiguring the chain around the failure.  Raises when no
+    replica survives."""
+    live = [n for n in range(1, c.k + 1) if n not in crashed]
+    if not live:
+        raise ValueError(
+            f"unrecoverable: all {c.k} chain replicas crashed"
+        )
+    return live
+
+
+def _compile_consistency(env: Env, spec: PolicySpec,
+                         size: int) -> PipelineProtocol:
+    c = spec.consistency
+    crashed = env.crashed_nodes()
+    cfg = env.cfg
+
+    if isinstance(c, Chain):
+        chain = chain_live_nodes(c, crashed)
+        if spec.op == "read":
+            tail = chain[-1]
+            serve = chain[0] if c.dirty_read else tail
+            sinks: dict[int, Stage] = {n: ChainReadSink(n, tail)
+                                       for n in chain}
+            return PipelineProtocol(env, spec, size, ReadInjector(serve),
+                                    sinks)
+        if c.engine == "spin":
+            sinks = {}
+            for idx, n in enumerate(chain):
+                succ = chain[idx + 1] if idx + 1 < len(chain) else None
+                pred = chain[idx - 1] if idx > 0 else None
+                sinks[n] = ChainSpinSink(n, succ, pred)
+            return PipelineProtocol(
+                env, spec, size,
+                MessageInjector(chain[0], write_header_extra(c.k), acks=1),
+                sinks,
+            )
+        # host engine: chunked store-and-forward down the chain.
+        overhead = cfg.pcie_latency_ns / 2 + cfg.host_notify_ns
+        cache: dict[int, list[int]] = {}
+
+        def chunks_for(sz: int) -> list[int]:
+            got = cache.get(sz)
+            if got is None:
+                nchunks = optimal_chunk_count(
+                    sz, len(chain), ReplStrategy.RING,
+                    cfg.bytes_per_ns * 1e9, overhead * 1e-9,
+                )
+                got = cache[sz] = _chunk_counts(sz, -(-sz // nchunks))
+            return got
+
+        sinks = {}
+        for idx, n in enumerate(chain):
+            succ = chain[idx + 1] if idx + 1 < len(chain) else None
+            pred = chain[idx - 1] if idx > 0 else None
+            sinks[n] = ChainHostSink(n, succ, pred, overhead,
+                                     cfg.host_memcpy_GBps / 2, chunks_for)
+        return PipelineProtocol(
+            env, spec, size, MessageInjector(chain[0], 0, acks=1), sinks
+        )
+
+    # Quorum (ABD): all n replicas participate; a crashed minority is
+    # tolerated by the protocol itself (majority completion), so sinks
+    # stay bound everywhere and only a crashed majority is unrecoverable.
+    assert isinstance(c, Quorum)
+    nodes = tuple(range(1, c.n + 1))
+    quorum = c.n // 2 + 1
+    live = [n for n in nodes if n not in crashed]
+    if len(live) < quorum:
+        raise ValueError(
+            f"unrecoverable: {len(live)} of {c.n} quorum replicas survive "
+            f"(< majority {quorum})"
+        )
+    sinks = {n: AbdSink(n) for n in nodes}
+    injector: Stage = (AbdReadInjector(nodes, quorum) if spec.op == "read"
+                       else AbdWriteInjector(nodes, quorum))
+    return PipelineProtocol(env, spec, size, injector, sinks)
+
+
 def _compile_read(env: Env, spec: PolicySpec, size: int) -> PipelineProtocol:
     rp = spec.read
     mode = rp.mode if rp is not None else "direct"
@@ -1193,6 +1783,9 @@ def compile_policy(
     per request); ``window`` is the INEC host-pacing window."""
     spec.validate()
     cfg = env.cfg
+
+    if spec.consistency is not None:
+        return _compile_consistency(env, spec, size)
 
     if spec.op == "read":
         return _compile_read(env, spec, size)

@@ -43,6 +43,8 @@ from repro.sim.pspin import PsPINConfig, PsPINUnit
 
 CLIENT = 0
 ACK_WIRE = 28
+VERSION_WIRE = 44              # rdma header + 16 B version tag (chain/ABD
+                               # version queries, tag responses)
 DFS_HEADER_BYTES = 64          # DFSHeader.packed_size()
 WRH_BASE_BYTES = 30
 RRH_BYTES = 16                 # ReadRequestHeader.packed_size()
@@ -415,6 +417,16 @@ def run_single_shot(
             "cpu-read-ec", size, k=k, m=m, cfg=cfg)[2],
         "spin-read-repl": lambda: _run_preset(
             "spin-read-repl", size, k=k, cfg=cfg)[2],
+        "chain-spin-write": lambda: _run_preset(
+            "chain-spin-write", size, k=k, cfg=cfg)[2],
+        "chain-host-write": lambda: _run_preset(
+            "chain-host-write", size, k=k, cfg=cfg)[2],
+        "chain-spin-read": lambda: _run_preset(
+            "chain-spin-read", size, k=k, cfg=cfg)[2],
+        "abd-spin-write": lambda: _run_preset(
+            "abd-spin-write", size, k=k, cfg=cfg)[2],
+        "abd-spin-read": lambda: _run_preset(
+            "abd-spin-read", size, k=k, cfg=cfg)[2],
     }
     if name not in runners:
         raise ValueError(
@@ -468,6 +480,24 @@ def run_degraded_read(
     env = Env(cfg, pcfg, failures=failures)
     proto = make_protocol(env, name, size, k=k, m=m)
     return _run_single(proto, env)
+
+
+def run_under_failures(
+    name: str,
+    size: int,
+    k: int = 4,
+    m: int = 2,
+    failures=None,
+    cfg: NetConfig | None = None,
+    pcfg: PsPINConfig | None = None,
+) -> Result:
+    """Single-shot preset under an injected
+    :class:`repro.policy.FailureModel` — the general (read *or* write)
+    spelling of :func:`run_degraded_read`: chain pipelines compile their
+    survivor chain against the crashes, quorum pipelines complete on the
+    surviving majority."""
+    return run_degraded_read(name, size, k=k, m=m, failures=failures,
+                             cfg=cfg, pcfg=pcfg)
 
 
 def run_raw_write(size: int, cfg: NetConfig | None = None) -> Result:

@@ -57,6 +57,20 @@ HANDLER_NS = {
     # Parity-node XOR aggregation: ~1 instr/byte at IPC 0.6 (assumption —
     # the paper reports data-node handlers only; documented in DESIGN.md).
     "ec_parity":            (215.0, 2048.0 / 0.6 / 1.0, 105.0),
+    # Consistency protocols (assumptions, same calibration idiom as the
+    # Table I/II handlers: instruction-count deltas over the measured
+    # baselines at the non-contended IPC ~0.6).  Chain PH = the ring
+    # forwarding PH plus ~8 instructions of per-packet version
+    # bookkeeping; chain CH = the ring CH plus ~12 instructions walking
+    # the dirty list when the upstream ack commits the version.  The
+    # chain read PH is the auth read PH plus a clean/dirty version
+    # lookup (~6 instr); the version-query handler at the tail is a
+    # small committed-version table probe.  Quorum handlers touch only
+    # a tag register (compare/adopt), so both phases are short.
+    "chain_repl":           (214.0, 193.0 + 8.0 / 0.6, 146.0 + 12.0 / 0.6),
+    "chain_read":           (212.0, 92.0 + 6.0 / 0.6, 107.0),
+    "chain_version":        (98.0, 54.0, 0.0),
+    "quorum":               (213.0, 88.0, 96.0),
 }
 
 

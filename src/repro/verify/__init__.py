@@ -1,0 +1,16 @@
+"""Verification plane: protocol-history checkers.
+
+The consistency axis of the policy engine (``repro.policy.spec.Chain`` /
+``Quorum``) is *proven*, not just exercised: the functional plane logs
+every operation's invoke/response (``repro.core.handlers.HistoryLog``)
+and :mod:`repro.verify.linearize` decides whether the history is
+linearizable, producing a minimal counterexample when it is not.
+"""
+
+from repro.verify.linearize import (  # noqa: F401
+    CheckResult,
+    Operation,
+    check_history,
+    check_records,
+    operations_from_records,
+)

@@ -1,0 +1,268 @@
+"""Linearizability: the checker itself, then the consistency protocols.
+
+(a) checker self-tests — hand-written histories with known verdicts
+    (linearizable and violating), pending-operation semantics, and
+    counterexample quality;
+(b) protocol proofs — the functional-plane chain (CRAQ) and ABD harness
+    runs across a seeded crash x loss x straggler grid, every history
+    checked; the full grid rides in the slow lane, a reduced grid in
+    tier 1;
+(c) mutation test — a chain whose tail skips the version bump
+    (``tail_bump=False``) acks writes that never commit; the checker
+    must flag the resulting stale reads.
+"""
+
+import random
+
+import pytest
+
+from repro.core.handlers import ReplicationHarness
+from repro.policy import Chain, PolicySpec, Quorum, SpongeAuth
+from repro.verify.linearize import (
+    CheckResult,
+    Operation,
+    check_history,
+    check_records,
+    operations_from_records,
+)
+
+pytestmark = pytest.mark.linearize
+
+
+def op(op_id, client, kind, key, value, invoke, response):
+    return Operation(op_id, client, kind, key, value, invoke, response)
+
+
+# -- (a) checker self-tests --------------------------------------------------
+
+
+def test_empty_and_single_op_histories():
+    assert check_history([]).ok
+    assert check_history([op(1, 1, "write", 0, 7, 1, 2)]).ok
+    # a read of the initial value is legal...
+    assert check_history([op(1, 1, "read", 0, 0, 1, 2)]).ok
+    # ...but a read of a never-written value is not
+    assert not check_history([op(1, 1, "read", 0, 7, 1, 2)]).ok
+
+
+def test_sequential_read_your_write():
+    h = [op(1, 1, "write", 0, 7, 1, 2), op(2, 1, "read", 0, 7, 3, 4)]
+    assert check_history(h).ok
+    # stale read strictly after the write's response: violation
+    h = [op(1, 1, "write", 0, 7, 1, 2), op(2, 1, "read", 0, 0, 3, 4)]
+    assert not check_history(h).ok
+
+
+def test_concurrent_write_read_both_outcomes_legal():
+    # read overlaps the write: returning either the old or the new value
+    # is linearizable (the point floats within the overlap)
+    w = op(1, 1, "write", 0, 7, 1, 10)
+    assert check_history([w, op(2, 2, "read", 0, 7, 2, 9)]).ok
+    assert check_history([w, op(2, 2, "read", 0, 0, 2, 9)]).ok
+
+
+def test_new_old_inversion_is_flagged():
+    # classic non-linearizable pattern: two sequential reads observe the
+    # new value then the old one
+    h = [
+        op(1, 1, "write", 0, 7, 1, 20),
+        op(2, 2, "read", 0, 7, 2, 5),    # saw the write
+        op(3, 2, "read", 0, 0, 6, 9),    # then un-saw it
+    ]
+    res = check_history(h)
+    assert not res.ok
+    assert res.key == 0
+
+
+def test_keys_are_independent_registers():
+    h = [
+        op(1, 1, "write", 0, 7, 1, 2),
+        op(2, 1, "write", 1, 9, 3, 4),
+        op(3, 2, "read", 0, 7, 5, 6),
+        op(4, 2, "read", 1, 9, 7, 8),
+    ]
+    assert check_history(h).ok
+    # same interleaving, but the key-1 read observes key-0's value
+    h[3] = op(4, 2, "read", 1, 7, 7, 8)
+    res = check_history(h)
+    assert not res.ok and res.key == 1
+
+
+def test_pending_write_may_or_may_not_apply():
+    # a crashed client's write never completed: a later read may see it
+    # (it reached the replicas) or not (it was lost) — both linearizable
+    w = op(1, 1, "write", 0, 7, 1, None)
+    assert check_history([w, op(2, 2, "read", 0, 7, 5, 6)]).ok
+    assert check_history([w, op(2, 2, "read", 0, 0, 5, 6)]).ok
+    # but flickering between applied and not applied is a violation
+    res = check_history([
+        w,
+        op(2, 2, "read", 0, 7, 5, 6),
+        op(3, 2, "read", 0, 0, 7, 8),
+    ])
+    assert not res.ok
+
+
+def test_pending_reads_are_dropped():
+    h = [op(1, 1, "read", 0, None, 1, None)]
+    res = check_history(h)
+    assert res.ok and res.checked == 0
+
+
+def test_counterexample_names_the_stuck_read():
+    h = [
+        op(1, 1, "write", 0, 7, 1, 2),
+        op(2, 2, "read", 0, 0, 3, 4),
+    ]
+    res = check_history(h)
+    assert not res.ok
+    text = res.explain()
+    assert "returned 0" in text and "holds 7" in text
+    # the longest partial linearization got through the write
+    assert res.partial == (1,)
+
+
+def test_operations_from_records_pairs_and_keeps_pending():
+    from repro.core.handlers import HistoryLog
+
+    log = HistoryLog()
+    log.invoke(101, 1, "write", 0, 7)
+    log.invoke(102, 2, "read", 0)
+    log.respond(101, 1)
+    ops = operations_from_records(log.records)
+    assert {o.op_id for o in ops} == {1, 2}
+    w = next(o for o in ops if o.kind == "write")
+    r = next(o for o in ops if o.kind == "read")
+    assert not w.pending and w.value == 7
+    assert r.pending
+    assert w.invoke < w.response
+    assert check_records(log.records).ok
+
+
+def test_checker_scales_to_contended_histories():
+    # many overlapping ops on one key: the memoized search must not blow
+    # up (this is the shape the harness emits)
+    rng = random.Random(7)
+    h, t = [], 0
+    last = 0
+    for i in range(1, 41):
+        t += 1
+        inv = t
+        t += rng.randint(1, 3)
+        if i % 2:
+            last = i
+            h.append(op(i, i % 4, "write", 0, i, inv, t))
+        else:
+            h.append(op(i, i % 4, "read", 0, last - 1 if last > 1 else 0,
+                        inv, t))
+    # verdict is not asserted (the random history may or may not be
+    # linearizable); the point is termination in bounded time
+    check_history(h)
+
+
+# -- (b) protocol proofs over the fault grid ---------------------------------
+
+
+def _workload(nclients, nops, keys, seed):
+    rng = random.Random(seed)
+    out = []
+    for c in range(nclients):
+        ops = []
+        for i in range(nops):
+            key = rng.choice(keys)
+            if rng.random() < 0.5:
+                ops.append(("write", key, (c + 1) * 10_000 + i))
+            else:
+                ops.append(("read", key, None))
+        out.append(ops)
+    return out
+
+
+def _run_and_check(kind, seed, **kw) -> CheckResult:
+    h = ReplicationHarness(kind, 3, seed=seed, **kw)
+    for ops in _workload(3, 8, [1, 2], seed):
+        h.add_client(ops)
+    log = h.run()
+    res = check_records(log.records)
+    assert res.ok, f"{kind} seed={seed} kw={kw}:\n{res.explain()}"
+    # the run must have made real progress, not vacuously passed
+    assert sum(1 for r in log.records if r["ev"] == "ok") >= 12
+    return res
+
+
+#: crash x loss x straggler grid (node ids are 1..3)
+FAULT_GRID = [
+    {},
+    {"crashes": ((40, 3),)},                 # tail crash -> reconfigure
+    {"crashes": ((40, 1),)},                 # head crash -> new head
+    {"loss": {2: 0.2}},                      # lossy middle link
+    {"slow": {3: 6.0}},                      # straggler tail
+    {"crashes": ((60, 2),), "loss": {1: 0.1}, "slow": {3: 4.0}},
+]
+
+
+@pytest.mark.parametrize("fault", FAULT_GRID[:3],
+                         ids=["healthy", "crash-tail", "crash-head"])
+def test_chain_linearizable(fault):
+    _run_and_check("chain", seed=11, **fault)
+
+
+@pytest.mark.parametrize("fault", FAULT_GRID[:3],
+                         ids=["healthy", "crash-tail", "crash-head"])
+def test_abd_linearizable(fault):
+    _run_and_check("abd", seed=13, **fault)
+
+
+def test_chain_tail_only_reads_linearizable():
+    _run_and_check("chain", seed=17, dirty_read=False,
+                   crashes=((50, 3),))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("kind", ["chain", "abd"])
+@pytest.mark.parametrize("fault", FAULT_GRID,
+                         ids=["healthy", "crash-tail", "crash-head",
+                              "loss", "straggler", "combined"])
+@pytest.mark.parametrize("seed", [0, 1, 2, 3, 4])
+def test_full_fault_grid_linearizable(kind, fault, seed):
+    _run_and_check(kind, seed=seed, **fault)
+
+
+def test_harness_from_spec_lowers_consistency():
+    chain = ReplicationHarness.from_spec(
+        PolicySpec("spin", SpongeAuth(),
+                   consistency=Chain(k=3, dirty_read=False)))
+    assert chain.kind == "chain" and not chain.dirty_read
+    abd = ReplicationHarness.from_spec(
+        PolicySpec("spin", SpongeAuth(), consistency=Quorum(n=5)))
+    assert abd.kind == "abd" and len(abd.replicas) == 5
+
+
+# -- (c) mutation test -------------------------------------------------------
+
+
+def test_mutated_chain_is_flagged():
+    """Skip the version bump at the tail (acks without committing): the
+    checker must catch the stale reads this produces."""
+    flagged = []
+    for seed in range(6):
+        h = ReplicationHarness("chain", 3, seed=seed, tail_bump=False)
+        for ops in _workload(3, 8, [1, 2], seed):
+            h.add_client(ops)
+        res = check_records(h.run().records)
+        if not res.ok:
+            flagged.append((seed, res))
+    assert flagged, "mutated protocol produced no violation in 6 seeds"
+    # the counterexample is actionable: it names a stale read
+    _, res = flagged[0]
+    assert any("read op" in f for f in res.frontier)
+
+
+def test_mutated_chain_counterexample_mentions_register_value():
+    h = ReplicationHarness("chain", 3, seed=0, tail_bump=False)
+    for ops in _workload(3, 8, [1, 2], 0):
+        h.add_client(ops)
+    res = check_records(h.run().records)
+    if res.ok:  # this seed happens to pass: the grid test above covers it
+        pytest.skip("seed 0 did not trip the mutation")
+    assert "register holds" in res.explain()

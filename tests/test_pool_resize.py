@@ -1,0 +1,154 @@
+"""Pool.resize edge cases (repro.sim.engine) — the HPU autoscaler actuator.
+
+The control plane live-resizes HPU pools mid-run; these tests pin the
+semantics the autoscaler relies on: every acquirer eventually runs
+exactly once (request conservation, no deadlock) under shrink-below-
+queued-waiters, grow-then-immediate-shrink, and resize-to-same-size.
+"""
+
+import pytest
+
+from repro.sim.engine import Pool, Simulator
+
+
+class _Load:
+    """Issues ``n`` acquire/hold/release cycles and counts completions."""
+
+    def __init__(self, sim: Simulator, pool: Pool, hold_ns: float = 10.0):
+        self.sim = sim
+        self.pool = pool
+        self.hold_ns = hold_ns
+        self.started = 0
+        self.finished = 0
+
+    def submit(self, n: int = 1) -> None:
+        for _ in range(n):
+            self.pool.acquire(self._run)
+
+    def _run(self) -> None:
+        self.started += 1
+        self.sim.after(self.hold_ns, self._done)
+
+    def _done(self) -> None:
+        self.finished += 1
+        self.pool.release()
+
+
+def test_shrink_below_queued_waiters_conserves_requests():
+    """Shrink to 1 while 8 are in flight and 12 queued: all 20 complete,
+    and occupancy never exceeds capacity once the in-flight work drains."""
+    sim = Simulator()
+    pool = Pool(sim, 8)
+    load = _Load(sim, pool)
+    load.submit(20)          # 8 run, 12 queue
+    assert pool.in_use == 8 and pool.queued() == 12
+    pool.resize(1)
+    sim.run()
+    assert load.finished == 20
+    assert pool.in_use == 0
+    assert pool.queued() == 0
+
+
+def test_shrink_retires_units_as_they_release():
+    """After a shrink, releases retire surplus units instead of handing
+    them to waiters beyond the new capacity."""
+    sim = Simulator()
+    pool = Pool(sim, 4)
+    load = _Load(sim, pool, hold_ns=10.0)
+    load.submit(4)
+    pool.resize(2)
+    load.submit(6)           # all queue: pool is over-occupied (4 > 2)
+    occupancy = []
+
+    def probe():
+        occupancy.append(pool.in_use)
+        if sim.pending() > 1:
+            sim.after(5.0, probe)
+
+    sim.after(15.0, probe)   # after the first batch released
+    sim.run()
+    assert load.finished == 10
+    assert max(occupancy) <= 2
+
+
+def test_grow_admits_queued_waiters_immediately():
+    sim = Simulator()
+    pool = Pool(sim, 1)
+    load = _Load(sim, pool)
+    load.submit(5)
+    assert pool.queued() == 4
+    pool.resize(4)
+    assert pool.queued() == 1          # three admitted on the spot
+    assert pool.in_use == 4
+    sim.run()
+    assert load.finished == 5
+
+
+def test_grow_then_immediate_shrink():
+    """grow(16) followed by shrink(2) in the same instant: the grow's
+    admissions stand (they hold real units), the shrink only governs
+    future hand-overs — no waiter is lost either way."""
+    sim = Simulator()
+    pool = Pool(sim, 2)
+    load = _Load(sim, pool)
+    load.submit(12)          # 2 run, 10 queue
+    pool.resize(16)          # admits all 10
+    assert pool.in_use == 12 and pool.queued() == 0
+    pool.resize(2)           # immediately back down
+    load.submit(6)           # these must wait for the drain
+    sim.run()
+    assert load.finished == 18
+    assert pool.in_use == 0 and pool.queued() == 0
+
+
+def test_resize_to_same_size_is_a_noop():
+    sim = Simulator()
+    pool = Pool(sim, 3)
+    load = _Load(sim, pool)
+    load.submit(7)
+    before = (pool.in_use, pool.queued(), pool.peak)
+    pool.resize(3)
+    assert (pool.in_use, pool.queued(), pool.peak) == before
+    sim.run()
+    assert load.finished == 7
+
+
+def test_repeated_thrash_never_deadlocks():
+    """Alternating grow/shrink while load streams in: conservation holds
+    and the run terminates (no lost hand-over, no stuck waiter)."""
+    sim = Simulator()
+    pool = Pool(sim, 4)
+    load = _Load(sim, pool, hold_ns=7.0)
+    sizes = [1, 9, 2, 16, 1, 3]
+
+    def thrash(i=0):
+        if i < len(sizes):
+            pool.resize(sizes[i])
+            load.submit(5)
+            sim.after(11.0, lambda: thrash(i + 1))
+
+    thrash()
+    sim.run()
+    assert load.started == load.finished == 30
+    assert pool.in_use == 0 and pool.queued() == 0
+
+
+def test_resize_rejects_nonpositive_capacity():
+    pool = Pool(Simulator(), 2)
+    with pytest.raises(ValueError):
+        pool.resize(0)
+    with pytest.raises(ValueError):
+        pool.resize(-3)
+
+
+def test_wait_accounting_survives_resize():
+    """total_wait_ns counts only time actually spent queued, including
+    waiters admitted by a grow."""
+    sim = Simulator()
+    pool = Pool(sim, 1)
+    load = _Load(sim, pool, hold_ns=10.0)
+    load.submit(2)           # second waits 10ns
+    sim.after(4.0, lambda: pool.resize(2))  # admitted at t=4 -> 4ns wait
+    sim.run()
+    assert load.finished == 2
+    assert pool.total_wait_ns == pytest.approx(4.0)

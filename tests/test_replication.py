@@ -1,0 +1,193 @@
+"""Consistency axis, timed plane: chain/ABD pipelines + spec hygiene.
+
+(a) spec surface — validation, geometry resizing, describe(), node
+    counts for Chain/Quorum;
+(b) timed semantics — the NIC chain holds its latency edge over the
+    host-CPU chain, CRAQ dirty reads pay the tail version round-trip,
+    replica crashes reconfigure the chain (and never block ABD's
+    majority), stragglers slow the chain but not the quorum;
+(c) plane agreement — both planes compile from one PolicySpec.
+"""
+
+import pytest
+
+from repro.policy import (
+    Chain,
+    FailureModel,
+    PolicySpec,
+    Quorum,
+    SpongeAuth,
+    preset_spec,
+)
+from repro.policy.functional import consistency_plan
+from repro.sim import protocols as P
+
+KiB = 1024
+
+CHAIN_PRESETS = ["chain-spin-write", "chain-host-write", "chain-spin-read"]
+ABD_PRESETS = ["abd-spin-write", "abd-spin-read"]
+
+
+# -- (a) spec surface --------------------------------------------------------
+
+
+def test_consistency_specs_validate():
+    PolicySpec("spin", SpongeAuth(), consistency=Chain(k=3)).validate()
+    PolicySpec("rdma", consistency=Chain(k=3, engine="host")).validate()
+    PolicySpec("spin", SpongeAuth(), consistency=Quorum(n=5),
+               op="read").validate()
+
+
+def test_consistency_is_exclusive_with_other_resiliency():
+    from repro.policy import RS, Tree
+
+    with pytest.raises(ValueError, match="exclusive"):
+        PolicySpec("spin", SpongeAuth(), replication=Tree(3),
+                   consistency=Chain(k=3))
+    with pytest.raises(ValueError, match="exclusive"):
+        PolicySpec("spin", SpongeAuth(), erasure=RS(3, 2),
+                   consistency=Quorum(n=3))
+
+
+def test_consistency_engine_and_transport_hygiene():
+    with pytest.raises(ValueError, match="unknown Chain engine"):
+        PolicySpec("spin", SpongeAuth(), consistency=Chain(k=3,
+                                                           engine="fpga"))
+    with pytest.raises(ValueError, match="spin transport"):
+        PolicySpec("rdma", consistency=Chain(k=3))
+    with pytest.raises(ValueError, match="rdma transport"):
+        PolicySpec("spin", SpongeAuth(),
+                   consistency=Chain(k=3, engine="host"))
+    with pytest.raises(ValueError, match="spin engine"):
+        PolicySpec("rdma", consistency=Chain(k=3, engine="host"),
+                   op="read")
+    with pytest.raises(ValueError, match="needs k >= 1"):
+        PolicySpec("spin", SpongeAuth(), consistency=Chain(k=0))
+
+
+def test_consistency_geometry_and_description():
+    spec = preset_spec("chain-spin-write", k=5)
+    assert spec.consistency.k == 5
+    assert spec.storage_node_count == 5
+    assert "Chain(k=5" in spec.describe()
+    grown = spec.with_geometry(k=7)
+    assert grown.consistency.k == 7
+    q = preset_spec("abd-spin-read", k=3)
+    assert q.consistency.n == 3 and q.storage_node_count == 3
+    assert "Quorum(n=3" in q.describe()
+    with pytest.raises(ValueError, match="parity"):
+        q.with_geometry(k=3, m=2)
+
+
+# -- (b) timed semantics -----------------------------------------------------
+
+
+def _lat(name, size, k=3, failures=None):
+    return P.run_under_failures(name, size, k=k,
+                                failures=failures).latency_ns
+
+
+@pytest.mark.parametrize("name", CHAIN_PRESETS + ABD_PRESETS)
+@pytest.mark.parametrize("size", [4 * KiB, 64 * KiB])
+def test_presets_complete(name, size):
+    assert _lat(name, size) > 0
+
+
+@pytest.mark.parametrize("size", [4 * KiB, 64 * KiB])
+def test_nic_chain_beats_host_chain(size):
+    """The headline claim at single-shot scale: per-hop forwarding on
+    the NIC avoids the PCIe + host-notify detour of the host chain."""
+    assert _lat("chain-spin-write", size) < _lat("chain-host-write", size)
+
+
+def test_chain_write_scales_with_depth():
+    lat = [P.run_single_shot("chain-spin-write", 16 * KiB, k=k).latency_ns
+           for k in (1, 2, 4, 6)]
+    assert lat == sorted(lat)  # each hop adds latency
+
+
+def test_craq_dirty_read_pays_version_roundtrip():
+    """A CRAQ read at a non-tail replica resolves the version with the
+    tail; a tail-pinned read (dirty_read=False) serves locally and is
+    therefore strictly faster in the timed plane."""
+    craq = preset_spec("chain-spin-read", k=3)
+    tail_only = PolicySpec("spin", SpongeAuth(), op="read",
+                           consistency=Chain(k=3, dirty_read=False))
+    env_a, env_b = P.Env(), P.Env()
+    from repro.policy.timed import compile_policy
+
+    la = P._run_single(compile_policy(env_a, craq, 16 * KiB), env_a)
+    lb = P._run_single(compile_policy(env_b, tail_only, 16 * KiB), env_b)
+    assert lb.latency_ns < la.latency_ns
+
+
+def test_chain_survives_replica_crash():
+    """Any single crash reconfigures the chain; the shorter chain is
+    faster than the healthy one and still completes."""
+    healthy = _lat("chain-spin-write", 64 * KiB)
+    for node in (1, 2, 3):
+        lat = _lat("chain-spin-write", 64 * KiB,
+                   failures=FailureModel(crashed=(node,)))
+        assert 0 < lat < healthy
+
+
+def test_chain_read_survives_tail_crash():
+    lat = _lat("chain-spin-read", 64 * KiB,
+               failures=FailureModel(crashed=(3,)))
+    assert lat > 0
+
+
+def test_chain_unrecoverable_when_all_crash():
+    with pytest.raises(ValueError, match="unrecoverable"):
+        _lat("chain-spin-write", 4 * KiB,
+             failures=FailureModel(crashed=(1, 2, 3)))
+
+
+def test_abd_tolerates_minority_crash_and_rejects_majority():
+    healthy = _lat("abd-spin-write", 64 * KiB)
+    crashed = _lat("abd-spin-write", 64 * KiB,
+                   failures=FailureModel(crashed=(2,)))
+    assert crashed == pytest.approx(healthy, rel=0.25)
+    with pytest.raises(ValueError, match="unrecoverable"):
+        _lat("abd-spin-write", 4 * KiB,
+             failures=FailureModel(crashed=(1, 2)))
+
+
+def test_straggler_slows_chain_but_not_quorum():
+    """A slow tail drags the whole chain (every write commits there);
+    ABD completes at the fast majority and barely notices."""
+    slow_tail = FailureModel(slow=((3, 8.0),))
+    chain_h = _lat("chain-spin-write", 64 * KiB)
+    chain_s = _lat("chain-spin-write", 64 * KiB, failures=slow_tail)
+    abd_h = _lat("abd-spin-write", 64 * KiB)
+    abd_s = _lat("abd-spin-write", 64 * KiB, failures=slow_tail)
+    assert chain_s > 1.5 * chain_h
+    assert abd_s == pytest.approx(abd_h, rel=0.05)
+
+
+# -- (c) plane agreement -----------------------------------------------------
+
+
+def test_both_planes_compile_from_one_spec():
+    from repro.policy.timed import compile_policy
+
+    spec = preset_spec("chain-spin-write", k=3)
+    env = P.Env()
+    proto = compile_policy(env, spec, 16 * KiB)
+    assert proto.storage_nodes == (1, 2, 3)
+    plan = consistency_plan(spec)
+    assert (plan.kind, plan.k, plan.dirty_read) == ("chain", 3, True)
+
+    q = preset_spec("abd-spin-write", k=3)
+    env = P.Env()
+    proto = compile_policy(env, q, 16 * KiB)
+    assert proto.storage_nodes == (1, 2, 3)
+    assert consistency_plan(q).kind == "abd"
+
+
+def test_consistency_presets_are_registered():
+    from repro.policy import PRESET_NAMES
+
+    for name in CHAIN_PRESETS + ABD_PRESETS:
+        assert name in PRESET_NAMES
+        preset_spec(name).validate()

@@ -1,6 +1,6 @@
 """Anchor-drift gate: deterministic-model anchors + benchmark floors.
 
-Five checks, each with a readable diff on failure:
+Six checks, each with a readable diff on failure:
 
   1. policy latency anchors — re-runs every preset/size recorded in
      ``tests/data/policy_anchors.json`` through the timed plane (the sim
@@ -19,14 +19,18 @@ Five checks, each with a readable diff on failure:
      model, the SLO autoscaler converges within one doubling of the
      static-optimal HPU count for >= 3 PolicySpec presets, and paced
      background repair keeps the foreground p99 within the configured
-     SLO while the unpaced stream violates it.
+     SLO while the unpaced stream violates it;
+  6. ``BENCH_replication.json`` claims — NIC-offloaded chain replication
+     holds >= ``--replication-floor`` x over the host-CPU chain both
+     healthy and with one crashed replica, and every functional-plane
+     history across the fault grid was linearizable.
 
 Usage (CI invokes this as its own workflow step):
 
   PYTHONPATH=src python tools/check_anchors.py [--repo DIR]
       [--rel-tol 1e-9] [--dataplane-floor 2.0]
       [--degraded-ceiling 2.0] [--offload-floor 2.0]
-      [--fig16-floor 0.85]
+      [--fig16-floor 0.85] [--replication-floor 1.5]
 
 Exit code 0 == no drift.
 """
@@ -182,6 +186,36 @@ def check_control(path: str, fig16_floor: float) -> list[str]:
     return errors
 
 
+def check_replication(path: str, floor: float) -> list[str]:
+    if not os.path.exists(path):
+        return [f"  missing artifact {path}"]
+    with open(path) as f:
+        doc = json.load(f)
+    claims = doc.get("claims", {})
+    errors = []
+    for key, state in (("chain_nic_over_host_healthy", "healthy"),
+                       ("chain_nic_over_host_f1", "with one crashed "
+                                                  "replica")):
+        edge = claims.get(key)
+        if edge is None:
+            errors.append(f"  claim {key} missing")
+        elif edge < floor:
+            errors.append(
+                f"  NIC chain only {edge:.2f}x over the host-CPU chain "
+                f"{state} (< floor {floor:.2f}x)"
+            )
+    if not claims.get("all_linearizable"):
+        errors.append(
+            f"  functional-plane histories not all linearizable "
+            f"({claims.get('linearizable_ok')} of "
+            f"{claims.get('linearizable_runs')} runs ok)"
+        )
+    if claims.get("ops_checked", 0) <= 0:
+        errors.append("  linearizability proof checked zero operations "
+                      "(vacuous)")
+    return errors
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--repo", default=REPO)
@@ -196,6 +230,8 @@ def main() -> int:
                     help="min NIC-over-host degraded reconstruction ratio")
     ap.add_argument("--fig16-floor", type=float, default=0.85,
                     help="min saturated goodput as a fraction of line rate")
+    ap.add_argument("--replication-floor", type=float, default=1.5,
+                    help="min NIC-over-host chain-replication latency edge")
     args = ap.parse_args()
 
     checks = [
@@ -213,6 +249,9 @@ def main() -> int:
         ("BENCH_control.json claims", check_control(
             os.path.join(args.repo, "BENCH_control.json"),
             args.fig16_floor)),
+        ("BENCH_replication.json claims", check_replication(
+            os.path.join(args.repo, "BENCH_replication.json"),
+            args.replication_floor)),
     ]
     failed = False
     for title, errors in checks:
