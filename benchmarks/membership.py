@@ -1,0 +1,257 @@
+"""Membership benchmark: failure detection, failover, and view-change cost.
+
+Measures the robustness subsystem end to end, on both planes:
+
+  * **detection** (timed) — crash a chain replica mid-stream and measure
+    time-to-dead-verdict as the heartbeat interval sweeps; detection is
+    driven purely by missing heartbeats (first-class ctrl traffic
+    through the NIC pipeline), never by reading the fault schedule.
+  * **failover** (timed) — writes issued inside the detection window
+    retry with capped exponential backoff onto the detected view; the
+    claim bounds the worst write latency by a small multiple of the
+    dead timeout + backoff budget, with zero failed writes.
+  * **false positives** (timed) — heavy loss toward the monitor plus a
+    straggler NIC across seeds: suspicion must flicker (the detector is
+    genuinely exercised) while dead verdicts stay rare (the EWMA
+    adaptation holds the line).
+  * **cross-view linearizability** (functional) — chain and ABD
+    harness runs across the crash x partition x flap grid with
+    lease-gated views and epoch fencing; every history checked with
+    the Wing-Gong checker.
+
+The artifact ``BENCH_membership.json`` carries the gated claims:
+
+  * ``detection_within_budget`` — every swept interval detects the
+    crash within ``dead_timeout + 2 * interval``;
+  * ``failover_zero_failed_writes`` / ``failover_worst_over_budget`` —
+    no write is lost to a crash and the unavailability window is
+    bounded;
+  * ``fp_dead_rate`` — false dead verdicts per lossy run (<= floor);
+    ``fp_suspects_total`` > 0 proves the channel was exercised;
+  * ``membership_all_linearizable`` — every functional cross-view
+    history checked out; ``membership_fenced_total`` > 0 proves epoch
+    fencing actually fired.
+
+Usage:
+
+  PYTHONPATH=src python benchmarks/membership.py [--quick]
+      [--json BENCH_membership.json]
+
+``benchmarks/run.py --membership`` runs the same sweep and always
+writes the ``BENCH_membership.json`` artifact.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.membership import MONITOR, MembershipConfig, attach_membership  # noqa: E402
+from repro.policy import FailureModel, preset_spec  # noqa: E402
+from repro.policy.timed import compile_policy  # noqa: E402
+from repro.sim import protocols as P  # noqa: E402
+
+KiB = 1024
+
+#: heartbeat intervals swept for detection time (ns)
+INTERVALS = (10_000.0, 20_000.0, 50_000.0)
+CRASH_NS = 1_000_000.0
+
+
+def _timed_chain(failures, cfg, nwrites=30, gap_ns=100_000.0,
+                 horizon_ns=4_000_000.0, k=3):
+    """Compile a membership-aware chain, stream writes, run to quiescence."""
+    env = P.Env(failures=failures)
+    svc = attach_membership(env, tuple(range(1, k + 1)), cfg)
+    proto = compile_policy(env, preset_spec("chain-spin-write", k=k),
+                           16 * KiB)
+    done = []
+    for i in range(nwrites):
+        env.sim.at(i * gap_ns,
+                   lambda i=i: proto.issue(
+                       P.CLIENT, on_done=lambda r, i=i: done.append((i, r))))
+    # sentinel keeps the heartbeat tick alive through the detection tail
+    env.sim.at(horizon_ns, lambda: None)
+    env.sim.run()
+    return svc, proto, done
+
+
+def detection_rows(intervals=INTERVALS) -> tuple[list[tuple], dict]:
+    """Crash the chain head at CRASH_NS; measure time-to-dead-verdict
+    and the failover outcome per heartbeat interval."""
+    rows: list[tuple] = []
+    within = True
+    zero_failed = True
+    worst_over_budget = 0.0
+    for iv in intervals:
+        cfg = MembershipConfig(interval=iv)
+        svc, proto, done = _timed_chain(
+            FailureModel(crash_at=((CRASH_NS, 1),)), cfg)
+        det = svc.views.detected_at(1)
+        if det is None:
+            within = False
+            rows.append((f"membership/detect/interval{int(iv / 1e3)}us",
+                         0.0, "NOT-DETECTED"))
+            continue
+        t_detect = det - CRASH_NS
+        # silence starts at the last pre-crash heartbeat (<= 1 interval
+        # early); the verdict lands on a poll (<= 1 interval late)
+        within &= t_detect <= cfg.dead_timeout + 2 * iv
+        failed = [i for i, r in done if r.extra.get("failed")]
+        zero_failed &= not failed and len(done) == 30
+        worst = max(r.latency_ns for _, r in done)
+        budget = cfg.dead_timeout + 250_000.0    # detection + backoff base
+        worst_over_budget = max(worst_over_budget, worst / budget)
+        rows.append((f"membership/detect/interval{int(iv / 1e3)}us",
+                     round(t_detect / 1e3, 2),
+                     f"worst_write_{round(worst / 1e3, 1)}us"))
+    claims = {
+        "detection_within_budget": within,
+        "failover_zero_failed_writes": zero_failed,
+        "failover_worst_over_budget": round(worst_over_budget, 3),
+    }
+    return rows, claims
+
+
+def false_positive_rows(seeds=(0, 1, 2, 3, 4, 5, 6, 7)
+                        ) -> tuple[list[tuple], dict]:
+    """Lossy monitor path + straggler NIC: suspicion flickers, dead
+    verdicts must stay rare (the measured FP channel)."""
+    rows: list[tuple] = []
+    suspects = 0
+    false_dead = 0
+    for seed in seeds:
+        env = P.Env(failures=FailureModel(loss=((MONITOR, 0.4),),
+                                          slow=((2, 8.0),), seed=seed))
+        svc = attach_membership(env, (1, 2, 3),
+                                MembershipConfig(interval=20_000.0,
+                                                 suspect_after=2.0,
+                                                 dead_after=8.0))
+        env.sim.at(5_000_000.0, lambda: None)
+        env.sim.run()
+        suspects += svc.views.detector.false_suspects
+        false_dead += len(svc.views.removed)   # every node is alive here
+        rows.append((f"membership/fp/seed{seed}",
+                     float(svc.views.detector.false_suspects),
+                     f"removed_{len(svc.views.removed)}"))
+    claims = {
+        "fp_suspects_total": suspects,
+        "fp_dead_rate": round(false_dead / len(seeds), 4),
+    }
+    return rows, claims
+
+
+#: functional fault grid (node ids 1..3; times are steps) — mirrors
+#: tests/test_membership.py MEMBERSHIP_GRID
+FAULT_GRID = (
+    ("crash-tail", {"crashes": ((40, 3),)}),
+    ("crash-head", {"crashes": ((40, 1),)}),
+    ("partition", {"partitions": ((100, 260, (3,)),)}),
+    ("flap", {"flaps": ((2, 40, 0.4),)}),
+    ("combined", {"crashes": ((60, 2),), "loss": {1: 0.1},
+                  "slow": {3: 4.0}}),
+)
+
+
+def linearizability_rows(seeds=(0, 1, 2)) -> tuple[list[tuple], dict]:
+    """Functional-plane proof: chain + ABD across the fault grid with
+    detected views, lease gating, and epoch fencing — every history
+    checked.  The 'latency' column is wall-clock us for run+check."""
+    import random
+    import time
+
+    from repro.core.handlers import ReplicationHarness
+    from repro.verify.linearize import check_records
+
+    def workload(seed, nclients=3, nops=8, keys=(1, 2)):
+        rng = random.Random(seed)
+        return [[("write", rng.choice(keys), (c + 1) * 10_000 + i)
+                 if rng.random() < 0.5 else ("read", rng.choice(keys), None)
+                 for i in range(nops)] for c in range(nclients)]
+
+    rows: list[tuple] = []
+    runs = ok = ops = fenced = views = 0
+    for kind in ("chain", "abd"):
+        for fname, fault in FAULT_GRID:
+            t0 = time.perf_counter()
+            verdicts = []
+            for seed in seeds:
+                h = ReplicationHarness(kind, 3, seed=seed, **fault)
+                for client_ops in workload(seed):
+                    h.add_client(client_ops)
+                res = check_records(h.run().records)
+                runs += 1
+                ok += res.ok
+                ops += res.checked
+                fenced += h.fenced
+                views += h.views.view.number - 1
+                verdicts.append(res.ok)
+            dt_us = (time.perf_counter() - t0) * 1e6
+            verdict = ("linearizable" if all(verdicts) else "VIOLATION")
+            rows.append((f"membership/linearize/{kind}/{fname}",
+                         round(dt_us, 1), verdict))
+    claims = {
+        "membership_linearizable_runs": runs,
+        "membership_linearizable_ok": ok,
+        "membership_all_linearizable": ok == runs,
+        "membership_ops_checked": ops,
+        "membership_fenced_total": fenced,
+        "membership_view_changes": views,
+    }
+    return rows, claims
+
+
+def bench_rows(quick: bool = False) -> tuple[list[tuple], dict]:
+    rows, claims = detection_rows(
+        intervals=(20_000.0,) if quick else INTERVALS)
+    fprows, fpclaims = false_positive_rows(
+        seeds=(0, 7) if quick else (0, 1, 2, 3, 4, 5, 6, 7))
+    lrows, lclaims = linearizability_rows(seeds=(0,) if quick else (0, 1, 2))
+    rows += fprows + lrows
+    claims.update(fpclaims)
+    claims.update(lclaims)
+    return rows, claims
+
+
+def write_artifact(rows: list[tuple], claims: dict, out: str,
+                   config: dict | None = None) -> None:
+    with open(out, "w") as f:
+        json.dump(
+            {
+                "bench": "membership",
+                "metric": "us/verdict",
+                "config": config or {},
+                "claims": claims,
+                "rows": [
+                    {"name": n, "us_per_call": u, "derived": d}
+                    for n, u, d in rows
+                ],
+            },
+            f,
+            indent=1,
+        )
+    print(f"# wrote {out}", file=sys.stderr)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="small sweep for smoke tests")
+    ap.add_argument("--json", default=None, metavar="OUT")
+    args = ap.parse_args()
+    rows, claims = bench_rows(quick=args.quick)
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us},{derived}")
+    for key, val in sorted(claims.items()):
+        print(f"# claim {key} = {val}", file=sys.stderr)
+    if args.json:
+        write_artifact(rows, claims, args.json, {"quick": args.quick})
+
+
+if __name__ == "__main__":
+    main()

@@ -20,7 +20,11 @@ optimum, repair pacing; see benchmarks/autoscale.py) and always writes
 its ``BENCH_control.json`` artifact.  ``--replication`` appends the consistency-aware replication
 sweep (NIC chain vs host chain vs ABD, plus the functional-plane
 linearizability proof; see benchmarks/replication.py) and always writes
-its ``BENCH_replication.json`` artifact.  ``--all`` runs every suite above
+its ``BENCH_replication.json`` artifact.  ``--membership`` appends the
+failure-detection / view-change sweep (heartbeat-driven detection time,
+false-positive rate, failover window, cross-view linearizability; see
+benchmarks/membership.py) and always writes its
+``BENCH_membership.json`` artifact.  ``--all`` runs every suite above
 (plus the roofline table) and writes one combined manifest
 (``BENCH_all.json`` by default): every emitted row plus the paths of all
 artifacts written in the run.  ``--json`` additionally writes every
@@ -90,6 +94,15 @@ def main() -> None:
                     metavar="OUT", help="artifact path for --replication")
     ap.add_argument("--replication-quick", action="store_true",
                     help="small replication sweep (CI smoke)")
+    ap.add_argument("--membership", action="store_true",
+                    help="also run the failure-detection / view-change "
+                         "sweep (detection time, FP rate, failover, "
+                         "cross-view linearizability) and write "
+                         "BENCH_membership.json")
+    ap.add_argument("--membership-out", default="BENCH_membership.json",
+                    metavar="OUT", help="artifact path for --membership")
+    ap.add_argument("--membership-quick", action="store_true",
+                    help="small membership sweep (CI smoke)")
     ap.add_argument("--autoscale", action="store_true",
                     help="also run the control-plane sweep (Fig. 16 "
                          "scaling, SLO autoscaler, repair pacing) and "
@@ -100,7 +113,8 @@ def main() -> None:
                     help="small control-plane sweep (CI smoke)")
     ap.add_argument("--all", action="store_true",
                     help="run every suite (paper figs, roofline, "
-                         "contention, mixed, degraded, autoscale) and "
+                         "contention, mixed, degraded, replication, "
+                         "membership, autoscale) and "
                          "write one combined manifest of all rows + "
                          "artifact paths")
     ap.add_argument("--all-out", default="BENCH_all.json", metavar="OUT",
@@ -115,6 +129,7 @@ def main() -> None:
         args.mixed = True
         args.degraded = True
         args.replication = True
+        args.membership = True
         args.autoscale = True
     filters = [f for f in args.only.split(",") if f]
 
@@ -168,6 +183,16 @@ def main() -> None:
         repl_artifact(rrows, rclaims, args.replication_out,
                       {"quick": args.replication_quick})
         artifacts["replication"] = args.replication_out
+    if args.membership:
+        from benchmarks.membership import bench_rows as member_rows
+        from benchmarks.membership import write_artifact as member_artifact
+
+        mbrows, mbclaims = member_rows(quick=args.membership_quick)
+        for name, us, derived in mbrows:
+            emit(name, us, derived)
+        member_artifact(mbrows, mbclaims, args.membership_out,
+                        {"quick": args.membership_quick})
+        artifacts["membership"] = args.membership_out
     if args.autoscale:
         from repro.control.sweep import bench_rows as control_rows
         from repro.control.sweep import write_artifact as control_artifact

@@ -49,6 +49,9 @@ from repro.core.packets import (
 from repro.core.packets import ReadRequestHeader
 from repro.core.replication import children_of
 from repro.core.state import RequestEntry, RequestTable
+from repro.membership.detector import MembershipConfig
+from repro.membership.retry import RetryExhausted, RetryPolicy
+from repro.membership.view import ViewManager
 
 # NB: repro.policy.functional is imported lazily (function scope) — the
 # policy package imports repro.core.packets, so a module-level import here
@@ -101,6 +104,10 @@ class Router:
         self.failed: set[int] = set()
         self.loss: dict[int, float] = {}
         self._loss_rng = random.Random(0)
+        #: optional reachability oracle ``(src, dst) -> bool`` consulted
+        #: for sends that carry a source (partition/flap injection); the
+        #: harness installs a closure over its fault schedule + step clock
+        self.unreachable: Callable[[int, int], bool] | None = None
 
     def register(self, node: "DFSNode") -> None:
         self.nodes[node.node_id] = node
@@ -124,7 +131,11 @@ class Router:
         self.loss = dict(loss or {})
         self._loss_rng = random.Random(seed)
 
-    def send(self, dest: int, pkt: Packet) -> None:
+    def send(self, dest: int, pkt: Packet, src: int | None = None) -> None:
+        if (src is not None and self.unreachable is not None
+                and self.unreachable(src, dest)):
+            self.packets_dropped += 1
+            return
         p = self.loss.get(dest, 0.0)
         if p > 0.0 and self._loss_rng.random() < p:
             self.packets_dropped += 1
@@ -577,6 +588,16 @@ class ChainReplica:
     Reads are served from any replica: clean keys locally, dirty keys
     after a version query to the tail (CRAQ).
 
+    The replica never reads the harness's fault schedule: its chain
+    position comes from the *learned* view (``view_no``/``members``),
+    installed by ``vi``/``hba`` messages from the view service, and it
+    serves only while (a) it is listed in that view, (b) its lease —
+    renewed by every heartbeat ack — is unexpired, and (c) the message's
+    epoch matches its view.  Stale-epoch client requests get a ``fence``
+    reply so the client refreshes and resends; everything else fenced is
+    silently dropped (the sender retries).  A replica that learns it
+    became the tail runs :meth:`become_tail`.
+
     ``tail_bump=False`` is the mutation hook for the checker self-test:
     the tail acks *without* committing, so acknowledged writes never
     become visible at the tail — a stale-read bug the linearizability
@@ -591,6 +612,9 @@ class ChainReplica:
         self.pending: dict[int, dict[int, tuple[int, int]]] = {}
         self._max_ver: dict[int, int] = {}
         self._rid_vers: dict[int, int] = {}
+        self.view_no = harness.views.view.number
+        self.members = list(harness.views.view.members)
+        self.lease_until = harness.views.lease_until.get(node_id, 0.0)
         harness.router.register(self)
 
     def handle_packet(self, msg: RMsg) -> None:
@@ -620,11 +644,9 @@ class ChainReplica:
                 del self.pending[key]
 
     def _ack_up(self, key: int, ver: int, rid: int, client: int) -> None:
-        view = self.h.view
-        if self.node_id not in view:
-            return
+        view = self.members
         i = view.index(self.node_id)
-        body = {"ver": ver, "cl": client}
+        body = {"ver": ver, "cl": client, "ep": self.view_no}
         if i == 0:
             self.h.send(self.node_id, client,
                         RMsg("cwa", self.node_id, rid, key, body))
@@ -633,18 +655,21 @@ class ChainReplica:
                         RMsg("ca", self.node_id, rid, key, body))
 
     def _on_cw(self, m: RMsg) -> None:
-        view = self.h.view
-        if self.node_id not in view:
-            return
+        view = self.members
         i = view.index(self.node_id)
         ver = m.body.get("ver")
         if ver is None:
-            # entering at the head: assign the version (idempotent per
-            # rid, so a client retry re-propagates the same version)
+            # entering at the head: assign the version, idempotently per
+            # rid so a client retry re-propagates the same version
             ver = self._rid_vers.get(m.rid)
             if ver is None:
                 ver = self._next_ver(m.key)
-                self._rid_vers[m.rid] = ver
+        # every replica remembers rid -> version (not just the assigning
+        # head): after a head crash the retried write enters at the NEW
+        # head, which must reuse the original version — assigning a
+        # fresh one would re-apply the old value over a newer committed
+        # write (a new-old inversion the checker catches)
+        self._rid_vers[m.rid] = ver
         self._note_ver(m.key, ver)
         self.pending.setdefault(m.key, {})[ver] = (m.body["val"], m.rid)
         if i == len(view) - 1:
@@ -660,7 +685,7 @@ class ChainReplica:
             self.h.send(self.node_id, view[i + 1],
                         RMsg("cw", self.node_id, m.rid, m.key,
                              {"cl": m.body["cl"], "val": m.body["val"],
-                              "ver": ver}))
+                              "ver": ver, "ep": self.view_no}))
 
     def _on_ca(self, m: RMsg) -> None:
         # downstream committed: mark clean here, propagate upstream
@@ -683,9 +708,7 @@ class ChainReplica:
                          {"ver": ver, "val": val}))
 
     def _on_cr(self, m: RMsg) -> None:
-        view = self.h.view
-        if self.node_id not in view:
-            return
+        view = self.members
         is_tail = view[-1] == self.node_id
         dirty = bool(self.pending.get(m.key))
         if is_tail or not dirty:
@@ -695,13 +718,15 @@ class ChainReplica:
             # dirty: resolve the committed version with the tail (CRAQ)
             self.h.send(self.node_id, view[-1],
                         RMsg("vq", self.node_id, m.rid, m.key,
-                             {"cl": m.body["cl"], "org": self.node_id}))
+                             {"cl": m.body["cl"], "org": self.node_id,
+                              "ep": self.view_no}))
 
     def _on_vq(self, m: RMsg) -> None:
         ver = self.committed.get(m.key, (0, 0))[0]
         self.h.send(self.node_id, m.body["org"],
                     RMsg("vr", self.node_id, m.rid, m.key,
-                         {"cl": m.body["cl"], "ver": ver}))
+                         {"cl": m.body["cl"], "ver": ver,
+                          "ep": self.view_no}))
 
     def _on_vr(self, m: RMsg) -> None:
         v = m.body["ver"]
@@ -716,10 +741,49 @@ class ChainReplica:
         # a valid later linearization point within the read's interval.
         self._serve(m, cver, cval)
 
+    # -- view installation / fencing ----------------------------------------
+
+    def _on_view(self, m: RMsg) -> None:
+        """Adopt a newer view from a ``vi`` install or an ``hba`` lease
+        grant; a replica that just became the tail commits its pending
+        (fully-replicated) versions."""
+        if "lease" in m.body:
+            self.lease_until = max(self.lease_until, m.body["lease"])
+        no = m.body["no"]
+        if no > self.view_no:
+            was_tail = bool(self.members) and self.members[-1] == self.node_id
+            self.view_no = no
+            self.members = list(m.body["members"])
+            if (self.members and self.members[-1] == self.node_id
+                    and not was_tail):
+                self.become_tail()
+
+    def _fence(self, m: RMsg) -> None:
+        self.h.fenced += 1
+        cl = m.body.get("cl")
+        client_facing = m.kind == "cr" or (m.kind == "cw"
+                                           and m.body.get("ver") is None)
+        if client_facing and cl is not None:
+            self.h.send(self.node_id, cl,
+                        RMsg("fence", self.node_id, m.rid, m.key,
+                             {"no": self.view_no}))
+
     _DISPATCH = {"cw": _on_cw, "ca": _on_ca, "cr": _on_cr,
                  "vq": _on_vq, "vr": _on_vr}
 
     def process(self, m: RMsg) -> None:
+        if m.kind in ("vi", "hba"):
+            self._on_view(m)
+            return
+        if self.node_id not in self.members or self.h.steps > self.lease_until:
+            # removed from the view, or self-fenced by lease expiry (the
+            # partitioned-tail case the wait-out protects against)
+            self.h.fenced += 1
+            return
+        ep = m.body.get("ep")
+        if ep is not None and ep != self.view_no:
+            self._fence(m)
+            return
         self._DISPATCH[m.kind](self, m)
 
 
@@ -745,6 +809,10 @@ class AbdReplica:
             self.reg[key] = (tag, val)
 
     def process(self, m: RMsg) -> None:
+        if m.kind in ("vi", "hba"):
+            return   # ABD needs no fencing: the quorum threshold is fixed
+                     # over the original n, so intersection holds across
+                     # view changes without epochs or leases
         reply = {"src": self.node_id}
         if m.kind == "qt":            # write phase 1: tag query
             reply["tag"] = self._get(m.key)[0]
@@ -764,17 +832,28 @@ class AbdReplica:
 
 
 class _HarnessClient:
-    """Shared client plumbing: op pumping, history logging, timeouts."""
+    """Shared client plumbing: op pumping, history logging, and bounded
+    retry with capped exponential backoff + seeded jitter.  ``timeout``
+    is the backoff base (in steps); a client that exhausts its retry
+    budget abandons the op — recorded as a :class:`RetryExhausted` in
+    ``harness.client_errors``, with the op left open in the history (the
+    checker treats an abandoned write as possibly-applied)."""
 
     def __init__(self, cid: int, harness: "ReplicationHarness", ops,
-                 timeout: int):
+                 timeout: int, retry: RetryPolicy | None = None):
         self.node_id = cid
         self.h = harness
         self.ops = list(ops)
         self.timeout = timeout
+        self.retry = retry or RetryPolicy(base=float(timeout), mult=2.0,
+                                          cap=8.0 * timeout, jitter=0.25,
+                                          max_attempts=10)
+        self.rng = random.Random((cid * 0x9E3779B1) ^ harness.seed)
         self.idx = 0
         self.inflight: dict | None = None
-        self.age = 0
+        self.age = 0.0
+        self.attempts = 0
+        self._deadline = float(timeout)
         self._rid = cid << 20
         harness.router.register(self)
 
@@ -795,16 +874,27 @@ class _HarnessClient:
                           val if kind == "write" else None)
         self.inflight = {"op": self._rid, "kind": kind, "key": key,
                          "val": val}
-        self.age = 0
+        self.age = 0.0
+        self.attempts = 0
+        self._deadline = self.retry.delay(0, self.rng)
         self._send()
 
     def on_step(self) -> None:
         if self.inflight is None:
             return
         self.age += 1
-        if self.age >= self.timeout:
-            self.age = 0
-            self._retry()
+        if self.age < self._deadline:
+            return
+        self.attempts += 1
+        if self.attempts >= self.retry.max_attempts:
+            self.h.client_errors.append(RetryExhausted(
+                self.node_id, self.inflight["op"], self.inflight["kind"],
+                self.inflight["key"], self.attempts))
+            self.inflight = None
+            return
+        self.age = 0.0
+        self._deadline = self.retry.delay(self.attempts, self.rng)
+        self._retry()
 
     def _finish(self, value=None) -> None:
         self.h.log.respond(self.node_id, self.inflight["op"], value=value)
@@ -823,13 +913,14 @@ class ChainClient(_HarnessClient):
 
     def _send(self) -> None:
         f = self.inflight
-        view = self.h.view
+        vno, view = self.h.client_view()
         if not view:
             return
         if f["kind"] == "write":
             self.h.send(self.node_id, view[0],
                         RMsg("cw", self.node_id, f["op"], f["key"],
-                             {"cl": self.node_id, "val": f["val"]}))
+                             {"cl": self.node_id, "val": f["val"],
+                              "ep": vno}))
         else:
             if self.h.dirty_read:
                 tgt = view[self._read_rr % len(view)]
@@ -838,7 +929,7 @@ class ChainClient(_HarnessClient):
                 tgt = view[-1]  # classic chain: tail-only reads
             self.h.send(self.node_id, tgt,
                         RMsg("cr", self.node_id, f["op"], f["key"],
-                             {"cl": self.node_id}))
+                             {"cl": self.node_id, "ep": vno}))
 
     _retry = _send
 
@@ -846,7 +937,11 @@ class ChainClient(_HarnessClient):
         f = self.inflight
         if f is None or m.rid != f["op"]:
             return  # stale reply from a retried op
-        if m.kind == "cwa" and f["kind"] == "write":
+        if m.kind == "fence":
+            # Replica rejected our epoch: refresh the view and resend
+            # immediately (same rid — idempotent at the head).
+            self._send()
+        elif m.kind == "cwa" and f["kind"] == "write":
             self._finish()
         elif m.kind == "crr" and f["kind"] == "read":
             self._finish(value=m.body["val"])
@@ -862,8 +957,14 @@ class AbdClient(_HarnessClient):
         self.quorum = len(harness.replicas) // 2 + 1
 
     def _broadcast(self, kind: str, body: dict) -> None:
+        # Target the *detected* membership, not the full replica set:
+        # nodes the detector has declared dead get no traffic.  The
+        # quorum threshold stays over the original n, so this is safe —
+        # a false `dead` verdict only costs availability, never quorum
+        # intersection.
         f = self.inflight
-        for n in self.h.replicas:
+        _, members = self.h.client_view()
+        for n in members:
             self.h.send(self.node_id, n,
                         RMsg(kind, self.node_id, f["op"], f["key"],
                              {"cl": self.node_id, **body}))
@@ -911,6 +1012,41 @@ class AbdClient(_HarnessClient):
                              else f["wbval"])
 
 
+class _VMNode:
+    """View-manager pseudo-node (id 0): the monitor every replica
+    heartbeats to.  Heartbeats ride the same seeded delivery queue as
+    protocol messages, so detection latency is subject to the same
+    reordering/loss/partition effects as data traffic.  Each heartbeat
+    is answered with an ``hba`` carrying the current view number,
+    members, and the sender's renewed lease — the only channel through
+    which replicas learn membership."""
+
+    node_id = 0
+
+    def __init__(self, harness: "ReplicationHarness"):
+        self.h = harness
+        harness.router.register(self)
+
+    def handle_packet(self, msg: RMsg) -> None:
+        self.h.enqueue(self, msg)
+
+    def process(self, m: RMsg) -> None:
+        if m.kind != "hb":
+            return
+        views = self.h.views
+        views.record_heartbeat(m.src, float(self.h.steps))
+        self.h.send(0, m.src,
+                    RMsg("hba", 0, 0, 0,
+                         {"no": views.view.number,
+                          "members": list(views.view.members),
+                          "lease": views.lease_until.get(m.src, 0.0)}))
+
+
+#: message kinds that are control traffic (membership/fencing), allowed
+#: to remain in flight when the run terminates
+_CTRL_KINDS = frozenset(("hb", "hba", "vi", "fence"))
+
+
 class ReplicationHarness:
     """Seeded concurrent executor for the consistency protocols.
 
@@ -920,18 +1056,29 @@ class ReplicationHarness:
     genuinely and every run is reproducible from its seed.  Fault axes
     mirror the timed plane's :class:`repro.policy.FailureModel`: ``loss``
     (seeded per-destination drops via :class:`Router`), ``slow``
-    (delivery de-prioritization), and ``crashes`` — ``(step, node)``
-    pairs that blackhole the node and, for the chain, reconfigure the
-    view (the new tail commits its pending writes).
+    (delivery de-prioritization), ``crashes`` — ``(step, node)`` pairs
+    that blackhole the node — plus ``partitions`` (step-windowed group
+    cuts) and ``flaps`` (gray failure: a node unreachable for a duty
+    fraction of every period).
+
+    No production path learns of a failure from the schedule: a crash
+    only blackholes the router.  Everything downstream — suspicion,
+    the ``dead`` verdict, lease expiry, and the successor view — flows
+    through the heartbeat/:class:`ViewManager` machinery (``_VMNode``),
+    and replicas/clients act only on views they were *told* about.
 
     Unfinished operations stay open in the history; the checker treats
-    pending writes as possibly-applied and drops pending reads."""
+    pending writes as possibly-applied and drops pending reads.  Clients
+    that exhaust their retry budget land in ``client_errors``."""
 
     def __init__(self, kind: str, k: int, *, seed: int = 0,
                  dirty_read: bool = True, tail_bump: bool = True,
                  loss: dict[int, float] | None = None,
                  slow: dict[int, float] | None = None,
                  crashes: tuple[tuple[int, int], ...] = (),
+                 partitions: tuple[tuple[int, int, tuple[int, ...]], ...] = (),
+                 flaps: tuple[tuple[int, int, float], ...] = (),
+                 membership: MembershipConfig | None = None,
                  timeout: int = 60, max_steps: int = 200_000):
         if kind not in ("chain", "abd"):
             raise ValueError(f"unknown consistency kind {kind!r}")
@@ -939,21 +1086,70 @@ class ReplicationHarness:
         self.dirty_read = dirty_read
         self.timeout = timeout
         self.max_steps = max_steps
+        self.seed = seed
         self.router = Router()
         self.router.set_loss(loss, seed)
+        self.router.unreachable = self._unreachable
         self.rng = random.Random(seed ^ 0x5BD1E995)
         self.log = HistoryLog()
-        self.view = list(range(1, k + 1))
         self.slow = dict(slow or {})
         self.crashes = sorted(crashes)
+        self.partitions = tuple((int(s), int(e), tuple(grp))
+                                for s, e, grp in partitions)
+        self.flaps = {int(n): (int(p), float(d)) for n, p, d in flaps}
+        # Membership state must exist before replicas: each replica's
+        # initial view/lease comes from the ViewManager's bootstrap.
+        self.membership = membership or MembershipConfig(
+            interval=10.0, suspect_after=3.0, dead_after=6.0)
+        self.views = ViewManager(range(1, k + 1), self.membership, now=0.0)
+        self.views.on_change.append(self._install_view)
+        self.hb_every = max(1, int(self.membership.interval))
+        self.fenced = 0
+        self.client_errors: list[RetryExhausted] = []
         self.steps = 0
         self.pending: list[tuple[object, RMsg]] = []
+        self._vm = _VMNode(self)
         if kind == "chain":
             self.replicas = {n: ChainReplica(n, self, tail_bump=tail_bump)
-                             for n in self.view}
+                             for n in self.views.view.members}
         else:
-            self.replicas = {n: AbdReplica(n, self) for n in self.view}
+            self.replicas = {n: AbdReplica(n, self)
+                             for n in self.views.view.members}
         self.clients: list[_HarnessClient] = []
+
+    @property
+    def view(self) -> list[int]:
+        """The view service's current membership (chain order)."""
+        return list(self.views.view.members)
+
+    def client_view(self) -> tuple[int, list[int]]:
+        """What a client knows: the latest installed view.  Modeled as a
+        read against the view service (clients refresh on every send and
+        on ``fence`` replies), so it is authoritative-at-send-time."""
+        v = self.views.view
+        return v.number, list(v.members)
+
+    def _unreachable(self, src: int, dst: int) -> bool:
+        s = self.steps
+        for start, end, grp in self.partitions:
+            if start <= s < end and ((src in grp) != (dst in grp)):
+                return True
+        for n in (src, dst):
+            f = self.flaps.get(n)
+            if f is not None and (s % f[0]) < f[1] * f[0]:
+                return True
+        return False
+
+    def _install_view(self, view) -> None:
+        """A new view activated: push ``vi`` installs to its members
+        (best-effort — the periodic ``hba`` grants re-deliver the view
+        to anyone who misses the install)."""
+        for n in view.members:
+            self.send(0, n,
+                      RMsg("vi", 0, 0, 0,
+                           {"no": view.number,
+                            "members": list(view.members),
+                            "lease": self.views.lease_until.get(n, 0.0)}))
 
     @classmethod
     def from_spec(cls, spec, **kw) -> "ReplicationHarness":
@@ -975,7 +1171,7 @@ class ReplicationHarness:
         return c
 
     def send(self, src: int, dst: int, msg: RMsg) -> None:
-        self.router.send(dst, msg)
+        self.router.send(dst, msg, src=src)
 
     def enqueue(self, node, msg: RMsg) -> None:
         self.pending.append((node, msg))
@@ -991,27 +1187,41 @@ class ReplicationHarness:
         node.process(msg)
 
     def crash(self, node_id: int) -> None:
+        """Crash = the node goes silent.  Nothing else: its heartbeats
+        stop, the detector suspects it, the lease runs out, and the view
+        service announces the successor view.  (The pre-membership
+        harness reconfigured the chain here, omnisciently.)"""
         self.router.fail(node_id)
-        if node_id in self.view:
-            self.view.remove(node_id)
-            if self.kind == "chain" and self.view:
-                self.replicas[self.view[-1]].become_tail()
+
+    def _drained(self) -> bool:
+        """Done when every client finished (or gave up) and the only
+        in-flight messages are control traffic (heartbeats keep flowing
+        as long as the cluster lives)."""
+        return (all(c.done for c in self.clients)
+                and all(m.kind in _CTRL_KINDS for _, m in self.pending))
 
     def run(self) -> HistoryLog:
         while self.steps < self.max_steps:
             while self.crashes and self.crashes[0][0] <= self.steps:
                 self.crash(self.crashes.pop(0)[1])
+            if self.steps % self.hb_every == 0:
+                # Live replicas emit their periodic heartbeat toward the
+                # monitor; crashed nodes are silent — that silence *is*
+                # the failure signal.
+                for n in self.replicas:
+                    if n not in self.router.failed:
+                        self.send(n, 0, RMsg("hb", n, 0, 0, {}))
+            self.views.poll(float(self.steps))
             for c in self.clients:
                 c.pump()
-            if all(c.done for c in self.clients) and not self.pending:
+            if self._drained():
                 break
             self.steps += 1
             if self.pending:
                 self.step()
-            else:
-                # everything in flight was lost: force immediate retries
-                for c in self.clients:
-                    c.age = c.timeout
+            # an empty queue is NOT a retry signal: clients cannot see
+            # it (that would be omniscience) — they age toward their own
+            # backoff deadline while the step clock keeps advancing
             for c in self.clients:
                 c.on_step()
         return self.log

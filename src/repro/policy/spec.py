@@ -187,11 +187,22 @@ class FailureModel:
     sender's egress port, then vanish (a lossy link/NIC).  ``slow``:
     straggler factors ``(node, f)`` — the node's NIC handler compute
     runs ``f``x slower (a thermally-throttled / contended PsPIN unit).
-    ``seed`` drives the deterministic loss draw."""
+    ``seed`` drives the deterministic loss draw.
+
+    Detection-era axes (PR 7): ``partitions`` are time-windowed group
+    cuts ``(start_ns, end_ns, (nodes...))`` — during the window no
+    packet crosses the group boundary in either direction; ``flap`` is
+    gray failure ``(node, period_ns, duty)`` — the node is unreachable
+    for the first ``duty`` fraction of every period; ``crash_at``
+    schedules mid-run crashes ``(t_ns, node)``.  None of these are
+    visible to any protocol except through missed heartbeats."""
 
     crashed: tuple[int, ...] = ()
     loss: tuple[tuple[int, float], ...] = ()
     slow: tuple[tuple[int, float], ...] = ()
+    partitions: tuple[tuple[float, float, tuple[int, ...]], ...] = ()
+    flap: tuple[tuple[int, float, float], ...] = ()
+    crash_at: tuple[tuple[float, int], ...] = ()
     seed: int = 0
 
     def __post_init__(self):
@@ -203,6 +214,17 @@ class FailureModel:
             if f < 1.0:
                 raise ValueError(f"slowdown factor {f} for node {node} "
                                  "must be >= 1")
+        for start, end, grp in self.partitions:
+            if not (start < end and grp):
+                raise ValueError(f"bad partition window ({start}, {end}, "
+                                 f"{grp})")
+        for node, period, duty in self.flap:
+            if period <= 0 or not 0.0 < duty < 1.0:
+                raise ValueError(f"bad flap ({node}, {period}, {duty}): "
+                                 "need period > 0 and duty in (0, 1)")
+        for t, _node in self.crash_at:
+            if t < 0:
+                raise ValueError(f"crash_at time {t} must be >= 0")
 
     @property
     def loss_map(self) -> dict[int, float]:
@@ -212,8 +234,14 @@ class FailureModel:
     def slow_map(self) -> dict[int, float]:
         return dict(self.slow)
 
+    @property
+    def flap_map(self) -> dict[int, tuple[float, float, float]]:
+        """{node: (period, duty, phase)} for :meth:`Network.set_failures`."""
+        return {node: (period, duty, 0.0) for node, period, duty in self.flap}
+
     def is_healthy(self) -> bool:
-        return not (self.crashed or self.loss or self.slow)
+        return not (self.crashed or self.loss or self.slow
+                    or self.partitions or self.flap or self.crash_at)
 
 
 _TREE_ENGINES = ("spin", "host", "hyperloop")

@@ -32,7 +32,10 @@ VI (sPIN-TriEC streaming vs INEC chunk staging).
 
 from __future__ import annotations
 
+import random
+
 from repro.core.packets import ReplStrategy
+from repro.membership.retry import RetryPolicy
 from repro.core.replication import children_of, optimal_chunk_count
 from repro.policy.spec import (
     Chain,
@@ -185,6 +188,68 @@ class MessageInjector(Stage):
                 lambda i, n, w: {**meta, "i": i, "n": n},
             ),
         )
+
+
+class ChainWriteInjector(Stage):
+    """Membership-aware chain write injector: the head is resolved from
+    the *detected* view per attempt (never from the fault schedule), the
+    view number rides along as the request epoch, and a missing ack is
+    retried with capped exponential backoff + seeded jitter — covering
+    head crashes, fenced packets, and the unavailability window while a
+    view change waits out leases.  Exhausting ``max_attempts`` fails the
+    request cleanly via ``Protocol._register_failure``."""
+
+    def __init__(self, membership, chain_nodes: tuple[int, ...],
+                 header_extra: int, retry: RetryPolicy | None = None,
+                 seed: int = 0):
+        self.membership = membership
+        self.chain_nodes = tuple(chain_nodes)
+        self.header_extra = header_extra
+        self.retry = retry or RetryPolicy(base=250_000.0, mult=2.0,
+                                          cap=2_000_000.0, jitter=0.2,
+                                          max_attempts=12)
+        self.rng = random.Random(seed ^ 0x9E3779B9)
+
+    def expected_acks(self, size: int) -> int:
+        return 1
+
+    def start(self, pend: _Pending) -> None:
+        self._attempt(pend, 0)
+
+    def _attempt(self, pend: _Pending, attempt: int) -> None:
+        p = self.proto
+        if pend.rid not in p._pending:
+            return
+        view = self.membership.views.view
+        members = [n for n in self.chain_nodes if n in view.members]
+        if not members:
+            p._register_failure(pend, "no live chain replicas")
+            return
+        head = members[0]
+        cfg, net = p.env.cfg, p.env.net
+        size = p.req_size(pend)
+        meta = {"rid": pend.rid, "cl": pend.client, "pid": p.pid,
+                "sz": size, "ep": view.number}
+        if attempt:
+            p.retries += 1
+        p.env.sim.after(
+            cfg.client_post_ns,
+            lambda: _send_message(
+                net, pend.client, head, size, self.header_extra,
+                lambda i, n, w: {**meta, "i": i, "n": n},
+            ),
+        )
+        rto = cfg.client_post_ns + self.retry.delay(attempt, self.rng)
+        p.env.sim.after(rto, lambda: self._timeout(pend, attempt))
+
+    def _timeout(self, pend: _Pending, attempt: int) -> None:
+        p = self.proto
+        if pend.rid not in p._pending:
+            return   # completed in the meantime
+        if attempt + 1 >= self.retry.max_attempts:
+            p._register_failure(pend, "retry budget exhausted")
+            return
+        self._attempt(pend, attempt + 1)
 
 
 class FanoutInjector(Stage):
@@ -1031,7 +1096,18 @@ class ChainSpinSink(Stage):
     version, and the commit ack walks back up the chain — each hop's CH
     marks the local version clean (the CRAQ dirty-list walk) before
     emitting upstream.  The head's CH acks the client, so the client
-    completion certifies the *committed* write, not just receipt."""
+    completion certifies the *committed* write, not just receipt.
+
+    Two failover modes.  Static (default, ``membership=None``): succ/pred
+    are fixed at compile time against the fault schedule — the legacy
+    omniscient reconfiguration, kept as the anchor-exact baseline for
+    healthy runs.  Detection-driven (``membership=`` a
+    :class:`~repro.membership.HeartbeatService`): every packet resolves
+    its position in the chain from the *detected* view at arrival time
+    and carries the issuing view number as an epoch (``meta["ep"]``) —
+    packets whose epoch mismatches the current view, or that land on a
+    replica the view no longer lists, are fenced (dropped + counted in
+    ``proto.fenced``) and the client retries with a fresh epoch."""
 
     class _Req:
         __slots__ = ("gate", "processed", "n", "local_done", "ack_seen",
@@ -1045,57 +1121,83 @@ class ChainSpinSink(Stage):
             self.ack_seen = False
             self.fired = False
 
-    def __init__(self, node: int, succ: int | None, pred: int | None):
+    def __init__(self, node: int, succ: int | None, pred: int | None,
+                 membership=None, chain_nodes: tuple[int, ...] = ()):
         self.node = node
         self.succ = succ   # next replica down the chain (None == tail)
         self.pred = pred   # previous replica (None == head)
+        self.membership = membership
+        self.chain_nodes = tuple(chain_nodes)
         hh, ph, ch = HANDLER_NS["chain_repl"]
         self.hh_ns, self.ph_ns, self.ch_ns = hh, ph, ch
-        self._reqs: dict[int, ChainSpinSink._Req] = {}
+        self._reqs: dict = {}
 
     def attach(self, proto) -> None:
         super().attach(proto)
         self.unit = proto.env.pspin(self.node)
 
-    def _commit_ack(self, rid: int, client: int) -> None:
+    def _route(self) -> tuple[int | None, int | None, bool, int | None]:
+        """(succ, pred, is_member, epoch) under the detected view."""
+        view = self.membership.views.view
+        members = [n for n in self.chain_nodes if n in view.members]
+        if self.node not in members:
+            return None, None, False, view.number
+        i = members.index(self.node)
+        succ = members[i + 1] if i + 1 < len(members) else None
+        pred = members[i - 1] if i > 0 else None
+        return succ, pred, True, view.number
+
+    def _commit_ack(self, rid: int, client: int, pred: int | None,
+                    ep: int | None) -> None:
         # CH: downstream committed -> mark clean locally, ack upstream.
         pid = self.proto.pid
-        if self.pred is None:
+        extra = {} if ep is None else {"ep": ep}
+        if pred is None:
             emit = Emit(client, ACK_WIRE,
-                        {"rid": rid, "ack": "chain", "pid": pid})
+                        {"rid": rid, "ack": "chain", "pid": pid, **extra})
         else:
-            emit = Emit(self.pred, ACK_WIRE,
+            emit = Emit(pred, ACK_WIRE,
                         {"rid": rid, "cl": client, "pid": pid,
-                         "chain_ack": 1})
+                         "chain_ack": 1, **extra})
         self.unit.process(ACK_WIRE, HandlerSpec(self.ch_ns, [emit]))
 
-    def _maybe_fire(self, rid: int, req: "ChainSpinSink._Req",
-                    client: int) -> None:
+    def _maybe_fire(self, key, req: "ChainSpinSink._Req", client: int,
+                    pred: int | None, ep: int | None) -> None:
         if req.fired or not (req.local_done and req.ack_seen):
             return
         req.fired = True
-        del self._reqs[rid]
-        self._commit_ack(rid, client)
+        del self._reqs[key]
+        self._commit_ack(key if ep is None else key[0], client, pred, ep)
 
     def on_packet(self, pkt) -> None:
         meta = pkt.meta
         rid = meta["rid"]
-        req = self._reqs.setdefault(rid, self._Req())
+        if self.membership is None:
+            succ, pred, ep = self.succ, self.pred, None
+            key = rid
+        else:
+            succ, pred, member, cur_ep = self._route()
+            if not member or meta.get("ep") != cur_ep:
+                self.proto.fenced += 1
+                return
+            ep = cur_ep
+            key = (rid, ep)
+        req = self._reqs.setdefault(key, self._Req())
         if meta.get("chain_ack"):
             req.ack_seen = True
-            self._maybe_fire(rid, req, meta["cl"])
+            self._maybe_fire(key, req, meta["cl"], pred, ep)
             return
         req.n = meta["n"]
-        emits = ([Emit(self.succ, pkt.wire_size, dict(meta))]
-                 if self.succ is not None else [])
+        emits = ([Emit(succ, pkt.wire_size, dict(meta))]
+                 if succ is not None else [])
 
         def packet_done() -> None:
             req.processed += 1
             if req.processed == req.n:
                 req.local_done = True
-                if self.succ is None:
+                if succ is None:
                     req.ack_seen = True   # the tail commits locally
-                self._maybe_fire(rid, req, meta["cl"])
+                self._maybe_fire(key, req, meta["cl"], pred, ep)
 
         if meta["i"] == 0:
             self.unit.process(pkt.wire_size,
@@ -1670,6 +1772,25 @@ def _compile_consistency(env: Env, spec: PolicySpec,
     cfg = env.cfg
 
     if isinstance(c, Chain):
+        m = getattr(env, "membership", None)
+        if m is not None and c.engine == "spin" and spec.op != "read":
+            # Detection-driven failover: all k replicas get sinks; chain
+            # position, head selection, and epoch fencing resolve per
+            # packet from the heartbeat-detected view.  The static
+            # chain_live_nodes path below stays the default (and the
+            # anchor-exact baseline) when no membership service is
+            # attached to the Env.
+            chain_nodes = tuple(range(1, c.k + 1))
+            sinks = {n: ChainSpinSink(n, None, None, membership=m,
+                                      chain_nodes=chain_nodes)
+                     for n in chain_nodes}
+            seed = getattr(env.failures, "seed", 0) or 0
+            return PipelineProtocol(
+                env, spec, size,
+                ChainWriteInjector(m, chain_nodes, write_header_extra(c.k),
+                                   seed=seed),
+                sinks,
+            )
         chain = chain_live_nodes(c, crashed)
         if spec.op == "read":
             tail = chain[-1]

@@ -12,6 +12,15 @@ PCIe round-trip latency (up to 400 ns, [25]), an RPC delivery overhead
 (NIC->host doorbell + cache miss + dispatch), a single-core memcpy
 bandwidth for RPC buffering, and a fixed CPU request-validation cost
 mirroring the 200-cycle NIC handler check.
+
+Fault injection axes (all seeded/deterministic, all counted — no silent
+loss): ``crashed`` blackholes a node in both directions, ``loss`` drops
+toward a node with a probability, ``partitions`` cut a node group from
+the rest for a time window, ``flaps`` make a node unreachable for a duty
+fraction of every period (gray failure), and ``crash_at`` crashes a node
+mid-run at a scheduled time.  Packets with ``meta["ctrl"]`` (heartbeats,
+view management) are booked in separate ``ctrl_*`` counters so control
+traffic never pollutes data goodput/loss accounting.
 """
 
 from __future__ import annotations
@@ -96,11 +105,10 @@ class SimNode:
 
 
 class Network:
-    """Packet transport with optional failure injection: ``crashed``
-    nodes blackhole traffic in both directions, ``loss`` drops packets
-    towards a node with a per-node probability (seeded, deterministic).
-    Every dropped packet is counted in ``packets_dropped`` so workload
-    metrics can account for lost bytes (no silent loss)."""
+    """Packet transport with failure injection; see the module docstring
+    for the fault axes.  Every dropped packet is counted (data in
+    ``packets_dropped``/``bytes_dropped``, control in the ``ctrl_*``
+    twins) so workload metrics can account for lost bytes."""
 
     def __init__(self, sim: Simulator, cfg: NetConfig):
         self.sim = sim
@@ -109,8 +117,18 @@ class Network:
         self.packets_sent = 0
         self.packets_dropped = 0
         self.bytes_dropped = 0
+        self.ctrl_packets_sent = 0
+        self.ctrl_bytes_sent = 0
+        self.ctrl_packets_dropped = 0
+        self.ctrl_bytes_dropped = 0
         self.crashed: set[int] = set()
         self.loss: dict[int, float] = {}
+        #: ((start_ns, end_ns, frozenset(group)), ...) — during the
+        #: window, packets crossing the group boundary are cut
+        self.partitions: tuple[tuple[float, float, frozenset], ...] = ()
+        #: {node: (period_ns, duty, phase_ns)} — the node is unreachable
+        #: (both directions) for the first ``duty`` fraction of each period
+        self.flaps: dict[int, tuple[float, float, float]] = {}
         self._loss_rng = random.Random(0)
 
     def set_failures(
@@ -118,15 +136,46 @@ class Network:
         crashed=(),
         loss: dict[int, float] | None = None,
         seed: int = 0,
+        partitions=(),
+        flaps: dict[int, tuple[float, float, float]] | None = None,
+        crash_at=(),
     ) -> None:
         self.crashed = set(crashed)
         self.loss = dict(loss or {})
+        self.partitions = tuple(
+            (float(s), float(e), frozenset(grp)) for s, e, grp in partitions
+        )
+        self.flaps = dict(flaps or {})
         self._loss_rng = random.Random(seed)
+        for t, node in crash_at:
+            self.sim.at(float(t), lambda n=node: self.crashed.add(n))
+
+    def cut(self, a: int, b: int) -> bool:
+        """Is the a<->b path severed right now by a partition or flap?"""
+        now = self.sim.now
+        for start, end, grp in self.partitions:
+            if start <= now < end and ((a in grp) != (b in grp)):
+                return True
+        for n in (a, b):
+            f = self.flaps.get(n)
+            if f is not None:
+                period, duty, phase = f
+                if ((now - phase) % period) < duty * period:
+                    return True
+        return False
 
     def node(self, node_id: int) -> SimNode:
         if node_id not in self.nodes:
             self.nodes[node_id] = SimNode(self.sim, self.cfg, node_id)
         return self.nodes[node_id]
+
+    def _count_drop(self, wire_size: int, ctrl: bool) -> None:
+        if ctrl:
+            self.ctrl_packets_dropped += 1
+            self.ctrl_bytes_dropped += wire_size
+        else:
+            self.packets_dropped += 1
+            self.bytes_dropped += wire_size
 
     def send(
         self,
@@ -142,30 +191,34 @@ class Network:
         (the moment a NIC handler that blocks on egress can retire).
         """
         meta = meta or {}
+        ctrl = bool(meta.get("ctrl"))
         if src in self.crashed or dst in self.crashed:
             # A crashed endpoint neither sends nor receives; the sender's
             # handler (if any) retires immediately — its DMA completes
             # into the void.
-            self.packets_dropped += 1
-            self.bytes_dropped += wire_size
+            self._count_drop(wire_size, ctrl)
             if on_sent is not None:
                 self.sim.after(0.0, on_sent)
             return
-        # Loss is decided at send time (deterministic event order) but
-        # takes effect after egress: the sender still pays serialization.
+        # Loss (and partition/flap cuts) are decided at send time
+        # (deterministic event order) but take effect after egress: the
+        # sender still pays serialization.
         p = self.loss.get(dst, 0.0)
-        lost = p > 0.0 and self._loss_rng.random() < p
+        lost = (p > 0.0 and self._loss_rng.random() < p) or self.cut(src, dst)
         s, d = self.node(src), self.node(dst)
         ser = self.cfg.ser_ns(wire_size)
         s.bytes_out += wire_size
-        self.packets_sent += 1
+        if ctrl:
+            self.ctrl_packets_sent += 1
+            self.ctrl_bytes_sent += wire_size
+        else:
+            self.packets_sent += 1
 
         def after_egress(start: float, end: float) -> None:
             if on_sent is not None:
                 on_sent()
             if lost:
-                self.packets_dropped += 1
-                self.bytes_dropped += wire_size
+                self._count_drop(wire_size, ctrl)
                 return
             arrive = end + self.cfg.link_latency_ns
 

@@ -130,8 +130,17 @@ class Env:
         #: compile their survivor fan-out against it.
         self.failures = failures
         if failures is not None:
-            self.net.set_failures(failures.crashed, failures.loss_map,
-                                  failures.seed)
+            self.net.set_failures(
+                failures.crashed, failures.loss_map, failures.seed,
+                partitions=getattr(failures, "partitions", ()),
+                flaps=getattr(failures, "flap_map", {}) or {},
+                crash_at=getattr(failures, "crash_at", ()),
+            )
+        #: optional :class:`repro.membership.HeartbeatService` (attach via
+        #: :func:`repro.membership.attach_membership`); when present,
+        #: chain pipelines compile against *detected* views instead of
+        #: the static ``chain_live_nodes`` fan-out.
+        self.membership = None
         self._pspin: dict[int, PsPINUnit] = {}
         self._cpu: dict[int, SerialResource] = {}
         self._node_owner: dict[int, "Protocol"] = {}
@@ -249,6 +258,9 @@ class Protocol:
         self._next_rid = 0
         self._clients: set[int] = set()
         self.completed = 0
+        self.failed = 0     # requests abandoned (retry exhaustion, no view)
+        self.fenced = 0     # stale-epoch packets dropped at a sink
+        self.retries = 0    # client re-sends (membership-aware injectors)
         self.last_done_at: float = 0.0
 
     def _install(self, node: int, handler) -> None:
@@ -312,6 +324,17 @@ class Protocol:
             self._on_request_complete(pend)
             if pend.on_done is not None:
                 pend.on_done(Result(latency, pend.extra))
+
+    def _register_failure(self, pend: _Pending, reason: str) -> None:
+        """Abandon an in-flight request cleanly (retry exhaustion, empty
+        view): the request leaves the pending table, its ``on_done`` fires
+        with ``extra["failed"]`` set, and late acks are ignored."""
+        if self._pending.pop(pend.rid, None) is None:
+            return
+        self.failed += 1
+        pend.extra["failed"] = reason
+        if pend.on_done is not None:
+            pend.on_done(Result(self.env.sim.now - pend.t_issue, pend.extra))
 
     # -- subclass hooks ------------------------------------------------------
 

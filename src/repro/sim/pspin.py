@@ -71,6 +71,12 @@ HANDLER_NS = {
     "chain_read":           (212.0, 92.0 + 6.0 / 0.6, 107.0),
     "chain_version":        (98.0, 54.0, 0.0),
     "quorum":               (213.0, 88.0, 96.0),
+    # Membership heartbeat: a timer-doorbell handler that stamps a
+    # sequence number and emits one 44 B packet — ~20 instructions at
+    # the non-contended IPC for the emit path, a small HH for the
+    # monitor-side arrival bookkeeping, no CH (assumption, same
+    # calibration idiom as the consistency handlers above).
+    "heartbeat":            (96.0, 20.0 / 0.6, 0.0),
 }
 
 

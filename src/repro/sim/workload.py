@@ -186,6 +186,10 @@ class Scenario:
     # bucket is empty are shed and counted as drops (None == unlimited)
     admission_GBps: float | None = None
     admission_burst_bytes: int = 1 << 20
+    # failure detection (repro.membership.MembershipConfig | None): attach
+    # a heartbeat service over the storage nodes — heartbeats become timed
+    # NIC traffic, booked in the ctrl_* counters, never in data goodput
+    membership: object | None = None
 
     def per_client_gap_ns(self, cfg: NetConfig | None = None) -> float:
         """Mean open-loop inter-arrival gap per client (``cfg``: the
@@ -211,6 +215,9 @@ class Metrics:
         self.issued = 0
         self.completed = 0
         self.dropped = 0
+        self.failed = 0          # requests abandoned after retry exhaustion
+                                 # (a subset of ``dropped`` — conservation
+                                 # still balances against ``issued``)
         self.bytes_completed = 0
         self.bytes_written = 0   # completed write-op request payloads
         self.bytes_read = 0      # completed read-op request payloads
@@ -291,6 +298,7 @@ class Metrics:
             "issued": self.issued,
             "completed": self.completed,
             "dropped": self.dropped,
+            "failed": self.failed,
             "in_flight": self.in_flight,
             "p50_us": self.percentile_ns(50) / 1e3,
             "p95_us": self.percentile_ns(95) / 1e3,
@@ -402,6 +410,17 @@ class Workload:
             else:
                 self._pacers.append(None)
         self._outstanding: dict[int, int] = {}
+        # failure detection: heartbeats over the compiled storage nodes.
+        # Attached AFTER compilation on purpose — the policies here keep
+        # their static (healthy-view) pipelines and the heartbeat plane
+        # rides alongside as pure control traffic, so its cost shows up
+        # in the ctrl_* counters without perturbing the data-path
+        # anchors.  Detection-driven reconfiguration is exercised by
+        # benchmarks/membership.py, which attaches before compiling.
+        if sc.membership is not None:
+            from repro.membership import attach_membership
+
+            attach_membership(self.env, self.storage_nodes(), sc.membership)
         # cumulative network loss counters at the last telemetry sample
         self._loss_seen = (0, 0)
         #: shared object space: payload sizes of completed writes, drawn
@@ -507,6 +526,16 @@ class Workload:
 
         def done(res: Result) -> None:
             self._outstanding[client] -= 1
+            if res.extra.get("failed"):
+                # the protocol gave up (retry budget exhausted / no live
+                # replicas): counted as a drop so conservation holds —
+                # issued == completed + in_flight + dropped
+                self.metrics.failed += 1
+                self.metrics.on_drop(sim.now)
+                pp["dropped"] += 1
+                if after_done is not None:
+                    after_done()
+                return
             self.metrics.on_complete(sim.now, res.latency_ns, nbytes, op,
                                      background=pl.background)
             if self.sc.shared_extents and op != "read":
@@ -681,6 +710,12 @@ class Workload:
                 "bytes_read": self.metrics.bytes_read,
                 "lost_packets": self.env.net.packets_dropped,
                 "lost_bytes": self.env.net.bytes_dropped,
+                # control traffic (heartbeats, view management) is booked
+                # apart from data: goodput and loss stay pure data-plane
+                "ctrl_packets": self.env.net.ctrl_packets_sent,
+                "ctrl_bytes": self.env.net.ctrl_bytes_sent,
+                "ctrl_lost_packets": self.env.net.ctrl_packets_dropped,
+                "ctrl_lost_bytes": self.env.net.ctrl_bytes_dropped,
                 "events": self.env.sim.events_processed,
                 "sim_ns": self.env.sim.now,
                 "packets": self.env.net.packets_sent,

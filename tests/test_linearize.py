@@ -122,6 +122,30 @@ def test_counterexample_names_the_stuck_read():
     assert res.partial == (1,)
 
 
+def test_counterexample_printer_golden():
+    # the full printed artifact, frozen: a pending write flickers between
+    # applied (read op 2 sees 9) and dropped (read op 3 sees 7 again) —
+    # the explanation must show the longest partial linearization, the
+    # stuck read with expected-vs-observed values, and name the pending
+    # write whose optionality was explored
+    h = [
+        op(1, 1, "write", 0, 7, 1, 2),
+        op(4, 3, "write", 0, 9, 3, None),
+        op(2, 2, "read", 0, 9, 5, 6),
+        op(3, 2, "read", 0, 7, 7, 8),
+    ]
+    res = check_history(h)
+    assert not res.ok
+    assert res.partial == (1, 4, 2)
+    assert res.explain() == (
+        "NOT linearizable (key 0):\n"
+        "  longest partial linearization: [1, 4, 2]\n"
+        "  stuck frontier (minimal candidates):\n"
+        "    read op 3 (client 2) returned 7, register holds 9\n"
+        "    pending writes considered (applied or dropped): [4]"
+    )
+
+
 def test_operations_from_records_pairs_and_keeps_pending():
     from repro.core.handlers import HistoryLog
 

@@ -1,0 +1,516 @@
+"""Failure detection, leases, and view-change reconfiguration.
+
+(a) detector — EWMA timeout adaptation, the monotone
+    alive -> suspect -> dead ladder, revoked suspicion as the measured
+    false-positive channel, and the no-resurrection rule;
+(b) view manager — lease wait-out before activation, monotone view
+    numbers, no rejoin;
+(c) retry policy — exponential growth, cap, bounded jitter, exhaustion;
+(d) timed plane — heartbeats as costed NIC traffic in the ctrl byte
+    counters, detection-driven chain failover under scheduled crashes /
+    partitions, gray-failure (flap) tolerance, and the static
+    (anchor-exact) compile staying the default without a service;
+(e) functional plane — the harness where ``crash()`` only silences a
+    node: detection latency, lease-gated activation, epoch fencing,
+    cross-view linearizability over the crash x partition x flap grid
+    (tier-1 subset here, full grid in the slow lane), and ABD losing
+    availability but never safety when the quorum goes unreachable;
+(f) workload accounting — heartbeat bytes ride the ctrl_* counters,
+    never data goodput; failed requests balance the conservation ledger.
+"""
+
+import random
+
+import pytest
+
+from repro.core.handlers import ReplicationHarness
+from repro.membership import (
+    DEAD,
+    MONITOR,
+    SUSPECT,
+    FailureDetector,
+    MembershipConfig,
+    RetryExhausted,
+    RetryPolicy,
+    ViewManager,
+    attach_membership,
+)
+from repro.policy import FailureModel, preset_spec
+from repro.policy.timed import compile_policy
+from repro.sim import protocols as P
+from repro.verify.linearize import check_records
+
+pytestmark = pytest.mark.membership
+
+KiB = 1024
+
+
+# -- (a) failure detector ----------------------------------------------------
+
+
+def test_config_validation():
+    with pytest.raises(ValueError, match="interval"):
+        MembershipConfig(interval=0)
+    with pytest.raises(ValueError, match="suspect_after"):
+        MembershipConfig(suspect_after=5.0, dead_after=3.0)
+    with pytest.raises(ValueError, match="lease"):
+        MembershipConfig(lease=-1.0)
+    cfg = MembershipConfig(interval=10.0, dead_after=6.0)
+    assert cfg.dead_timeout == 60.0
+    assert cfg.lease_span == 60.0          # lease defaults to dead timeout
+    assert MembershipConfig(lease=25.0).lease_span == 25.0
+
+
+def test_detector_ladder_is_monotone():
+    cfg = MembershipConfig(interval=10.0, suspect_after=3.0, dead_after=6.0)
+    d = FailureDetector([1], cfg)
+    for t in (10.0, 20.0, 30.0):
+        d.record(1, t)
+    assert d.poll(40.0) == []                       # silence 10 < 30
+    assert d.poll(61.0) == [(1, SUSPECT)]           # silence 31 >= 30
+    assert d.poll(70.0) == []                       # still suspect, once
+    assert d.poll(95.0) == [(1, DEAD)]              # silence 65 >= 60
+    assert d.poll(200.0) == []                      # dead is terminal
+
+
+def test_detector_jumps_straight_to_dead_after_long_silence():
+    d = FailureDetector([1], MembershipConfig(interval=10.0))
+    # one poll far past both thresholds yields both transitions
+    assert d.poll(1000.0) == [(1, SUSPECT), (1, DEAD)]
+
+
+def test_false_suspicion_is_revoked_and_counted():
+    cfg = MembershipConfig(interval=10.0, suspect_after=2.0, dead_after=6.0)
+    d = FailureDetector([1, 2], cfg)
+    assert d.poll(25.0) == [(1, SUSPECT), (2, SUSPECT)]
+    d.record(1, 26.0)                               # node 1 was just slow
+    assert d.state[1] != SUSPECT and d.state[2] == SUSPECT
+    assert d.false_suspects == 1
+    assert (26.0, 1, "alive") in d.transitions
+
+
+def test_dead_node_heartbeats_do_not_resurrect():
+    d = FailureDetector([1], MembershipConfig(interval=10.0))
+    d.poll(1000.0)
+    assert d.state[1] == DEAD
+    d.record(1, 1001.0)
+    assert d.state[1] == DEAD and d.late_heartbeats == 1
+
+
+def test_ewma_stretches_a_jittery_nodes_timeout():
+    """A node that heartbeats reliably every 3 intervals adapts its
+    effective timeout upward instead of flapping suspect/alive."""
+    cfg = MembershipConfig(interval=10.0, suspect_after=3.0, dead_after=6.0)
+    d = FailureDetector([1], cfg)
+    for t in range(30, 600, 30):                    # gap 30 = 3x interval
+        d.record(1, float(t))
+    assert d.effective_interval(1) > 25.0
+    # silence of 5 nominal intervals is within 2x the adapted interval
+    assert d.poll(d.last[1] + 50.0) == []
+    fixed = FailureDetector([1], MembershipConfig(interval=10.0,
+                                                  adaptive=False))
+    assert fixed.effective_interval(1) == 10.0
+
+
+# -- (b) view manager --------------------------------------------------------
+
+
+def test_view_waits_out_the_removed_nodes_lease():
+    cfg = MembershipConfig(interval=10.0, suspect_after=3.0, dead_after=6.0)
+    vm = ViewManager([1, 2, 3], cfg)
+    for t in (10.0, 20.0, 30.0):
+        for n in (1, 2, 3):
+            vm.record_heartbeat(n, t)
+    # node 3 goes silent after t=30: lease runs to 30 + 60 = 90
+    for t in (40.0, 50.0, 60.0, 70.0, 80.0, 90.0):
+        vm.record_heartbeat(1, t)
+        vm.record_heartbeat(2, t)
+        vm.poll(t)
+    assert 3 in vm.removed and vm.detected_at(3) is not None
+    assert vm.pending_change() and vm.activation_at() == 90.0
+    assert vm.poll(90.0) is None                    # not strictly past
+    new = vm.poll(90.5)                             # lease expired: activate
+    assert new is not None and new.number == 2 and new.members == (1, 2)
+    assert 3 not in new
+
+
+def test_removed_node_never_rejoins_and_gets_no_lease():
+    cfg = MembershipConfig(interval=10.0, suspect_after=2.0, dead_after=4.0)
+    vm = ViewManager([1, 2], cfg)
+    vm.record_heartbeat(1, 50.0)
+    vm.poll(50.0)                                   # node 2 silent -> dead
+    assert 2 in vm.removed
+    lease_before = vm.lease_until[2]
+    vm.record_heartbeat(2, 55.0)                    # back from the dead
+    assert vm.lease_until[2] == lease_before        # no renewal
+    assert vm.detector.late_heartbeats == 1
+    vm.record_heartbeat(1, 190.0)                   # node 1 stays alive
+    vm.poll(200.0)
+    assert vm.view.members == (1,)
+    vm.record_heartbeat(2, 201.0)                   # still no way back
+    vm.record_heartbeat(1, 210.0)
+    vm.poll(220.0)
+    assert 2 not in vm.view.members and vm.view.number == 2
+
+
+def test_view_numbers_are_monotone_across_cascading_failures():
+    cfg = MembershipConfig(interval=10.0, suspect_after=2.0, dead_after=4.0)
+    vm = ViewManager([1, 2, 3], cfg)
+    changes = []
+    vm.on_change.append(changes.append)
+    vm.record_heartbeat(1, 60.0)                    # 2 and 3 silent
+    vm.record_heartbeat(1, 100.0)
+    vm.poll(100.0)
+    assert vm.view.number == 2 and vm.view.members == (1,)
+    numbers = [v.number for _, v in vm.view_log]
+    assert numbers == sorted(numbers) == list(range(1, len(numbers) + 1))
+    assert [v.number for v in changes] == numbers[1:]
+
+
+# -- (c) retry policy --------------------------------------------------------
+
+
+def test_retry_policy_grows_caps_and_jitters():
+    rp = RetryPolicy(base=100.0, mult=2.0, cap=400.0, jitter=0.2,
+                     max_attempts=8)
+    rng = random.Random(0)
+    for attempt, nominal in ((0, 100.0), (1, 200.0), (2, 400.0), (5, 400.0)):
+        for _ in range(20):
+            d = rp.delay(attempt, rng)
+            assert nominal * 0.8 <= d <= nominal * 1.2
+    spread = {round(rp.delay(0, rng), 3) for _ in range(20)}
+    assert len(spread) > 1                           # jitter actually varies
+    assert RetryPolicy(base=10.0, jitter=0.0).delay(0, rng) == 10.0
+
+
+def test_retry_policy_validation():
+    with pytest.raises(ValueError):
+        RetryPolicy(base=0.0)
+    with pytest.raises(ValueError):
+        RetryPolicy(base=1.0, max_attempts=0)
+    with pytest.raises(ValueError):
+        RetryPolicy(base=1.0, jitter=1.5)
+
+
+# -- (d) timed plane ---------------------------------------------------------
+
+
+def _timed_chain(failures, membership_cfg, nwrites=30, gap_ns=100_000.0,
+                 horizon_ns=4_000_000.0, k=3):
+    """Compile a membership-aware chain, stream writes, run to quiescence.
+
+    Returns (service, protocol, results) where results is a list of
+    (index, Result)."""
+    env = P.Env(failures=failures)
+    svc = attach_membership(env, tuple(range(1, k + 1)), membership_cfg)
+    proto = compile_policy(env, preset_spec("chain-spin-write", k=k),
+                           16 * KiB)
+    done = []
+    for i in range(nwrites):
+        env.sim.at(i * gap_ns,
+                   lambda i=i: proto.issue(
+                       P.CLIENT, on_done=lambda r, i=i: done.append((i, r))))
+    # sentinel: keeps the heartbeat tick alive through the horizon even
+    # after the data plane drains (pure-detection tail)
+    env.sim.at(horizon_ns, lambda: None)
+    env.sim.run()
+    return svc, proto, done
+
+
+def test_timed_heartbeats_are_ctrl_traffic_with_handler_cost():
+    env = P.Env()
+    svc = attach_membership(env, (1, 2, 3),
+                            MembershipConfig(interval=20_000.0))
+    env.sim.at(500_000.0, lambda: None)
+    env.sim.run()
+    net = env.net
+    assert svc.hb_emitted > 0 and svc.hb_received == svc.hb_emitted
+    assert net.ctrl_packets_sent == svc.hb_emitted
+    assert net.ctrl_bytes_sent == 44 * svc.hb_emitted
+    # control traffic never leaks into the data counters
+    assert net.packets_sent == 0 and net.packets_dropped == 0
+    # the emitting NIC actually ran a handler (heartbeat is costed)
+    assert env.pspin(1).hpus.peak >= 1
+
+
+def test_timed_crash_is_detected_within_the_timeout_budget():
+    cfg = MembershipConfig(interval=20_000.0)    # dead timeout 100 us
+    crash_ns = 1_000_000.0
+    svc, proto, done = _timed_chain(
+        FailureModel(crash_at=((crash_ns, 1),)), cfg)
+    det = svc.views.detected_at(1)
+    assert det is not None
+    # silence starts at the last pre-crash heartbeat (at most one
+    # interval before the crash); the verdict lands on a poll, at most
+    # one interval after crossing the threshold
+    assert crash_ns < det <= crash_ns + cfg.dead_timeout + cfg.interval
+    assert svc.views.view.number == 2
+    assert svc.views.view.members == (2, 3)
+
+
+def test_timed_failover_completes_every_write_via_detected_view():
+    cfg = MembershipConfig(interval=20_000.0)
+    svc, proto, done = _timed_chain(
+        FailureModel(crash_at=((1_000_000.0, 1),)), cfg)
+    assert len(done) == 30
+    failed = [i for i, r in done if r.extra.get("failed")]
+    assert failed == []                          # retries rode the change
+    assert proto.retries >= 1                    # ...and were needed
+    # unavailability window: writes issued inside the detection window
+    # retried and still landed, bounded by the backoff budget
+    worst = max(r.latency_ns for _, r in done)
+    assert worst < 4.0 * (cfg.dead_timeout + 250_000.0)
+
+
+def test_timed_partition_removes_node_and_fences_stale_epochs():
+    cfg = MembershipConfig(interval=20_000.0)
+    svc, proto, done = _timed_chain(
+        FailureModel(partitions=((1_000_000.0, 3_000_000.0, (2,)),)),
+        cfg, nwrites=40, horizon_ns=5_000_000.0)
+    assert svc.views.detected_at(2) is not None
+    assert svc.views.view.members == (1, 3)
+    assert all(not r.extra.get("failed") for _, r in done)
+    # packets issued under view 1 that landed after view 2 activated
+    # were fenced (counted), and partitioned heartbeats were dropped as
+    # control bytes, not data loss
+    assert proto.fenced > 0
+    assert proto.env.net.ctrl_packets_dropped > 0
+    assert proto.env.net.packets_dropped == 0 or proto.retries > 0
+
+
+def test_timed_flap_is_gray_not_dead():
+    """A node unreachable 30% of the time keeps its heartbeats frequent
+    enough that the detector never removes it; the data path retries
+    through the flap instead of reconfiguring."""
+    cfg = MembershipConfig(interval=20_000.0)
+    svc, proto, done = _timed_chain(
+        FailureModel(flap=((2, 50_000.0, 0.3),)), cfg,
+        nwrites=40, horizon_ns=5_000_000.0)
+    assert svc.views.removed == set()
+    assert svc.views.view.number == 1
+    assert all(not r.extra.get("failed") for _, r in done)
+    assert proto.retries > 0                     # the flap was felt
+
+
+def test_timed_lossy_monitor_causes_suspicion_not_removal():
+    """Heavy loss toward the monitor + a straggler NIC: suspicion
+    flickers (the measured FP channel) but dead verdicts need
+    dead_after consecutive silent intervals, which loss alone does not
+    produce at these settings."""
+    env = P.Env(failures=FailureModel(loss=((MONITOR, 0.4),),
+                                      slow=((2, 8.0),), seed=7))
+    svc = attach_membership(env, (1, 2, 3),
+                            MembershipConfig(interval=20_000.0,
+                                             suspect_after=2.0,
+                                             dead_after=8.0))
+    env.sim.at(5_000_000.0, lambda: None)
+    env.sim.run()
+    assert svc.views.detector.false_suspects > 0
+    assert svc.views.removed == set()
+    assert svc.views.view.number == 1
+
+
+def test_timed_static_compile_is_default_without_membership():
+    """No service attached -> the legacy compile-time chain (the
+    anchor-exact baseline) — detection only ever changes behavior when
+    explicitly attached."""
+    from repro.policy.timed import ChainSpinSink
+
+    env = P.Env()
+    proto = compile_policy(env, preset_spec("chain-spin-write", k=3),
+                           16 * KiB)
+    sinks = [s for s in proto.sinks.values()
+             if isinstance(s, ChainSpinSink)]
+    assert sinks and all(s.membership is None for s in sinks)
+    assert any(s.succ is not None for s in sinks)   # static routing wired
+
+
+def test_timed_retry_budget_exhausts_cleanly_when_all_replicas_die():
+    cfg = MembershipConfig(interval=20_000.0)
+    fm = FailureModel(crash_at=((100_000.0, 1), (100_000.0, 2),
+                                (100_000.0, 3)))
+    env = P.Env(failures=fm)
+    svc = attach_membership(env, (1, 2, 3), cfg)
+    proto = compile_policy(env, preset_spec("chain-spin-write", k=3),
+                           16 * KiB)
+    done = []
+    env.sim.at(150_000.0,
+               lambda: proto.issue(P.CLIENT, on_done=done.append))
+    env.sim.at(30_000_000.0, lambda: None)
+    env.sim.run()
+    assert len(done) == 1
+    assert done[0].extra.get("failed") in ("retry budget exhausted",
+                                           "no live chain replicas")
+    assert proto.failed == 1
+
+
+def test_attach_membership_is_exclusive():
+    env = P.Env()
+    attach_membership(env, (1, 2))
+    with pytest.raises(ValueError, match="already"):
+        attach_membership(env, (1, 2))
+
+
+# -- (e) functional plane ----------------------------------------------------
+
+
+def _workload(nclients, nops, keys, seed):
+    rng = random.Random(seed)
+    out = []
+    for c in range(nclients):
+        ops = []
+        for i in range(nops):
+            key = rng.choice(keys)
+            if rng.random() < 0.5:
+                ops.append(("write", key, (c + 1) * 10_000 + i))
+            else:
+                ops.append(("read", key, None))
+        out.append(ops)
+    return out
+
+
+def _run(kind, seed, min_ok=12, **kw):
+    h = ReplicationHarness(kind, 3, seed=seed, **kw)
+    for ops in _workload(3, 8, [1, 2], seed):
+        h.add_client(ops)
+    log = h.run()
+    res = check_records(log.records)
+    assert res.ok, f"{kind} seed={seed} kw={kw}:\n{res.explain()}"
+    oks = sum(1 for r in log.records if r["ev"] == "ok")
+    assert oks >= min_ok, f"only {oks} ops completed"
+    return h
+
+
+def test_functional_crash_only_silences_the_node():
+    """The no-omniscience contract: at the crash step the view is
+    untouched; the detector needs its full silence window before the
+    view service removes the node, and activation waits out the lease."""
+    h = ReplicationHarness("chain", 3, seed=0, crashes=((40, 3),))
+    for ops in _workload(3, 8, [1, 2], 0):
+        h.add_client(ops)
+    h.run()
+    det = h.views.detected_at(3)
+    dead = h.membership.dead_timeout                       # 60 steps
+    # silence runs from the last *delivered* heartbeat, up to ~2 emission
+    # periods before the crash step; the verdict lands on a later poll
+    assert det is not None
+    assert 40 + dead - 2 * h.hb_every <= det <= 40 + dead + 2 * h.hb_every
+    t_activate, v2 = h.views.view_log[1]
+    assert v2.number == 2 and v2.members == (1, 2)
+    assert t_activate > h.views.lease_until[3]             # strict wait-out
+    assert 3 in h.router.failed and h.view == [1, 2]
+
+
+#: functional fault grid (node ids 1..3; times are steps)
+MEMBERSHIP_GRID = [
+    {"crashes": ((40, 3),)},                           # tail crash
+    {"crashes": ((40, 1),)},                           # head crash
+    {"partitions": ((100, 260, (3,)),)},               # tail partitioned out
+    {"flaps": ((2, 40, 0.4),)},                        # gray middle replica
+    {"crashes": ((60, 2),), "loss": {1: 0.1}, "slow": {3: 4.0}},
+]
+
+_GRID_IDS = ["crash-tail", "crash-head", "partition", "flap", "combined"]
+
+
+@pytest.mark.parametrize("fault", MEMBERSHIP_GRID, ids=_GRID_IDS)
+def test_chain_linearizable_across_view_changes(fault):
+    _run("chain", seed=3, **fault)
+
+
+@pytest.mark.parametrize("fault", MEMBERSHIP_GRID, ids=_GRID_IDS)
+def test_abd_linearizable_across_view_changes(fault):
+    _run("abd", seed=5, **fault)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("kind", ["chain", "abd"])
+@pytest.mark.parametrize("fault", MEMBERSHIP_GRID, ids=_GRID_IDS)
+@pytest.mark.parametrize("seed", [0, 1, 2, 3, 4, 5, 6, 7])
+def test_full_membership_grid_linearizable(kind, fault, seed):
+    _run(kind, seed=seed, **fault)
+
+
+def test_functional_head_crash_retries_reuse_the_original_version():
+    """Regression: a write un-acked at the head crash is retried at the
+    NEW head, which must reuse the rid's original version (replicated
+    down the chain) — assigning a fresh one re-applies the old value
+    over newer committed writes."""
+    for seed in (11, 13):                # the seeds that caught it
+        _run("chain", seed=seed, crashes=((40, 1),))
+
+
+def test_functional_partition_fences_or_expires_the_stale_tail():
+    """A partitioned-out tail keeps serving only until its lease
+    expires; afterwards every delivery to it is fenced, so it can never
+    answer a read with pre-partition state."""
+    h = _run("chain", seed=1, partitions=((100, 400, (3,)),))
+    assert h.views.view.members == (1, 2)
+    replica = h.replicas[3]
+    assert replica.lease_until < h.steps            # self-fenced by lease
+
+
+def test_abd_loses_availability_never_safety_without_quorum():
+    """Crash the head and partition the tail: the detected view shrinks
+    below the (fixed, original-n) quorum, so writes stall and clients
+    exhaust their retry budgets — but every completed operation stays
+    linearizable.  dead is terminal: healing the partition does not
+    restore the quorum."""
+    h = ReplicationHarness("abd", 3, seed=0, crashes=((40, 1),),
+                           partitions=((80, 200, (3,)),))
+    for ops in _workload(3, 8, [1, 2], 0):
+        h.add_client(ops)
+    log = h.run()
+    res = check_records(log.records)
+    assert res.ok, res.explain()
+    assert h.client_errors, "expected retry exhaustion without a quorum"
+    assert all(isinstance(e, RetryExhausted) for e in h.client_errors)
+    assert len(h.views.view.members) < 2            # below quorum for good
+
+
+def test_functional_client_backoff_is_seeded_and_bounded():
+    c = ReplicationHarness("chain", 3, seed=42).add_client(
+        [("write", 1, 7)])
+    assert c.retry.max_attempts == 10
+    d0 = [c.retry.delay(a, random.Random(9)) for a in range(10)]
+    d1 = [c.retry.delay(a, random.Random(9)) for a in range(10)]
+    assert d0 == d1                                  # seeded determinism
+    assert max(d0) <= 8.0 * c.timeout * 1.25         # cap + jitter bound
+
+
+def test_functional_fencing_is_counted():
+    """Across the grid some packets straddle a view change and get
+    fenced; the counter proves the fence path runs (exact counts are
+    seed-dependent)."""
+    total = 0
+    for seed in range(4):
+        h = ReplicationHarness("chain", 3, seed=seed, crashes=((40, 3),))
+        for ops in _workload(3, 8, [1, 2], seed):
+            h.add_client(ops)
+        h.run()
+        total += h.fenced
+    assert total > 0
+
+
+# -- (f) workload accounting -------------------------------------------------
+
+
+def test_workload_books_heartbeats_as_ctrl_bytes():
+    from repro.sim.workload import Scenario, run_scenario
+
+    rep = run_scenario(Scenario(protocol="spin-write", num_clients=2,
+                                requests_per_client=4, k=3,
+                                membership=MembershipConfig(
+                                    interval=20_000.0)))
+    assert rep["ctrl_packets"] > 0
+    assert rep["ctrl_bytes"] == 44 * rep["ctrl_packets"]
+    assert rep["failed"] == 0
+    assert rep["issued"] == (rep["completed"] + rep["in_flight"]
+                             + rep["dropped"])
+    # data-plane metrics must match the membership-free run exactly:
+    # control traffic is additive, never competing for the ledger
+    base = run_scenario(Scenario(protocol="spin-write", num_clients=2,
+                                 requests_per_client=4, k=3))
+    assert base["ctrl_packets"] == 0 and base["ctrl_bytes"] == 0
+    assert rep["completed"] == base["completed"]
+    assert rep["packets"] == base["packets"]

@@ -1,6 +1,6 @@
 """Anchor-drift gate: deterministic-model anchors + benchmark floors.
 
-Six checks, each with a readable diff on failure:
+Seven checks, each with a readable diff on failure:
 
   1. policy latency anchors — re-runs every preset/size recorded in
      ``tests/data/policy_anchors.json`` through the timed plane (the sim
@@ -23,7 +23,13 @@ Six checks, each with a readable diff on failure:
   6. ``BENCH_replication.json`` claims — NIC-offloaded chain replication
      holds >= ``--replication-floor`` x over the host-CPU chain both
      healthy and with one crashed replica, and every functional-plane
-     history across the fault grid was linearizable.
+     history across the fault grid was linearizable;
+  7. ``BENCH_membership.json`` claims — heartbeat-driven detection lands
+     within the timeout budget at every swept interval, failover loses
+     zero writes with the unavailability window bounded, the false-dead
+     rate under a lossy monitor stays <= ``--fp-dead-ceiling`` (while
+     suspicion provably flickered), and every cross-view functional
+     history was linearizable with epoch fencing actually exercised.
 
 Usage (CI invokes this as its own workflow step):
 
@@ -31,6 +37,7 @@ Usage (CI invokes this as its own workflow step):
       [--rel-tol 1e-9] [--dataplane-floor 2.0]
       [--degraded-ceiling 2.0] [--offload-floor 2.0]
       [--fig16-floor 0.85] [--replication-floor 1.5]
+      [--fp-dead-ceiling 0.02]
 
 Exit code 0 == no drift.
 """
@@ -216,6 +223,53 @@ def check_replication(path: str, floor: float) -> list[str]:
     return errors
 
 
+def check_membership(path: str, fp_ceiling: float) -> list[str]:
+    if not os.path.exists(path):
+        return [f"  missing artifact {path}"]
+    with open(path) as f:
+        doc = json.load(f)
+    claims = doc.get("claims", {})
+    errors = []
+    if not claims.get("detection_within_budget"):
+        errors.append("  crash detection exceeded dead_timeout + 2*interval "
+                      "for some heartbeat interval")
+    if not claims.get("failover_zero_failed_writes"):
+        errors.append("  failover lost writes (some requests reported "
+                      "failed or never completed)")
+    worst = claims.get("failover_worst_over_budget")
+    if worst is None:
+        errors.append("  claim failover_worst_over_budget missing")
+    elif worst > 4.0:
+        errors.append(
+            f"  worst write latency during failover is {worst:.2f}x the "
+            f"detection+backoff budget (> 4.0x)")
+    fp = claims.get("fp_dead_rate")
+    if fp is None:
+        errors.append("  claim fp_dead_rate missing")
+    elif fp > fp_ceiling:
+        errors.append(
+            f"  false-dead rate {fp:.4f} under the lossy monitor "
+            f"(> ceiling {fp_ceiling:.4f})")
+    if claims.get("fp_suspects_total", 0) <= 0:
+        errors.append("  lossy-monitor run produced zero false suspicions "
+                      "(the FP channel was not exercised — vacuous)")
+    if not claims.get("membership_all_linearizable"):
+        errors.append(
+            f"  cross-view histories not all linearizable "
+            f"({claims.get('membership_linearizable_ok')} of "
+            f"{claims.get('membership_linearizable_runs')} runs ok)")
+    if claims.get("membership_ops_checked", 0) <= 0:
+        errors.append("  cross-view linearizability proof checked zero "
+                      "operations (vacuous)")
+    if claims.get("membership_fenced_total", 0) <= 0:
+        errors.append("  no delivery was ever epoch-fenced across the "
+                      "grid — the fencing path went untested")
+    if claims.get("membership_view_changes", 0) <= 0:
+        errors.append("  no view change activated across the grid — the "
+                      "reconfiguration path went untested")
+    return errors
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--repo", default=REPO)
@@ -232,6 +286,8 @@ def main() -> int:
                     help="min saturated goodput as a fraction of line rate")
     ap.add_argument("--replication-floor", type=float, default=1.5,
                     help="min NIC-over-host chain-replication latency edge")
+    ap.add_argument("--fp-dead-ceiling", type=float, default=0.02,
+                    help="max false-dead verdicts per lossy-monitor run")
     args = ap.parse_args()
 
     checks = [
@@ -252,6 +308,9 @@ def main() -> int:
         ("BENCH_replication.json claims", check_replication(
             os.path.join(args.repo, "BENCH_replication.json"),
             args.replication_floor)),
+        ("BENCH_membership.json claims", check_membership(
+            os.path.join(args.repo, "BENCH_membership.json"),
+            args.fp_dead_ceiling)),
     ]
     failed = False
     for title, errors in checks:
