@@ -1,0 +1,341 @@
+"""Namespace benchmark: metadata QPS, the saturation knee, re-replication.
+
+The metadata plane (PR 8, ``repro.namenode``) measured end to end:
+
+  * **lookup edge** (timed) — closed-loop clients hammer one NameNode
+    with lookup RPCs, NIC-handler path (``ns-lookup-spin``: HH auth +
+    gated PH table walk on the HPU pool) vs host-RPC path
+    (``ns-lookup-host``: PCIe + serial metadata CPU).  Single-shot
+    latencies are within ~1.3x (the client post dominates both); the
+    claimed edge is *throughput at saturation*: the host path caps at
+    the serial CPU's service rate while the NIC path scales across the
+    32 HPUs.
+  * **namespace-saturation knee** (timed) — every data write first costs
+    one lookup against a fixed metadata capacity (lookup -> write closed
+    loop per client).  Sweeping the client count, data goodput under a
+    host NameNode stops scaling at the client count where aggregate
+    lookup demand hits the metadata CPU's cap — the knee; the same sweep
+    against a NIC NameNode keeps scaling until the data plane itself
+    saturates.  Lookup wire bytes ride the ``ctrl_*`` counters, never
+    data goodput.
+  * **detected-view re-replication** (functional) — datanodes heartbeat
+    a real NameNode; one is silenced (crash injection is invisible to
+    detection), the lease-gated view change marks its blocks
+    under-replicated, and the BlockReplicator restores them through the
+    RepairPacer token bucket.  Zero blocks may be lost, every block must
+    return to target replication, and the paced wait must respect the
+    configured rate.
+
+Artifact ``BENCH_namespace.json`` claims (gated by tools/check_anchors.py):
+
+  * ``ns_nic_over_host_qps`` >= 1.5 — the NIC-lookup edge at saturation;
+  * ``ns_knee_detected`` / ``ns_knee_clients`` — a measured knee exists,
+    and ``ns_knee_meta_bound`` pins it on the metadata cap (goodput at
+    the knee ~= host lookup cap x block size);
+  * ``ns_rereplication_zero_lost`` / ``ns_rereplication_restored`` —
+    no block lost across a *detected* failure, all back to target
+    replication, within the pacer budget;
+  * ``ns_ctrl_bytes`` > 0 — lookup traffic is accounted as control
+    bytes, separated from data goodput.
+
+Usage:
+
+  PYTHONPATH=src python benchmarks/namespace.py [--quick]
+      [--json BENCH_namespace.json]
+
+``benchmarks/run.py --namespace`` runs the same sweep and always writes
+the artifact.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.policy import preset_spec  # noqa: E402
+from repro.policy.timed import compile_policy, ns_pipeline  # noqa: E402
+from repro.sim import protocols as P  # noqa: E402
+
+KiB = 1024
+
+NS_PRESETS = ("ns-lookup-spin", "ns-lookup-host", "ns-open-spin",
+              "ns-open-host", "ns-commit-spin", "ns-commit-host")
+
+#: client counts for the closed-loop QPS sweep
+QPS_CLIENTS = (1, 4, 16, 64)
+#: client counts for the goodput-vs-clients knee sweep
+KNEE_CLIENTS = (1, 2, 4, 8, 16, 32)
+#: data block written per lookup in the knee sweep
+KNEE_BLOCK = 16 * KiB
+#: a knee: the next doubling improves goodput by less than this factor
+KNEE_GAIN = 1.10
+
+
+def _closed_loop_qps(name: str, clients: int, per_client: int) -> float:
+    """Aggregate completed-op rate (ops/s) of ``clients`` closed-loop
+    clients against one compiled metadata pipeline."""
+    env = P.Env()
+    proto = compile_policy(env, preset_spec(name), 0)
+    done = {"n": 0}
+
+    def loop(client: int, remaining: int) -> None:
+        def fin(_res) -> None:
+            done["n"] += 1
+            if remaining > 1:
+                loop(client, remaining - 1)
+
+        proto.issue(client, on_done=fin)
+
+    for i in range(clients):
+        env.sim.at(0.0, (lambda c: lambda: loop(c, per_client))(P.CLIENT - i))
+    env.sim.run()
+    return done["n"] / (env.sim.now / 1e9)
+
+
+def latency_rows(quick: bool = False) -> list[tuple]:
+    """Single-shot latency for every metadata preset (context rows: the
+    spin/host gap here is small — the edge is a throughput story)."""
+    rows = []
+    for name in NS_PRESETS:
+        env = P.Env()
+        proto = compile_policy(env, preset_spec(name), 0)
+        out = {}
+        proto.issue(P.CLIENT, on_done=lambda r: out.update(lat=r.latency_ns))
+        env.sim.run()
+        rows.append((f"namespace/latency/{name}",
+                     round(out["lat"] / 1e3, 3), "single-shot"))
+    return rows
+
+
+def lookup_edge_rows(quick: bool = False) -> tuple[list[tuple], dict]:
+    """NIC vs host lookup QPS as closed-loop concurrency grows."""
+    clients = (1, 16) if quick else QPS_CLIENTS
+    per_client = 100 if quick else 200
+    rows = []
+    edge_at_sat = 0.0
+    host_cap = 0.0
+    for c in clients:
+        nic = _closed_loop_qps("ns-lookup-spin", c, per_client)
+        host = _closed_loop_qps("ns-lookup-host", c, per_client)
+        host_cap = max(host_cap, host)
+        edge_at_sat = nic / host   # the last (largest) count is saturation
+        rows.append((f"namespace/qps/nic/c{c}", round(1e6 / nic, 4),
+                     f"qps_{nic / 1e6:.3f}M"))
+        rows.append((f"namespace/qps/host/c{c}", round(1e6 / host, 4),
+                     f"qps_{host / 1e6:.3f}M"))
+    claims = {
+        "ns_nic_over_host_qps": round(edge_at_sat, 3),
+        "ns_lookup_edge_ok": edge_at_sat >= 1.5,
+        "ns_host_qps_cap": round(host_cap, 1),
+    }
+    return rows, claims
+
+
+def _goodput_run(meta_preset: str, clients: int, pairs: int) -> dict:
+    """Closed loop per client: lookup -> 16 KiB write -> repeat.  The
+    NameNode sits on its own node (2); data writes land on node 1."""
+    env = P.Env()
+    ns = ns_pipeline(env, preset_spec(meta_preset), 0, node=2)
+    wr = compile_policy(env, preset_spec("spin-write"), KNEE_BLOCK)
+    state = {"lookups": 0, "bytes": 0, "lat": []}
+
+    def pair(client: int, remaining: int, t0: float) -> None:
+        def after_write(_res) -> None:
+            state["bytes"] += KNEE_BLOCK
+            state["lat"].append(env.sim.now - t0)
+            if remaining > 1:
+                pair(client, remaining - 1, env.sim.now)
+
+        def after_lookup(_res) -> None:
+            state["lookups"] += 1
+            wr.issue(client, on_done=after_write)
+
+        ns.issue(client, on_done=after_lookup)
+
+    for i in range(clients):
+        env.sim.at(0.0, (lambda c: lambda: pair(c, pairs, 0.0))(P.CLIENT - i))
+    env.sim.run()
+    sim_s = env.sim.now / 1e9
+    return {
+        "goodput_GBps": state["bytes"] / env.sim.now,
+        "meta_qps": state["lookups"] / sim_s,
+        "mean_pair_us": (sum(state["lat"]) / len(state["lat"]) / 1e3
+                        if state["lat"] else 0.0),
+        "ctrl_bytes": env.net.ctrl_bytes_sent,
+    }
+
+
+def _find_knee(counts, goodputs) -> int | None:
+    """The first client count whose doubling stopped paying: smallest
+    ``counts[i+1]`` with ``goodputs[i+1] < KNEE_GAIN * goodputs[i]``."""
+    for i in range(len(counts) - 1):
+        if goodputs[i + 1] < KNEE_GAIN * goodputs[i]:
+            return counts[i + 1]
+    return None
+
+
+def knee_rows(quick: bool = False) -> tuple[list[tuple], dict]:
+    clients = (1, 4, 8, 16) if quick else KNEE_CLIENTS
+    pairs = 40 if quick else 120
+    rows = []
+    curves = {}
+    ctrl_bytes = 0
+    for preset, tag in (("ns-lookup-host", "host"), ("ns-lookup-spin", "nic")):
+        gps = []
+        for c in clients:
+            r = _goodput_run(preset, c, pairs)
+            gps.append(r["goodput_GBps"])
+            ctrl_bytes += r["ctrl_bytes"]
+            rows.append((
+                f"namespace/knee/{tag}/c{c}",
+                round(r["mean_pair_us"], 2),
+                f"goodput_{r['goodput_GBps']:.2f}GBps"
+                f"_metaqps_{r['meta_qps'] / 1e6:.2f}M",
+            ))
+        curves[tag] = gps
+    host_knee = _find_knee(clients, curves["host"])
+    # the host curve's ceiling should be the metadata cap: lookup rate at
+    # the largest count x block size ~= measured goodput there
+    host_top = curves["host"][-1]
+    host_meta_qps = host_top * 1e9 / KNEE_BLOCK   # implied lookups/s
+    cap = _closed_loop_qps("ns-lookup-host", clients[-1], 60)
+    meta_bound = abs(host_meta_qps - cap) / cap <= 0.30
+    nic_over_host_top = curves["nic"][-1] / host_top
+    claims = {
+        "ns_knee_clients": host_knee,
+        "ns_knee_detected": host_knee is not None,
+        "ns_knee_meta_bound": bool(meta_bound),
+        "ns_goodput_host_top_GBps": round(host_top, 3),
+        "ns_goodput_nic_top_GBps": round(curves["nic"][-1], 3),
+        "ns_nic_goodput_over_host_at_scale": round(nic_over_host_top, 3),
+        "ns_ctrl_bytes": int(ctrl_bytes),
+    }
+    return rows, claims
+
+
+def rereplication_rows(quick: bool = False) -> tuple[list[tuple], dict]:
+    """Functional plane: heartbeat-detected datanode loss -> paced
+    re-replication -> conservation audit."""
+    from repro.checkpoint.storage import StorageCluster
+    from repro.control.governor import RepairPacer
+    from repro.membership import MembershipConfig
+    from repro.namenode import NameNode
+
+    nblocks = 6 if quick else 16
+    block = 8 * KiB
+    rate_MBps = 4.0
+    clk = {"t": 0.0}
+    pacer = RepairPacer(rate_MBps, burst_bytes=2 * block,
+                        clock=lambda: clk["t"],
+                        sleep=lambda s: clk.__setitem__("t", clk["t"] + s))
+    t0 = time.perf_counter()
+    cluster = StorageCluster(8, node_capacity=4 << 20)
+    nn = NameNode(cluster, cfg=MembershipConfig(interval=10.0), pacer=pacer)
+    nn.mkdir("/bench")
+    nn.create("/bench/f", replication=3)
+    blocks = [nn.add_block("/bench/f", bytes([i % 251]) * block)
+              for i in range(nblocks)]
+    # drive heartbeats; silence node 3 at t=200 (detection sees only the
+    # missing heartbeats — fail_node just makes the silence real)
+    t, crash_at = 0.0, 200.0
+    while t < 1500.0 and nn.under_replicated() == 0:
+        for v in range(8):
+            if not (v == 3 and t >= crash_at):
+                nn.heartbeat(v, t)
+        if t >= crash_at and 3 not in cluster.failed:
+            cluster.fail_node(3)
+        nn.tick(t)
+        t += 10.0
+    detected = nn.under_replicated() > 0
+    stats = nn.re_replicate()
+    audit = cluster.audit()
+    restored = all(
+        len(b.placements) == 3 and 3 not in b.placements
+        and all(v not in cluster.failed for v in b.placements)
+        for b in blocks
+    )
+    readable = all(
+        nn.read_block(b) == bytes([i % 251]) * block
+        for i, b in enumerate(blocks)
+    )
+    # the pacer budget: copying stats["bytes"] at rate_MBps cannot take
+    # less than (bytes - burst) / rate; the fake clock's advance is the
+    # paced wait actually served
+    ideal_s = max(0.0, (stats["bytes"] - pacer.bucket.burst)
+                  / (rate_MBps * 1e6))
+    within_budget = ideal_s <= clk["t"] + 1e-9 and stats["paced_wait_s"] \
+        <= stats["bytes"] / (rate_MBps * 1e6) + 1.0
+    wall_us = (time.perf_counter() - t0) * 1e6
+    rows = [(
+        "namespace/rereplicate/detected-crash",
+        round(wall_us, 1),
+        f"blocks_{stats['blocks']}_lost_{audit['lost_bytes']}"
+        f"_paced_{stats['paced_wait_s']:.3f}s",
+    )]
+    claims = {
+        "ns_rereplication_detected": bool(detected),
+        "ns_rereplication_blocks": int(stats["blocks"]),
+        "ns_rereplication_zero_lost": int(audit["lost_bytes"]) == 0,
+        "ns_rereplication_restored": bool(restored and readable),
+        "ns_rereplication_within_budget": bool(within_budget),
+        "ns_rereplication_unrecoverable": int(stats["unrecoverable"]),
+    }
+    return rows, claims
+
+
+def bench_rows(quick: bool = False) -> tuple[list[tuple], dict]:
+    rows = latency_rows(quick)
+    erows, eclaims = lookup_edge_rows(quick)
+    krows, kclaims = knee_rows(quick)
+    rrows, rclaims = rereplication_rows(quick)
+    rows += erows + krows + rrows
+    claims = {}
+    claims.update(eclaims)
+    claims.update(kclaims)
+    claims.update(rclaims)
+    return rows, claims
+
+
+def write_artifact(rows: list[tuple], claims: dict, out: str,
+                   config: dict | None = None) -> None:
+    with open(out, "w") as f:
+        json.dump(
+            {
+                "bench": "namespace",
+                "metric": "us/op",
+                "config": config or {},
+                "claims": claims,
+                "rows": [
+                    {"name": n, "us_per_call": u, "derived": d}
+                    for n, u, d in rows
+                ],
+            },
+            f,
+            indent=1,
+        )
+    print(f"# wrote {out}", file=sys.stderr)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="small sweep for smoke tests")
+    ap.add_argument("--json", default=None, metavar="OUT")
+    args = ap.parse_args()
+    rows, claims = bench_rows(quick=args.quick)
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us},{derived}")
+    for key, val in sorted(claims.items()):
+        print(f"# claim {key} = {val}", file=sys.stderr)
+    if args.json:
+        write_artifact(rows, claims, args.json, {"quick": args.quick})
+
+
+if __name__ == "__main__":
+    main()

@@ -24,7 +24,10 @@ its ``BENCH_replication.json`` artifact.  ``--membership`` appends the
 failure-detection / view-change sweep (heartbeat-driven detection time,
 false-positive rate, failover window, cross-view linearizability; see
 benchmarks/membership.py) and always writes its
-``BENCH_membership.json`` artifact.  ``--all`` runs every suite above
+``BENCH_membership.json`` artifact.  ``--namespace`` appends the
+metadata-plane sweep (NIC vs host lookup QPS, the namespace-saturation
+knee, detected-view re-replication; see benchmarks/namespace.py) and
+always writes its ``BENCH_namespace.json`` artifact.  ``--all`` runs every suite above
 (plus the roofline table) and writes one combined manifest
 (``BENCH_all.json`` by default): every emitted row plus the paths of all
 artifacts written in the run.  ``--json`` additionally writes every
@@ -103,6 +106,15 @@ def main() -> None:
                     metavar="OUT", help="artifact path for --membership")
     ap.add_argument("--membership-quick", action="store_true",
                     help="small membership sweep (CI smoke)")
+    ap.add_argument("--namespace", action="store_true",
+                    help="also run the metadata-plane sweep (NIC vs host "
+                         "lookup QPS, namespace-saturation knee, "
+                         "detected-view re-replication) and write "
+                         "BENCH_namespace.json")
+    ap.add_argument("--namespace-out", default="BENCH_namespace.json",
+                    metavar="OUT", help="artifact path for --namespace")
+    ap.add_argument("--namespace-quick", action="store_true",
+                    help="small namespace sweep (CI smoke)")
     ap.add_argument("--autoscale", action="store_true",
                     help="also run the control-plane sweep (Fig. 16 "
                          "scaling, SLO autoscaler, repair pacing) and "
@@ -130,6 +142,7 @@ def main() -> None:
         args.degraded = True
         args.replication = True
         args.membership = True
+        args.namespace = True
         args.autoscale = True
     filters = [f for f in args.only.split(",") if f]
 
@@ -193,6 +206,16 @@ def main() -> None:
         member_artifact(mbrows, mbclaims, args.membership_out,
                         {"quick": args.membership_quick})
         artifacts["membership"] = args.membership_out
+    if args.namespace:
+        from benchmarks.namespace import bench_rows as ns_rows
+        from benchmarks.namespace import write_artifact as ns_artifact
+
+        nrows, nclaims = ns_rows(quick=args.namespace_quick)
+        for name, us, derived in nrows:
+            emit(name, us, derived)
+        ns_artifact(nrows, nclaims, args.namespace_out,
+                    {"quick": args.namespace_quick})
+        artifacts["namespace"] = args.namespace_out
     if args.autoscale:
         from repro.control.sweep import bench_rows as control_rows
         from repro.control.sweep import write_artifact as control_artifact

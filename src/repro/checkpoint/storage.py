@@ -27,6 +27,7 @@ import numpy as np
 from repro.core.auth import CapabilityAuthority, Rights
 from repro.core.handlers import DFSClient, DFSNode, Router
 from repro.core.packets import OpType, ReplicaCoord, ReplStrategy, Resiliency
+from repro.namenode.placement import PlacementPolicy, RoundRobinPlacement
 from repro.policy.functional import write_plan
 
 
@@ -52,38 +53,36 @@ class ObjectLayout:
 class MetadataService:
     """Control plane: namespace, extent allocation, capabilities."""
 
-    def __init__(self, num_nodes: int, node_capacity: int, key: bytes | None = None):
+    def __init__(self, num_nodes: int, node_capacity: int,
+                 key: bytes | None = None,
+                 placement: PlacementPolicy | None = None):
         self.authority = CapabilityAuthority(key or secrets.token_bytes(16))
         self.num_nodes = num_nodes
         self.node_capacity = node_capacity
         self._alloc = [0] * num_nodes  # bump allocator per node
         self._objects: dict[int, ObjectLayout] = {}
         self._next_oid = 1
-        self._rr = 0  # round-robin placement cursor
+        #: pluggable placement (repro.namenode.placement) — replaces the
+        #: old private ``_rr`` cursor, whose scan-count advance skewed
+        #: load onto the node after a failed one
+        self.placement = placement or RoundRobinPlacement(num_nodes)
         #: nodes excluded from new placements (StorageCluster aliases its
         #: ``failed`` set here, so crashes steer future writes away)
         self.unavailable: set[int] = set()
+        #: *detected*-dead exclusions (the NameNode's view changes land
+        #: here): kept apart from ``unavailable`` so detection never
+        #: mutates the fault injector's omniscient ``failed`` set
+        self.suspected: set[int] = set()
 
     def _place(self, n: int) -> list[int]:
-        live = self.num_nodes - len(self.unavailable)
-        if live < n:
-            raise RuntimeError(
-                f"cannot place {n} shards: only {live} live nodes")
-        nodes: list[int] = []
-        step = 0
-        while len(nodes) < n:
-            cand = (self._rr + step) % self.num_nodes
-            step += 1
-            if cand not in self.unavailable:
-                nodes.append(cand)
-        self._rr = (self._rr + step) % self.num_nodes
-        return nodes
+        return self.placement.place(n, self.unavailable | self.suspected)
 
     def _extent(self, node: int, size: int) -> int:
         addr = self._alloc[node]
         if addr + size > self.node_capacity:
             raise RuntimeError(f"storage node {node} full")
         self._alloc[node] = addr + size
+        self.placement.record(node, size)
         return addr
 
     def create_object(
@@ -156,9 +155,11 @@ class StorageCluster:
         node_capacity: int = 1 << 26,
         client_id: int = 1,
         spill_dir: str | None = None,
+        placement: PlacementPolicy | None = None,
     ):
         self.router = Router()
-        self.meta = MetadataService(num_nodes, node_capacity)
+        self.meta = MetadataService(num_nodes, node_capacity,
+                                    placement=placement)
         self.nodes = [
             DFSNode(i, self.router, self.meta.authority,
                     storage_size=node_capacity)
@@ -701,6 +702,52 @@ class StorageCluster:
         self.client.write(self.capability, shard, [coord])
         stats["shards"] += 1
         stats["bytes"] += int(shard.size)
+
+    # -- per-object re-replication (NameNode block repair) ----------------------
+
+    @_io_locked
+    def re_replicate(self, layout: ObjectLayout, from_node: int,
+                     to_node: int) -> int:
+        """Copy one replica of a replicated object onto ``to_node`` and
+        repoint ``from_node``'s slot — the per-block analogue of
+        :meth:`repair_node`, driven by *detected* failures: the
+        :class:`repro.namenode.BlockReplicator` calls this per
+        under-replicated block, so only blocks a view change actually
+        touched move (not the whole node's contents).  The bytes come
+        from a surviving replica through the authenticated read path;
+        the write goes through the policy engine like any client write.
+        Returns the bytes copied."""
+        if layout.resiliency != Resiliency.REPLICATION:
+            raise ValueError(
+                f"object {layout.object_id}: re_replicate handles "
+                f"replicated objects; EC shards go through repair_node"
+            )
+        if to_node in self.failed or to_node in self.meta.suspected:
+            raise ValueError(f"target node {to_node} is not live")
+        idx = next(
+            (i for i, c in enumerate(layout.data_coords)
+             if c.node == from_node),
+            None,
+        )
+        if idx is None:
+            raise ValueError(
+                f"object {layout.object_id} has no replica on {from_node}")
+        data = None
+        for coord in layout.data_coords:
+            if coord.node == from_node:
+                continue
+            data = self._read_shard(coord, layout.size)
+            if data is not None:
+                break
+        if data is None:
+            layout.lost = True
+            raise IOError(
+                f"object {layout.object_id}: no live replica to copy from")
+        addr = self.meta._extent(to_node, layout.size)
+        coord = ReplicaCoord(to_node, addr)
+        self.client.write(self.capability, data, [coord])
+        self._set_coord(layout, idx, coord)
+        return layout.size
 
     # -- conservation audit -----------------------------------------------------
 

@@ -91,6 +91,12 @@ class ViewManager:
             fn(self.view)
         return self.view
 
+    def alive(self) -> set[int]:
+        """Members of the active view minus pending removals — the node
+        set a placement decision may target right now (a suspect whose
+        lease is still being waited out is already excluded)."""
+        return {n for n in self.view.members if n not in self.removed}
+
     def detected_at(self, node: int) -> float | None:
         for t, n in self.dead_log:
             if n == node:

@@ -12,6 +12,7 @@ from repro.policy.spec import (  # noqa: F401
     FailureModel,
     Flat,
     HostAuth,
+    METADATA_OPS,
     NoAuth,
     PolicySpec,
     PRESET_NAMES,

@@ -46,7 +46,12 @@ import dataclasses
 from repro.core.packets import ReplStrategy
 
 TRANSPORTS = ("rdma", "rpc", "spin")
-OPS = ("write", "read")
+OPS = ("write", "read", "lookup", "open", "commit")
+#: namespace RPCs (the metadata plane): small fixed-size request/reply
+#: pairs against the NameNode, costed either as NIC handlers
+#: (``HANDLER_NS["ns_*"]``) or as a host-CPU RPC detour.  They carry no
+#: data payload and book their wire bytes as *control* traffic.
+METADATA_OPS = ("lookup", "open", "commit")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -284,6 +289,20 @@ class PolicySpec:
         if self.replication is not None and self.erasure is not None:
             raise ValueError("replication and erasure stages are exclusive "
                              "(nest objects instead)")
+        if self.op in METADATA_OPS:
+            if (self.replication is not None or self.erasure is not None
+                    or self.consistency is not None or self.read is not None):
+                raise ValueError(
+                    "metadata ops are namespace RPCs against the NameNode; "
+                    "they carry no replication/erasure/consistency/read "
+                    "stages"
+                )
+            if self.transport == "rdma":
+                raise ValueError(
+                    "metadata ops need request validation and a namespace "
+                    "walk: use spin (NIC handler) or rpc (host CPU), not "
+                    "raw rdma"
+                )
         if isinstance(self.auth, HostAuth) and self.transport != "rpc":
             raise ValueError("HostAuth requires the rpc transport")
         if self.transport == "rpc" and not isinstance(self.auth, HostAuth):
@@ -487,6 +506,16 @@ def preset_spec(
             "spin", SpongeAuth(), consistency=Quorum(k)),
         "abd-spin-read": lambda: PolicySpec(
             "spin", SpongeAuth(), consistency=Quorum(k), op="read"),
+        # metadata plane (PR 8): namespace RPCs on the NameNode's NIC
+        # handlers vs the host-CPU RPC detour
+        "ns-lookup-spin": lambda: PolicySpec(
+            "spin", SpongeAuth(), op="lookup"),
+        "ns-lookup-host": lambda: PolicySpec("rpc", HostAuth(), op="lookup"),
+        "ns-open-spin": lambda: PolicySpec("spin", SpongeAuth(), op="open"),
+        "ns-open-host": lambda: PolicySpec("rpc", HostAuth(), op="open"),
+        "ns-commit-spin": lambda: PolicySpec(
+            "spin", SpongeAuth(), op="commit"),
+        "ns-commit-host": lambda: PolicySpec("rpc", HostAuth(), op="commit"),
     }
     if name not in builders:
         raise ValueError(
@@ -506,6 +535,8 @@ PRESET_NAMES = (
     "spin-triec", "inec-triec", "spin-read", "spin-read-ec", "cpu-read-ec",
     "spin-read-repl", "chain-spin-write", "chain-host-write",
     "chain-spin-read", "abd-spin-write", "abd-spin-read",
+    "ns-lookup-spin", "ns-lookup-host", "ns-open-spin", "ns-open-host",
+    "ns-commit-spin", "ns-commit-host",
 )
 
 #: presets parameterized by the EC geometry (their anchors and latency

@@ -41,6 +41,7 @@ from repro.policy.spec import (
     Chain,
     Flat,
     HostAuth,
+    METADATA_OPS,
     PolicySpec,
     Quorum,
     RS,
@@ -1085,6 +1086,127 @@ class SpinReadSink(Stage):
 
 
 # ---------------------------------------------------------------------------
+# Metadata-plane stages: namespace RPCs against the NameNode.
+# ---------------------------------------------------------------------------
+
+#: request header extra beyond the RDMA header: a path/handle key (up to
+#: 56 B of path digest + object handle) and the op code
+NS_REQ_EXTRA = 64
+#: reply wire size: header + block id, generation stamp, and up to 8
+#: datanode placements with extent offsets
+NS_REPLY_WIRE = 124
+#: host-CPU namespace service time per op (assumption): the same table
+#: walks the NIC handlers run (``HANDLER_NS["ns_*"]`` instruction
+#: counts) served from host DRAM at ~2 ns/instruction — pointer-chase
+#: bound, mostly LLC misses — *after* the usual notify+validate detour.
+NS_HOST_SERVICE_NS = {
+    "lookup": 2.0 * 140.0,
+    "open": 2.0 * 190.0,
+    "commit": 2.0 * 230.0,
+}
+
+
+class NsRequestInjector(Stage):
+    """Post one small namespace RPC (lookup/open/commit) to the NameNode;
+    the single reply is the ack.  Both directions carry ``ctrl=1`` —
+    metadata RPCs are control traffic, booked under the network's
+    ``ctrl_*`` counters and never in data goodput."""
+
+    def __init__(self, node: int = 1):
+        self.node = node
+
+    def expected_acks(self, size: int) -> int:
+        return 1
+
+    def start(self, pend: _Pending) -> None:
+        p = self.proto
+        cfg, net = p.env.cfg, p.env.net
+        wire = cfg.rdma_header + NS_REQ_EXTRA
+        p.env.sim.after(
+            cfg.client_post_ns,
+            lambda: net.send(
+                pend.client, self.node, wire,
+                {"rid": pend.rid, "cl": pend.client, "pid": p.pid,
+                 "ns": 1, "ctrl": 1},
+            ),
+        )
+
+
+class SpinNsSink(Stage):
+    """NameNode NIC path: the HH validates the request capability
+    (sponge MAC over the small header), the gated PH walks the namespace
+    tables (``HANDLER_NS["ns_<op>"]``) and emits the reply — lookups
+    never touch the host CPU."""
+
+    def __init__(self, node: int, op: str):
+        self.node = node
+        self.hh_ns, self.ph_ns, _ = HANDLER_NS[f"ns_{op}"]
+
+    def attach(self, proto) -> None:
+        super().attach(proto)
+        self.unit = proto.env.pspin(self.node)
+
+    def on_packet(self, pkt) -> None:
+        p = self.proto
+        meta = pkt.meta
+        gate = RequestGate()
+        emits = [Emit(meta["cl"], NS_REPLY_WIRE,
+                      {"rid": meta["rid"], "pid": p.pid, "ns": 1, "ctrl": 1})]
+        self.unit.process(pkt.wire_size, HandlerSpec(self.hh_ns, gate=gate))
+        self.unit.process_gated(pkt.wire_size,
+                                HandlerSpec(self.ph_ns, emits, gate=gate))
+
+
+class HostNsSink(Stage):
+    """NameNode host-RPC path: the request crosses PCIe into the host
+    ring, the (serial) metadata CPU is notified, validates, and walks
+    the namespace (``NS_HOST_SERVICE_NS``), then the reply goes back out
+    — every lookup serializes on the one metadata thread, which is
+    exactly where the namespace-saturation knee comes from."""
+
+    def __init__(self, node: int, op: str):
+        self.node = node
+        self.service_ns = NS_HOST_SERVICE_NS[op]
+
+    def on_packet(self, pkt) -> None:
+        p = self.proto
+        cfg, net = p.env.cfg, p.env.net
+        meta = pkt.meta
+        rid, client = meta["rid"], meta["cl"]
+        cpu = p.env.host_cpu(self.node)
+        node, pid = self.node, p.pid
+        work = cfg.host_notify_ns + cfg.cpu_validate_ns + self.service_ns
+
+        def at_host() -> None:
+            cpu.acquire(
+                work,
+                lambda _s, _e: net.send(node, client, NS_REPLY_WIRE,
+                                        {"rid": rid, "pid": pid,
+                                         "ns": 1, "ctrl": 1}),
+            )
+
+        p.env.sim.after(cfg.pcie_latency_ns / 2, at_host)
+
+
+def ns_pipeline(env: Env, spec: PolicySpec, size: int,
+                node: int = 1) -> PipelineProtocol:
+    """Compile a metadata op onto ``env`` with the NameNode at ``node``
+    (``compile_policy`` uses node 1; benchmarks place a dedicated
+    NameNode beside the datanodes by passing another id).  The pipeline
+    moves no data payload: ``request_bytes`` is 0, so workload goodput
+    accounting stays pure data-plane."""
+    assert spec.op in METADATA_OPS
+    if spec.transport == "spin":
+        sink: Stage = SpinNsSink(node, spec.op)
+    else:
+        sink = HostNsSink(node, spec.op)
+    proto = PipelineProtocol(env, spec, size, NsRequestInjector(node),
+                             {node: sink})
+    proto.request_bytes = 0
+    return proto
+
+
+# ---------------------------------------------------------------------------
 # Consistency-axis stages (chain replication / CRAQ and ABD quorums).
 # ---------------------------------------------------------------------------
 
@@ -1904,6 +2026,9 @@ def compile_policy(
     per request); ``window`` is the INEC host-pacing window."""
     spec.validate()
     cfg = env.cfg
+
+    if spec.op in METADATA_OPS:
+        return ns_pipeline(env, spec, size)
 
     if spec.consistency is not None:
         return _compile_consistency(env, spec, size)

@@ -77,6 +77,17 @@ HANDLER_NS = {
     # monitor-side arrival bookkeeping, no CH (assumption, same
     # calibration idiom as the consistency handlers above).
     "heartbeat":            (96.0, 20.0 / 0.6, 0.0),
+    # NameNode namespace RPCs (assumptions, Table-II calibration idiom:
+    # instruction counts at the non-contended IPC ~0.6).  The HH is the
+    # measured sponge-auth header validation over the small request.
+    # lookup PH: hash-table path probe (~3 probes) + extent-map fetch +
+    # reply emit, ~140 instr.  open adds inode allocation and lease/
+    # refcount bookkeeping (~50 instr on top).  commit appends to the
+    # extent map, bumps the generation stamp, and journals the edit
+    # (~90 instr on top).  No CH: the reply emit completes the request.
+    "ns_lookup":            (211.0, 140.0 / 0.6, 0.0),
+    "ns_open":              (211.0, 190.0 / 0.6, 0.0),
+    "ns_commit":            (211.0, 230.0 / 0.6, 0.0),
 }
 
 

@@ -221,6 +221,7 @@ class Metrics:
         self.bytes_completed = 0
         self.bytes_written = 0   # completed write-op request payloads
         self.bytes_read = 0      # completed read-op request payloads
+        self.meta_ops = 0        # completed namespace RPCs (no data bytes)
         self.first_issue_ns: float | None = None
         self.last_done_ns = 0.0
         self.hpu_queue_peak = 0
@@ -248,8 +249,12 @@ class Metrics:
         self.bytes_completed += nbytes
         if op == "read":
             self.bytes_read += nbytes
-        else:
+        elif op == "write":
             self.bytes_written += nbytes
+        else:
+            # namespace RPC (lookup/open/commit): an operation, not
+            # bytes — its wire traffic is already booked under ctrl_*
+            self.meta_ops += 1
         self.last_done_ns = now
         if self.telemetry is not None:
             self.telemetry.record_complete(now, latency_ns, nbytes,
@@ -469,6 +474,10 @@ class Workload:
         op = self._op_of(proto)
         dist = pl.size_dist or self.sc.size_dist
         size = dist.sample(rnd) if dist is not None else None
+        if op not in ("read", "write"):
+            # namespace RPC: fixed small wire, no data payload — a size
+            # distribution on the scenario must not leak into goodput
+            size = None
         if self.sc.shared_extents and op == "read":
             if not self.extents:
                 # nothing written yet: the read targets unpopulated space
@@ -538,7 +547,7 @@ class Workload:
                 return
             self.metrics.on_complete(sim.now, res.latency_ns, nbytes, op,
                                      background=pl.background)
-            if self.sc.shared_extents and op != "read":
+            if self.sc.shared_extents and op == "write":
                 self.extents.append(nbytes)
             pp["completed"] += 1
             pp["bytes"] += nbytes
@@ -708,6 +717,17 @@ class Workload:
                 "size": sc.size,
                 "bytes_written": self.metrics.bytes_written,
                 "bytes_read": self.metrics.bytes_read,
+                # namespace RPCs completed + their rate (ops, not bytes;
+                # their wire traffic is under ctrl_bytes)
+                "meta_ops": self.metrics.meta_ops,
+                "meta_qps": (
+                    self.metrics.meta_ops
+                    / ((self.metrics.last_done_ns
+                        - (self.metrics.first_issue_ns or 0.0)) / 1e9)
+                    if self.metrics.meta_ops
+                    and self.metrics.last_done_ns
+                    > (self.metrics.first_issue_ns or 0.0) else 0.0
+                ),
                 "lost_packets": self.env.net.packets_dropped,
                 "lost_bytes": self.env.net.bytes_dropped,
                 # control traffic (heartbeats, view management) is booked

@@ -1,0 +1,287 @@
+"""Metadata plane (PR 8): namespace tree + extent maps, placement-policy
+invariants (property-tested), the detected-view re-replication loop, and
+the timed metadata RPC pipelines (NIC handler vs host CPU)."""
+
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # fall back to the deterministic local shim
+    from _hypothesis_shim import given, settings
+    from _hypothesis_shim import strategies as st
+
+from repro.checkpoint.storage import StorageCluster
+from repro.control.governor import RepairPacer
+from repro.membership import MembershipConfig
+from repro.namenode import (
+    BlockReplicator,
+    FailureDomainPlacement,
+    FileNode,
+    LoadBalancedPlacement,
+    NameNode,
+    Namespace,
+    RoundRobinPlacement,
+)
+from repro.policy import (
+    Flat,
+    HostAuth,
+    NoAuth,
+    PRESET_NAMES,
+    PolicySpec,
+    SpongeAuth,
+    preset_spec,
+)
+from repro.policy.timed import compile_policy
+from repro.sim import protocols as P
+
+pytestmark = pytest.mark.namespace
+
+
+# -- namespace tree + extent map ------------------------------------------------
+
+
+def test_namespace_tree_ops():
+    ns = Namespace()
+    ns.mkdir("/a/b/c")                       # mkdir -p
+    assert ns.num_dirs == 4                  # root + a + b + c
+    f = ns.create("/a/b/f", replication=2)
+    assert isinstance(f, FileNode) and f.replication == 2
+    assert ns.lookup("/a/b/f") is f
+    assert ns.listdir("/a/b") == ["c", "f"]
+    with pytest.raises(FileExistsError):
+        ns.create("/a/b/f")
+    with pytest.raises(FileNotFoundError):
+        ns.lookup("/a/b/missing")
+    with pytest.raises(NotADirectoryError):
+        ns.listdir("/a/b/f")
+    with pytest.raises(ValueError):
+        ns.lookup("relative/path")
+    ns.delete("/a/b/f")
+    assert ns.num_files == 0
+    with pytest.raises(FileNotFoundError):
+        ns.lookup("/a/b/f")
+
+
+def test_extent_map_generation_stamps():
+    ns = Namespace()
+    f = ns.create("/f")
+    b1 = ns.commit_block(f, 4096, [0, 1, 2], object_id=7)
+    b2 = ns.commit_block(f, 2048, [3, 4, 5])
+    assert b2.gen_stamp > b1.gen_stamp       # stamps are monotonic
+    assert f.size == 6144 and ns.num_blocks == 2
+    assert b1.replicas_on({1, 2, 9}) == 2
+    old = b2.gen_stamp
+    ns.repoint(b2, 4, 0)                     # re-replication fences 4's copy
+    assert b2.placements == [3, 0, 5]
+    assert b2.gen_stamp > old
+    with pytest.raises(ValueError):
+        ns.commit_block(f, 0, [0])
+
+
+# -- placement invariants (property-tested) -------------------------------------
+
+
+@settings(max_examples=30)
+@given(st.integers(2, 10), st.integers(0, 2), st.integers(1, 3), st.randoms())
+def test_placement_never_uses_excluded_nodes(live, nexcl, n, rnd):
+    """No policy ever places on an excluded (failed/suspected) node, and
+    the chosen nodes are distinct."""
+    num = live + nexcl
+    n = min(n, live)
+    excl = set(rnd.sample(range(num), nexcl))
+    for pol in (RoundRobinPlacement(num), LoadBalancedPlacement(num),
+                FailureDomainPlacement(num, [v % 2 for v in range(num)])):
+        for _ in range(8):
+            chosen = pol.place(n, exclude=excl)
+            assert len(chosen) == n
+            assert len(set(chosen)) == n
+            assert not set(chosen) & excl
+            for v in chosen:
+                pol.record(v, 4096)
+
+
+def test_placement_insufficient_live_raises():
+    for pol in (RoundRobinPlacement(4), LoadBalancedPlacement(4),
+                FailureDomainPlacement(4, [0, 0, 1, 1])):
+        with pytest.raises(RuntimeError):
+            pol.place(3, exclude={0, 1})
+
+
+def test_round_robin_unbiased_under_exclusion():
+    """The satellite bug fix: with node 1 down on a 5-node ring, the four
+    survivors each take the lead slot equally (the old cursor skewed the
+    failed node's successor)."""
+    pol = RoundRobinPlacement(5)
+    lead = [0] * 5
+    for _ in range(40):
+        lead[pol.place(2, exclude={1})[0]] += 1
+    assert lead[1] == 0
+    assert all(c == 10 for i, c in enumerate(lead) if i != 1)
+
+
+@settings(max_examples=25)
+@given(st.integers(2, 4), st.integers(1, 3), st.integers(0, 2), st.randoms())
+def test_failure_domains_distinct_when_enough_live(ndom, per_dom, nexcl, rnd):
+    """No two shards share a failure domain whenever the stripe fits in
+    the live domains (domains >= n)."""
+    num = ndom * per_dom
+    dom_of = [v // per_dom for v in range(num)]
+    pol = FailureDomainPlacement(num, dom_of)
+    excl = set(rnd.sample(range(num), min(nexcl, num - 1)))
+    n = min(pol.domains_live(excl), num - len(excl))
+    for _ in range(6):
+        chosen = pol.place(n, exclude=excl)
+        assert len({dom_of[v] for v in chosen}) == n
+
+
+def test_failure_domain_overflow_cap():
+    """With fewer domains than shards the per-domain overflow stays
+    minimal: ceil(n/domains) shards at most in any one domain."""
+    pol = FailureDomainPlacement(6, [0, 0, 1, 1, 2, 2])
+    chosen = pol.place(5)
+    per_dom = [sum(1 for v in chosen if v // 2 == d) for d in range(3)]
+    assert max(per_dom) == 2                 # ceil(5/3)
+
+
+@settings(max_examples=25)
+@given(st.integers(3, 8),
+       st.lists(st.integers(1, 1000), min_size=1, max_size=50))
+def test_load_balanced_spread_bounded(num_nodes, sizes):
+    """Greedy least-loaded keeps the max-min byte spread within the
+    largest single extent."""
+    pol = LoadBalancedPlacement(num_nodes)
+    for s in sizes:
+        pol.record(pol.place(1)[0], s)
+    assert max(pol.loads) - min(pol.loads) <= max(sizes)
+
+
+# -- StorageCluster integration -------------------------------------------------
+
+
+def test_cluster_consults_injected_policy():
+    from repro.core.packets import Resiliency
+
+    pol = LoadBalancedPlacement(4)
+    c = StorageCluster(4, node_capacity=1 << 20, placement=pol)
+    assert c.meta.placement is pol
+    for _ in range(8):
+        c.write_object(b"x" * 4096, resiliency=Resiliency.REPLICATION, k=2)
+    # the allocator feeds the policy's ledger; greedy keeps it level
+    assert max(pol.loads) - min(pol.loads) <= 4096
+
+
+def test_suspected_nodes_never_placed():
+    from repro.core.packets import Resiliency
+
+    c = StorageCluster(4, node_capacity=1 << 20)
+    c.meta.suspected.add(1)                  # detected-dead, not omniscient
+    for _ in range(6):
+        layout = c.write_object(b"y" * 2048,
+                                resiliency=Resiliency.REPLICATION, k=2)
+        assert all(coord.node != 1 for coord in layout.data_coords)
+
+
+# -- re-replication --------------------------------------------------------------
+
+
+def test_replicator_bookkeeping_only():
+    """Clusterless drain: repoints extent maps, accounts the policy
+    ledger, and flags unrecoverable blocks (all replicas dead)."""
+    ns = Namespace()
+    f = ns.create("/f")
+    b_ok = ns.commit_block(f, 4096, [0, 1, 2])
+    b_gone = ns.commit_block(f, 4096, [3, 4])
+    rep = BlockReplicator(ns, RoundRobinPlacement(6))
+    assert rep.mark_dead({3, 4}) == 1
+    assert rep.mark_dead({2}) == 1           # second view change, no dup
+    stats = rep.run()
+    assert stats["unrecoverable"] == 1       # b_gone lost both replicas
+    assert stats["blocks"] == 1
+    assert 2 not in b_ok.placements and len(set(b_ok.placements)) == 3
+    assert b_gone.placements == [3, 4]       # left as-is, counted lost
+
+
+def test_rereplication_on_detected_view_change():
+    """Satellite 3: crash a datanode via the heartbeat path only — the
+    lease-gated view change (never an omniscient crash() call) marks its
+    blocks under-replicated; re-replication restores target replication
+    within the pacer budget and the conservation audit shows zero loss."""
+    clk = {"t": 0.0}
+    rate_MBps = 2.0
+    pacer = RepairPacer(rate_MBps, burst_bytes=8192,
+                        clock=lambda: clk["t"],
+                        sleep=lambda s: clk.__setitem__("t", clk["t"] + s))
+    cluster = StorageCluster(6, node_capacity=1 << 20)
+    nn = NameNode(cluster, cfg=MembershipConfig(interval=10.0), pacer=pacer)
+    nn.mkdir("/a")
+    nn.create("/a/f", replication=3)
+    blocks = [nn.add_block("/a/f", bytes([i + 1]) * 4096) for i in range(8)]
+    assert nn.rpc_counts() == {"lookups": 0, "opens": 2, "commits": 8}
+
+    t, crash_at = 0.0, 200.0
+    while t < 1500.0 and nn.under_replicated() == 0:
+        for v in range(6):
+            if not (v == 2 and t >= crash_at):   # node 2 goes silent
+                nn.heartbeat(v, t)
+        if t >= crash_at and 2 not in cluster.failed:
+            cluster.fail_node(2)                 # makes the silence real
+        nn.tick(t)
+        t += 10.0
+
+    assert nn.under_replicated() > 0             # detected via heartbeats
+    assert 2 in cluster.meta.suspected           # steers new placements
+    assert 2 not in nn.views.alive()
+    stats = nn.re_replicate()
+    assert stats["blocks"] > 0 and stats["unrecoverable"] == 0
+    # pacer budget: total wait served cannot exceed bytes at the rate
+    assert clk["t"] <= stats["bytes"] / (rate_MBps * 1e6) + 1e-9
+    assert nn.under_replicated() == 0
+    for i, b in enumerate(blocks):
+        assert len(b.placements) == 3 and 2 not in b.placements
+        assert nn.read_block(b) == bytes([i + 1]) * 4096
+    assert cluster.audit()["lost_bytes"] == 0
+
+
+# -- timed metadata pipelines ----------------------------------------------------
+
+NS_PAIRS = (("ns-lookup-spin", "ns-lookup-host"),
+            ("ns-open-spin", "ns-open-host"),
+            ("ns-commit-spin", "ns-commit-host"))
+
+
+def _one_shot(name):
+    env = P.Env()
+    proto = compile_policy(env, preset_spec(name), 0)
+    out = {}
+    proto.issue(P.CLIENT, on_done=lambda r: out.update(lat=r.latency_ns))
+    env.sim.run()
+    return out["lat"], env
+
+
+def test_ns_presets_compile_and_complete():
+    for spin_name, host_name in NS_PAIRS:
+        assert spin_name in PRESET_NAMES and host_name in PRESET_NAMES
+        spin_lat, _ = _one_shot(spin_name)
+        host_lat, _ = _one_shot(host_name)
+        assert 0 < spin_lat < host_lat       # PCIe detour costs the host path
+
+
+def test_ns_wire_bytes_are_control_traffic():
+    """Satellite 6: metadata RPC bytes ride the ctrl_* counters and never
+    leak into the data-plane goodput accounting."""
+    _, env = _one_shot("ns-lookup-spin")
+    assert env.net.ctrl_packets_sent == 2    # request + reply
+    assert env.net.ctrl_bytes_sent == 216    # (28+64) + 124
+    assert env.net.packets_sent == 0         # no data packets at all
+
+
+def test_metadata_spec_validation():
+    with pytest.raises(ValueError, match="no replication"):
+        PolicySpec("spin", SpongeAuth(), op="lookup", replication=Flat(2))
+    with pytest.raises(ValueError, match="not.*raw rdma"):
+        PolicySpec("rdma", NoAuth(), op="commit")
+    # the transport<->auth pairing still holds for metadata ops
+    with pytest.raises(ValueError):
+        PolicySpec("spin", HostAuth(), op="lookup")
+    assert preset_spec("ns-open-host").op == "open"

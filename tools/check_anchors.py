@@ -1,6 +1,6 @@
 """Anchor-drift gate: deterministic-model anchors + benchmark floors.
 
-Seven checks, each with a readable diff on failure:
+Eight checks, each with a readable diff on failure:
 
   1. policy latency anchors — re-runs every preset/size recorded in
      ``tests/data/policy_anchors.json`` through the timed plane (the sim
@@ -29,7 +29,14 @@ Seven checks, each with a readable diff on failure:
      zero writes with the unavailability window bounded, the false-dead
      rate under a lossy monitor stays <= ``--fp-dead-ceiling`` (while
      suspicion provably flickered), and every cross-view functional
-     history was linearizable with epoch fencing actually exercised.
+     history was linearizable with epoch fencing actually exercised;
+  8. ``BENCH_namespace.json`` claims — the metadata plane: NIC-handler
+     lookups hold >= ``--ns-edge-floor`` x the host-RPC path's QPS at
+     saturation, the goodput-vs-clients sweep shows a measured
+     namespace-saturation knee pinned on the host metadata cap, and the
+     detected-view re-replication run (heartbeat-detected crash, paced
+     copies) lost zero blocks with every block restored to target
+     replication and metadata wire bytes booked as control traffic.
 
 Usage (CI invokes this as its own workflow step):
 
@@ -37,7 +44,7 @@ Usage (CI invokes this as its own workflow step):
       [--rel-tol 1e-9] [--dataplane-floor 2.0]
       [--degraded-ceiling 2.0] [--offload-floor 2.0]
       [--fig16-floor 0.85] [--replication-floor 1.5]
-      [--fp-dead-ceiling 0.02]
+      [--fp-dead-ceiling 0.02] [--ns-edge-floor 1.5]
 
 Exit code 0 == no drift.
 """
@@ -270,6 +277,51 @@ def check_membership(path: str, fp_ceiling: float) -> list[str]:
     return errors
 
 
+def check_namespace(path: str, edge_floor: float) -> list[str]:
+    if not os.path.exists(path):
+        return [f"  missing artifact {path}"]
+    with open(path) as f:
+        doc = json.load(f)
+    claims = doc.get("claims", {})
+    errors = []
+    edge = claims.get("ns_nic_over_host_qps")
+    if edge is None:
+        errors.append("  claim ns_nic_over_host_qps missing")
+    elif edge < edge_floor:
+        errors.append(
+            f"  NIC lookups only {edge:.2f}x the host-RPC path at "
+            f"saturation (< floor {edge_floor:.2f}x)")
+    if not claims.get("ns_knee_detected"):
+        errors.append("  no namespace-saturation knee detected in the "
+                      "goodput-vs-clients sweep")
+    if not claims.get("ns_knee_meta_bound"):
+        errors.append(
+            f"  host goodput ceiling does not match the metadata cap "
+            f"(top {claims.get('ns_goodput_host_top_GBps')} GB/s vs host "
+            f"cap {claims.get('ns_host_qps_cap')} lookups/s) — the knee "
+            f"is not metadata-bound")
+    if not claims.get("ns_rereplication_detected"):
+        errors.append("  the datanode crash was never detected via "
+                      "heartbeats (re-replication ran omnisciently or "
+                      "not at all)")
+    if claims.get("ns_rereplication_blocks", 0) <= 0:
+        errors.append("  re-replication moved zero blocks (vacuous)")
+    if not claims.get("ns_rereplication_zero_lost"):
+        errors.append("  blocks lost across detected-view re-replication")
+    if not claims.get("ns_rereplication_restored"):
+        errors.append("  not every block returned to target replication "
+                      "(or re-read mismatched) after re-replication")
+    if not claims.get("ns_rereplication_within_budget"):
+        errors.append("  re-replication violated the RepairPacer budget")
+    if claims.get("ns_rereplication_unrecoverable", 0) != 0:
+        errors.append("  some blocks were unrecoverable (all replicas "
+                      "dead) — the scenario lost data by construction")
+    if claims.get("ns_ctrl_bytes", 0) <= 0:
+        errors.append("  metadata RPCs booked zero control bytes — the "
+                      "ctrl_* separation went untested")
+    return errors
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--repo", default=REPO)
@@ -288,6 +340,8 @@ def main() -> int:
                     help="min NIC-over-host chain-replication latency edge")
     ap.add_argument("--fp-dead-ceiling", type=float, default=0.02,
                     help="max false-dead verdicts per lossy-monitor run")
+    ap.add_argument("--ns-edge-floor", type=float, default=1.5,
+                    help="min NIC-over-host lookup QPS edge at saturation")
     args = ap.parse_args()
 
     checks = [
@@ -311,6 +365,9 @@ def main() -> int:
         ("BENCH_membership.json claims", check_membership(
             os.path.join(args.repo, "BENCH_membership.json"),
             args.fp_dead_ceiling)),
+        ("BENCH_namespace.json claims", check_namespace(
+            os.path.join(args.repo, "BENCH_namespace.json"),
+            args.ns_edge_floor)),
     ]
     failed = False
     for title, errors in checks:
