@@ -29,7 +29,6 @@ the ``BENCH_degraded.json`` artifact (the cross-PR regression anchor).
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import sys
 import time
@@ -167,22 +166,11 @@ def bench_rows(
 
 def write_artifact(rows: list[tuple], claims: dict, out: str,
                    config: dict | None = None) -> None:
-    with open(out, "w") as f:
-        json.dump(
-            {
-                "bench": "degraded",
-                "metric": "us_per_call/ratio",
-                "config": config or {},
-                "claims": claims,
-                "rows": [
-                    {"name": n, "us_per_call": u, "derived": d}
-                    for n, u, d in rows
-                ],
-            },
-            f,
-            indent=1,
-        )
-    print(f"# wrote {out}", file=sys.stderr)
+    from repro.bench import write_bench_artifact
+
+    write_bench_artifact(out, "degraded", rows,
+                         metric="us_per_call/ratio",
+                         claims=claims, config=config or {})
 
 
 def main() -> None:

@@ -44,7 +44,6 @@ writes the ``BENCH_membership.json`` artifact.
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import sys
 
@@ -219,22 +218,10 @@ def bench_rows(quick: bool = False) -> tuple[list[tuple], dict]:
 
 def write_artifact(rows: list[tuple], claims: dict, out: str,
                    config: dict | None = None) -> None:
-    with open(out, "w") as f:
-        json.dump(
-            {
-                "bench": "membership",
-                "metric": "us/verdict",
-                "config": config or {},
-                "claims": claims,
-                "rows": [
-                    {"name": n, "us_per_call": u, "derived": d}
-                    for n, u, d in rows
-                ],
-            },
-            f,
-            indent=1,
-        )
-    print(f"# wrote {out}", file=sys.stderr)
+    from repro.bench import write_bench_artifact
+
+    write_bench_artifact(out, "membership", rows, metric="us/verdict",
+                         claims=claims, config=config or {})
 
 
 def main() -> None:

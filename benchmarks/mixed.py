@@ -19,7 +19,6 @@ Usage:
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import sys
 
@@ -76,20 +75,10 @@ def bench_rows(clients=DEFAULT_CLIENTS, requests: int = 6) -> list[tuple]:
 
 
 def write_artifact(rows: list[tuple], out: str) -> None:
-    with open(out, "w") as f:
-        json.dump(
-            {
-                "bench": "mixed",
-                "metric": "p99_us/goodput_GBps",
-                "rows": [
-                    {"name": n, "us_per_call": u, "derived": d}
-                    for n, u, d in rows
-                ],
-            },
-            f,
-            indent=1,
-        )
-    print(f"# wrote {out}", file=sys.stderr)
+    from repro.bench import write_bench_artifact
+
+    write_bench_artifact(out, "mixed", rows,
+                         metric="p99_us/goodput_GBps")
 
 
 def main() -> None:

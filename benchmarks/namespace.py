@@ -50,7 +50,6 @@ the artifact.
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import sys
 import time
@@ -303,22 +302,10 @@ def bench_rows(quick: bool = False) -> tuple[list[tuple], dict]:
 
 def write_artifact(rows: list[tuple], claims: dict, out: str,
                    config: dict | None = None) -> None:
-    with open(out, "w") as f:
-        json.dump(
-            {
-                "bench": "namespace",
-                "metric": "us/op",
-                "config": config or {},
-                "claims": claims,
-                "rows": [
-                    {"name": n, "us_per_call": u, "derived": d}
-                    for n, u, d in rows
-                ],
-            },
-            f,
-            indent=1,
-        )
-    print(f"# wrote {out}", file=sys.stderr)
+    from repro.bench import write_bench_artifact
+
+    write_bench_artifact(out, "namespace", rows, metric="us/op",
+                         claims=claims, config=config or {})
 
 
 def main() -> None:

@@ -29,7 +29,6 @@ the ``BENCH_replication.json`` artifact (the cross-PR regression anchor).
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import sys
 
@@ -142,22 +141,11 @@ def bench_rows(k: int = 4, quick: bool = False) -> tuple[list[tuple], dict]:
 
 def write_artifact(rows: list[tuple], claims: dict, out: str,
                    config: dict | None = None) -> None:
-    with open(out, "w") as f:
-        json.dump(
-            {
-                "bench": "replication",
-                "metric": "us_per_call/verdict",
-                "config": config or {},
-                "claims": claims,
-                "rows": [
-                    {"name": n, "us_per_call": u, "derived": d}
-                    for n, u, d in rows
-                ],
-            },
-            f,
-            indent=1,
-        )
-    print(f"# wrote {out}", file=sys.stderr)
+    from repro.bench import write_bench_artifact
+
+    write_bench_artifact(out, "replication", rows,
+                         metric="us_per_call/verdict",
+                         claims=claims, config=config or {})
 
 
 def main() -> None:

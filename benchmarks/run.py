@@ -1,40 +1,31 @@
-"""Benchmark harness: one function per paper table/figure + roofline table.
+"""Benchmark harness: one registry of suites, two front doors.
 
-Prints ``name,us_per_call,derived`` CSV rows.  Usage:
+Subcommand form (preferred)::
 
-  PYTHONPATH=src python -m benchmarks.run [--only fig6,fig15] [--roofline]
-                                          [--contention] [--mixed]
-                                          [--degraded] [--replication]
-                                          [--autoscale] [--all]
-                                          [--json OUT]
+  PYTHONPATH=src python -m benchmarks.run <suite> [--quick] [--json OUT]
+  PYTHONPATH=src python -m benchmarks.run list
 
-``--contention`` appends the multi-client sweep (p99 latency / goodput per
-client count; see benchmarks/contention.py for the full CLI).  ``--mixed``
-appends the mixed-policy sweep (writes + EC sharing storage nodes on one
-Env; see benchmarks/mixed.py) and always writes its ``BENCH_mixed.json``
-artifact.  ``--degraded`` appends the failure-injection degraded-read /
-repair sweep (see benchmarks/degraded.py) and always writes its
-``BENCH_degraded.json`` artifact.  ``--autoscale`` appends the
-control-plane sweep (Fig. 16 goodput-vs-HPUs, SLO autoscaler vs static
-optimum, repair pacing; see benchmarks/autoscale.py) and always writes
-its ``BENCH_control.json`` artifact.  ``--replication`` appends the consistency-aware replication
-sweep (NIC chain vs host chain vs ABD, plus the functional-plane
-linearizability proof; see benchmarks/replication.py) and always writes
-its ``BENCH_replication.json`` artifact.  ``--membership`` appends the
-failure-detection / view-change sweep (heartbeat-driven detection time,
-false-positive rate, failover window, cross-view linearizability; see
-benchmarks/membership.py) and always writes its
-``BENCH_membership.json`` artifact.  ``--namespace`` appends the
-metadata-plane sweep (NIC vs host lookup QPS, the namespace-saturation
-knee, detected-view re-replication; see benchmarks/namespace.py) and
-always writes its ``BENCH_namespace.json`` artifact.  ``--all`` runs every suite above
-(plus the roofline table) and writes one combined manifest
-(``BENCH_all.json`` by default): every emitted row plus the paths of all
-artifacts written in the run.  ``--json`` additionally writes every
-emitted row to ``OUT`` as a ``BENCH_*.json`` artifact ({"bench", "rows":
-[{"name", "us_per_call", "derived"}]}) so any bench table can be tracked
-across PRs.  (The kernel data-plane sweep has its own dedicated
-artifact: ``benchmarks/dataplane.py``.)
+where ``<suite>`` is one of the :data:`SUITES` names (``figs``,
+``roofline``, ``contention``, ``mixed``, ``degraded``, ``replication``,
+``membership``, ``namespace``, ``autoscale``, ``simspeed``, ``all``).
+Every suite prints ``name,us_per_call,derived`` CSV rows; suites with a
+regression artifact write it to their default ``BENCH_*.json`` path
+(``--json OUT`` overrides).  ``all`` runs every suite and writes one
+combined manifest (rows + the paths of all artifacts written).
+
+Legacy flag form (kept working verbatim — CI smoke and older scripts
+use it)::
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig6,fig15]
+      [--roofline] [--contention] [--mixed] [--degraded]
+      [--replication] [--membership] [--namespace] [--autoscale]
+      [--simspeed] [--all] [--json OUT]
+
+with per-suite ``--<suite>-out`` / ``--<suite>-quick`` variants.  Both
+doors drive the same registry and the same shared artifact writer
+(:func:`repro.bench.write_bench_artifact`), so an artifact is
+byte-identical whichever way it was produced.  (The kernel data-plane
+sweep has its own dedicated artifact: ``benchmarks/dataplane.py``.)
 """
 
 from __future__ import annotations
@@ -47,7 +38,7 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from benchmarks.paper_figs import ALL_BENCHES  # noqa: E402
+from repro.bench import write_bench_artifact  # noqa: E402
 
 
 def roofline_rows() -> list[tuple]:
@@ -61,12 +52,159 @@ def roofline_rows() -> list[tuple]:
             continue
         r = d["roofline"]
         name = f"roofline/{d['arch']}/{d['shape']}/{d['mesh']}"
-        step_ms = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"]) * 1e3
+        step_ms = max(r["t_compute_s"], r["t_memory_s"],
+                      r["t_collective_s"]) * 1e3
         rows.append(
             (name, round(step_ms * 1e3, 1),
              f"{r['bottleneck']}:{round(100 * r['roofline_fraction'], 2)}%")
         )
     return rows
+
+
+def _figs_rows(quick: bool, filters: list[str] | None = None) -> list[tuple]:
+    from benchmarks.paper_figs import ALL_BENCHES
+
+    rows: list[tuple] = []
+    for bench in ALL_BENCHES:
+        if filters and not any(f in bench.__name__ for f in filters):
+            continue
+        rows.extend(bench())
+    return rows
+
+
+def _contention_rows(quick: bool):
+    from benchmarks.contention import bench_rows
+
+    return bench_rows(), None
+
+
+def _mixed_rows(quick: bool):
+    from benchmarks.mixed import bench_rows
+
+    return bench_rows(), None
+
+
+def _degraded_rows(quick: bool):
+    from benchmarks.degraded import bench_rows
+
+    return bench_rows(quick=quick)
+
+
+def _replication_rows(quick: bool):
+    from benchmarks.replication import bench_rows
+
+    return bench_rows(quick=quick)
+
+
+def _membership_rows(quick: bool):
+    from benchmarks.membership import bench_rows
+
+    return bench_rows(quick=quick)
+
+
+def _namespace_rows(quick: bool):
+    from benchmarks.namespace import bench_rows
+
+    return bench_rows(quick=quick)
+
+
+def _autoscale_rows(quick: bool):
+    from repro.control.sweep import bench_rows
+
+    return bench_rows(quick=quick)
+
+
+def _simspeed_rows(quick: bool):
+    from benchmarks.simspeed import bench_rows
+
+    return bench_rows(quick=quick)
+
+
+#: suite name -> (loader, artifact bench-name or None, default out,
+#: metric).  Loaders take ``quick`` and return ``(rows, claims|None)``;
+#: suites whose bench-name is None print rows but write no artifact
+#: unless ``--json`` asks for one.
+SUITES: dict[str, tuple] = {
+    "contention": (_contention_rows, None, "BENCH_contention.json",
+                   "p99_us/goodput_GBps"),
+    "mixed": (_mixed_rows, "mixed", "BENCH_mixed.json",
+              "p99_us/goodput_GBps"),
+    "degraded": (_degraded_rows, "degraded", "BENCH_degraded.json",
+                 "us_per_call/ratio"),
+    "replication": (_replication_rows, "replication",
+                    "BENCH_replication.json", "us_per_call/verdict"),
+    "membership": (_membership_rows, "membership",
+                   "BENCH_membership.json", "us/verdict"),
+    "namespace": (_namespace_rows, "namespace", "BENCH_namespace.json",
+                  "us/op"),
+    "autoscale": (_autoscale_rows, "control", "BENCH_control.json",
+                  "p99_us_or_hpus/derived"),
+    "simspeed": (_simspeed_rows, "simspeed", "BENCH_simspeed.json",
+                 "wall_s/sim_MBps"),
+}
+
+#: print-only suites (no claims, no default artifact)
+_PLAIN_SUITES = {
+    "figs": lambda quick: (_figs_rows(quick), None),
+    "roofline": lambda quick: (roofline_rows(), None),
+}
+
+
+def run_suite(name: str, quick: bool = False, out: str | None = None,
+              emit=None) -> tuple[list[tuple], dict | None]:
+    """Run one registered suite: load rows, emit them, write the
+    artifact (the one code path both CLIs share)."""
+    if name in _PLAIN_SUITES:
+        rows, claims = _PLAIN_SUITES[name](quick)
+        bench = name
+        metric = None
+        default_out = None
+    else:
+        loader, bench, default_out, metric = SUITES[name]
+        rows, claims = loader(quick)
+    for row in rows:
+        (emit or _print_row)(*row)
+    target = out or (default_out if bench else None)
+    if target:
+        write_bench_artifact(target, bench or name, rows, metric=metric,
+                             claims=claims, config={"quick": quick})
+    return rows, claims
+
+
+def _print_row(name, us, derived) -> None:
+    print(f"{name},{us},{derived}")
+
+
+def _sub_main(argv: list[str]) -> None:
+    suite = argv[0]
+    names = ["all", *(_PLAIN_SUITES), *SUITES]
+    if suite == "list":
+        print("\n".join(names))
+        return
+    if suite not in names:
+        sys.exit(f"unknown suite {suite!r}; one of: {', '.join(names)} "
+                 "(or legacy --flags, see --help)")
+    ap = argparse.ArgumentParser(prog=f"benchmarks.run {suite}")
+    ap.add_argument("--quick", action="store_true",
+                    help="small sweep (CI smoke)")
+    ap.add_argument("--json", metavar="OUT", default=None,
+                    help="artifact path (default: the suite's "
+                         "BENCH_*.json, where it has one)")
+    args = ap.parse_args(argv[1:])
+
+    print("name,us_per_call,derived")
+    if suite != "all":
+        run_suite(suite, quick=args.quick, out=args.json)
+        return
+    rows: list[tuple] = []
+    artifacts: dict[str, str] = {}
+    for name in (*_PLAIN_SUITES, *SUITES):
+        srows, _ = run_suite(name, quick=args.quick)
+        rows.extend(srows)
+        if name in SUITES and SUITES[name][1]:
+            artifacts[SUITES[name][1]] = SUITES[name][2]
+    write_bench_artifact(args.json or "BENCH_all.json", "all", rows,
+                         extra={"artifacts": artifacts})
 
 
 def main() -> None:
@@ -123,11 +261,19 @@ def main() -> None:
                     metavar="OUT", help="artifact path for --autoscale")
     ap.add_argument("--autoscale-quick", action="store_true",
                     help="small control-plane sweep (CI smoke)")
+    ap.add_argument("--simspeed", action="store_true",
+                    help="also run the engine-speed race (Fig. 16 anchor "
+                         "across engines + 1000-node fleet sweep) and "
+                         "write BENCH_simspeed.json")
+    ap.add_argument("--simspeed-out", default="BENCH_simspeed.json",
+                    metavar="OUT", help="artifact path for --simspeed")
+    ap.add_argument("--simspeed-quick", action="store_true",
+                    help="single timing repeat per engine (CI smoke)")
     ap.add_argument("--all", action="store_true",
                     help="run every suite (paper figs, roofline, "
                          "contention, mixed, degraded, replication, "
-                         "membership, autoscale) and "
-                         "write one combined manifest of all rows + "
+                         "membership, namespace, autoscale, simspeed) "
+                         "and write one combined manifest of all rows + "
                          "artifact paths")
     ap.add_argument("--all-out", default="BENCH_all.json", metavar="OUT",
                     help="manifest path for --all")
@@ -136,14 +282,10 @@ def main() -> None:
                          "BENCH_*.json artifact")
     args = ap.parse_args()
     if args.all:
-        args.roofline = True
-        args.contention = True
-        args.mixed = True
-        args.degraded = True
-        args.replication = True
-        args.membership = True
-        args.namespace = True
-        args.autoscale = True
+        for flag in ("roofline", "contention", "mixed", "degraded",
+                     "replication", "membership", "namespace",
+                     "autoscale", "simspeed"):
+            setattr(args, flag, True)
     filters = [f for f in args.only.split(",") if f]
 
     rows: list[tuple] = []
@@ -151,111 +293,33 @@ def main() -> None:
 
     def emit(name, us, derived):
         rows.append((name, us, derived))
-        print(f"{name},{us},{derived}")
+        _print_row(name, us, derived)
 
     print("name,us_per_call,derived")
-    for bench in ALL_BENCHES:
-        if filters and not any(f in bench.__name__ for f in filters):
-            continue
-        for name, us, derived in bench():
-            emit(name, us, derived)
+    for row in _figs_rows(False, filters):
+        emit(*row)
     if args.roofline or not filters:
-        for name, us, derived in roofline_rows():
-            emit(name, us, derived)
+        for row in roofline_rows():
+            emit(*row)
     if args.contention:
-        from benchmarks.contention import bench_rows
-
-        for name, us, derived in bench_rows():
-            emit(name, us, derived)
-    if args.mixed:
-        from benchmarks.mixed import bench_rows as mixed_rows
-        from benchmarks.mixed import write_artifact
-
-        mrows = mixed_rows()
-        for name, us, derived in mrows:
-            emit(name, us, derived)
-        write_artifact(mrows, args.mixed_out)
-        artifacts["mixed"] = args.mixed_out
-    if args.degraded:
-        from benchmarks.degraded import bench_rows as degraded_rows
-        from benchmarks.degraded import write_artifact as degraded_artifact
-
-        drows, claims = degraded_rows(quick=args.degraded_quick)
-        for name, us, derived in drows:
-            emit(name, us, derived)
-        degraded_artifact(drows, claims, args.degraded_out,
-                          {"quick": args.degraded_quick})
-        artifacts["degraded"] = args.degraded_out
-    if args.replication:
-        from benchmarks.replication import bench_rows as repl_rows
-        from benchmarks.replication import write_artifact as repl_artifact
-
-        rrows, rclaims = repl_rows(quick=args.replication_quick)
-        for name, us, derived in rrows:
-            emit(name, us, derived)
-        repl_artifact(rrows, rclaims, args.replication_out,
-                      {"quick": args.replication_quick})
-        artifacts["replication"] = args.replication_out
-    if args.membership:
-        from benchmarks.membership import bench_rows as member_rows
-        from benchmarks.membership import write_artifact as member_artifact
-
-        mbrows, mbclaims = member_rows(quick=args.membership_quick)
-        for name, us, derived in mbrows:
-            emit(name, us, derived)
-        member_artifact(mbrows, mbclaims, args.membership_out,
-                        {"quick": args.membership_quick})
-        artifacts["membership"] = args.membership_out
-    if args.namespace:
-        from benchmarks.namespace import bench_rows as ns_rows
-        from benchmarks.namespace import write_artifact as ns_artifact
-
-        nrows, nclaims = ns_rows(quick=args.namespace_quick)
-        for name, us, derived in nrows:
-            emit(name, us, derived)
-        ns_artifact(nrows, nclaims, args.namespace_out,
-                    {"quick": args.namespace_quick})
-        artifacts["namespace"] = args.namespace_out
-    if args.autoscale:
-        from repro.control.sweep import bench_rows as control_rows
-        from repro.control.sweep import write_artifact as control_artifact
-
-        crows, cclaims = control_rows(quick=args.autoscale_quick)
-        for name, us, derived in crows:
-            emit(name, us, derived)
-        control_artifact(crows, cclaims, args.autoscale_out,
-                         {"quick": args.autoscale_quick})
-        artifacts["control"] = args.autoscale_out
+        run_suite("contention", emit=emit)
+    for name in ("mixed", "degraded", "replication", "membership",
+                 "namespace", "autoscale", "simspeed"):
+        if not getattr(args, name):
+            continue
+        quick = getattr(args, f"{name}_quick", False)
+        out = getattr(args, f"{name}_out")
+        run_suite(name, quick=quick, out=out, emit=emit)
+        artifacts[SUITES[name][1]] = out
     if args.all:
-        with open(args.all_out, "w") as f:
-            json.dump(
-                {
-                    "bench": "all",
-                    "artifacts": artifacts,
-                    "rows": [
-                        {"name": n, "us_per_call": u, "derived": d}
-                        for n, u, d in rows
-                    ],
-                },
-                f,
-                indent=1,
-            )
-        print(f"# wrote {args.all_out}", file=sys.stderr)
+        write_bench_artifact(args.all_out, "all", rows,
+                             extra={"artifacts": artifacts})
     if args.json:
-        with open(args.json, "w") as f:
-            json.dump(
-                {
-                    "bench": "paper_figs",
-                    "rows": [
-                        {"name": n, "us_per_call": u, "derived": d}
-                        for n, u, d in rows
-                    ],
-                },
-                f,
-                indent=1,
-            )
-        print(f"# wrote {args.json}", file=sys.stderr)
+        write_bench_artifact(args.json, "paper_figs", rows)
 
 
 if __name__ == "__main__":
-    main()
+    if len(sys.argv) > 1 and not sys.argv[1].startswith("-"):
+        _sub_main(sys.argv[1:])
+    else:
+        main()

@@ -1,0 +1,197 @@
+"""Simulator-speed benchmark: engines racing the same scenarios.
+
+Two parts, one artifact (``BENCH_simspeed.json``):
+
+* **anchor** — the Fig. 16 TriEC large-write scenario (8 clients x 6
+  one-MiB RS(3,2) writes, 128 HPUs) run to completion on every engine.
+  The column is wall seconds (best of ``--repeats``); the derived column
+  is simulated megabytes per wall second — the metric the tentpole
+  gates: ``batched_speedup_x`` claims the batched core's rate over the
+  discrete reference (floor: 5x, see ``tools/check_anchors.py``).
+  Count metrics (completed, bytes) are asserted identical across
+  engines before any rate is reported.
+
+* **fleet** — a 1000-node / 1000-client Fig. 16-style sweep: 200
+  independent RS(3,2) shards (5 storage nodes + 5 clients each, 4 MiB
+  writes per client) run back-to-back on the hybrid engine.  The claim
+  ``fleet_wall_s`` is the total wall clock; CI gates it under the smoke
+  budget so the fleet sweep stays a commit-time check, not a nightly.
+
+Usage:
+
+  PYTHONPATH=src python benchmarks/simspeed.py [--quick] [--repeats N]
+      [--json BENCH_simspeed.json]
+
+``python -m benchmarks.run simspeed`` runs the same sweep.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.bench import write_bench_artifact  # noqa: E402
+from repro.sim.pspin import PsPINConfig  # noqa: E402
+from repro.sim.workload import Scenario  # noqa: E402
+
+MiB = 1 << 20
+
+#: the engines the anchor races, in reporting order
+ANCHOR_ENGINES = ("discrete", "batched", "hybrid")
+
+FLEET_SHARDS = 200          # x (k+m)=5 storage nodes -> 1000 nodes
+FLEET_CLIENTS_PER_SHARD = 5  # x 200 shards -> 1000 clients
+FLEET_REQUESTS = 4           # > hybrid calibration prefix (3)
+
+
+def anchor_scenario(seed: int = 3) -> tuple[Scenario, PsPINConfig]:
+    """The Fig. 16 TriEC anchor: the scenario every engine must agree
+    on (counts exactly; times within the flight-lane tolerance)."""
+    sc = Scenario(
+        protocol="spin-triec",
+        size=MiB,
+        num_clients=8,
+        requests_per_client=6,
+        k=3, m=2, seed=seed,
+    )
+    return sc, PsPINConfig(num_hpus=128)
+
+
+def _race(sc: Scenario, pcfg: PsPINConfig, engine: str,
+          repeats: int) -> tuple[float, dict]:
+    """Best-of-``repeats`` wall clock for one engine (wall noise on a
+    shared CI box easily hits 2x; best-of is the stable statistic)."""
+    best = float("inf")
+    rep: dict = {}
+    for _ in range(max(1, repeats)):
+        t0 = time.perf_counter()
+        rep = sc.run(engine=engine, pcfg=pcfg)
+        best = min(best, time.perf_counter() - t0)
+    return best, rep
+
+
+def anchor_rows(repeats: int = 3, quick: bool = False
+                ) -> tuple[list[tuple], dict]:
+    """Race the anchor scenario across engines; claims carry the
+    simulated-bytes-per-wall-second speedups over discrete."""
+    sc, pcfg = anchor_scenario()
+    if quick:
+        repeats = 1
+    rows: list[tuple] = []
+    claims: dict[str, float] = {}
+    rates: dict[str, float] = {}
+    counts: dict[str, tuple] = {}
+    for engine in ANCHOR_ENGINES:
+        wall, rep = _race(sc, pcfg, engine, repeats)
+        nbytes = rep["bytes_written"] + rep["bytes_read"]
+        counts[engine] = (rep["issued"], rep["completed"], nbytes,
+                          rep["packets"])
+        rate = nbytes / wall / 1e6  # simulated MB per wall second
+        rates[engine] = rate
+        rows.append(
+            (f"simspeed/anchor/{engine}", round(wall, 4),
+             f"simMBps={rate:.0f}, events={rep['events']}")
+        )
+    # engines must simulate the same workload before rates mean anything
+    for engine in ANCHOR_ENGINES[1:]:
+        assert counts[engine] == counts["discrete"], (
+            f"{engine} diverged from discrete on count metrics: "
+            f"{counts[engine]} != {counts['discrete']}"
+        )
+    claims["batched_speedup_x"] = round(
+        rates["batched"] / rates["discrete"], 2)
+    claims["hybrid_speedup_x"] = round(
+        rates["hybrid"] / rates["discrete"], 2)
+    claims["anchor_sim_MBps_batched"] = round(rates["batched"], 1)
+    return rows, claims
+
+
+def fleet_rows(shards: int = FLEET_SHARDS,
+               clients_per_shard: int = FLEET_CLIENTS_PER_SHARD,
+               requests: int = FLEET_REQUESTS,
+               engine: str = "hybrid") -> tuple[list[tuple], dict]:
+    """1000-node / 1000-client sweep as independent RS(3,2) shards.
+
+    A fleet of small replica groups is exactly how a rack-scale
+    deployment shards a volume; independent Envs also keep per-shard
+    memory flat so the sweep scales linearly in wall clock."""
+    pcfg = PsPINConfig(num_hpus=128)
+    total_bytes = 0
+    completed = 0
+    t0 = time.perf_counter()
+    for shard in range(shards):
+        sc = Scenario(
+            protocol="spin-triec",
+            size=MiB,
+            num_clients=clients_per_shard,
+            requests_per_client=requests,
+            k=3, m=2, seed=shard,
+        )
+        rep = sc.run(engine=engine, pcfg=pcfg)
+        total_bytes += rep["bytes_written"] + rep["bytes_read"]
+        completed += rep["completed"]
+        expect = clients_per_shard * requests
+        assert rep["completed"] == expect, (
+            f"shard {shard}: {rep['completed']}/{expect} completed"
+        )
+    wall = time.perf_counter() - t0
+    nodes = shards * 5
+    clients = shards * clients_per_shard
+    rows = [(
+        f"simspeed/fleet/{engine}/n{nodes}/c{clients}", round(wall, 2),
+        f"simMBps={total_bytes / wall / 1e6:.0f}, "
+        f"completed={completed}",
+    )]
+    claims = {
+        "fleet_wall_s": round(wall, 2),
+        "fleet_nodes": nodes,
+        "fleet_clients": clients,
+        "fleet_sim_GB": round(total_bytes / 1e9, 2),
+    }
+    return rows, claims
+
+
+def bench_rows(quick: bool = False, repeats: int = 3
+               ) -> tuple[list[tuple], dict]:
+    """Full suite: anchor race + fleet sweep (the registry entry point
+    for ``benchmarks.run``)."""
+    rows, claims = anchor_rows(repeats=repeats, quick=quick)
+    frows, fclaims = fleet_rows()
+    rows += frows
+    claims.update(fclaims)
+    return rows, claims
+
+
+def write_artifact(rows, claims, out: str, config: dict | None = None
+                   ) -> None:
+    write_bench_artifact(
+        out, "simspeed", rows, metric="wall_s/sim_MBps",
+        claims=claims, config=config,
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="single timing repeat per engine")
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--json", metavar="OUT", default=None)
+    args = ap.parse_args()
+
+    rows, claims = bench_rows(quick=args.quick, repeats=args.repeats)
+    for name, wall, derived in rows:
+        print(f"{name:44s} {wall:10.3f}  {derived}")
+    for key, val in claims.items():
+        print(f"claim {key} = {val}")
+    if args.json:
+        write_artifact(rows, claims, args.json,
+                       config={"quick": args.quick,
+                               "repeats": args.repeats})
+
+
+if __name__ == "__main__":
+    main()

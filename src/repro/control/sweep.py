@@ -311,19 +311,13 @@ def bench_rows(quick: bool = False) -> tuple[list[tuple], dict]:
 
 
 def write_artifact(rows, claims, out, config=None) -> None:
-    import json
-    import sys
+    from repro.bench import write_bench_artifact
 
-    with open(out, "w") as f:
-        json.dump(
-            {
-                "bench": "control",
-                "metric": "p99_us_or_hpus/derived",
-                "config": config or {},
-                "claims": claims,
-                "rows": [{"name": n, "us_per_call": u, "derived": d} for n, u, d in rows],
-            },
-            f,
-            indent=1,
-        )
-    print(f"# wrote {out}", file=sys.stderr)
+    write_bench_artifact(
+        out,
+        "control",
+        rows,
+        metric="p99_us_or_hpus/derived",
+        claims=claims,
+        config=config or {},
+    )

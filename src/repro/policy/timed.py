@@ -384,6 +384,14 @@ class InterleavedEcInjector(Stage):
         size = p.req_size(pend)
         chunk = -(-size // k)
         header_extra = write_header_extra(self.m)
+        post = cfg.client_post_ns + (k - 1) * cfg.client_post_extra_ns
+
+        fl = p.env.flight_lane()
+        if fl is not None:
+            # batched engines: the whole request's packet schedule is
+            # computed analytically at inject time (repro.policy.flight)
+            sim.call(sim.now + post, fl.fly_ec, (self, pend))
+            return
 
         def inject() -> None:
             p.mark_inject()
@@ -401,7 +409,6 @@ class InterleavedEcInjector(Stage):
                              "i": i, "n": len(streams[j]), "sz": size},
                         )
 
-        post = cfg.client_post_ns + (k - 1) * cfg.client_post_extra_ns
         sim.after(post, inject)
 
 

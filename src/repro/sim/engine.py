@@ -1,10 +1,32 @@
-"""Minimal discrete-event engine (the SST stand-in).
+"""Discrete-event engines (the SST stand-in) behind one ``Engine`` API.
 
 The paper evaluates with cycle-accurate PsPIN simulation + SST for
 multi-node scenarios (section III-D).  We reproduce the multi-node layer as
 a classic event-driven simulator: a time-ordered heap of callbacks plus
 resource primitives (FIFO serial resources and pools) that the network and
 PsPIN models are built from.  All times are in nanoseconds (float).
+
+Three engine cores share that heap contract (see README "Engines"):
+
+* :class:`DiscreteEngine` (alias ``Simulator``) — the frozen reference:
+  one ``(time, seq, callback)`` pop per event, exactly the semantics every
+  anchor in ``tests/data/policy_anchors.json`` was recorded against.  It
+  is the default everywhere.
+* :class:`BatchedEngine` — same event timeline, faster core: events may
+  carry pre-bound argument tuples (``call``) so the hot per-packet paths
+  in :mod:`repro.sim.network` / :mod:`repro.sim.pspin` schedule plain
+  module-level step functions instead of allocating closure chains, and
+  the run loop drains all contemporaneous heap entries for one timestamp
+  in a single batch (still in ``(time, seq)`` order, so determinism and
+  tie-breaking match the discrete core bit-for-bit).
+* :class:`HybridEngine` — a :class:`BatchedEngine` that additionally
+  advertises ``fluid = True``: closed-loop steady-state phases may be
+  fast-forwarded analytically by the workload layer (calibrated against
+  a simulated prefix, cross-checked within tolerance on the anchors).
+
+``make_engine`` turns a spec (None | name | class | instance) into an
+engine; ``Scenario.run(engine=...)`` / ``Env(engine=...)`` accept the
+same specs so callers never reach into simulator internals.
 """
 
 from __future__ import annotations
@@ -15,10 +37,25 @@ import itertools
 from typing import Callable
 
 
-class Simulator:
+class Engine:
+    """Shared scheduling surface of every simulator core.
+
+    Heap entries are ``(time, seq, fn)`` or ``(time, seq, fn, args)``;
+    ``seq`` is unique, so comparisons never reach ``fn`` and equal-time
+    events always dispatch in scheduling order on every engine.
+    """
+
+    #: engine spec name (``make_engine`` key)
+    name = "discrete"
+    #: True when the network/PsPIN fast paths (argument-tuple events,
+    #: no closure chains) should be used
+    batched = False
+    #: True when the workload layer may fluid-fast-forward steady state
+    fluid = False
+
     def __init__(self):
         self.now: float = 0.0
-        self._heap: list[tuple[float, int, Callable[[], None]]] = []
+        self._heap: list[tuple] = []
         self._seq = itertools.count()
         self.events_processed = 0
 
@@ -30,11 +67,37 @@ class Simulator:
     def after(self, delay: float, fn: Callable[[], None]) -> None:
         self.at(self.now + delay, fn)
 
+    def call(self, time: float, fn: Callable, args: tuple = ()) -> None:
+        """Schedule ``fn(*args)`` at ``time`` (closure-free fast lane on
+        batched engines; plain engines wrap it)."""
+        self.at(time, lambda: fn(*args))
+
     def pending(self) -> int:
         """Events still scheduled (lets a periodic sampler — e.g. the
         telemetry tick — stop once it would be the only event left,
         instead of keeping the run alive forever)."""
         return len(self._heap)
+
+    def advance_to(self, time: float) -> None:
+        """Jump the clock forward without running events (fluid mode's
+        fast-forward; refuses to travel into the past)."""
+        if time < self.now - 1e-9:
+            raise ValueError(f"advancing into the past: {time} < {self.now}")
+        self.now = max(self.now, time)
+
+    def run(self, until: float | None = None, max_events: int = 50_000_000) -> None:
+        raise NotImplementedError
+
+
+class DiscreteEngine(Engine):
+    """The reference core: one callback per heap pop, anchor-exact.
+
+    This loop is deliberately frozen — every latency in
+    ``tests/data/policy_anchors.json`` and every ``BENCH_*.json`` claim
+    was recorded against it, and ``tools/check_anchors.py`` re-checks
+    them at 1e-9 relative tolerance."""
+
+    name = "discrete"
 
     def run(self, until: float | None = None, max_events: int = 50_000_000) -> None:
         while self._heap:
@@ -49,6 +112,108 @@ class Simulator:
                 raise RuntimeError("event budget exceeded (livelock?)")
 
 
+#: Backwards-compatible name — the simulator everyone constructed before
+#: the Engine API existed *is* the discrete engine.
+Simulator = DiscreteEngine
+
+
+class BatchedEngine(Engine):
+    """Timeline-exact fast core: typed argument-tuple events + per-tick
+    batch draining.
+
+    Two differences from :class:`DiscreteEngine`, neither visible in the
+    simulated timeline:
+
+    * ``call(t, fn, args)`` pushes ``(t, seq, fn, args)`` directly — the
+      network/PsPIN fast paths use it with module-level step functions,
+      eliminating the 4–6 closure allocations the discrete path pays per
+      packet.
+    * ``run`` drains every heap entry sharing the front timestamp as one
+      batch (events scheduled *at* the current tick join the same batch),
+      hoisting the clock store and loop bookkeeping out of the per-event
+      path.  Entries still execute strictly in ``(time, seq)`` order, so
+      same-timestamp tie-breaking is identical to the discrete core.
+    """
+
+    name = "batched"
+    batched = True
+
+    def at(self, time: float, fn: Callable[[], None]) -> None:
+        if time < self.now - 1e-9:
+            raise ValueError(f"scheduling into the past: {time} < {self.now}")
+        heapq.heappush(self._heap, (time, next(self._seq), fn, ()))
+
+    def call(self, time: float, fn: Callable, args: tuple = ()) -> None:
+        heapq.heappush(self._heap, (time, next(self._seq), fn, args))
+
+    def run(self, until: float | None = None, max_events: int = 50_000_000) -> None:
+        heap = self._heap
+        pop = heapq.heappop
+        n = self.events_processed
+        try:
+            while heap:
+                t = heap[0][0]
+                if until is not None and t > until:
+                    break
+                self.now = t
+                # Drain the contemporaneous batch in (time, seq) order.
+                # Callbacks may push new events at exactly t; the loop
+                # condition picks them up within the same batch, exactly
+                # where the discrete core would run them.
+                while heap and heap[0][0] == t:
+                    _, _, fn, args = pop(heap)
+                    fn(*args)
+                    n += 1
+                    if n > max_events:
+                        raise RuntimeError("event budget exceeded (livelock?)")
+        finally:
+            self.events_processed = n
+
+
+class HybridEngine(BatchedEngine):
+    """Batched core + permission for calibrated fluid fast-forward.
+
+    The engine itself stays event-exact; ``fluid = True`` merely tells
+    the workload layer (``repro.sim.workload``) that, for closed-loop
+    steady-state phases, it may simulate a calibration prefix and
+    extrapolate the remaining completions analytically.  Results are
+    approximate (cross-checked within tolerance against the discrete
+    engine on the anchor scenarios), so hybrid is never the default and
+    never used for anchor artifacts.
+    """
+
+    name = "hybrid"
+    fluid = True
+    #: closed-loop requests per client simulated before extrapolating
+    calibration_requests = 3
+
+
+ENGINES: dict[str, type[Engine]] = {
+    "discrete": DiscreteEngine,
+    "batched": BatchedEngine,
+    "hybrid": HybridEngine,
+}
+
+
+def make_engine(spec: "str | Engine | type[Engine] | None" = None) -> Engine:
+    """Resolve an engine spec: None (discrete default), a name from
+    :data:`ENGINES`, an :class:`Engine` subclass, or a ready instance."""
+    if spec is None:
+        return DiscreteEngine()
+    if isinstance(spec, Engine):
+        return spec
+    if isinstance(spec, type) and issubclass(spec, Engine):
+        return spec()
+    try:
+        cls = ENGINES[spec]
+    except (KeyError, TypeError):
+        raise ValueError(
+            f"unknown engine {spec!r} (expected one of {sorted(ENGINES)}, "
+            "an Engine subclass, or an Engine instance)"
+        ) from None
+    return cls()
+
+
 class SerialResource:
     """A resource that serves one request at a time, FIFO (a link port,
     a DMA engine, a memcpy engine).  ``acquire`` returns the service
@@ -58,7 +223,7 @@ class SerialResource:
     time acquirers spent queued behind earlier work, and the queue depth —
     number of accepted-but-not-yet-started services at ``sim.now``."""
 
-    def __init__(self, sim: Simulator):
+    def __init__(self, sim: Engine):
         self.sim = sim
         self.free_at: float = 0.0
         self.busy_ns: float = 0.0
@@ -84,6 +249,22 @@ class SerialResource:
             self.sim.at(end, lambda: on_done(start, end))
         return start, end
 
+    def book(self, duration: float) -> tuple[float, float]:
+        """:meth:`acquire` without the completion event — identical FIFO
+        interval and contention accounting; the caller schedules whatever
+        should happen at ``end`` itself (batched fast paths)."""
+        start = max(self.sim.now, self.free_at)
+        end = start + duration
+        self.free_at = end
+        self.busy_ns += duration
+        self.acquires += 1
+        wait = start - self.sim.now
+        if wait > 0:
+            self.total_wait_ns += wait
+            self._pending_starts.append(start)
+            self.peak_queued = max(self.peak_queued, self.queued())
+        return start, end
+
     def queued(self) -> int:
         """Services accepted but not yet started at the current time."""
         now = self.sim.now
@@ -97,13 +278,18 @@ class SerialResource:
 
 
 class Pool:
-    """A counted resource pool with FIFO waiting (the HPU pool)."""
+    """A counted resource pool with FIFO waiting (the HPU pool).
 
-    def __init__(self, sim: Simulator, capacity: int):
+    Waiters are ``(fn, t_enq)`` from :meth:`acquire` or
+    ``(fn, args, t_enq)`` from :meth:`acquire_call` (the batched engines'
+    closure-free lane); both hand over at the same simulated times.
+    """
+
+    def __init__(self, sim: Engine, capacity: int):
         self.sim = sim
         self.capacity = capacity
         self.in_use = 0
-        self._waiters: list[tuple[Callable[[], None], float]] = []
+        self._waiters: list[tuple] = []
         self.peak = 0
         self.peak_queued = 0
         self.total_wait_ns: float = 0.0
@@ -117,17 +303,36 @@ class Pool:
         eventually call :meth:`release`)."""
         if self.in_use < self.capacity:
             self.in_use += 1
-            self.peak = max(self.peak, self.in_use)
+            if self.in_use > self.peak:
+                self.peak = self.in_use
             fn()
         else:
             self._waiters.append((fn, self.sim.now))
             self.peak_queued = max(self.peak_queued, len(self._waiters))
 
+    def acquire_call(self, fn: Callable, args: tuple) -> None:
+        """:meth:`acquire` for pre-bound ``fn(*args)`` records (batched
+        fast paths; same admission and wait accounting)."""
+        if self.in_use < self.capacity:
+            self.in_use += 1
+            if self.in_use > self.peak:
+                self.peak = self.in_use
+            fn(*args)
+        else:
+            self._waiters.append((fn, args, self.sim.now))
+            self.peak_queued = max(self.peak_queued, len(self._waiters))
+
+    def _handover(self, waiter: tuple) -> None:
+        self.total_wait_ns += self.sim.now - waiter[-1]
+        if len(waiter) == 3:
+            self.sim.call(self.sim.now, waiter[0], waiter[1])
+        else:
+            self.sim.after(0.0, waiter[0])
+
     def release(self) -> None:
         if self._waiters and self.in_use <= self.capacity:
-            fn, t_enq = self._waiters.pop(0)
-            self.total_wait_ns += self.sim.now - t_enq
-            self.sim.after(0.0, fn)  # hand over without changing count
+            # hand over without changing count
+            self._handover(self._waiters.pop(0))
         else:
             # no waiters, or the pool was shrunk below its occupancy:
             # the freed unit leaves service instead of being handed over
@@ -143,8 +348,8 @@ class Pool:
             raise ValueError(f"pool capacity must be >= 1, got {capacity}")
         self.capacity = capacity
         while self._waiters and self.in_use < self.capacity:
-            fn, t_enq = self._waiters.pop(0)
-            self.total_wait_ns += self.sim.now - t_enq
+            waiter = self._waiters.pop(0)
             self.in_use += 1
-            self.peak = max(self.peak, self.in_use)
-            self.sim.after(0.0, fn)
+            if self.in_use > self.peak:
+                self.peak = self.in_use
+            self._handover(waiter)

@@ -188,8 +188,12 @@ class Network:
         """Transmit one packet src -> dst.
 
         ``on_sent`` fires when the sender's egress finishes serializing
-        (the moment a NIC handler that blocks on egress can retire).
+        (the moment a NIC handler that blocks on egress can retire).  On
+        batched engines it may also be a pre-bound ``(fn, args)`` record
+        (the closure-free lane); either form fires at the same time.
         """
+        if self.sim.batched:
+            return self._send_batched(src, dst, wire_size, meta, on_sent)
         meta = meta or {}
         ctrl = bool(meta.get("ctrl"))
         if src in self.crashed or dst in self.crashed:
@@ -232,3 +236,63 @@ class Network:
             self.sim.at(arrive, at_ingress)
 
         s.egress.acquire(ser, after_egress)
+
+    def _send_batched(self, src, dst, wire_size, meta, on_sent) -> None:
+        """:meth:`send` for batched engines: the egress interval is booked
+        synchronously and the arrival/delivery steps are scheduled as
+        pre-bound module-level functions — same timeline as the discrete
+        closure chain (on_sent at egress end, loss counted at egress end,
+        ingress FIFO acquired at arrival), zero closures per packet."""
+        sim = self.sim
+        if meta is None:
+            meta = {}
+        ctrl = bool(meta.get("ctrl"))
+        if self.crashed and (src in self.crashed or dst in self.crashed):
+            self._count_drop(wire_size, ctrl)
+            if on_sent is not None:
+                if type(on_sent) is tuple:
+                    sim.call(sim.now, on_sent[0], on_sent[1])
+                else:
+                    sim.call(sim.now, on_sent)
+            return
+        if self.loss:
+            p = self.loss.get(dst, 0.0)
+            lost = (p > 0.0 and self._loss_rng.random() < p)
+        else:
+            lost = False
+        if (self.partitions or self.flaps) and not lost:
+            lost = self.cut(src, dst)
+        s = self.node(src)
+        ser = self.cfg.ser_ns(wire_size)
+        s.bytes_out += wire_size
+        if ctrl:
+            self.ctrl_packets_sent += 1
+            self.ctrl_bytes_sent += wire_size
+        else:
+            self.packets_sent += 1
+        _start, end = s.egress.book(ser)
+        if on_sent is not None:
+            if type(on_sent) is tuple:
+                sim.call(end, on_sent[0], on_sent[1])
+            else:
+                sim.call(end, on_sent)
+        if lost:
+            sim.call(end, self._count_drop, (wire_size, ctrl))
+        else:
+            sim.call(
+                end + self.cfg.link_latency_ns,
+                _net_arrive,
+                (self.node(dst), ser, src, dst, wire_size, meta),
+            )
+
+
+def _net_arrive(d: SimNode, ser, src, dst, wire_size, meta) -> None:
+    """Batched-lane arrival step: occupy the receiver's ingress FIFO."""
+    _start, end = d.ingress.book(ser)
+    d.sim.call(end, _net_deliver, (d, src, dst, wire_size, meta))
+
+
+def _net_deliver(d: SimNode, src, dst, wire_size, meta) -> None:
+    """Batched-lane delivery step: hand the packet to receive dispatch."""
+    d.bytes_in += wire_size
+    d.on_receive(SimPacket(src, dst, wire_size, meta))

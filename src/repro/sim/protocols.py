@@ -37,7 +37,7 @@ import dataclasses
 from typing import Callable
 
 from repro.core.packets import ReplStrategy
-from repro.sim.engine import SerialResource, Simulator
+from repro.sim.engine import SerialResource, Simulator, make_engine
 from repro.sim.network import NetConfig, Network
 from repro.sim.pspin import PsPINConfig, PsPINUnit
 
@@ -119,10 +119,13 @@ class Env:
         cfg: NetConfig | None = None,
         pcfg: PsPINConfig | None = None,
         failures=None,
+        engine=None,
     ):
         self.cfg = cfg or NetConfig()
         self.pcfg = pcfg
-        self.sim = Simulator()
+        #: engine spec: None (discrete default), an ``ENGINES`` name,
+        #: an :class:`repro.sim.engine.Engine` subclass, or an instance
+        self.sim = make_engine(engine)
         self.net = Network(self.sim, self.cfg)
         #: injected :class:`repro.policy.FailureModel` (None == healthy);
         #: crashed/lossy nodes apply at the network, slow nodes stretch
@@ -141,6 +144,11 @@ class Env:
         #: chain pipelines compile against *detected* views instead of
         #: the static ``chain_live_nodes`` fan-out.
         self.membership = None
+        #: opt-out switch for the flight lane (see :meth:`flight_lane`);
+        #: the workload layer clears it when telemetry sampling, a
+        #: duration cap, or mixed policies need event-exact interleaving
+        self.allow_flight = True
+        self._flight = None
         self._pspin: dict[int, PsPINUnit] = {}
         self._cpu: dict[int, SerialResource] = {}
         self._node_owner: dict[int, "Protocol"] = {}
@@ -149,6 +157,28 @@ class Env:
 
     def crashed_nodes(self) -> set[int]:
         return set(self.failures.crashed) if self.failures is not None else set()
+
+    def flight_lane(self):
+        """The flight lane for this Env, or None when it must not engage.
+
+        Flight (``repro.policy.flight``) computes whole-request schedules
+        analytically; it is only valid when nothing can perturb a booked
+        schedule after the fact: batched engines, no failure axes, no
+        membership service, and the workload layer left
+        :attr:`allow_flight` set (no telemetry sampler, no duration cap,
+        no mixed policies)."""
+        if not (self.sim.batched and self.allow_flight):
+            return None
+        if self.failures is not None or self.membership is not None:
+            return None
+        net = self.net
+        if net.crashed or net.loss or net.partitions or net.flaps:
+            return None
+        if self._flight is None:
+            from repro.policy.flight import EcFlight
+
+            self._flight = EcFlight(self)
+        return self._flight
 
     def claim_node(self, node: int, proto: "Protocol") -> None:
         """Register ``proto`` as the *exclusive* receive-handler owner of
@@ -390,15 +420,13 @@ def make_protocol(
     the replication and erasure protocols.
 
     .. deprecated:: PR 3
-       This is a thin shim over the :mod:`repro.policy` presets — the name
-       is looked up with :func:`repro.policy.preset_spec` and compiled by
-       :func:`repro.policy.timed.compile_policy`.  New callers should build
-       a :class:`~repro.policy.PolicySpec` directly (specs compose; names
-       don't)."""
-    from repro.policy.spec import preset_spec
-    from repro.policy.timed import compile_policy
+       This is a thin alias of the :func:`repro.policy.compile` facade —
+       the name is resolved with :func:`repro.policy.preset_spec` and
+       compiled onto ``env``.  New callers should use the facade (specs
+       compose; names don't)."""
+    import repro.policy as policy
 
-    return compile_policy(env, preset_spec(name, k, m, strategy), size)
+    return policy.compile(name, env, size, k=k, m=m, strategy=strategy)
 
 
 PROTOCOL_NAMES = (

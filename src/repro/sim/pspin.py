@@ -110,16 +110,23 @@ class HandlerSpec:
 
 class RequestGate:
     """sPIN ordering: payload handlers run after the header handler
-    completed.  The HH's HandlerSpec opens the gate on completion."""
+    completed.  The HH's HandlerSpec opens the gate on completion.
+
+    Waiters are plain callables (discrete path) or pre-bound
+    ``(fn, args)`` records (batched fast path); both release at the
+    same simulated time when the gate opens."""
 
     def __init__(self):
         self.open_at: float | None = None
-        self._waiters: list[Callable[[], None]] = []
+        self._waiters: list = []
 
     def open(self, sim: Simulator) -> None:
         self.open_at = sim.now
-        for fn in self._waiters:
-            sim.after(0.0, fn)
+        for w in self._waiters:
+            if type(w) is tuple:
+                sim.call(sim.now, w[0], w[1])
+            else:
+                sim.after(0.0, w)
         self._waiters.clear()
 
     def when_open(self, sim: Simulator, fn: Callable[[], None]) -> None:
@@ -151,6 +158,8 @@ class PsPINUnit:
         self.handler_time_ns = 0.0
         self.handler_count = 0
         self.stall_time_ns = 0.0
+        # batched-lane memo: pipeline_ns is pure in wire_size
+        self._pns: dict[int, float] = {}
 
     def hpu_wait_ns(self) -> float:
         """Cumulative time packets spent queued for an HPU."""
@@ -164,6 +173,12 @@ class PsPINUnit:
 
     def process(self, wire_size: int, spec: HandlerSpec) -> None:
         """Run the packet pipeline + handler for one received packet."""
+        if self.sim.batched:
+            pns = self._pns.get(wire_size)
+            if pns is None:
+                pns = self._pns[wire_size] = self.cfg.pipeline_ns(wire_size)
+            self.sim.call(self.sim.now + pns, _bp_start, (self, spec))
+            return
         t_ready = self.sim.now + self.cfg.pipeline_ns(wire_size)
 
         def start() -> None:
@@ -208,15 +223,70 @@ class PsPINUnit:
         self, wire_size: int, spec: HandlerSpec
     ) -> None:
         """Like :meth:`process` but waits for the request gate first."""
-        if spec.gate is None:
+        gate = spec.gate
+        if gate is None:
             self.process(wire_size, spec)
             return
-        gate = spec.gate
+        if self.sim.batched:
+            if gate.open_at is not None:
+                self.process(wire_size, spec)
+            else:
+                gate._waiters.append((PsPINUnit.process, (self, wire_size, spec)))
+            return
 
         def go() -> None:
             self.process(wire_size, spec)
 
         gate.when_open(self.sim, go)
+
+
+def _bp_start(unit: PsPINUnit, spec: HandlerSpec) -> None:
+    """Batched-lane handler pipeline, step 1: the packet cleared the NIC
+    ingress pipeline — contend for an HPU."""
+    unit.hpus.acquire_call(_bp_acquired, (unit, spec))
+
+
+def _bp_acquired(unit: PsPINUnit, spec: HandlerSpec) -> None:
+    sim = unit.sim
+    t0 = sim.now
+    t_compute_done = t0 + spec.compute_ns * unit.compute_scale
+    sim.call(t_compute_done, _bp_after_compute, (unit, spec, t0, t_compute_done))
+
+
+def _bp_after_compute(unit: PsPINUnit, spec: HandlerSpec, t0, t_compute_done) -> None:
+    emits = spec.emits
+    if not emits:
+        _bp_finish(unit, spec, t0, t_compute_done)
+        return
+    # the handler holds its HPU until egress accepted every emit
+    state = [len(emits), unit, spec, t0, t_compute_done]
+    net = unit.network
+    nid = unit.node_id
+    for e in emits:
+        net.send(nid, e.dst, e.wire_size, e.meta, on_sent=(_bp_one_sent, (state,)))
+
+
+def _bp_one_sent(state: list) -> None:
+    state[0] -= 1
+    if state[0] == 0:
+        _bp_finish(state[1], state[2], state[3], state[4])
+
+
+def _bp_finish(unit: PsPINUnit, spec: HandlerSpec, t0, t_compute_done) -> None:
+    now = unit.sim.now
+    unit.handler_time_ns += now - t0
+    unit.stall_time_ns += now - t_compute_done
+    unit.handler_count += 1
+    unit.hpus.release()
+    gate = spec.gate
+    if gate is not None and gate.open_at is None:
+        gate.open(unit.sim)
+    oc = spec.on_complete
+    if oc is not None:
+        if type(oc) is tuple:
+            oc[0](*oc[1])
+        else:
+            oc()
 
 
 def hpus_for_line_rate(

@@ -74,7 +74,6 @@ from repro.sim.protocols import (
     Env,
     Protocol,
     Result,
-    make_protocol,
 )
 from repro.sim.pspin import PsPINConfig
 
@@ -190,6 +189,27 @@ class Scenario:
     # a heartbeat service over the storage nodes — heartbeats become timed
     # NIC traffic, booked in the ctrl_* counters, never in data goodput
     membership: object | None = None
+    # simulator core: None (discrete default) | "discrete" | "batched" |
+    # "hybrid" | an Engine subclass/instance (see repro.sim.engine)
+    engine: object | None = None
+
+    def run(
+        self,
+        engine=None,
+        cfg: NetConfig | None = None,
+        pcfg: PsPINConfig | None = None,
+        telemetry=None,
+    ) -> dict:
+        """Run this scenario to completion and return the report dict.
+
+        The one public entry point for scenario execution — ``engine``
+        selects the simulator core (falling back to ``self.engine``,
+        then the discrete default) so callers never touch ``Simulator``
+        internals."""
+        return Workload(
+            self, cfg, pcfg, telemetry=telemetry,
+            engine=engine if engine is not None else self.engine,
+        ).run()
 
     def per_client_gap_ns(self, cfg: NetConfig | None = None) -> float:
         """Mean open-loop inter-arrival gap per client (``cfg``: the
@@ -346,28 +366,32 @@ class Workload:
         cfg: NetConfig | None = None,
         pcfg: PsPINConfig | None = None,
         telemetry=None,
+        engine=None,
     ):
         self.sc = scenario
         self.telemetry = telemetry
-        self.env = Env(cfg, pcfg, failures=scenario.failures)
+        self.env = Env(cfg, pcfg, failures=scenario.failures,
+                       engine=engine if engine is not None else scenario.engine)
         sc = scenario
-        if sc.policies:
-            from repro.policy import compile_policy, preset_spec
+        # The flight lane books whole-request schedules at inject time;
+        # anything that needs event-exact interleaving mid-request —
+        # telemetry gauge sampling, a duration cap that truncates
+        # in-flight work, or a second policy contending packet-by-packet
+        # — forces the event-exact batched lane instead.
+        if (telemetry is not None or sc.duration_ns is not None
+                or (sc.policies and len(sc.policies) > 1)):
+            self.env.allow_flight = False
+        import repro.policy as policy
 
+        if sc.policies:
             self.loads: list[PolicyLoad] = list(sc.policies)
-            self.protos: list[Protocol] = []
-            for pl in self.loads:
-                spec = pl.spec
-                if isinstance(spec, str):
-                    spec = preset_spec(spec, k=sc.k, m=sc.m,
-                                       strategy=sc.strategy)
-                self.protos.append(compile_policy(self.env, spec, sc.size))
         else:
             self.loads = [PolicyLoad(sc.protocol, 1.0, sc.size_dist)]
-            self.protos = [make_protocol(
-                self.env, sc.protocol, sc.size,
-                k=sc.k, m=sc.m, strategy=sc.strategy,
-            )]
+        self.protos: list[Protocol] = [
+            policy.compile(pl.spec, self.env, sc.size,
+                           k=sc.k, m=sc.m, strategy=sc.strategy)
+            for pl in self.loads
+        ]
         self.proto = self.protos[0]
         self.policy_names = _unique_names(self.loads)
         total_w = sum(pl.weight for pl in self.loads)
@@ -415,6 +439,7 @@ class Workload:
             else:
                 self._pacers.append(None)
         self._outstanding: dict[int, int] = {}
+        self._fluid_plans: list[dict] = []
         # failure detection: heartbeats over the compiled storage nodes.
         # Attached AFTER compilation on purpose — the policies here keep
         # their static (healthy-view) pipelines and the heartbeat plane
@@ -568,8 +593,98 @@ class Workload:
 
     # -- arrival processes ---------------------------------------------------
 
+    def _fluid_ok(self) -> bool:
+        """May this run use the hybrid engine's calibrated fast-forward?
+
+        Only steady closed loops qualify: one policy, constant request
+        size, no think time, no admission/pacing control, no telemetry,
+        no duration cap, no failures — anything else perturbs the
+        steady-state gap the extrapolation relies on, so the run falls
+        back to full event simulation."""
+        sc = self.sc
+        return (
+            getattr(self.env.sim, "fluid", False)
+            and sc.arrival == "closed"
+            and sc.think_ns == 0
+            and len(self.loads) == 1
+            and self.telemetry is None
+            and sc.duration_ns is None
+            and self._admission is None
+            and self._pacers[0] is None
+            and not sc.shared_extents
+            and (self.loads[0].size_dist or sc.size_dist) is None
+            and sc.failures is None
+            and sc.requests_per_client
+            > max(2, getattr(self.env.sim, "calibration_requests", 3))
+        )
+
+    def _schedule_closed_fluid(self, client: int, rnd: random.Random) -> None:
+        """Hybrid-engine closed loop: simulate a calibration prefix per
+        client (all clients calibrate concurrently, so the measured
+        steady-state inter-completion gap includes full contention),
+        then record an extrapolation plan for the remaining requests.
+        The plans are applied after the event heap drains (``run``), so
+        no event ever observes a fast-forwarded clock."""
+        sc, sim = self.sc, self.env.sim
+        total = sc.requests_per_client
+        ncal = min(total, max(2, sim.calibration_requests))
+        state = {"done": 0, "prev": 0.0}
+
+        def next_request() -> None:
+            self._issue(client, rnd, after_done=after)
+
+        def after() -> None:
+            state["done"] += 1
+            if state["done"] < ncal:
+                state["prev"] = sim.now
+                next_request()
+            elif total > ncal:
+                lats = self.per_policy[0]["latencies_ns"]
+                self._fluid_plans.append({
+                    "t_base": sim.now,
+                    "gap": sim.now - state["prev"],
+                    "lat": lats[-1] if lats else 0.0,
+                    "n": total - ncal,
+                    "nbytes": self.protos[0].request_bytes,
+                })
+
+        sim.at(0.0, next_request)
+
+    def _apply_fluid_plans(self) -> None:
+        """Synthesize the extrapolated completions (exact bookkeeping,
+        approximate times) and advance the clock past them."""
+        if not self._fluid_plans:
+            return
+        pp = self.per_policy[0]
+        op = self._op_of(self.protos[0])
+        sim = self.env.sim
+        # extrapolated requests never touch the wire, but they DID
+        # happen as far as the model is concerned — scale the packet
+        # ledger so conservation (packets, data bytes) matches the
+        # discrete engine exactly.  The workload is uniform (the
+        # _fluid_ok guard: one load, fixed size), so packets-per-request
+        # is the measured prefix's exact ratio.
+        extra = sum(p["n"] for p in self._fluid_plans)
+        if self.metrics.completed:
+            per_req = self.env.net.packets_sent / self.metrics.completed
+            self.env.net.packets_sent += round(per_req * extra)
+        for plan in self._fluid_plans:
+            t, gap, lat, nbytes = (plan["t_base"], plan["gap"],
+                                   plan["lat"], plan["nbytes"])
+            for r in range(1, plan["n"] + 1):
+                self.metrics.on_issue(t + (r - 1) * gap)
+                pp["issued"] += 1
+                self.metrics.on_complete(t + r * gap, lat, nbytes, op)
+                pp["completed"] += 1
+                pp["bytes"] += nbytes
+                pp["latencies_ns"].append(lat)
+            sim.advance_to(t + plan["n"] * gap)
+
     def _schedule_closed(self, client: int, rnd: random.Random) -> None:
         sc, sim = self.sc, self.env.sim
+        if self._fluid_ok():
+            self._schedule_closed_fluid(client, rnd)
+            return
         remaining = {"n": sc.requests_per_client}
 
         def next_request() -> None:
@@ -676,18 +791,27 @@ class Workload:
     def _schedule_sampler(self) -> None:
         """Periodic event-time gauge sampling into the telemetry ring.
 
-        The tick reschedules itself only while other events are pending,
-        so it never keeps the simulation alive on its own; ``run``
-        flushes one final sample so the trailing partial window (and
-        sub-window runs, where no tick ever fires) still reach the ring."""
+        Ticks are pinned to *absolute* window boundaries
+        (``epoch + i * window_ns``) rather than rescheduled relative to
+        the previous tick (``now + window_ns``): relative rescheduling
+        accumulates floating-point error, so sample timestamps slowly
+        drift off the boundary grid and gauges are no longer emitted at
+        identical simulated times on every engine.  The tick reschedules
+        itself only while other events are pending, so it never keeps
+        the simulation alive on its own; ``run`` flushes one final
+        sample so the trailing partial window (and sub-window runs,
+        where no tick ever fires) still reach the ring."""
         tel, env = self.telemetry, self.env
+        epoch = env.sim.now
+        boundary = [1]
 
         def tick() -> None:
             self._sample_telemetry()
             if env.sim.pending() > 0:
-                env.sim.after(tel.window_ns, tick)
+                boundary[0] += 1
+                env.sim.at(epoch + boundary[0] * tel.window_ns, tick)
 
-        env.sim.after(tel.window_ns, tick)
+        env.sim.at(epoch + tel.window_ns, tick)
 
     def run(self) -> dict:
         sc = self.sc
@@ -700,6 +824,7 @@ class Workload:
         if self.telemetry is not None:
             self._schedule_sampler()
         self.env.sim.run(until=sc.duration_ns)
+        self._apply_fluid_plans()
         if self.telemetry is not None:
             # flush the trailing partial window (loss deltas + gauges
             # since the last periodic tick)
@@ -769,6 +894,7 @@ def run_scenario(
     scenario: Scenario,
     cfg: NetConfig | None = None,
     pcfg: PsPINConfig | None = None,
+    engine=None,
 ) -> dict:
     """Convenience one-shot: build the workload, run it, return the report."""
-    return Workload(scenario, cfg, pcfg).run()
+    return Workload(scenario, cfg, pcfg, engine=engine).run()

@@ -1,0 +1,210 @@
+"""Engine-equivalence suite: every core must tell the same story.
+
+Three rings of agreement, from strictest out:
+
+* **scalar lane** — with the EC flight lane off, the batched engine is
+  bit-exact against the discrete reference: every report key except the
+  ``events`` count (batching collapses the heap traffic by design).
+* **flight lane** — with the analytic EC schedules on, count metrics
+  (requests, bytes, packets, conservation) stay exact; time-derived
+  metrics (goodput, latency) stay within a tolerance band — the lane
+  books whole requests onto persistent frontiers in issue order, which
+  shifts boundary packets but never invents or loses work.
+* **hybrid** — calibration prefix + fluid extrapolation: counts still
+  exact, times within a wider band.
+
+Plus the (time, seq) determinism property: draining a tick as one batch
+must fire callbacks in exactly the discrete engine's order.
+"""
+
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # pragma: no cover - shim keeps the property tests on
+    from _hypothesis_shim import given, settings
+    from _hypothesis_shim import strategies as st
+
+import repro.policy as policy
+from repro.sim.engine import (
+    BatchedEngine,
+    DiscreteEngine,
+    ENGINES,
+    HybridEngine,
+    make_engine,
+)
+from repro.sim.protocols import Env
+from repro.sim.pspin import PsPINConfig
+from repro.sim.workload import Scenario, Workload
+
+KiB = 1024
+
+#: report keys that count work (must match exactly across engines)
+COUNT_KEYS = (
+    "issued", "completed", "dropped", "failed", "in_flight",
+    "bytes_written", "bytes_read", "packets", "lost_packets",
+    "lost_bytes", "ctrl_packets", "ctrl_bytes",
+)
+#: report keys derived from event times (tolerance-banded under flight)
+TIME_KEYS = ("goodput_GBps", "mean_us", "p50_us")
+
+
+def _run(sc: Scenario, engine, allow_flight: bool = True,
+         pcfg: PsPINConfig | None = None) -> dict:
+    w = Workload(sc, None, pcfg, engine=engine)
+    if not allow_flight:
+        w.env.allow_flight = False
+    return w.run()
+
+
+# -- engine selection ------------------------------------------------------
+
+
+def test_make_engine_accepts_every_spec_form():
+    assert isinstance(make_engine(), DiscreteEngine)
+    assert isinstance(make_engine("discrete"), DiscreteEngine)
+    assert isinstance(make_engine("batched"), BatchedEngine)
+    assert isinstance(make_engine("hybrid"), HybridEngine)
+    assert isinstance(make_engine(BatchedEngine), BatchedEngine)
+    inst = HybridEngine()
+    assert make_engine(inst) is inst
+    with pytest.raises(ValueError):
+        make_engine("warp-drive")
+
+
+def test_engine_registry_names():
+    assert set(ENGINES) == {"discrete", "batched", "hybrid"}
+    assert not DiscreteEngine().batched
+    assert BatchedEngine().batched
+    assert HybridEngine().fluid
+
+
+# -- scalar lane: bit-exact ------------------------------------------------
+
+
+@pytest.mark.parametrize("protocol", ["spin-write", "chain-spin-write",
+                                      "rdma-flat"])
+def test_batched_scalar_lane_bit_exact(protocol):
+    """No flight lane in play (replication presets): the batched engine
+    must reproduce the discrete report exactly, events aside."""
+    sc = Scenario(protocol=protocol, size=64 * KiB, num_clients=3,
+                  requests_per_client=4, seed=11)
+    ref = _run(sc, "discrete")
+    got = _run(sc, "batched")
+    for key in set(ref) - {"events"}:
+        assert got[key] == ref[key], (protocol, key, got[key], ref[key])
+
+
+def test_batched_ec_scalar_lane_bit_exact_with_flight_off():
+    """The EC pipeline through the batched engine's scalar path (flight
+    explicitly disabled) is also bit-exact."""
+    sc = Scenario(protocol="spin-triec", size=256 * KiB, num_clients=3,
+                  requests_per_client=3, k=3, m=2, seed=7)
+    ref = _run(sc, "discrete")
+    got = _run(sc, "batched", allow_flight=False)
+    for key in set(ref) - {"events"}:
+        assert got[key] == ref[key], (key, got[key], ref[key])
+
+
+# -- flight lane: counts exact, times banded -------------------------------
+
+
+@pytest.fixture(scope="module")
+def flight_reports():
+    """One mid-size EC scenario on all three engines (the discrete
+    reference dominates the cost; share it across the band tests).
+    Flight-lane time deviation shrinks with scale — this size sits
+    under 20%, the Fig. 16 anchor under 12%."""
+    sc = Scenario(protocol="spin-triec", size=512 * KiB, num_clients=6,
+                  requests_per_client=6, k=3, m=2, seed=7)
+    pcfg = PsPINConfig(num_hpus=128)
+    return {eng: _run(sc, eng, pcfg=pcfg)
+            for eng in ("discrete", "batched", "hybrid")}
+
+
+@pytest.mark.parametrize("engine", ["batched", "hybrid"])
+def test_flight_lane_counts_exact_times_banded(flight_reports, engine):
+    ref, got = flight_reports["discrete"], flight_reports[engine]
+    assert got["events"] < ref["events"] / 10, "flight lane never engaged"
+    for key in COUNT_KEYS:
+        assert got[key] == ref[key], (key, got[key], ref[key])
+    assert got["issued"] == got["completed"] + got["in_flight"] \
+        + got["dropped"], "conservation violated"
+    for key in TIME_KEYS:
+        assert got[key] == pytest.approx(ref[key], rel=0.25), (
+            key, got[key], ref[key])
+
+
+def test_flight_lane_disabled_under_failures():
+    """Failure injection must fall back to the real event pipeline (the
+    lane's closed forms assume a healthy wire)."""
+    fm = policy.FailureModel(crashed=(2,))
+    sc = Scenario(protocol="spin-read-ec", size=128 * KiB, num_clients=2,
+                  requests_per_client=3, k=3, m=2, seed=5, failures=fm)
+    ref = _run(sc, "discrete")
+    got = _run(sc, "batched")
+    for key in set(ref) - {"events"}:
+        assert got[key] == ref[key], (key, got[key], ref[key])
+
+
+# -- compile() facade ------------------------------------------------------
+
+
+def test_compile_builds_env_with_engine():
+    proto = policy.compile("spin-write", engine="batched")
+    assert proto.env.sim.batched
+    assert proto.request_bytes == policy.DEFAULT_REQUEST_BYTES
+
+
+def test_compile_rejects_engine_with_existing_env():
+    env = Env()
+    with pytest.raises(ValueError):
+        policy.compile("spin-write", env, engine="batched")
+    with pytest.raises(ValueError):
+        policy.compile("spin-write", env, cfg=object())
+
+
+def _one_shot(proto):
+    out = {}
+    proto.issue(0, on_done=lambda res: out.setdefault("res", res))
+    proto.env.sim.run()
+    return out["res"]
+
+
+def test_compile_policy_alias_matches_facade():
+    spec = policy.preset_spec("spin-write")
+    a = policy.compile(spec, Env(), 64 * KiB)
+    b = policy.compile_policy(Env(), spec, 64 * KiB)
+    assert _one_shot(a).latency_ns == _one_shot(b).latency_ns
+
+
+# -- (time, seq) determinism property --------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(min_value=0, max_value=40),
+                min_size=1, max_size=50))
+def test_batched_drain_preserves_time_seq_order(delays):
+    """Batch-draining a tick fires callbacks in exactly the discrete
+    engine's (time, seq) order — including ties and same-tick chains."""
+    orders = []
+    for cls in (DiscreteEngine, BatchedEngine):
+        sim = cls()
+        fired = []
+
+        def chain(i, t):
+            def fn():
+                fired.append(i)
+                # same-tick follow-up: must drain after every already-
+                # queued event at this time, before any later time
+                if i % 3 == 0:
+                    sim.at(t, lambda: fired.append(-i - 1))
+            return fn
+
+        for i, d in enumerate(delays):
+            sim.at(float(d), chain(i, float(d)))
+        sim.run()
+        assert sim.pending() == 0
+        orders.append(fired)
+    assert orders[0] == orders[1], delays

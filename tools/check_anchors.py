@@ -1,6 +1,6 @@
 """Anchor-drift gate: deterministic-model anchors + benchmark floors.
 
-Eight checks, each with a readable diff on failure:
+Nine checks, each with a readable diff on failure:
 
   1. policy latency anchors — re-runs every preset/size recorded in
      ``tests/data/policy_anchors.json`` through the timed plane (the sim
@@ -36,7 +36,13 @@ Eight checks, each with a readable diff on failure:
      namespace-saturation knee pinned on the host metadata cap, and the
      detected-view re-replication run (heartbeat-detected crash, paced
      copies) lost zero blocks with every block restored to target
-     replication and metadata wire bytes booked as control traffic.
+     replication and metadata wire bytes booked as control traffic;
+  9. ``BENCH_simspeed.json`` claims — the engine race: the batched core
+     holds >= ``--simspeed-floor`` x the discrete reference's
+     simulated-bytes-per-wall-second on the Fig. 16 anchor (counts
+     asserted identical at generation time), and the 1000-node /
+     1000-client fleet sweep finishes under ``--fleet-wall-ceiling``
+     wall seconds so it stays a commit-time check.
 
 Usage (CI invokes this as its own workflow step):
 
@@ -45,6 +51,7 @@ Usage (CI invokes this as its own workflow step):
       [--degraded-ceiling 2.0] [--offload-floor 2.0]
       [--fig16-floor 0.85] [--replication-floor 1.5]
       [--fp-dead-ceiling 0.02] [--ns-edge-floor 1.5]
+      [--simspeed-floor 5.0] [--fleet-wall-ceiling 90]
 
 Exit code 0 == no drift.
 """
@@ -322,6 +329,26 @@ def check_namespace(path: str, edge_floor: float) -> list[str]:
     return errors
 
 
+def check_simspeed(path: str, speedup_floor: float,
+                   fleet_wall_ceiling: float) -> list[str]:
+    """The engine-speed gate: the batched core must hold its
+    simulated-bytes-per-wall-second edge over the discrete reference on
+    the Fig. 16 anchor, and the 1000-node / 1000-client fleet sweep must
+    fit inside the CI smoke budget (it IS a commit-time check)."""
+    from repro.bench import gate_claims
+
+    errors = gate_claims(path, [
+        ("batched_speedup_x", ">=", speedup_floor,
+         "batched engine lost its speed edge over discrete"),
+        ("fleet_wall_s", "<=", fleet_wall_ceiling,
+         "1000-node fleet sweep blew the CI smoke budget"),
+        ("fleet_nodes", ">=", 1000, "fleet sweep shrank below 1000 nodes"),
+        ("fleet_clients", ">=", 1000,
+         "fleet sweep shrank below 1000 clients"),
+    ])
+    return errors
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--repo", default=REPO)
@@ -342,6 +369,11 @@ def main() -> int:
                     help="max false-dead verdicts per lossy-monitor run")
     ap.add_argument("--ns-edge-floor", type=float, default=1.5,
                     help="min NIC-over-host lookup QPS edge at saturation")
+    ap.add_argument("--simspeed-floor", type=float, default=5.0,
+                    help="min batched-over-discrete simulated-bytes-per-"
+                         "wall-second speedup on the Fig. 16 anchor")
+    ap.add_argument("--fleet-wall-ceiling", type=float, default=90.0,
+                    help="max wall seconds for the 1000-node fleet sweep")
     args = ap.parse_args()
 
     checks = [
@@ -368,6 +400,9 @@ def main() -> int:
         ("BENCH_namespace.json claims", check_namespace(
             os.path.join(args.repo, "BENCH_namespace.json"),
             args.ns_edge_floor)),
+        ("BENCH_simspeed.json claims", check_simspeed(
+            os.path.join(args.repo, "BENCH_simspeed.json"),
+            args.simspeed_floor, args.fleet_wall_ceiling)),
     ]
     failed = False
     for title, errors in checks:
