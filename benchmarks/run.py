@@ -7,7 +7,8 @@ Subcommand form (preferred)::
 
 where ``<suite>`` is one of the :data:`SUITES` names (``figs``,
 ``roofline``, ``contention``, ``mixed``, ``degraded``, ``replication``,
-``membership``, ``namespace``, ``autoscale``, ``simspeed``, ``all``).
+``membership``, ``namespace``, ``autoscale``, ``simspeed``, ``trace``,
+``all``).
 Every suite prints ``name,us_per_call,derived`` CSV rows; suites with a
 regression artifact write it to their default ``BENCH_*.json`` path
 (``--json OUT`` overrides).  ``all`` runs every suite and writes one
@@ -19,7 +20,7 @@ use it)::
   PYTHONPATH=src python -m benchmarks.run [--only fig6,fig15]
       [--roofline] [--contention] [--mixed] [--degraded]
       [--replication] [--membership] [--namespace] [--autoscale]
-      [--simspeed] [--all] [--json OUT]
+      [--simspeed] [--trace] [--all] [--json OUT]
 
 with per-suite ``--<suite>-out`` / ``--<suite>-quick`` variants.  Both
 doors drive the same registry and the same shared artifact writer
@@ -120,6 +121,12 @@ def _simspeed_rows(quick: bool):
     return bench_rows(quick=quick)
 
 
+def _trace_rows(quick: bool):
+    from benchmarks.trace import bench_rows
+
+    return bench_rows(quick=quick)
+
+
 #: suite name -> (loader, artifact bench-name or None, default out,
 #: metric).  Loaders take ``quick`` and return ``(rows, claims|None)``;
 #: suites whose bench-name is None print rows but write no artifact
@@ -141,6 +148,8 @@ SUITES: dict[str, tuple] = {
                   "p99_us_or_hpus/derived"),
     "simspeed": (_simspeed_rows, "simspeed", "BENCH_simspeed.json",
                  "wall_s/sim_MBps"),
+    "trace": (_trace_rows, "trace", "BENCH_trace.json",
+              "wall_s_or_us/derived"),
 }
 
 #: print-only suites (no claims, no default artifact)
@@ -269,12 +278,21 @@ def main() -> None:
                     metavar="OUT", help="artifact path for --simspeed")
     ap.add_argument("--simspeed-quick", action="store_true",
                     help="single timing repeat per engine (CI smoke)")
+    ap.add_argument("--trace", action="store_true",
+                    help="also run the tracing suite (overhead race on "
+                         "the Fig. 16 anchor + spin-vs-host write-edge "
+                         "attribution, exports trace.json) and write "
+                         "BENCH_trace.json")
+    ap.add_argument("--trace-out", default="BENCH_trace.json",
+                    metavar="OUT", help="artifact path for --trace")
+    ap.add_argument("--trace-quick", action="store_true",
+                    help="small trace sweep (CI smoke)")
     ap.add_argument("--all", action="store_true",
                     help="run every suite (paper figs, roofline, "
                          "contention, mixed, degraded, replication, "
-                         "membership, namespace, autoscale, simspeed) "
-                         "and write one combined manifest of all rows + "
-                         "artifact paths")
+                         "membership, namespace, autoscale, simspeed, "
+                         "trace) and write one combined manifest of all "
+                         "rows + artifact paths")
     ap.add_argument("--all-out", default="BENCH_all.json", metavar="OUT",
                     help="manifest path for --all")
     ap.add_argument("--json", default=None, metavar="OUT",
@@ -284,7 +302,7 @@ def main() -> None:
     if args.all:
         for flag in ("roofline", "contention", "mixed", "degraded",
                      "replication", "membership", "namespace",
-                     "autoscale", "simspeed"):
+                     "autoscale", "simspeed", "trace"):
             setattr(args, flag, True)
     filters = [f for f in args.only.split(",") if f]
 
@@ -304,7 +322,7 @@ def main() -> None:
     if args.contention:
         run_suite("contention", emit=emit)
     for name in ("mixed", "degraded", "replication", "membership",
-                 "namespace", "autoscale", "simspeed"):
+                 "namespace", "autoscale", "simspeed", "trace"):
         if not getattr(args, name):
             continue
         quick = getattr(args, f"{name}_quick", False)

@@ -59,6 +59,9 @@ class TelemetryWindow:
     cpu_queued_max: int = 0
     lost_packets: int = 0
     lost_bytes: int = 0
+    # per-policy completion split, keyed by the workload's policy names
+    # (the same names the counter registry / per_policy reports use)
+    by_policy: dict = dataclasses.field(default_factory=dict)
 
     def p99_ns(self) -> float:
         return self.percentile_ns(99.0)
@@ -127,6 +130,7 @@ class Telemetry:
         latency_ns: float,
         nbytes: int,
         background: bool = False,
+        policy: str | None = None,
     ) -> None:
         win = self._window(now)
         win.completed += 1
@@ -138,6 +142,14 @@ class Telemetry:
         else:
             win.latencies_ns.append(latency_ns)
             win.bytes += nbytes
+        if policy is not None:
+            pp = win.by_policy.setdefault(
+                policy, {"completed": 0, "bytes": 0, "latencies_ns": []}
+            )
+            pp["completed"] += 1
+            if not background:
+                pp["bytes"] += nbytes
+                pp["latencies_ns"].append(latency_ns)
 
     # -- gauge feed (the workload's event-time sampler) ----------------------
 
@@ -202,6 +214,7 @@ class Telemetry:
                 "repair_GBps": 0.0,
                 "hpu_queued_max": 0,
                 "lost_packets": 0,
+                "per_policy": {},
             }
         lat: list[float] = []
         for w in wins:
@@ -214,6 +227,23 @@ class Telemetry:
             p99 = lat[max(1, math.ceil(0.99 * len(lat))) - 1]
         else:
             p99 = math.nan
+        # per-policy split over the same steady windows (keys are the
+        # workload's policy names, shared with the counter registry and
+        # the report's ``per_policy`` section)
+        per_policy: dict[str, dict] = {}
+        for w in wins:
+            for name, pp in w.by_policy.items():
+                agg = per_policy.setdefault(
+                    name, {"completed": 0, "bytes": 0, "latencies_ns": []}
+                )
+                agg["completed"] += pp["completed"]
+                agg["bytes"] += pp["bytes"]
+                agg["latencies_ns"].extend(pp["latencies_ns"])
+        for name, agg in per_policy.items():
+            pl = sorted(agg.pop("latencies_ns"))
+            agg["p99_ns"] = (pl[max(1, math.ceil(0.99 * len(pl))) - 1]
+                             if pl else math.nan)
+            agg["goodput_GBps"] = agg["bytes"] / span if span > 0 else 0.0
         return {
             "windows": len(wins),
             "completed": sum(w.completed for w in wins),
@@ -222,4 +252,5 @@ class Telemetry:
             "repair_GBps": repair / span if span > 0 else 0.0,
             "hpu_queued_max": max(w.hpu_queued_max for w in wins),
             "lost_packets": sum(w.lost_packets for w in wins),
+            "per_policy": dict(sorted(per_policy.items())),
         }

@@ -209,6 +209,19 @@ class EcFlight:
         lat = env.cfg.link_latency_ns
         push = heapq.heappush
 
+        # Coarse analytic spans: the flight lane computes the whole
+        # schedule at once, so a sampled request gets one span per phase
+        # (tagged ``analytic`` — traces stay honest about extrapolation)
+        # instead of per-packet resource spans.
+        tr = sim.tracer
+        rec = None
+        if tr is not None and tr.sampled(rid):
+            fargs = {"analytic": True}
+
+            def rec(name, cat, t0, t1, node=None, res=None):
+                tr.record(name, cat, t0, t1, rid=rid, pid=pid, node=node,
+                          resource=res, args=fargs)
+
         # -- client egress: exclusive FIFO, plain cumsum ----------------
         cnode = net.node(cl)
         eg = cnode.egress
@@ -221,6 +234,9 @@ class EcFlight:
         if k * n - 1 > eg.peak_queued:
             eg.peak_queued = k * n - 1  # the burst queues behind pkt 0
         cnode.bytes_out += k * pl.bytes_stream
+        if rec is not None:
+            rec("egress burst", "wire", base, float(ends_all[-1]),
+                res="flight.wire")
 
         ack_times = []
         par_arrivals = [[] for _ in range(m)]  # per parity node
@@ -302,6 +318,9 @@ class EcFlight:
             unit.handler_count += n + 2
             unit.handler_time_ns += ht
             unit.stall_time_ns += st_ns
+            if rec is not None:
+                rec("data node", "hpu_exec", float(a[0]), en, node=j + 1,
+                    res=f"flight.n{j + 1}")
 
         # -- parity nodes: merged fan-in -> XOR PHs -> stripe ack -------
         for pi in range(m):
@@ -354,6 +373,9 @@ class EcFlight:
             unit.handler_time_ns += ht + (en - start)
             unit.stall_time_ns += en - cd
             ack_times.append((en + lat, node_id, ("p", pi)))
+            if rec is not None:
+                rec("parity node", "hpu_exec", float(a[0]), en,
+                    node=node_id, res=f"flight.n{node_id}")
 
         # -- acks travel back as real events through the normal client
         #    receive path, so completion/latency bookkeeping is untouched
@@ -372,3 +394,5 @@ class EcFlight:
                      (cnode, src, cl, ACK_WIRE,
                       {"rid": rid, "ack": tag, "pid": pid}))
         ci.free_at = f
+        if rec is not None:
+            rec("acks", "wire", float(ack_times[0][0]), f, res="flight.wire")

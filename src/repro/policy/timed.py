@@ -73,6 +73,39 @@ from repro.sim.protocols import (
 from repro.sim.pspin import Emit, HANDLER_NS, HandlerSpec, RequestGate
 
 
+def _spin_trace(p, rid):
+    """``(rid, pid)`` HandlerSpec trace context when the tracer samples
+    this request; None otherwise (the zero-cost-when-off guard every
+    PsPIN-backed sink shares)."""
+    tr = p.env.sim.tracer
+    if tr is None or not tr.sampled(rid):
+        return None
+    return (rid, p.pid)
+
+
+def _trace_client_post(p, pend, dur_ns) -> None:
+    """Record the client posting span [now, now+dur) for a sampled
+    request (software post + doorbell + WQE fetch)."""
+    tr = p.env.sim.tracer
+    if tr is not None and tr.sampled(pend.rid):
+        now = p.env.sim.now
+        tr.record("client post", "client", now, now + dur_ns, rid=pend.rid,
+                  pid=p.pid, resource=f"cl{pend.client}")
+
+
+def _host_trace(p, node, rid, pcie_ns):
+    """Record the NIC->host PCIe detour span [now, now+pcie_ns) and
+    return a host-CPU trace context for the subsequent ``cpu.acquire``
+    (None when the request is unsampled)."""
+    tr = p.env.sim.tracer
+    if tr is None or not tr.sampled(rid):
+        return None
+    now = p.env.sim.now
+    tr.record("pcie", "pcie", now, now + pcie_ns, rid=rid, pid=p.pid,
+              resource=f"n{node}.pcie")
+    return (rid, p.pid, "host_cpu")
+
+
 class Stage:
     """One pipeline stage, attached to its protocol after construction."""
 
@@ -124,6 +157,9 @@ class PipelineProtocol(Protocol):
         for node, sink in self.sinks.items():
             sink.attach(self)
             env.bind(node, self.pid, sink.on_packet)
+        tr = env.sim.tracer
+        if tr is not None:
+            tr.register_policy(self.pid, self.name)
 
     @property
     def name(self) -> str:
@@ -182,6 +218,7 @@ class MessageInjector(Stage):
         cfg, net = p.env.cfg, p.env.net
         size = p.req_size(pend)
         meta = {"rid": pend.rid, "cl": pend.client, "pid": p.pid, "sz": size}
+        _trace_client_post(p, pend, cfg.client_post_ns)
         p.env.sim.after(
             cfg.client_post_ns,
             lambda: _send_message(
@@ -233,6 +270,7 @@ class ChainWriteInjector(Stage):
                 "sz": size, "ep": view.number}
         if attempt:
             p.retries += 1
+        _trace_client_post(p, pend, cfg.client_post_ns)
         p.env.sim.after(
             cfg.client_post_ns,
             lambda: _send_message(
@@ -268,6 +306,8 @@ class FanoutInjector(Stage):
         cfg, net = p.env.cfg, p.env.net
         size = p.req_size(pend)
         meta = {"rid": pend.rid, "cl": pend.client, "pid": p.pid, "sz": size}
+        _trace_client_post(p, pend, cfg.client_post_ns
+                           + (len(self.nodes) - 1) * cfg.client_post_extra_ns)
         for idx, node in enumerate(self.nodes):
             delay = cfg.client_post_ns + idx * cfg.client_post_extra_ns
             p.env.sim.after(
@@ -290,6 +330,7 @@ class RpcRdmaInjector(Stage):
         p = self.proto
         cfg, net = p.env.cfg, p.env.net
         size = p.req_size(pend)
+        _trace_client_post(p, pend, cfg.client_post_ns)
         p.env.sim.after(
             cfg.client_post_ns,
             lambda: net.send(
@@ -351,6 +392,9 @@ class TreeRootInjector(Stage):
         p = self.proto
         cfg, sim = p.env.cfg, p.env.sim
         if self.config_phase_writes:
+            _trace_client_post(p, pend, cfg.client_post_ns
+                               + (self.config_phase_writes - 1)
+                               * cfg.client_post_extra_ns)
             for r in range(self.config_phase_writes):
                 node = r + 1
                 delay = cfg.client_post_ns + r * cfg.client_post_extra_ns
@@ -363,6 +407,7 @@ class TreeRootInjector(Stage):
                     ),
                 )
         else:
+            _trace_client_post(p, pend, cfg.client_post_ns)
             sim.after(cfg.client_post_ns, lambda: self._broadcast(pend))
 
 
@@ -385,6 +430,7 @@ class InterleavedEcInjector(Stage):
         chunk = -(-size // k)
         header_extra = write_header_extra(self.m)
         post = cfg.client_post_ns + (k - 1) * cfg.client_post_extra_ns
+        _trace_client_post(p, pend, post)
 
         fl = p.env.flight_lane()
         if fl is not None:
@@ -445,6 +491,7 @@ class InecInjector(Stage):
         if self._outstanding.get(client, 0) < self.window:
             self._outstanding[client] = self._outstanding.get(client, 0) + 1
             post = cfg.client_post_ns + (self.k - 1) * cfg.client_post_extra_ns
+            _trace_client_post(p, pend, post)
             sim.after(post, lambda: self._inject(pend))
         else:
             self._queued.setdefault(client, []).append(pend)
@@ -505,6 +552,8 @@ class EcReadInjector(Stage):
         cfg, net = p.env.cfg, p.env.net
         chunk = self._chunk(p.req_size(pend))
         wire = cfg.rdma_header + read_header_extra()
+        _trace_client_post(p, pend, cfg.client_post_ns
+                           + (len(self.nodes) - 1) * cfg.client_post_extra_ns)
         for idx, node in enumerate(self.nodes):
             delay = cfg.client_post_ns + idx * cfg.client_post_extra_ns
             p.env.sim.after(
@@ -542,10 +591,13 @@ class EcReadInjector(Stage):
                 if self.r > 0:
                     work += self.k * chunk / HOST_DECODE_GBPS
                 cpu = p.env.host_cpu(pend.client)
+                ctx = _host_trace(p, pend.client, rid,
+                                  cfg.pcie_latency_ns / 2)
                 p.env.sim.after(
                     cfg.pcie_latency_ns / 2,
                     lambda: cpu.acquire(work,
-                                        lambda _s, _e: self._ack(rid)),
+                                        lambda _s, _e: self._ack(rid),
+                                        trace=ctx),
                 )
             else:
                 self._arrived[rid] = got
@@ -558,7 +610,8 @@ class EcReadInjector(Stage):
             unit.process(
                 pkt.wire_size,
                 HandlerSpec(ec_decode_ph_ns(payload, self.r),
-                            on_complete=lambda: self._ack(rid)),
+                            on_complete=lambda: self._ack(rid),
+                            trace=_spin_trace(p, rid)),
             )
             return True
         return False  # healthy striped read: plain arrival counting
@@ -579,6 +632,7 @@ class ReadInjector(Stage):
         cfg, net = p.env.cfg, p.env.net
         size = p.req_size(pend)
         wire = cfg.rdma_header + read_header_extra()
+        _trace_client_post(p, pend, cfg.client_post_ns)
         p.env.sim.after(
             cfg.client_post_ns,
             lambda: net.send(
@@ -658,6 +712,7 @@ class SpinStreamSink(Stage):
         unit = self.unit
         pid = self.proto.pid
         ack_tag = self.ack_tag
+        trace = _spin_trace(self.proto, rid)
 
         def packet_done() -> None:
             req.processed += 1
@@ -670,13 +725,16 @@ class SpinStreamSink(Stage):
                         self.ch_ns,
                         [Emit(meta["cl"], ACK_WIRE,
                               {"rid": rid, "ack": ack_tag, "pid": pid})],
+                        trace=trace,
                     ),
                 )
 
         if i == 0:
-            unit.process(pkt.wire_size, HandlerSpec(self.hh_ns, gate=req.gate))
+            unit.process(pkt.wire_size,
+                         HandlerSpec(self.hh_ns, gate=req.gate, trace=trace))
         spec = HandlerSpec(self.ph_ns_fn(self, pkt), emits,
-                           on_complete=packet_done, gate=req.gate)
+                           on_complete=packet_done, gate=req.gate,
+                           trace=trace)
         unit.process_gated(pkt.wire_size, spec)
 
 
@@ -715,6 +773,7 @@ class SpinParitySink(Stage):
         k = self.k
         unit = self.unit
         pid = self.proto.pid
+        trace = _spin_trace(self.proto, rid)
 
         def packet_done() -> None:
             c = req.seq_counts.get(seq, 0) + 1
@@ -738,12 +797,14 @@ class SpinParitySink(Stage):
                         self.pch,
                         [Emit(meta["cl"], ACK_WIRE,
                               {"rid": rid, "ack": self.ack_tag, "pid": pid})],
+                        trace=trace,
                     ),
                 )
 
         compute = ec_parity_ph_ns(payload)
         unit.process(pkt.wire_size,
-                     HandlerSpec(compute, on_complete=packet_done))
+                     HandlerSpec(compute, on_complete=packet_done,
+                                 trace=trace))
 
 
 class HostCpuSink(Stage):
@@ -768,6 +829,7 @@ class HostCpuSink(Stage):
             pid = p.pid
             work = (cfg.host_notify_ns + cfg.cpu_validate_ns
                     + cfg.memcpy_ns(pkt.meta["sz"]))
+            ctx = _host_trace(p, node, rid, cfg.pcie_latency_ns / 2)
 
             # last packet DMA'd to the host ring: notify, validate, copy, ack
             def at_host() -> None:
@@ -776,6 +838,7 @@ class HostCpuSink(Stage):
                     lambda _s, _e: net.send(node, client, ACK_WIRE,
                                             {"rid": rid, "ack": 1,
                                              "pid": pid}),
+                    trace=ctx,
                 )
 
             p.env.sim.after(cfg.pcie_latency_ns / 2, at_host)
@@ -797,6 +860,8 @@ class RpcRdmaSink(Stage):
         node = self.node
         pid = p.pid
         if pkt.meta.get("kind") == "req":
+            ctx = _host_trace(p, node, rid, cfg.pcie_latency_ns / 2)
+
             # CPU posts an RDMA read towards the client.
             def at_host() -> None:
                 cpu.acquire(
@@ -806,6 +871,7 @@ class RpcRdmaSink(Stage):
                         {"rid": rid, "cl": client, "kind": "read_req",
                          "pid": pid},
                     ),
+                    trace=ctx,
                 )
 
             sim.after(cfg.pcie_latency_ns / 2, at_host)
@@ -814,6 +880,7 @@ class RpcRdmaSink(Stage):
             self._got[rid] = got
             if got == pkt.meta["n"]:
                 del self._got[rid]
+                ctx = _host_trace(p, node, rid, cfg.pcie_latency_ns / 2)
 
                 # completion event -> CPU -> ack (data already at target).
                 def at_host() -> None:
@@ -822,6 +889,7 @@ class RpcRdmaSink(Stage):
                         lambda _s, _e: net.send(node, client, ACK_WIRE,
                                                 {"rid": rid, "ack": 1,
                                                  "pid": pid}),
+                        trace=ctx,
                     )
 
                 sim.after(cfg.pcie_latency_ns / 2, at_host)
@@ -898,6 +966,13 @@ class ChunkedTreeSink(Stage):
             delay = self.per_chunk_overhead_ns
             if self.copy_GBps is not None:
                 delay += chunks[ci] / self.copy_GBps
+                tr = sim.tracer
+                if tr is not None and tr.sampled(rid):
+                    # host engines: per-chunk notify + buffer copy before
+                    # the forward (plain delay, overlap is legitimate).
+                    tr.record("chunk copy", "host_cpu", sim.now,
+                              sim.now + delay, rid=rid, pid=p.pid,
+                              resource=f"n{self.rank + 1}.host")
             sim.after(
                 delay,
                 lambda ci=ci: self._forward_chunk(rid, client, size,
@@ -948,6 +1023,10 @@ class InecDataSink(Stage):
         node = self.j + 1
         j = self.j
         pid = p.pid
+        tr = p.env.sim.tracer
+        sampled = tr is not None and tr.sampled(rid)
+        t_pcie = (rid, pid, "pcie") if sampled else None
+        t_ec = (rid, pid, "hpu_exec") if sampled else None
 
         # full chunk in NIC; flush to host memory:
         def staged(_s, _e) -> None:
@@ -964,15 +1043,18 @@ class InecDataSink(Stage):
                              {"rid": rid, "ack": ("d", j), "pid": pid})
 
                 self.engine.acquire(
-                    INEC_TRIGGER_NS + chunk / INEC_EC_ENGINE_GBPS, encoded
+                    INEC_TRIGGER_NS + chunk / INEC_EC_ENGINE_GBPS, encoded,
+                    trace=t_ec,
                 )
 
             self.pcie.acquire(
-                cfg.pcie_latency_ns + chunk / INEC_PCIE_BW_GBPS, read_back
+                cfg.pcie_latency_ns + chunk / INEC_PCIE_BW_GBPS, read_back,
+                trace=t_pcie,
             )
 
         self.pcie.acquire(
-            cfg.pcie_latency_ns / 2 + chunk / INEC_PCIE_BW_GBPS, staged
+            cfg.pcie_latency_ns / 2 + chunk / INEC_PCIE_BW_GBPS, staged,
+            trace=t_pcie,
         )
 
 
@@ -1007,6 +1089,10 @@ class InecParitySink(Stage):
         node = self.k + 1 + self.pi
         pi = self.pi
         pid = p.pid
+        tr = p.env.sim.tracer
+        sampled = tr is not None and tr.sampled(rid)
+        t_pcie = (rid, pid, "pcie") if sampled else None
+        t_ec = (rid, pid, "hpu_exec") if sampled else None
 
         def staged(_s, _e) -> None:
             def xored(_s2, _e2) -> None:
@@ -1017,15 +1103,18 @@ class InecParitySink(Stage):
                 self.pcie.acquire(
                     cfg.pcie_latency_ns / 2 + chunk / INEC_PCIE_BW_GBPS,
                     written,
+                    trace=t_pcie,
                 )
 
             self.engine.acquire(
-                INEC_TRIGGER_NS + k * chunk / INEC_EC_ENGINE_GBPS, xored
+                INEC_TRIGGER_NS + k * chunk / INEC_EC_ENGINE_GBPS, xored,
+                trace=t_ec,
             )
 
         # NIC XOR engine reads the k staged chunks back over PCIe.
         self.pcie.acquire(
-            cfg.pcie_latency_ns + k * chunk / INEC_PCIE_BW_GBPS, staged
+            cfg.pcie_latency_ns + k * chunk / INEC_PCIE_BW_GBPS, staged,
+            trace=t_pcie,
         )
 
 
@@ -1045,6 +1134,7 @@ class HostReadSink(Stage):
         cpu = p.env.host_cpu(self.node)
         node = self.node
         pid = p.pid
+        ctx = _host_trace(p, node, rid, cfg.pcie_latency_ns / 2)
 
         def at_host() -> None:
             cpu.acquire(
@@ -1054,6 +1144,7 @@ class HostReadSink(Stage):
                     lambda i, n, w: {"rid": rid, "pid": pid, "data": 1,
                                      "i": i, "n": n},
                 ),
+                trace=ctx,
             )
 
         sim.after(cfg.pcie_latency_ns / 2, at_host)
@@ -1087,9 +1178,12 @@ class SpinReadSink(Stage):
                              "i": i, "n": n})
             for i, w in enumerate(sizes)
         ]
-        self.unit.process(pkt.wire_size, HandlerSpec(self.hh_ns, gate=gate))
+        trace = _spin_trace(p, rid)
+        self.unit.process(pkt.wire_size,
+                          HandlerSpec(self.hh_ns, gate=gate, trace=trace))
         self.unit.process_gated(pkt.wire_size,
-                                HandlerSpec(self.ph_ns, emits, gate=gate))
+                                HandlerSpec(self.ph_ns, emits, gate=gate,
+                                            trace=trace))
 
 
 # ---------------------------------------------------------------------------
@@ -1129,6 +1223,7 @@ class NsRequestInjector(Stage):
         p = self.proto
         cfg, net = p.env.cfg, p.env.net
         wire = cfg.rdma_header + NS_REQ_EXTRA
+        _trace_client_post(p, pend, cfg.client_post_ns)
         p.env.sim.after(
             cfg.client_post_ns,
             lambda: net.send(
@@ -1159,9 +1254,12 @@ class SpinNsSink(Stage):
         gate = RequestGate()
         emits = [Emit(meta["cl"], NS_REPLY_WIRE,
                       {"rid": meta["rid"], "pid": p.pid, "ns": 1, "ctrl": 1})]
-        self.unit.process(pkt.wire_size, HandlerSpec(self.hh_ns, gate=gate))
+        trace = _spin_trace(p, meta["rid"])
+        self.unit.process(pkt.wire_size,
+                          HandlerSpec(self.hh_ns, gate=gate, trace=trace))
         self.unit.process_gated(pkt.wire_size,
-                                HandlerSpec(self.ph_ns, emits, gate=gate))
+                                HandlerSpec(self.ph_ns, emits, gate=gate,
+                                            trace=trace))
 
 
 class HostNsSink(Stage):
@@ -1183,6 +1281,7 @@ class HostNsSink(Stage):
         cpu = p.env.host_cpu(self.node)
         node, pid = self.node, p.pid
         work = cfg.host_notify_ns + cfg.cpu_validate_ns + self.service_ns
+        ctx = _host_trace(p, node, rid, cfg.pcie_latency_ns / 2)
 
         def at_host() -> None:
             cpu.acquire(
@@ -1190,6 +1289,7 @@ class HostNsSink(Stage):
                 lambda _s, _e: net.send(node, client, NS_REPLY_WIRE,
                                         {"rid": rid, "pid": pid,
                                          "ns": 1, "ctrl": 1}),
+                trace=ctx,
             )
 
         p.env.sim.after(cfg.pcie_latency_ns / 2, at_host)
@@ -1288,7 +1388,9 @@ class ChainSpinSink(Stage):
             emit = Emit(pred, ACK_WIRE,
                         {"rid": rid, "cl": client, "pid": pid,
                          "chain_ack": 1, **extra})
-        self.unit.process(ACK_WIRE, HandlerSpec(self.ch_ns, [emit]))
+        self.unit.process(ACK_WIRE,
+                          HandlerSpec(self.ch_ns, [emit],
+                                      trace=_spin_trace(self.proto, rid)))
 
     def _maybe_fire(self, key, req: "ChainSpinSink._Req", client: int,
                     pred: int | None, ep: int | None) -> None:
@@ -1317,6 +1419,7 @@ class ChainSpinSink(Stage):
             self._maybe_fire(key, req, meta["cl"], pred, ep)
             return
         req.n = meta["n"]
+        trace = _spin_trace(self.proto, rid)
         emits = ([Emit(succ, pkt.wire_size, dict(meta))]
                  if succ is not None else [])
 
@@ -1330,11 +1433,12 @@ class ChainSpinSink(Stage):
 
         if meta["i"] == 0:
             self.unit.process(pkt.wire_size,
-                              HandlerSpec(self.hh_ns, gate=req.gate))
+                              HandlerSpec(self.hh_ns, gate=req.gate,
+                                          trace=trace))
         self.unit.process_gated(
             pkt.wire_size,
             HandlerSpec(self.ph_ns, emits, on_complete=packet_done,
-                        gate=req.gate),
+                        gate=req.gate, trace=trace),
         )
 
 
@@ -1368,6 +1472,22 @@ class ChainHostSink(Stage):
         self.chunks_for = chunks_for
         self._states: dict[int, ChainHostSink._St] = {}
 
+    def _trace_detour(self, rid: int, cpu_ns: float) -> None:
+        # This sink models its host detours as plain delays (no serial
+        # CPU resource), so the spans are recorded directly; the
+        # ``.host`` track may legitimately overlap across requests.
+        p = self.proto
+        tr = p.env.sim.tracer
+        if tr is None or not tr.sampled(rid):
+            return
+        cfg = p.env.cfg
+        now = p.env.sim.now
+        t_host = now + cfg.pcie_latency_ns / 2
+        tr.record("pcie", "pcie", now, t_host, rid=rid, pid=p.pid,
+                  resource=f"n{self.node}.pcie")
+        tr.record("commit detour", "host_cpu", t_host, t_host + cpu_ns,
+                  rid=rid, pid=p.pid, resource=f"n{self.node}.host")
+
     def _send_up(self, rid: int, client: int) -> None:
         p = self.proto
         if self.pred is None:
@@ -1385,6 +1505,7 @@ class ChainHostSink(Stage):
         st.fired = True
         del self._states[rid]
         cfg = self.proto.env.cfg
+        self._trace_detour(rid, cfg.host_notify_ns)
         # commit-ack detour: completion lands in the host ring, the CPU
         # is notified, then posts the upstream ack.
         self.proto.env.sim.after(
@@ -1415,6 +1536,11 @@ class ChainHostSink(Stage):
             if self.succ is not None:
                 delay = (self.per_chunk_overhead_ns
                          + chunks[ci] / self.copy_GBps)
+                tr = sim.tracer
+                if tr is not None and tr.sampled(rid):
+                    tr.record("chunk copy", "host_cpu", sim.now,
+                              sim.now + delay, rid=rid, pid=p.pid,
+                              resource=f"n{self.node}.host")
                 sim.after(
                     delay,
                     lambda ci=ci: _send_message(
@@ -1431,6 +1557,8 @@ class ChainHostSink(Stage):
                 st.ack_seen = True
                 st.fired = True
                 del self._states[rid]
+                self._trace_detour(rid,
+                                   cfg.host_notify_ns + cfg.cpu_validate_ns)
                 sim.after(
                     cfg.pcie_latency_ns / 2 + cfg.host_notify_ns
                     + cfg.cpu_validate_ns,
@@ -1474,6 +1602,7 @@ class ChainReadSink(Stage):
         meta = pkt.meta
         rid = meta["rid"]
         pid = self.proto.pid
+        trace = _spin_trace(self.proto, rid)
         if meta.get("vq"):
             # tail: committed-version table probe, reply to the origin.
             self.unit.process(
@@ -1481,7 +1610,8 @@ class ChainReadSink(Stage):
                 HandlerSpec(self.vq_probe_ns,
                             [Emit(meta["org"], VERSION_WIRE,
                                   {"rid": rid, "cl": meta["cl"], "pid": pid,
-                                   "vr": 1, "sz": meta["sz"]})]),
+                                   "vr": 1, "sz": meta["sz"]})],
+                            trace=trace),
             )
             return
         client, size = meta["cl"], meta["sz"]
@@ -1490,18 +1620,20 @@ class ChainReadSink(Stage):
             self.unit.process(
                 pkt.wire_size,
                 HandlerSpec(self.vr_ns + self.ph_ns,
-                            self._data_emits(rid, client, size)),
+                            self._data_emits(rid, client, size),
+                            trace=trace),
             )
             return
         # client read request
         if self.node == self.tail:
             gate = RequestGate()
             self.unit.process(pkt.wire_size,
-                              HandlerSpec(self.hh_ns, gate=gate))
+                              HandlerSpec(self.hh_ns, gate=gate,
+                                          trace=trace))
             self.unit.process_gated(
                 pkt.wire_size,
                 HandlerSpec(self.ph_ns, self._data_emits(rid, client, size),
-                            gate=gate),
+                            gate=gate, trace=trace),
             )
             return
         # non-tail CRAQ replica: version query to the tail first.
@@ -1510,7 +1642,8 @@ class ChainReadSink(Stage):
             HandlerSpec(self.hh_ns,
                         [Emit(self.tail, VERSION_WIRE,
                               {"rid": rid, "cl": client, "pid": pid,
-                               "vq": 1, "org": self.node, "sz": size})]),
+                               "vq": 1, "org": self.node, "sz": size})],
+                        trace=trace),
         )
 
 
@@ -1543,6 +1676,7 @@ class AbdSink(Stage):
         rid = meta["rid"]
         unit = self.unit
         pid = self.proto.pid
+        trace = _spin_trace(self.proto, rid)
         if meta.get("qt"):
             # phase-1 tag query: reply with the local tag.
             unit.process(
@@ -1550,7 +1684,8 @@ class AbdSink(Stage):
                 HandlerSpec(self.hh_ns,
                             [Emit(meta["cl"], VERSION_WIRE,
                                   {"rid": rid, "pid": pid, "qtr": 1,
-                                   "src": self.node})]),
+                                   "src": self.node})],
+                            trace=trace),
             )
             return
         if meta.get("rq"):
@@ -1565,9 +1700,11 @@ class AbdSink(Stage):
                 for i, w in enumerate(sizes)
             ]
             gate = RequestGate()
-            unit.process(pkt.wire_size, HandlerSpec(self.hh_ns, gate=gate))
+            unit.process(pkt.wire_size,
+                         HandlerSpec(self.hh_ns, gate=gate, trace=trace))
             unit.process_gated(pkt.wire_size,
-                               HandlerSpec(self.ph_ns, emits, gate=gate))
+                               HandlerSpec(self.ph_ns, emits, gate=gate,
+                                           trace=trace))
             return
         # tagged write ("w2") or read write-back ("wb") payload stream
         ack_kind = "wba" if meta.get("wb") else "w2a"
@@ -1587,15 +1724,17 @@ class AbdSink(Stage):
                         [Emit(meta["cl"], ACK_WIRE,
                               {"rid": rid, "pid": pid, ack_kind: 1,
                                "src": self.node})],
+                        trace=trace,
                     ),
                 )
 
         if meta["i"] == 0:
             unit.process(pkt.wire_size,
-                         HandlerSpec(self.hh_ns, gate=req.gate))
+                         HandlerSpec(self.hh_ns, gate=req.gate, trace=trace))
         unit.process_gated(
             pkt.wire_size,
-            HandlerSpec(self.ph_ns, on_complete=packet_done, gate=req.gate),
+            HandlerSpec(self.ph_ns, on_complete=packet_done, gate=req.gate,
+                        trace=trace),
         )
 
 
@@ -1619,6 +1758,8 @@ class AbdWriteInjector(Stage):
         p = self.proto
         cfg, net = p.env.cfg, p.env.net
         size = p.req_size(pend)
+        _trace_client_post(p, pend, cfg.client_post_ns
+                           + (len(self.nodes) - 1) * cfg.client_post_extra_ns)
         for idx, node in enumerate(self.nodes):
             delay = cfg.client_post_ns + idx * cfg.client_post_extra_ns
             p.env.sim.after(
@@ -1658,6 +1799,7 @@ class AbdWriteInjector(Stage):
 
                 post = (cfg.client_post_ns
                         + (len(self.nodes) - 1) * cfg.client_post_extra_ns)
+                _trace_client_post(p, pend, cfg.client_complete_ns + post)
                 p.env.sim.after(cfg.client_complete_ns + post, phase2)
             return True
         if meta.get("w2a"):
@@ -1695,6 +1837,8 @@ class AbdReadInjector(Stage):
         cfg, net = p.env.cfg, p.env.net
         size = p.req_size(pend)
         wire = cfg.rdma_header + read_header_extra()
+        _trace_client_post(p, pend, cfg.client_post_ns
+                           + (len(self.nodes) - 1) * cfg.client_post_extra_ns)
         for idx, node in enumerate(self.nodes):
             delay = cfg.client_post_ns + idx * cfg.client_post_extra_ns
             p.env.sim.after(
@@ -1741,6 +1885,7 @@ class AbdReadInjector(Stage):
                     post = (cfg.client_post_ns
                             + (len(self.nodes) - 1)
                             * cfg.client_post_extra_ns)
+                    _trace_client_post(p, pend, cfg.client_complete_ns + post)
                     p.env.sim.after(cfg.client_complete_ns + post, writeback)
             return True
         if meta.get("wba"):
@@ -2062,8 +2207,14 @@ def compile_policy(
             for pi in range(e.m):
                 sinks[e.k + 1 + pi] = InecParitySink(pi, e.k)
             # build resources before attach (sinks resolve them in attach)
-            proto.inec_pcie = {n: SerialResource(env.sim) for n in nodes}
-            proto.inec_engine = {n: SerialResource(env.sim) for n in nodes}
+            proto.inec_pcie = {
+                n: SerialResource(env.sim, name=f"n{n}.inec_pcie")
+                for n in nodes
+            }
+            proto.inec_engine = {
+                n: SerialResource(env.sim, name=f"n{n}.inec")
+                for n in nodes
+            }
             PipelineProtocol.__init__(
                 proto, env, spec, size, InecInjector(e.k, e.m, window), sinks
             )

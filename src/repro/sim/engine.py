@@ -37,6 +37,29 @@ import itertools
 from typing import Callable
 
 
+class EventBudgetExceeded(RuntimeError):
+    """``Engine.run`` blew through ``max_events`` — almost always a
+    livelock (an event that keeps rescheduling itself).  Subclasses
+    RuntimeError so pre-existing ``except RuntimeError`` handlers keep
+    working; carries enough state (events, sim time, heap depth, and a
+    counter snapshot when a :class:`~repro.trace.CounterRegistry` is
+    attached to the engine) that a truncated sweep is diagnosable from
+    the exception alone instead of looking like a converged run."""
+
+    def __init__(self, events: int, now: float, pending: int,
+                 counters: dict | None = None):
+        self.events = events
+        self.now = now
+        self.pending = pending
+        self.counters = counters
+        msg = (f"event budget exceeded (livelock?): {events} events processed, "
+               f"sim.now={now:.0f}ns, {pending} events still pending")
+        if counters:
+            parts = ", ".join(f"{k}={v}" for k, v in sorted(counters.items()))
+            msg += f" [counters: {parts}]"
+        super().__init__(msg)
+
+
 class Engine:
     """Shared scheduling surface of every simulator core.
 
@@ -58,6 +81,23 @@ class Engine:
         self._heap: list[tuple] = []
         self._seq = itertools.count()
         self.events_processed = 0
+        #: optional :class:`repro.trace.Tracer`; every instrumentation
+        #: hook in the sim guards on ``tracer is None`` so the default
+        #: costs one attribute load per hook
+        self.tracer = None
+        #: optional :class:`repro.trace.CounterRegistry`, snapshotted
+        #: into :class:`EventBudgetExceeded` for post-mortems
+        self.counters = None
+
+    def _budget_error(self) -> EventBudgetExceeded:
+        snap = None
+        if self.counters is not None:
+            try:
+                snap = self.counters.snapshot()
+            except Exception:  # diagnostics must not mask the livelock
+                snap = None
+        return EventBudgetExceeded(self.events_processed, self.now,
+                                   len(self._heap), snap)
 
     def at(self, time: float, fn: Callable[[], None]) -> None:
         if time < self.now - 1e-9:
@@ -109,7 +149,7 @@ class DiscreteEngine(Engine):
             fn()
             self.events_processed += 1
             if self.events_processed > max_events:
-                raise RuntimeError("event budget exceeded (livelock?)")
+                raise self._budget_error()
 
 
 #: Backwards-compatible name — the simulator everyone constructed before
@@ -165,7 +205,8 @@ class BatchedEngine(Engine):
                     fn(*args)
                     n += 1
                     if n > max_events:
-                        raise RuntimeError("event budget exceeded (livelock?)")
+                        self.events_processed = n
+                        raise self._budget_error()
         finally:
             self.events_processed = n
 
@@ -221,10 +262,18 @@ class SerialResource:
 
     Contention accounting (for the multi-client workload engine): total
     time acquirers spent queued behind earlier work, and the queue depth —
-    number of accepted-but-not-yet-started services at ``sim.now``."""
+    number of accepted-but-not-yet-started services at ``sim.now``.
 
-    def __init__(self, sim: Engine):
+    Tracing: ``acquire``/``book`` take an optional ``trace`` context —
+    a ``(rid, pid, cat)`` tuple callers build only for sampled requests
+    (see :mod:`repro.trace`).  When present, the queue-wait interval
+    ``[now, start)`` and service interval ``[start, end)`` are recorded
+    as spans; the times are exactly the ones this method computes anyway,
+    so tracing never perturbs the timeline."""
+
+    def __init__(self, sim: Engine, name: str | None = None):
         self.sim = sim
+        self.name = name
         self.free_at: float = 0.0
         self.busy_ns: float = 0.0
         self.acquires = 0
@@ -232,8 +281,20 @@ class SerialResource:
         self.peak_queued = 0
         self._pending_starts: collections.deque[float] = collections.deque()
 
+    def _trace_span(self, trace: tuple, now: float, start: float, end: float) -> None:
+        tr = self.sim.tracer
+        if tr is None:
+            return
+        rid, pid, cat = trace
+        res = self.name or "serial"
+        if start > now:
+            tr.record(res + " wait", cat, now, start, rid=rid, pid=pid,
+                      resource=res + " (queue)", args={"queue": True})
+        tr.record(res, cat, start, end, rid=rid, pid=pid, resource=res)
+
     def acquire(
-        self, duration: float, on_done: Callable[[float, float], None] | None = None
+        self, duration: float, on_done: Callable[[float, float], None] | None = None,
+        trace: tuple | None = None,
     ) -> tuple[float, float]:
         start = max(self.sim.now, self.free_at)
         end = start + duration
@@ -245,11 +306,13 @@ class SerialResource:
             self.total_wait_ns += wait
             self._pending_starts.append(start)
             self.peak_queued = max(self.peak_queued, self.queued())
+        if trace is not None:
+            self._trace_span(trace, self.sim.now, start, end)
         if on_done is not None:
             self.sim.at(end, lambda: on_done(start, end))
         return start, end
 
-    def book(self, duration: float) -> tuple[float, float]:
+    def book(self, duration: float, trace: tuple | None = None) -> tuple[float, float]:
         """:meth:`acquire` without the completion event — identical FIFO
         interval and contention accounting; the caller schedules whatever
         should happen at ``end`` itself (batched fast paths)."""
@@ -263,6 +326,8 @@ class SerialResource:
             self.total_wait_ns += wait
             self._pending_starts.append(start)
             self.peak_queued = max(self.peak_queued, self.queued())
+        if trace is not None:
+            self._trace_span(trace, self.sim.now, start, end)
         return start, end
 
     def queued(self) -> int:
@@ -280,14 +345,18 @@ class SerialResource:
 class Pool:
     """A counted resource pool with FIFO waiting (the HPU pool).
 
-    Waiters are ``(fn, t_enq)`` from :meth:`acquire` or
-    ``(fn, args, t_enq)`` from :meth:`acquire_call` (the batched engines'
-    closure-free lane); both hand over at the same simulated times.
+    Waiters are ``(fn, args, t_enq, trace)`` records — ``args`` is None
+    for the closure form (:meth:`acquire`) and a pre-bound tuple for the
+    batched engines' closure-free lane (:meth:`acquire_call`); both hand
+    over at the same simulated times.  ``trace`` follows the
+    :class:`SerialResource` contract: a ``(rid, pid, cat)`` context for
+    sampled requests, recorded as a queue-wait span at handover.
     """
 
-    def __init__(self, sim: Engine, capacity: int):
+    def __init__(self, sim: Engine, capacity: int, name: str | None = None):
         self.sim = sim
         self.capacity = capacity
+        self.name = name
         self.in_use = 0
         self._waiters: list[tuple] = []
         self.peak = 0
@@ -298,7 +367,7 @@ class Pool:
         """Acquirers waiting for a unit right now (telemetry gauge)."""
         return len(self._waiters)
 
-    def acquire(self, fn: Callable[[], None]) -> None:
+    def acquire(self, fn: Callable[[], None], trace: tuple | None = None) -> None:
         """Invoke ``fn`` as soon as a unit is available (caller must
         eventually call :meth:`release`)."""
         if self.in_use < self.capacity:
@@ -307,10 +376,10 @@ class Pool:
                 self.peak = self.in_use
             fn()
         else:
-            self._waiters.append((fn, self.sim.now))
+            self._waiters.append((fn, None, self.sim.now, trace))
             self.peak_queued = max(self.peak_queued, len(self._waiters))
 
-    def acquire_call(self, fn: Callable, args: tuple) -> None:
+    def acquire_call(self, fn: Callable, args: tuple, trace: tuple | None = None) -> None:
         """:meth:`acquire` for pre-bound ``fn(*args)`` records (batched
         fast paths; same admission and wait accounting)."""
         if self.in_use < self.capacity:
@@ -319,15 +388,24 @@ class Pool:
                 self.peak = self.in_use
             fn(*args)
         else:
-            self._waiters.append((fn, args, self.sim.now))
+            self._waiters.append((fn, args, self.sim.now, trace))
             self.peak_queued = max(self.peak_queued, len(self._waiters))
 
     def _handover(self, waiter: tuple) -> None:
-        self.total_wait_ns += self.sim.now - waiter[-1]
-        if len(waiter) == 3:
-            self.sim.call(self.sim.now, waiter[0], waiter[1])
+        fn, args, t_enq, trace = waiter
+        wait = self.sim.now - t_enq
+        self.total_wait_ns += wait
+        if trace is not None and wait > 0:
+            tr = self.sim.tracer
+            if tr is not None:
+                rid, pid, cat = trace
+                res = self.name or "pool"
+                tr.record(res + " wait", cat, t_enq, self.sim.now, rid=rid,
+                          pid=pid, resource=res + " (queue)", args={"queue": True})
+        if args is not None:
+            self.sim.call(self.sim.now, fn, args)
         else:
-            self.sim.after(0.0, waiter[0])
+            self.sim.after(0.0, fn)
 
     def release(self) -> None:
         if self._waiters and self.in_use <= self.capacity:

@@ -97,8 +97,8 @@ class SimNode:
         self.sim = sim
         self.cfg = cfg
         self.node_id = node_id
-        self.egress = SerialResource(sim)
-        self.ingress = SerialResource(sim)
+        self.egress = SerialResource(sim, name=f"n{node_id}.egress")
+        self.ingress = SerialResource(sim, name=f"n{node_id}.ingress")
         self.on_receive: Callable[[SimPacket], None] = lambda pkt: None
         self.bytes_in = 0
         self.bytes_out = 0
@@ -169,6 +169,26 @@ class Network:
             self.nodes[node_id] = SimNode(self.sim, self.cfg, node_id)
         return self.nodes[node_id]
 
+    def _trace_ctx(self, meta: dict):
+        """Wire-bucket trace context for a sampled packet (None when
+        tracing is off, the packet carries no request id, or the request
+        is sampled out — the zero-cost-when-off guard)."""
+        tr = self.sim.tracer
+        if tr is None:
+            return None
+        rid = meta.get("rid")
+        if rid is None or not tr.sampled(rid):
+            return None
+        return (rid, meta.get("pid"), "wire")
+
+    def _trace_link(self, trace, src: int, dst: int, t0: float, ctrl: bool) -> None:
+        """Record the link-propagation leg [egress end, arrival)."""
+        rid, pid, _ = trace
+        self.sim.tracer.record(
+            "link", "wire", t0, t0 + self.cfg.link_latency_ns, rid=rid, pid=pid,
+            resource=f"n{src}->n{dst}", args={"ctrl": True} if ctrl else None,
+        )
+
     def _count_drop(self, wire_size: int, ctrl: bool) -> None:
         if ctrl:
             self.ctrl_packets_dropped += 1
@@ -218,12 +238,16 @@ class Network:
         else:
             self.packets_sent += 1
 
+        trace = self._trace_ctx(meta)
+
         def after_egress(start: float, end: float) -> None:
             if on_sent is not None:
                 on_sent()
             if lost:
                 self._count_drop(wire_size, ctrl)
                 return
+            if trace is not None:
+                self._trace_link(trace, src, dst, end, ctrl)
             arrive = end + self.cfg.link_latency_ns
 
             def at_ingress() -> None:
@@ -231,11 +255,11 @@ class Network:
                     d.bytes_in += wire_size
                     d.on_receive(SimPacket(src, dst, wire_size, meta))
 
-                d.ingress.acquire(ser, delivered)
+                d.ingress.acquire(ser, delivered, trace=trace)
 
             self.sim.at(arrive, at_ingress)
 
-        s.egress.acquire(ser, after_egress)
+        s.egress.acquire(ser, after_egress, trace=trace)
 
     def _send_batched(self, src, dst, wire_size, meta, on_sent) -> None:
         """:meth:`send` for batched engines: the egress interval is booked
@@ -270,7 +294,8 @@ class Network:
             self.ctrl_bytes_sent += wire_size
         else:
             self.packets_sent += 1
-        _start, end = s.egress.book(ser)
+        trace = self._trace_ctx(meta)
+        _start, end = s.egress.book(ser, trace=trace)
         if on_sent is not None:
             if type(on_sent) is tuple:
                 sim.call(end, on_sent[0], on_sent[1])
@@ -279,6 +304,8 @@ class Network:
         if lost:
             sim.call(end, self._count_drop, (wire_size, ctrl))
         else:
+            if trace is not None:
+                self._trace_link(trace, src, dst, end, ctrl)
             sim.call(
                 end + self.cfg.link_latency_ns,
                 _net_arrive,
@@ -288,7 +315,13 @@ class Network:
 
 def _net_arrive(d: SimNode, ser, src, dst, wire_size, meta) -> None:
     """Batched-lane arrival step: occupy the receiver's ingress FIFO."""
-    _start, end = d.ingress.book(ser)
+    trace = None
+    tr = d.sim.tracer
+    if tr is not None:
+        rid = meta.get("rid")
+        if rid is not None and tr.sampled(rid):
+            trace = (rid, meta.get("pid"), "wire")
+    _start, end = d.ingress.book(ser, trace=trace)
     d.sim.call(end, _net_deliver, (d, src, dst, wire_size, meta))
 
 

@@ -240,7 +240,7 @@ class Env:
 
     def host_cpu(self, node: int) -> SerialResource:
         if node not in self._cpu:
-            self._cpu[node] = SerialResource(self.sim)
+            self._cpu[node] = SerialResource(self.sim, name=f"n{node}.cpu")
         return self._cpu[node]
 
     def pspin_units(self) -> list[PsPINUnit]:
@@ -351,6 +351,15 @@ class Protocol:
             sim = self.env.sim
             self.last_done_at = sim.now
             latency = sim.now - pend.t_issue + self.env.cfg.client_complete_ns
+            tr = sim.tracer
+            if tr is not None and tr.sampled(pend.rid):
+                pid = getattr(self, "pid", None)
+                t_done = sim.now + self.env.cfg.client_complete_ns
+                tr.record("client complete", "client", sim.now, t_done,
+                          rid=pend.rid, pid=pid, resource=f"cl{pend.client}")
+                tr.record("request", "request", pend.t_issue, t_done,
+                          rid=pend.rid, pid=pid, resource=tr.policy_name(pid),
+                          args={"latency_ns": latency})
             self._on_request_complete(pend)
             if pend.on_done is not None:
                 pend.on_done(Result(latency, pend.extra))
@@ -509,8 +518,11 @@ def _run_preset(
     strategy: ReplStrategy = ReplStrategy.RING,
     cfg: NetConfig | None = None,
     pcfg: PsPINConfig | None = None,
+    tracer=None,
 ) -> tuple[Protocol, Env, Result]:
     env = Env(cfg, pcfg)
+    if tracer is not None:
+        env.sim.tracer = tracer
     proto = make_protocol(env, name, size, k=k, m=m, strategy=strategy)
     res = _run_single(proto, env)
     return proto, env, res

@@ -106,6 +106,9 @@ class HandlerSpec:
     emits: list[Emit] = dataclasses.field(default_factory=list)
     on_complete: Callable[[], None] | None = None
     gate: "RequestGate | None" = None  # PHs wait for the request's HH
+    #: ``(rid, pid)`` trace context, set by sinks only for sampled
+    #: requests (see :mod:`repro.trace`); None = no spans recorded
+    trace: tuple | None = None
 
 
 class RequestGate:
@@ -154,7 +157,7 @@ class PsPINUnit:
         #: straggler factor: >1 stretches every handler's compute time
         #: (failure-model slow nodes — thermal throttling, HPU contention)
         self.compute_scale = compute_scale
-        self.hpus = Pool(sim, self.cfg.num_hpus)
+        self.hpus = Pool(sim, self.cfg.num_hpus, name=f"n{node_id}.hpus")
         self.handler_time_ns = 0.0
         self.handler_count = 0
         self.stall_time_ns = 0.0
@@ -190,6 +193,8 @@ class PsPINUnit:
                     self.handler_time_ns += self.sim.now - t0
                     self.stall_time_ns += self.sim.now - t_compute_done
                     self.handler_count += 1
+                    if spec.trace is not None:
+                        _trace_exec(self, spec, t0, t_compute_done)
                     self.hpus.release()
                     if spec.gate is not None and spec.gate.open_at is None:
                         spec.gate.open(self.sim)
@@ -215,7 +220,10 @@ class PsPINUnit:
 
                 self.sim.at(t_compute_done, after_compute)
 
-            self.hpus.acquire(acquired)
+            self.hpus.acquire(
+                acquired,
+                trace=(spec.trace + ("hpu_queue",)) if spec.trace is not None else None,
+            )
 
         self.sim.at(t_ready, start)
 
@@ -240,10 +248,26 @@ class PsPINUnit:
         gate.when_open(self.sim, go)
 
 
+def _trace_exec(unit: PsPINUnit, spec: HandlerSpec, t0, t_compute_done) -> None:
+    """Record one handler-execution span [t0, now) — compute + egress
+    stall — on the unit's HPU-pool track (callers guard on spec.trace)."""
+    tr = unit.sim.tracer
+    if tr is None:
+        return
+    rid, pid = spec.trace
+    now = unit.sim.now
+    tr.record("handler", "hpu_exec", t0, now, rid=rid, pid=pid,
+              node=unit.node_id, resource=f"n{unit.node_id}.hpus",
+              args={"stall_ns": now - t_compute_done})
+
+
 def _bp_start(unit: PsPINUnit, spec: HandlerSpec) -> None:
     """Batched-lane handler pipeline, step 1: the packet cleared the NIC
     ingress pipeline — contend for an HPU."""
-    unit.hpus.acquire_call(_bp_acquired, (unit, spec))
+    unit.hpus.acquire_call(
+        _bp_acquired, (unit, spec),
+        trace=(spec.trace + ("hpu_queue",)) if spec.trace is not None else None,
+    )
 
 
 def _bp_acquired(unit: PsPINUnit, spec: HandlerSpec) -> None:
@@ -277,6 +301,8 @@ def _bp_finish(unit: PsPINUnit, spec: HandlerSpec, t0, t_compute_done) -> None:
     unit.handler_time_ns += now - t0
     unit.stall_time_ns += now - t_compute_done
     unit.handler_count += 1
+    if spec.trace is not None:
+        _trace_exec(unit, spec, t0, t_compute_done)
     unit.hpus.release()
     gate = spec.gate
     if gate is not None and gate.open_at is None:

@@ -199,15 +199,17 @@ class Scenario:
         cfg: NetConfig | None = None,
         pcfg: PsPINConfig | None = None,
         telemetry=None,
+        tracer=None,
     ) -> dict:
         """Run this scenario to completion and return the report dict.
 
         The one public entry point for scenario execution — ``engine``
         selects the simulator core (falling back to ``self.engine``,
         then the discrete default) so callers never touch ``Simulator``
-        internals."""
+        internals.  ``tracer`` attaches a :class:`repro.trace.Tracer`
+        for sampled request tracing (None: tracing off, zero cost)."""
         return Workload(
-            self, cfg, pcfg, telemetry=telemetry,
+            self, cfg, pcfg, telemetry=telemetry, tracer=tracer,
             engine=engine if engine is not None else self.engine,
         ).run()
 
@@ -263,7 +265,8 @@ class Metrics:
             self.telemetry.record_drop(now)
 
     def on_complete(self, now: float, latency_ns: float, nbytes: int,
-                    op: str = "write", background: bool = False) -> None:
+                    op: str = "write", background: bool = False,
+                    policy: str | None = None) -> None:
         self.completed += 1
         self.latencies_ns.append(latency_ns)
         self.bytes_completed += nbytes
@@ -278,7 +281,8 @@ class Metrics:
         self.last_done_ns = now
         if self.telemetry is not None:
             self.telemetry.record_complete(now, latency_ns, nbytes,
-                                           background=background)
+                                           background=background,
+                                           policy=policy)
 
     @property
     def in_flight(self) -> int:
@@ -367,11 +371,16 @@ class Workload:
         pcfg: PsPINConfig | None = None,
         telemetry=None,
         engine=None,
+        tracer=None,
     ):
         self.sc = scenario
         self.telemetry = telemetry
+        self.tracer = tracer
         self.env = Env(cfg, pcfg, failures=scenario.failures,
                        engine=engine if engine is not None else scenario.engine)
+        # installed before compilation so policy-name registration and
+        # every stage's sampling guard see the tracer from request 0
+        self.env.sim.tracer = tracer
         sc = scenario
         # The flight lane books whole-request schedules at inject time;
         # anything that needs event-exact interleaving mid-request —
@@ -401,6 +410,14 @@ class Workload:
             acc += pl.weight / total_w
             self._cum_weights.append(acc)
         self.metrics = Metrics(telemetry=telemetry)
+        # the unified counter namespace (repro.trace.counters): one
+        # live registry over every layer's tallies; the engine snapshots
+        # it into EventBudgetExceeded and the report embeds a snapshot
+        from repro.trace import registry_for
+
+        self.registry = registry_for(self.env, metrics=self.metrics,
+                                     telemetry=telemetry)
+        self.env.sim.counters = self.registry
         self.per_policy = [
             {"issued": 0, "completed": 0, "dropped": 0, "bytes": 0,
              "latencies_ns": []}
@@ -553,6 +570,7 @@ class Workload:
         proto = self.protos[i]
         pl = self.loads[i]
         op = self._op_of(proto)
+        policy_name = self.policy_names[i]
         self.metrics.on_issue(sim.now)
         pp = self.per_policy[i]
         pp["issued"] += 1
@@ -571,7 +589,8 @@ class Workload:
                     after_done()
                 return
             self.metrics.on_complete(sim.now, res.latency_ns, nbytes, op,
-                                     background=pl.background)
+                                     background=pl.background,
+                                     policy=policy_name)
             if self.sc.shared_extents and op == "write":
                 self.extents.append(nbytes)
             pp["completed"] += 1
@@ -887,6 +906,12 @@ class Workload:
                 ),
             }
         )
+        # one snapshot of the unified counter namespace, embedded so
+        # bench artifacts can diff runs without re-deriving the union
+        rep["counters"] = self.registry.snapshot()
+        if self.tracer is not None:
+            rep["trace_spans"] = len(self.tracer)
+            rep["trace_dropped"] = self.tracer.dropped
         return rep
 
 

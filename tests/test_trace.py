@@ -1,0 +1,266 @@
+"""Observability suite: tracer, counter registry, exporters, attribution.
+
+The load-bearing properties, in order of importance:
+
+* **passivity** — attaching a tracer leaves the simulated run bit-
+  identical (the tracer records intervals the model already computed;
+  it never schedules events);
+* **sampling** — unsampled requests allocate nothing, and the span
+  buffer is bounded (overflow counts ``dropped`` instead of growing);
+* **physical sanity** — spans on a serial resource's service track
+  never overlap (a SerialResource admits one service at a time; queue
+  waits live on their own ``... (queue)`` track);
+* **stable export** — the Chrome/Perfetto document is deterministic and
+  matches the committed golden byte-for-byte;
+* **attribution** — the spin-vs-host write edge is explained by the
+  PCIe + host-CPU spans the NIC path removed.
+"""
+
+import collections
+import json
+import os
+
+import pytest
+
+from repro.control.telemetry import Telemetry
+from repro.sim.engine import EventBudgetExceeded
+from repro.sim.workload import Scenario, Workload
+from repro.trace import (
+    BUCKETS,
+    CounterRegistry,
+    Tracer,
+    attr,
+    to_chrome_trace,
+    write_chrome_trace,
+)
+
+pytestmark = pytest.mark.trace
+
+KiB = 1024
+DATA = os.path.join(os.path.dirname(__file__), "data")
+
+#: resource-name suffixes whose (service) tracks are strictly serial —
+#: one SerialResource each.  HPU pools (``nX.hpus``), links, PCIe lanes,
+#: client tracks, plain-delay host detours (``nX.host``) and the flight
+#: lane's coarse analytic tracks all legitimately overlap.
+SERIAL_SUFFIXES = (".egress", ".ingress", ".cpu", ".inec", ".inec_pcie")
+
+
+def _traced(protocol: str, sample_every: int = 1, **kw) -> tuple[Tracer, dict]:
+    tr = Tracer(sample_every=sample_every)
+    sc = Scenario(protocol=protocol, size=kw.pop("size", 64 * KiB),
+                  num_clients=kw.pop("num_clients", 3),
+                  requests_per_client=kw.pop("requests_per_client", 3),
+                  k=3, m=2, seed=kw.pop("seed", 7), **kw)
+    rep = sc.run(tracer=tr)
+    return tr, rep
+
+
+# -- tracer unit behavior --------------------------------------------------
+
+
+def test_sampling_rule():
+    tr = Tracer(sample_every=4)
+    assert tr.sampled(0) and tr.sampled(4)
+    assert not tr.sampled(1) and not tr.sampled(None)
+    assert Tracer(sample_every=1).sampled(3)
+    with pytest.raises(ValueError):
+        Tracer(sample_every=0)
+
+
+def test_span_buffer_bounded():
+    tr = Tracer(sample_every=1, max_spans=10)
+    sc = Scenario(protocol="spin-write", size=64 * KiB, num_clients=2,
+                  requests_per_client=3, seed=7)
+    sc.run(tracer=tr)
+    assert len(tr) == 10
+    assert tr.dropped > 0
+    tr.clear()
+    assert len(tr) == 0 and tr.dropped == 0
+
+
+def test_sampled_out_requests_allocate_nothing():
+    """Head-based sampling: every span belongs to a sampled rid, so a
+    huge ``sample_every`` keeps only rid 0's spans (rids start at 0)."""
+    tr, rep = _traced("spin-write", sample_every=997, num_clients=2,
+                      requests_per_client=3)
+    assert rep["completed"] == 6
+    assert {s.rid for s in tr.spans if s.rid is not None} <= {0}
+    full, _ = _traced("spin-write", sample_every=1, num_clients=2,
+                      requests_per_client=3)
+    assert 0 < len(tr) < len(full) / 3
+
+
+# -- passivity: tracing must observe, never perturb ------------------------
+
+
+@pytest.mark.parametrize("protocol", ["spin-write", "spin-triec",
+                                      "abd-spin-write", "inec-triec"])
+def test_tracing_leaves_report_bit_identical(protocol):
+    sc = Scenario(protocol=protocol, size=64 * KiB, num_clients=2,
+                  requests_per_client=3, k=3, m=2, seed=11)
+    ref = sc.run()
+    got = sc.run(tracer=Tracer(sample_every=4))
+    got = {k: v for k, v in got.items()
+           if k not in ("trace_spans", "trace_dropped")}
+    assert got == ref, protocol
+
+
+# -- physical sanity: serial service tracks never overlap ------------------
+
+
+@pytest.mark.parametrize("protocol", ["spin-triec", "rpc-write",
+                                      "inec-triec", "chain-spin-write"])
+def test_serial_service_spans_never_overlap(protocol):
+    tr, _ = _traced(protocol)
+    tracks: dict[str, list] = collections.defaultdict(list)
+    for s in tr.spans:
+        res = s.resource or ""
+        if res.endswith("(queue)"):
+            assert s.args and s.args.get("queue"), (
+                "queue track span missing its queue tag")
+            continue
+        if res.endswith(SERIAL_SUFFIXES):
+            tracks[res].append(s)
+    assert tracks, f"{protocol}: no serial-resource spans recorded"
+    for res, spans in tracks.items():
+        spans.sort(key=lambda s: (s.t0, s.t1))
+        for a, b in zip(spans, spans[1:]):
+            assert a.t1 <= b.t0 + 1e-6, (
+                f"{res}: [{a.t0}, {a.t1}) overlaps [{b.t0}, {b.t1})")
+
+
+def test_flight_lane_spans_are_marked_analytic():
+    """The hybrid/flight lane must stay honest: its coarse spans carry
+    the ``analytic`` tag on dedicated ``flight.*`` tracks."""
+    tr = Tracer(sample_every=1)
+    sc = Scenario(protocol="spin-triec", size=512 * KiB, num_clients=4,
+                  requests_per_client=4, k=3, m=2, seed=7)
+    rep = sc.run(engine="batched", tracer=tr)
+    flight = [s for s in tr.spans
+              if (s.resource or "").startswith("flight.")]
+    assert flight, "flight lane recorded no spans"
+    assert all(s.args and s.args.get("analytic") for s in flight)
+    assert rep["completed"] == 16
+
+
+# -- counter registry ------------------------------------------------------
+
+
+def test_registry_snapshot_and_diff():
+    sc = Scenario(protocol="spin-write", size=32 * KiB, num_clients=2,
+                  requests_per_client=2, seed=3)
+    w = Workload(sc, None, None)
+    before = w.registry.snapshot()
+    rep = w.run()
+    after = w.registry.snapshot()
+    assert rep["counters"] == after
+    assert set(w.registry.names()) == set(after)
+    delta = CounterRegistry.diff(before, after)
+    assert delta["metrics.completed"] == 4
+    assert delta["net.packets_sent"] > 0
+    assert delta["sim.events"] == rep["events"]
+    assert list(after) == sorted(after), "snapshot keys must be sorted"
+
+
+def test_event_budget_error_carries_counters():
+    sc = Scenario(protocol="spin-write", size=8 * KiB, num_clients=1,
+                  requests_per_client=1, seed=1)
+    for engine in ("discrete", "batched"):
+        w = Workload(sc, None, None, engine=engine)
+        sim = w.env.sim
+
+        def tick():
+            sim.at(sim.now + 1.0, tick)
+
+        sim.at(0.0, tick)
+        with pytest.raises(EventBudgetExceeded) as ei:
+            sim.run(max_events=100)
+        err = ei.value
+        assert "event budget exceeded (livelock?)" in str(err)
+        assert err.events > 100 and err.pending > 0
+        assert err.counters is not None
+        assert err.counters["sim.events"] == err.events
+        assert "net.packets_sent" in str(err)
+
+
+# -- telemetry per-policy split --------------------------------------------
+
+
+def test_telemetry_summary_per_policy_split():
+    tel = Telemetry(window_ns=20_000)
+    sc = Scenario(protocol="spin-write", size=32 * KiB, num_clients=2,
+                  requests_per_client=3, seed=5)
+    rep = sc.run(telemetry=tel)
+    s = tel.summary(warmup_frac=0.0)
+    assert set(s["per_policy"]) == {"spin-write"}
+    pp = s["per_policy"]["spin-write"]
+    assert pp["completed"] == rep["completed"] == 6
+    assert pp["goodput_GBps"] > 0
+    assert pp["p99_ns"] > 0
+    assert Telemetry().summary()["per_policy"] == {}
+
+
+# -- exporters -------------------------------------------------------------
+
+
+def _golden_tracer() -> Tracer:
+    tr = Tracer(sample_every=1)
+    Scenario(protocol="spin-write", size=8 * KiB, num_clients=1,
+             requests_per_client=1, seed=1).run(tracer=tr)
+    return tr
+
+
+def test_perfetto_golden_roundtrip(tmp_path):
+    tr = _golden_tracer()
+    with open(os.path.join(DATA, "trace_golden.json")) as f:
+        golden = json.load(f)
+    assert to_chrome_trace(tr) == golden
+    out = tmp_path / "trace.json"
+    doc = write_chrome_trace(tr, str(out))
+    assert json.loads(out.read_text()) == golden == doc
+
+
+def test_perfetto_document_shape():
+    tr = _golden_tracer()
+    doc = to_chrome_trace(tr)
+    assert doc["displayTimeUnit"] == "ms"
+    events = doc["traceEvents"]
+    meta = [e for e in events if e["ph"] == "M"]
+    spans = [e for e in events if e["ph"] == "X"]
+    assert len(spans) == len(tr)
+    names = {e["args"]["name"] for e in meta if e["name"] == "process_name"}
+    assert "spin-write" in names, "request roots grouped under the policy"
+    for e in spans:
+        assert e["dur"] >= 0 and e["pid"] >= 1 and e["tid"] >= 1
+        assert e["cat"] in (*BUCKETS, "request")
+
+
+# -- attribution -----------------------------------------------------------
+
+
+def test_attribution_explains_spin_vs_host_edge():
+    tr_host, _ = _traced("rpc-write", num_clients=2)
+    tr_nic, _ = _traced("spin-write", num_clients=2)
+    host = attr.per_policy(tr_host)["rpc-write"]
+    nic = attr.per_policy(tr_nic)["spin-write"]
+    # the NIC path removes the PCIe + host-CPU hops entirely...
+    assert host["pcie"] > 0 and host["host_cpu"] > 0
+    assert nic["pcie"] == 0 and nic["host_cpu"] == 0
+    assert nic["hpu_exec"] > 0 and host["hpu_exec"] == 0
+    # ...and that removal explains the majority of the latency edge
+    assert host["wall_ns"] > nic["wall_ns"]
+    assert attr.explained_fraction(host, nic) >= 0.5
+    table = attr.summarize(tr_host)
+    assert "rpc-write" in table and "host_cpu" in table
+
+
+def test_per_request_rows_cover_all_buckets():
+    tr, rep = _traced("spin-triec", num_clients=2,
+                      requests_per_client=2)
+    rows = attr.per_request(tr)
+    assert len(rows) == rep["completed"] == 4
+    for row in rows.values():
+        assert set(BUCKETS) <= set(row)
+        assert row["wall_ns"] > 0
+        assert row["wire"] > 0

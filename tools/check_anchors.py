@@ -1,6 +1,6 @@
 """Anchor-drift gate: deterministic-model anchors + benchmark floors.
 
-Nine checks, each with a readable diff on failure:
+Ten checks, each with a readable diff on failure:
 
   1. policy latency anchors — re-runs every preset/size recorded in
      ``tests/data/policy_anchors.json`` through the timed plane (the sim
@@ -42,7 +42,13 @@ Nine checks, each with a readable diff on failure:
      simulated-bytes-per-wall-second on the Fig. 16 anchor (counts
      asserted identical at generation time), and the 1000-node /
      1000-client fleet sweep finishes under ``--fleet-wall-ceiling``
-     wall seconds so it stays a commit-time check.
+     wall seconds so it stays a commit-time check;
+  10. ``BENCH_trace.json`` claims — observability stays honest: tracing
+     at 1/64 sampling costs <= ``--trace-overhead-ceiling`` of the
+     untraced wall on the Fig. 16 anchor (the tracer records intervals
+     the model already computed, never schedules events), and the
+     span-level attribution explains >= ``--trace-explained-floor`` of
+     the spin-vs-host write edge via the removed PCIe + host-CPU time.
 
 Usage (CI invokes this as its own workflow step):
 
@@ -52,6 +58,7 @@ Usage (CI invokes this as its own workflow step):
       [--fig16-floor 0.85] [--replication-floor 1.5]
       [--fp-dead-ceiling 0.02] [--ns-edge-floor 1.5]
       [--simspeed-floor 5.0] [--fleet-wall-ceiling 90]
+      [--trace-overhead-ceiling 0.05] [--trace-explained-floor 0.5]
 
 Exit code 0 == no drift.
 """
@@ -349,6 +356,27 @@ def check_simspeed(path: str, speedup_floor: float,
     return errors
 
 
+def check_trace(path: str, overhead_ceiling: float,
+                explained_floor: float) -> list[str]:
+    """The observability gate: tracing must stay near-free at 1/64
+    sampling (it only records intervals the model already computed) and
+    the attribution must keep explaining the spin-vs-host write edge
+    from the removed PCIe + host-CPU spans."""
+    from repro.bench import gate_claims
+
+    errors = gate_claims(path, [
+        ("trace_overhead_frac", "<=", overhead_ceiling,
+         "tracing overhead on the Fig. 16 anchor blew its ceiling"),
+        ("write_edge_explained_frac", ">=", explained_floor,
+         "spans no longer explain the spin-vs-host write edge"),
+        ("trace_anchor_dropped", "<=", 0,
+         "anchor run overflowed the span buffer (spans dropped)"),
+        ("trace_anchor_spans", ">=", 1,
+         "anchor run recorded no spans at 1/64 sampling"),
+    ])
+    return errors
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--repo", default=REPO)
@@ -374,6 +402,12 @@ def main() -> int:
                          "wall-second speedup on the Fig. 16 anchor")
     ap.add_argument("--fleet-wall-ceiling", type=float, default=90.0,
                     help="max wall seconds for the 1000-node fleet sweep")
+    ap.add_argument("--trace-overhead-ceiling", type=float, default=0.05,
+                    help="max relative wall cost of tracing at 1/64 "
+                         "sampling on the Fig. 16 anchor")
+    ap.add_argument("--trace-explained-floor", type=float, default=0.5,
+                    help="min fraction of the spin-vs-host write edge "
+                         "explained by removed PCIe + host-CPU spans")
     args = ap.parse_args()
 
     checks = [
@@ -403,6 +437,9 @@ def main() -> int:
         ("BENCH_simspeed.json claims", check_simspeed(
             os.path.join(args.repo, "BENCH_simspeed.json"),
             args.simspeed_floor, args.fleet_wall_ceiling)),
+        ("BENCH_trace.json claims", check_trace(
+            os.path.join(args.repo, "BENCH_trace.json"),
+            args.trace_overhead_ceiling, args.trace_explained_floor)),
     ]
     failed = False
     for title, errors in checks:
